@@ -1,0 +1,267 @@
+"""AOT pipeline: lower every (profile, entrypoint) to HLO TEXT artifacts.
+
+Run once at build time (``make artifacts``); the rust coordinator is fully
+self-contained afterwards. Interchange is HLO *text*, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Every entry point returns a tuple and is lowered with ``return_tuple=True``;
+the rust runtime unwraps with ``to_tuple*``.
+
+Besides the ``.hlo.txt`` files this writes ``manifest.json``:
+  - per-profile dims/shapes (the rust runtime validates literals against it)
+  - golden values on deterministic inputs (see ``golden_*`` below), which
+    ``rust/tests/golden.rs`` recomputes through the PJRT path — the
+    cross-language end-to-end numerics check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# ---------------------------------------------------------------------------
+# Model profiles (Table 4 of the paper, scaled — see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+# name -> (features, hidden1, hidden2, classes, train_batch)
+PROFILES = {
+    # tiny model for the quickstart example and fast tests
+    "quickstart": (10, 16, 16, 3, 8),
+    # the four Fig. 2 dataset profiles: feature/class counts match Table 4,
+    # hidden sizes scaled from the paper's 1.3K/1.3K to fit the CPU testbed
+    "sensorless": (48, 128, 128, 11, 64),
+    "acoustic": (50, 128, 128, 3, 64),
+    "covtype": (54, 128, 128, 7, 64),
+    "seismic": (50, 128, 128, 3, 64),
+    # the end-to-end driver model (largest profile we AOT-compile)
+    "e2e": (64, 256, 256, 10, 64),
+    # the frozen classifier attacked in Section 5.1 (d_img = 900 = 30x30)
+    "attack_clf": (900, 64, 32, 10, 64),
+}
+
+ATTACK_BATCH = 5       # per-worker image batch for the attack objective
+ATTACK_EVAL_BATCH = 10  # n = 10 images are evaluated/reported (Table 3)
+IMAGE_DIM = 900
+
+
+def spec_of(name: str) -> M.MLPSpec:
+    f, h1, h2, c, _ = PROFILES[name]
+    return M.MLPSpec(features=f, hidden1=h1, hidden2=h2, classes=c)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic golden inputs — replicated bit-compatibly in rust
+# (rust/src/runtime/golden.rs uses the same closed-form f64 formulas).
+# ---------------------------------------------------------------------------
+
+
+def golden_params(d: int) -> np.ndarray:
+    i = np.arange(d, dtype=np.float64)
+    return (0.1 * np.sin(0.01 * i + 0.5)).astype(np.float32)
+
+
+def golden_batch(batch: int, features: int, classes: int):
+    b = np.arange(batch, dtype=np.float64)[:, None]
+    f = np.arange(features, dtype=np.float64)[None, :]
+    x = np.sin(0.1 * b + 0.01 * f).astype(np.float32)
+    y = (np.arange(batch) % classes).astype(np.float64).astype(np.float32)
+    return x, y
+
+
+def golden_direction(d: int) -> np.ndarray:
+    i = np.arange(d, dtype=np.float64)
+    v = np.cos(0.01 * i + 0.1)
+    v = v / np.sqrt(np.sum(v * v))
+    return v.astype(np.float32)
+
+
+def golden_images(batch: int, dim: int) -> np.ndarray:
+    b = np.arange(batch, dtype=np.float64)[:, None]
+    f = np.arange(dim, dtype=np.float64)[None, :]
+    return (0.45 * np.sin(0.07 * b + 0.013 * f)).astype(np.float32)
+
+
+GOLDEN_MU = 1e-3
+GOLDEN_C = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def mlp_entrypoints(spec: M.MLPSpec, batch: int):
+    """name -> (fn, arg ShapeDtypeStructs) for one MLP profile."""
+    d = spec.dim
+    p = jax.ShapeDtypeStruct((d,), F32)
+    v = jax.ShapeDtypeStruct((d,), F32)
+    mu = jax.ShapeDtypeStruct((), F32)
+    x = jax.ShapeDtypeStruct((batch, spec.features), F32)
+    y = jax.ShapeDtypeStruct((batch,), F32)
+    return {
+        "loss": (partial(M.loss, spec), (p, x, y)),
+        "grad": (partial(M.grad, spec), (p, x, y)),
+        "loss_pair": (partial(M.loss_pair, spec), (p, v, mu, x, y)),
+        "accuracy": (partial(M.accuracy, spec), (p, x, y)),
+        "predict": (partial(M.predict, spec), (p, x)),
+    }
+
+
+def attack_entrypoints(clf: M.MLPSpec):
+    dc = clf.dim
+    xp = jax.ShapeDtypeStruct((IMAGE_DIM,), F32)
+    v = jax.ShapeDtypeStruct((IMAGE_DIM,), F32)
+    mu = jax.ShapeDtypeStruct((), F32)
+    cp = jax.ShapeDtypeStruct((dc,), F32)
+    img = jax.ShapeDtypeStruct((ATTACK_BATCH, IMAGE_DIM), F32)
+    y = jax.ShapeDtypeStruct((ATTACK_BATCH,), F32)
+    c = jax.ShapeDtypeStruct((), F32)
+    img_e = jax.ShapeDtypeStruct((ATTACK_EVAL_BATCH, IMAGE_DIM), F32)
+    return {
+        "attack_loss": (partial(M.attack_loss, clf), (xp, cp, img, y, c)),
+        "attack_grad": (partial(M.attack_grad, clf), (xp, cp, img, y, c)),
+        "attack_pair": (partial(M.attack_pair, clf), (xp, v, mu, cp, img, y, c)),
+        "attack_eval": (partial(M.attack_eval, clf), (xp, cp, img_e)),
+    }
+
+
+def golden_for_profile(name: str) -> dict:
+    spec, batch = spec_of(name), PROFILES[name][4]
+    d = spec.dim
+    p = jnp.asarray(golden_params(d))
+    xg, yg = golden_batch(batch, spec.features, spec.classes)
+    x, y = jnp.asarray(xg), jnp.asarray(yg)
+    v = jnp.asarray(golden_direction(d))
+    mu = jnp.float32(GOLDEN_MU)
+    lo = float(M.loss(spec, p, x, y)[0])
+    g, gl = M.grad(spec, p, x, y)
+    lp, lb = M.loss_pair(spec, p, v, mu, x, y)
+    acc = float(M.accuracy(spec, p, x, y)[0])
+    return {
+        "mu": GOLDEN_MU,
+        "loss": lo,
+        "grad_loss": float(gl),
+        "grad_norm": float(jnp.linalg.norm(g)),
+        "grad_head": [float(t) for t in np.asarray(g[:4])],
+        "pair_plus": float(lp),
+        "pair_base": float(lb),
+        "accuracy": acc,
+    }
+
+
+def golden_for_attack(clf: M.MLPSpec) -> dict:
+    xp = jnp.zeros((IMAGE_DIM,), F32) + 0.01
+    cp = jnp.asarray(golden_params(clf.dim))
+    img = jnp.asarray(golden_images(ATTACK_BATCH, IMAGE_DIM))
+    y = jnp.asarray((np.arange(ATTACK_BATCH) % clf.classes).astype(np.float32))
+    c = jnp.float32(GOLDEN_C)
+    v = jnp.asarray(golden_direction(IMAGE_DIM))
+    mu = jnp.float32(GOLDEN_MU)
+    lo = float(M.attack_loss(clf, xp, cp, img, y, c)[0])
+    g, gl = M.attack_grad(clf, xp, cp, img, y, c)
+    lp, lb = M.attack_pair(clf, xp, v, mu, cp, img, y, c)
+    img_e = jnp.asarray(golden_images(ATTACK_EVAL_BATCH, IMAGE_DIM))
+    lg, dist = M.attack_eval(clf, xp, cp, img_e)
+    return {
+        "mu": GOLDEN_MU,
+        "c": GOLDEN_C,
+        "loss": lo,
+        "grad_loss": float(gl),
+        "grad_norm": float(jnp.linalg.norm(g)),
+        "grad_head": [float(t) for t in np.asarray(g[:4])],
+        "pair_plus": float(lp),
+        "pair_base": float(lb),
+        "eval_logit00": float(lg[0, 0]),
+        "eval_dist0": float(dist[0]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--profiles", default="",
+                    help="comma-separated subset of profiles (default: all)")
+    ap.add_argument("--skip-golden", action="store_true",
+                    help="skip golden-value evaluation (faster CI iteration)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = [s for s in args.profiles.split(",") if s] or list(PROFILES)
+
+    manifest = {"version": 1, "profiles": {}, "attack": None}
+
+    for name in wanted:
+        spec, batch = spec_of(name), PROFILES[name][4]
+        arts = {}
+        for ep, (fn, specs) in mlp_entrypoints(spec, batch).items():
+            fname = f"{name}_{ep}.hlo.txt"
+            text = lower(fn, *specs)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            arts[ep] = fname
+            print(f"lowered {fname} ({len(text)} chars)")
+        manifest["profiles"][name] = {
+            "features": spec.features,
+            "hidden1": spec.hidden1,
+            "hidden2": spec.hidden2,
+            "classes": spec.classes,
+            "dim": spec.dim,
+            "batch": batch,
+            "artifacts": arts,
+            "golden": None if args.skip_golden else golden_for_profile(name),
+        }
+
+    if "attack_clf" in wanted:
+        clf = spec_of("attack_clf")
+        arts = {}
+        for ep, (fn, specs) in attack_entrypoints(clf).items():
+            fname = f"attack_{ep}.hlo.txt"
+            text = lower(fn, *specs)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            arts[ep] = fname
+            print(f"lowered {fname} ({len(text)} chars)")
+        manifest["attack"] = {
+            "clf_profile": "attack_clf",
+            "image_dim": IMAGE_DIM,
+            "batch": ATTACK_BATCH,
+            "eval_batch": ATTACK_EVAL_BATCH,
+            "artifacts": arts,
+            "golden": None if args.skip_golden else golden_for_attack(clf),
+        }
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""L1 Pallas kernels: blocked fused dense layers (matmul + bias + activation).
+
+These are the compute hot-spot of the HO-SGD model stack (the 2-hidden-layer
+MLP of the paper's Section 5.2 experiments, and the frozen classifier inside
+the Section 5.1 CW attack loss).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 2-D over
+(batch-blocks, out-feature-blocks); each kernel instance holds one
+``(bB, F)`` activation block and one ``(F, bH)`` weight block in VMEM and
+performs a full-K contraction feeding MXU-shaped tiles. ``interpret=True``
+is mandatory here — the CPU PJRT plugin cannot execute Mosaic custom-calls —
+so the BlockSpec expresses the HBM<->VMEM schedule structurally and the
+real-TPU efficiency is estimated from the block footprint (see
+``vmem_footprint_bytes`` and EXPERIMENTS.md §Perf), not from wallclock.
+
+``jax.grad`` does not differentiate through ``pallas_call``; every public
+entry point carries a ``custom_vjp`` whose backward pass is expressed with
+plain jnp matmuls (which XLA fuses on its own). The forward values produced
+by the Pallas path are validated against the pure-jnp oracle in
+``kernels/ref.py`` by ``python/tests/test_kernel.py`` (hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: 128 matches the MXU systolic-array edge; a
+# (128 x F) f32 activation block plus a (F x 128) weight block stays well
+# inside a 16 MiB VMEM budget for every model profile we ship (F <= 1024).
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_H = 128
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def vmem_footprint_bytes(batch: int, features: int, out: int,
+                         block_b: int = DEFAULT_BLOCK_B,
+                         block_h: int = DEFAULT_BLOCK_H) -> int:
+    """Estimated per-instance VMEM residency of one dense kernel invocation.
+
+    x-block (bB, F) + w-block (F, bH) + bias (bH,) + out-block (bB, bH),
+    all f32. Used by the §Perf analysis and asserted < VMEM_BUDGET_BYTES in
+    the kernel tests.
+    """
+    bb = min(block_b, _ceil_to(batch, 8))
+    bh = min(block_h, _ceil_to(out, 8))
+    f = features
+    return 4 * (bb * f + f * bh + bh + bb * bh)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One grid instance: full-K contraction of an x-block with a w-block."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _dense_pallas(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool,
+                  block_b: int, block_h: int) -> jax.Array:
+    """Zero-pad to block multiples, run the blocked kernel, slice back.
+
+    Zero padding is exact for matmul+bias (padded rows/cols are discarded by
+    the final slice), so numerics match the unpadded oracle bit-for-bit up
+    to reduction order.
+    """
+    batch, features = x.shape
+    fout = w.shape[1]
+    bb = min(block_b, _ceil_to(batch, 8))
+    bh = min(block_h, _ceil_to(fout, 8))
+    pb = _ceil_to(batch, bb)
+    ph = _ceil_to(fout, bh)
+
+    xp = jnp.pad(x, ((0, pb - batch), (0, 0))) if pb != batch else x
+    wp = jnp.pad(w, ((0, 0), (0, ph - fout))) if ph != fout else w
+    bp = jnp.pad(b, (0, ph - fout)) if ph != fout else b
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=(pb // bb, ph // bh),
+        in_specs=[
+            pl.BlockSpec((bb, features), lambda i, j: (i, 0)),
+            pl.BlockSpec((features, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, ph), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    if pb != batch or ph != fout:
+        out = out[:batch, :fout]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers. Forward = Pallas kernel; backward = jnp matmuls.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def dense_relu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """relu(x @ w + b) via the blocked Pallas kernel."""
+    return _dense_pallas(x, w, b, relu=True,
+                         block_b=DEFAULT_BLOCK_B, block_h=DEFAULT_BLOCK_H)
+
+
+def _dense_relu_fwd(x, w, b):
+    out = dense_relu(x, w, b)
+    return out, (x, w, out)
+
+
+def _dense_relu_bwd(res, g):
+    x, w, out = res
+    dz = g * (out > 0.0).astype(g.dtype)
+    dx = dz @ w.T
+    dw = x.T @ dz
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense_relu.defvjp(_dense_relu_fwd, _dense_relu_bwd)
+
+
+@jax.custom_vjp
+def dense_linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x @ w + b via the blocked Pallas kernel (no activation)."""
+    return _dense_pallas(x, w, b, relu=False,
+                         block_b=DEFAULT_BLOCK_B, block_h=DEFAULT_BLOCK_H)
+
+
+def _dense_linear_fwd(x, w, b):
+    return dense_linear(x, w, b), (x, w)
+
+
+def _dense_linear_bwd(res, g):
+    x, w = res
+    return g @ w.T, x.T @ g, jnp.sum(g, axis=0)
+
+
+dense_linear.defvjp(_dense_linear_fwd, _dense_linear_bwd)
+
+
+def dense_shapes_ok(batch: int, features: int, out: int) -> Tuple[bool, int]:
+    """(fits_in_vmem, footprint) — used by tests and the §Perf report."""
+    fp = vmem_footprint_bytes(batch, features, out)
+    return fp <= VMEM_BUDGET_BYTES, fp

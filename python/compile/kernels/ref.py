@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: ``python/tests/test_kernel.py``
+asserts ``assert_allclose(pallas(...), ref(...))`` under hypothesis-driven
+shape/value sweeps, and the L2 model (``compile/model.py``) is additionally
+cross-checked against a full-oracle model built only from these functions.
+Nothing here may import pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_relu_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(x @ w + b, 0.0)
+
+
+def dense_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return x @ w + b
+
+
+def perturb_ref(params: jax.Array, direction: jax.Array,
+                mu: jax.Array) -> jax.Array:
+    return params + jnp.reshape(mu, ()) * direction
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    return -jnp.mean(picked)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused softmax cross-entropy over a logits block.
+
+Completes the Pallas coverage of the training hot path: with
+``kernels.dense`` producing the logits and this kernel reducing them to the
+scalar loss, the entire L2 ``loss`` graph bottoms out in Pallas kernels.
+
+Each grid instance holds one ``(bB, C)`` logits block plus the matching
+label block in VMEM and emits per-row cross-entropy contributions:
+``xent_row = logsumexp(row) - row[label]`` (numerically stabilized by the
+row max). The mean over the batch happens in the wrapper. ``custom_vjp``
+backward is the classic ``(softmax - onehot)/B`` expressed in jnp.
+
+interpret=True as for all L1 kernels (see kernels/dense.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _xent_kernel(lg_ref, y_ref, o_ref):
+    lg = lg_ref[...]  # (bB, C)
+    y = y_ref[...].astype(jnp.int32)  # (bB,)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[:, 0]
+    classes = lg.shape[-1]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1) == y[:, None]
+    ).astype(lg.dtype)
+    picked = jnp.sum(lg * onehot, axis=-1)
+    o_ref[...] = lse - picked
+
+
+def _xent_rows_pallas(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    batch, classes = logits.shape
+    bb = min(BLOCK_B, _ceil_to(batch, 8))
+    pb = _ceil_to(batch, bb)
+    lg = jnp.pad(logits, ((0, pb - batch), (0, 0))) if pb != batch else logits
+    # padded labels point at class 0; their rows are sliced away below
+    y = jnp.pad(labels, (0, pb - batch)) if pb != batch else labels
+    rows = pl.pallas_call(
+        _xent_kernel,
+        grid=(pb // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pb,), jnp.float32),
+        interpret=True,
+    )(lg, y)
+    return rows[:batch] if pb != batch else rows
+
+
+@jax.custom_vjp
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy via the fused Pallas kernel.
+
+    ``labels`` are f32 class ids (the FFI label encoding).
+    """
+    return jnp.mean(_xent_rows_pallas(logits, labels))
+
+
+def _softmax_xent_fwd(logits, labels):
+    return softmax_xent(logits, labels), (logits, labels)
+
+
+def _softmax_xent_bwd(res, g):
+    logits, labels = res
+    batch = logits.shape[0]
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), logits.shape[-1],
+                            dtype=logits.dtype)
+    return (g * (p - onehot) / batch, None)
+
+
+softmax_xent.defvjp(_softmax_xent_fwd, _softmax_xent_bwd)

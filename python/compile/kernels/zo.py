@@ -1,0 +1,66 @@
+"""L1 Pallas kernel for the zeroth-order parameter perturbation.
+
+``perturb(params, direction, mu) = params + mu * direction`` — the axpy that
+produces the ZO probe point ``x^t + mu * v`` of Algorithm 1, eq. (4). It is
+fused into the ``loss_pair`` artifact so a ZO iteration costs exactly one
+executable dispatch from the rust hot path (two function evaluations, one
+launch).
+
+The grid is 1-D over contiguous f32 blocks; the scalar ``mu`` rides along as
+a (1,)-shaped operand mapped to every instance. Like all L1 kernels this is
+``interpret=True`` (see kernels/dense.py for why) and is differentiable via
+an explicit custom_vjp (d/dp = g, d/dv = mu*g, d/dmu = <g, v>).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PERTURB_BLOCK = 4096
+
+
+def _perturb_kernel(p_ref, v_ref, mu_ref, o_ref):
+    o_ref[...] = p_ref[...] + mu_ref[0] * v_ref[...]
+
+
+def _perturb_pallas(params: jax.Array, direction: jax.Array,
+                    mu: jax.Array) -> jax.Array:
+    d = params.shape[0]
+    blk = min(PERTURB_BLOCK, d)
+    pad = (-d) % blk
+    p = jnp.pad(params, (0, pad)) if pad else params
+    v = jnp.pad(direction, (0, pad)) if pad else direction
+    mu1 = jnp.reshape(mu, (1,)).astype(jnp.float32)
+    out = pl.pallas_call(
+        _perturb_kernel,
+        grid=((d + pad) // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d + pad,), jnp.float32),
+        interpret=True,
+    )(p, v, mu1)
+    return out[:d] if pad else out
+
+
+@jax.custom_vjp
+def perturb(params: jax.Array, direction: jax.Array, mu: jax.Array) -> jax.Array:
+    """params + mu * direction, as a blocked Pallas axpy."""
+    return _perturb_pallas(params, direction, mu)
+
+
+def _perturb_fwd(params, direction, mu):
+    return perturb(params, direction, mu), (direction, mu)
+
+
+def _perturb_bwd(res, g):
+    direction, mu = res
+    return g, mu * g, jnp.sum(g * direction)
+
+
+perturb.defvjp(_perturb_fwd, _perturb_bwd)

@@ -1,0 +1,191 @@
+"""L2: the paper's compute graphs in JAX, built on the L1 Pallas kernels.
+
+Two families of graphs, matching the paper's two experiment sections:
+
+1. **Multi-class MLP** (Section 5.2 / Fig. 2): the "high-dimensional fully
+   connected two-layer neural network" — features -> hidden1 -> hidden2 ->
+   classes with relu — operating on a FLAT f32[d] parameter vector so the
+   rust coordinator treats the model opaquely as ``x in R^d`` exactly like
+   Algorithm 1 does.
+
+2. **CW universal-perturbation attack loss** (Section 5.1 / Appendix A):
+   the Carlini–Wagner objective over a frozen classifier, whose decision
+   variable is the d=900-dim universal perturbation.
+
+Every public entry point is a pure function ``(flat tensors) -> tuple`` and
+is lowered ONCE by ``aot.py`` to HLO text; python never runs at training
+time. Labels cross the FFI as f32 and are cast to int32 inside the graph to
+keep the rust literal surface f32-only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense_linear, dense_relu
+from .kernels.ref import dense_linear_ref, dense_relu_ref, softmax_xent_ref
+from .kernels.softmax import softmax_xent
+from .kernels.zo import perturb
+
+
+# ---------------------------------------------------------------------------
+# Model spec & flat-parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLPSpec:
+    """2-hidden-layer MLP; the paper's Section 5.2 base model (scaled)."""
+
+    features: int
+    hidden1: int
+    hidden2: int
+    classes: int
+
+    @property
+    def dim(self) -> int:
+        """d — total flat parameter count (the paper's model dimension)."""
+        f, h1, h2, c = self.features, self.hidden1, self.hidden2, self.classes
+        return f * h1 + h1 + h1 * h2 + h2 + h2 * c + c
+
+    def shapes(self) -> Tuple[Tuple[int, ...], ...]:
+        f, h1, h2, c = self.features, self.hidden1, self.hidden2, self.classes
+        return ((f, h1), (h1,), (h1, h2), (h2,), (h2, c), (c,))
+
+
+def unflatten(spec: MLPSpec, params: jax.Array):
+    """Split the flat f32[d] vector into (W1,b1,W2,b2,W3,b3)."""
+    out, off = [], 0
+    for shp in spec.shapes():
+        n = 1
+        for s in shp:
+            n *= s
+        out.append(params[off:off + n].reshape(shp))
+        off += n
+    return tuple(out)
+
+
+def logits(spec: MLPSpec, params: jax.Array, x: jax.Array) -> jax.Array:
+    """Forward pass through the Pallas dense kernels."""
+    w1, b1, w2, b2, w3, b3 = unflatten(spec, params)
+    h = dense_relu(x, w1, b1)
+    h = dense_relu(h, w2, b2)
+    return dense_linear(h, w3, b3)
+
+
+def logits_oracle(spec: MLPSpec, params: jax.Array, x: jax.Array) -> jax.Array:
+    """Same forward built only from ref.py — the kernel-free oracle."""
+    w1, b1, w2, b2, w3, b3 = unflatten(spec, params)
+    h = dense_relu_ref(x, w1, b1)
+    h = dense_relu_ref(h, w2, b2)
+    return dense_linear_ref(h, w3, b3)
+
+
+# ---------------------------------------------------------------------------
+# Training-objective entry points (Section 5.2)
+# ---------------------------------------------------------------------------
+
+
+def loss(spec: MLPSpec, params: jax.Array, x: jax.Array,
+         y: jax.Array) -> Tuple[jax.Array]:
+    """Mean softmax cross-entropy (fused Pallas kernel). y is f32[B] ids."""
+    lg = logits(spec, params, x)
+    return (softmax_xent(lg, y),)
+
+
+def grad(spec: MLPSpec, params: jax.Array, x: jax.Array,
+         y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(dL/dparams, L) — the first-order SFO of Algorithm 1 eq. (3)."""
+    val, g = jax.value_and_grad(lambda p: loss(spec, p, x, y)[0])(params)
+    return (g, val)
+
+
+def loss_pair(spec: MLPSpec, params: jax.Array, v: jax.Array, mu: jax.Array,
+              x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(F(x+mu*v, batch), F(x, batch)) — both ZO probe evals, one dispatch.
+
+    This is the whole per-iteration compute of a ZO step (Algorithm 1
+    eq. (4)); fusing both function evaluations into one executable halves
+    the rust-side dispatch count on the hot path.
+    """
+    p_plus = perturb(params, v, mu)
+    lp = loss(spec, p_plus, x, y)[0]
+    lb = loss(spec, params, x, y)[0]
+    return (lp, lb)
+
+
+def accuracy(spec: MLPSpec, params: jax.Array, x: jax.Array,
+             y: jax.Array) -> Tuple[jax.Array]:
+    """Number of correct predictions in the batch, as f32."""
+    pred = jnp.argmax(logits(spec, params, x), axis=-1)
+    return (jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32)),)
+
+
+def predict(spec: MLPSpec, params: jax.Array,
+            x: jax.Array) -> Tuple[jax.Array]:
+    return (logits(spec, params, x),)
+
+
+# ---------------------------------------------------------------------------
+# CW universal-perturbation attack (Section 5.1 / Appendix A)
+# ---------------------------------------------------------------------------
+
+
+def _attack_images(xp: jax.Array, images: jax.Array) -> jax.Array:
+    """z_k = 0.5*tanh(atanh(2 a_k) + xp): keep z in the valid image box."""
+    return 0.5 * jnp.tanh(jnp.arctanh(2.0 * images) + xp[None, :])
+
+
+def attack_loss(spec: MLPSpec, xp: jax.Array, clf_params: jax.Array,
+                images: jax.Array, y: jax.Array,
+                c: jax.Array) -> Tuple[jax.Array]:
+    """Appendix A objective, averaged over the image batch.
+
+    loss_k = c * max(0, f_{y_k}(z_k) - max_{j != y_k} f_j(z_k))
+             + || z_k - a_k ||_2^2
+    """
+    z = _attack_images(xp, images)
+    lg = logits(spec, clf_params, z)
+    yi = y.astype(jnp.int32)
+    b = images.shape[0]
+    fy = jnp.take_along_axis(lg, yi[:, None], axis=-1)[:, 0]
+    masked = lg - jax.nn.one_hot(yi, spec.classes, dtype=lg.dtype) * 1e9
+    fmax = jnp.max(masked, axis=-1)
+    margin = jnp.maximum(fy - fmax, 0.0)
+    dist = jnp.sum((z - images) ** 2, axis=-1)
+    return (jnp.mean(jnp.reshape(c, ()) * margin + dist),)
+
+
+def attack_grad(spec: MLPSpec, xp: jax.Array, clf_params: jax.Array,
+                images: jax.Array, y: jax.Array,
+                c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    val, g = jax.value_and_grad(
+        lambda p: attack_loss(spec, p, clf_params, images, y, c)[0])(xp)
+    return (g, val)
+
+
+def attack_pair(spec: MLPSpec, xp: jax.Array, v: jax.Array, mu: jax.Array,
+                clf_params: jax.Array, images: jax.Array, y: jax.Array,
+                c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """ZO two-point evaluation of the attack objective (one dispatch)."""
+    xp_plus = perturb(xp, v, mu)
+    lp = attack_loss(spec, xp_plus, clf_params, images, y, c)[0]
+    lb = attack_loss(spec, xp, clf_params, images, y, c)[0]
+    return (lp, lb)
+
+
+def attack_eval(spec: MLPSpec, xp: jax.Array, clf_params: jax.Array,
+                images: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(logits over the adversarial images, per-image l2 distortion).
+
+    The rust attack driver derives predicted labels, per-image success and
+    Table 2's least-l2-distortion from these.
+    """
+    z = _attack_images(xp, images)
+    lg = logits(spec, clf_params, z)
+    dist = jnp.sqrt(jnp.sum((z - images) ** 2, axis=-1))
+    return (lg, dist)

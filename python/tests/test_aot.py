@@ -1,0 +1,114 @@
+"""AOT pipeline tests: HLO-text lowering round-trips, manifest integrity,
+and golden-value reproducibility (the values rust/tests/golden.rs checks).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_profiles_well_formed():
+    for name, tup in aot.PROFILES.items():
+        assert len(tup) == 5
+        s = aot.spec_of(name)
+        assert s.dim > 0 and s.classes >= 2
+
+
+def test_table4_profiles_match_paper():
+    """Feature/class counts of the Fig. 2 datasets must match Table 4."""
+    expected = {  # dataset -> (features, classes)
+        "sensorless": (48, 11),
+        "acoustic": (50, 3),
+        "covtype": (54, 7),
+        "seismic": (50, 3),
+    }
+    for name, (f, c) in expected.items():
+        s = aot.spec_of(name)
+        assert (s.features, s.classes) == (f, c), name
+
+
+def test_lowering_produces_parseable_hlo_text():
+    spec = aot.spec_of("quickstart")
+    fn, specs = aot.mlp_entrypoints(spec, 8)["loss"]
+    text = aot.lower(fn, *specs)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # tuple return: final root should be a tuple
+    assert "tuple(" in text or "tuple " in text
+
+
+def test_golden_inputs_are_deterministic():
+    a = aot.golden_params(100)
+    b = aot.golden_params(100)
+    np.testing.assert_array_equal(a, b)
+    x1, y1 = aot.golden_batch(8, 10, 3)
+    x2, y2 = aot.golden_batch(8, 10, 3)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_golden_direction_is_unit():
+    v = aot.golden_direction(900)
+    assert abs(float(np.linalg.norm(v.astype(np.float64))) - 1.0) < 1e-5
+
+
+def test_golden_images_in_valid_range():
+    img = aot.golden_images(10, 900)
+    assert np.max(np.abs(img)) < 0.5  # atanh(2a) must be finite
+
+
+def test_golden_values_reproduce():
+    g1 = aot.golden_for_profile("quickstart")
+    g2 = aot.golden_for_profile("quickstart")
+    assert g1 == g2
+    assert np.isfinite(g1["loss"]) and g1["grad_norm"] > 0
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_covers_all_profiles(self, manifest):
+        assert set(manifest["profiles"]) == set(aot.PROFILES)
+        assert manifest["attack"] is not None
+
+    def test_all_artifact_files_exist_and_are_hlo(self, manifest):
+        names = []
+        for prof in manifest["profiles"].values():
+            names += list(prof["artifacts"].values())
+        names += list(manifest["attack"]["artifacts"].values())
+        assert len(names) == len(set(names))
+        for n in names:
+            path = os.path.join(ART_DIR, n)
+            assert os.path.exists(path), n
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, n
+
+    def test_manifest_dims_match_specs(self, manifest):
+        for name, prof in manifest["profiles"].items():
+            assert prof["dim"] == aot.spec_of(name).dim
+
+    def test_golden_loss_matches_recompute(self, manifest):
+        g = manifest["profiles"]["quickstart"]["golden"]
+        fresh = aot.golden_for_profile("quickstart")
+        assert abs(g["loss"] - fresh["loss"]) < 1e-6
+        assert abs(g["pair_base"] - fresh["pair_base"]) < 1e-6
+
+    def test_attack_manifest_dims(self, manifest):
+        a = manifest["attack"]
+        assert a["image_dim"] == aot.IMAGE_DIM == 900  # 30x30, paper d=900
+        assert a["batch"] == aot.ATTACK_BATCH == 5     # paper B=5
+        assert a["eval_batch"] == aot.ATTACK_EVAL_BATCH == 10  # paper n=10

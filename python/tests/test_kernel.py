@@ -1,0 +1,236 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes and values; every case asserts allclose between the
+interpret-mode Pallas path and the oracle. This is the CORE correctness
+signal for the compute hot-spot (DESIGN.md §5).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+from compile.kernels.dense import (
+    DEFAULT_BLOCK_B,
+    DEFAULT_BLOCK_H,
+    VMEM_BUDGET_BYTES,
+    dense_linear,
+    dense_relu,
+    dense_shapes_ok,
+    vmem_footprint_bytes,
+)
+from compile.kernels.zo import PERTURB_BLOCK, perturb
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dense kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    batch=st.integers(1, 140),
+    features=st.integers(1, 70),
+    out=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_relu_matches_ref(batch, features, out, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (batch, features)), _arr(rng, (features, out)), _arr(rng, (out,))
+    np.testing.assert_allclose(
+        np.asarray(dense_relu(x, w, b)),
+        np.asarray(R.dense_relu_ref(x, w, b)),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(**_SETTINGS)
+@given(
+    batch=st.integers(1, 140),
+    features=st.integers(1, 70),
+    out=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_linear_matches_ref(batch, features, out, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (batch, features)), _arr(rng, (features, out)), _arr(rng, (out,))
+    np.testing.assert_allclose(
+        np.asarray(dense_linear(x, w, b)),
+        np.asarray(R.dense_linear_ref(x, w, b)),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("batch,features,out", [
+    (64, 48, 128),    # sensorless first layer
+    (64, 128, 11),    # sensorless head
+    (64, 900, 64),    # attack classifier first layer
+    (128, 128, 128),  # exact block boundary
+    (129, 128, 129),  # one past the block boundary
+    (1, 1, 1),        # degenerate
+])
+def test_dense_profile_shapes(batch, features, out):
+    rng = np.random.default_rng(42)
+    x, w, b = _arr(rng, (batch, features)), _arr(rng, (features, out)), _arr(rng, (out,))
+    np.testing.assert_allclose(
+        np.asarray(dense_relu(x, w, b)),
+        np.asarray(R.dense_relu_ref(x, w, b)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_dense_relu_grad_matches_oracle_grad():
+    """custom_vjp backward == autodiff through the oracle."""
+    rng = np.random.default_rng(7)
+    x, w, b = _arr(rng, (9, 5)), _arr(rng, (5, 11)), _arr(rng, (11,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(dense_relu(x, w, b) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(R.dense_relu_ref(x, w, b) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_dense_linear_grad_matches_oracle_grad():
+    rng = np.random.default_rng(8)
+    x, w, b = _arr(rng, (6, 4)), _arr(rng, (4, 3)), _arr(rng, (3,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(jnp.sin(dense_linear(x, w, b)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(R.dense_linear_ref(x, w, b)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_budget_for_all_shipped_profiles():
+    """Every dense layer in every AOT profile must fit the VMEM budget."""
+    from compile.aot import PROFILES, spec_of
+    for name, (_, _, _, _, batch) in PROFILES.items():
+        s = spec_of(name)
+        layers = [(batch, s.features, s.hidden1),
+                  (batch, s.hidden1, s.hidden2),
+                  (batch, s.hidden2, s.classes)]
+        for (bb, f, o) in layers:
+            ok, fp = dense_shapes_ok(bb, f, o)
+            assert ok, f"{name} layer ({bb},{f},{o}) VMEM {fp} > budget"
+
+
+def test_vmem_footprint_monotone_in_features():
+    fps = [vmem_footprint_bytes(64, f, 128) for f in (16, 64, 256, 1024)]
+    assert fps == sorted(fps)
+    assert all(fp <= VMEM_BUDGET_BYTES for fp in fps)
+
+
+def test_block_defaults_are_mxu_aligned():
+    assert DEFAULT_BLOCK_B % 128 == 0
+    assert DEFAULT_BLOCK_H % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# zo perturb kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    d=st.integers(1, 3 * PERTURB_BLOCK + 5),
+    mu=st.floats(-1.0, 1.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_perturb_matches_ref(d, mu, seed):
+    rng = np.random.default_rng(seed)
+    p, v = _arr(rng, (d,)), _arr(rng, (d,))
+    mu = jnp.float32(mu)
+    np.testing.assert_allclose(
+        np.asarray(perturb(p, v, mu)),
+        np.asarray(R.perturb_ref(p, v, mu)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_perturb_zero_mu_is_identity():
+    rng = np.random.default_rng(3)
+    p, v = _arr(rng, (1000,)), _arr(rng, (1000,))
+    np.testing.assert_array_equal(
+        np.asarray(perturb(p, v, jnp.float32(0.0))), np.asarray(p))
+
+
+def test_perturb_grad():
+    rng = np.random.default_rng(4)
+    p, v = _arr(rng, (50,)), _arr(rng, (50,))
+    mu = jnp.float32(0.3)
+
+    def f(p, v, mu):
+        return jnp.sum(perturb(p, v, mu) ** 2)
+
+    gp, gv, gmu = jax.grad(f, argnums=(0, 1, 2))(p, v, mu)
+    out = p + 0.3 * v
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(2 * out), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(2 * 0.3 * out), rtol=1e-5)
+    np.testing.assert_allclose(float(gmu), float(jnp.sum(2 * out * v)), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax cross-entropy kernel
+# ---------------------------------------------------------------------------
+
+from compile.kernels.softmax import BLOCK_B, softmax_xent  # noqa: E402
+
+
+@settings(**_SETTINGS)
+@given(
+    batch=st.integers(1, 2 * 128 + 7),
+    classes=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(batch, classes, seed):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, (batch, classes), scale=3.0)
+    y = jnp.asarray(rng.integers(0, classes, size=batch).astype(np.float32))
+    got = float(softmax_xent(logits, y))
+    want = float(R.softmax_xent_ref(logits, y.astype(jnp.int32)))
+    assert abs(got - want) < 1e-5 * max(1.0, abs(want)), (got, want)
+
+
+def test_softmax_xent_block_boundary_shapes():
+    rng = np.random.default_rng(1)
+    for batch in [BLOCK_B - 1, BLOCK_B, BLOCK_B + 1, 2 * BLOCK_B]:
+        logits = _arr(rng, (batch, 5))
+        y = jnp.asarray(rng.integers(0, 5, size=batch).astype(np.float32))
+        got = float(softmax_xent(logits, y))
+        want = float(R.softmax_xent_ref(logits, y.astype(jnp.int32)))
+        assert abs(got - want) < 1e-5
+
+
+def test_softmax_xent_grad_matches_oracle():
+    rng = np.random.default_rng(2)
+    logits = _arr(rng, (12, 7), scale=2.0)
+    y = jnp.asarray(rng.integers(0, 7, size=12).astype(np.float32))
+    gp = jax.grad(lambda l: softmax_xent(l, y))(logits)
+    gr = jax.grad(lambda l: R.softmax_xent_ref(l, y.astype(jnp.int32)))(logits)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gr), rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_xent_numerical_stability_large_logits():
+    # row max subtraction must keep exp() finite for huge logits
+    logits = jnp.asarray([[1000.0, 0.0, -1000.0], [500.0, 499.0, -2.0]], jnp.float32)
+    y = jnp.asarray([0.0, 1.0], jnp.float32)
+    val = float(softmax_xent(logits, y))
+    assert np.isfinite(val)
+    assert val < 2.0  # both rows pick (near-)argmax labels

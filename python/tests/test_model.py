@@ -1,0 +1,239 @@
+"""L2 correctness: the JAX model graphs vs the kernel-free oracle model,
+plus structural/mathematical properties of every AOT entry point
+(ZO-estimator consistency, CW attack-loss properties, numerical gradients).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref as R
+
+SPEC = M.MLPSpec(features=10, hidden1=16, hidden2=16, classes=3)
+BATCH = 8
+
+_SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _inputs(seed, spec=SPEC, batch=BATCH, scale=0.3):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(size=spec.dim, scale=scale).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(batch, spec.features)).astype(np.float32))
+    y = jnp.asarray((rng.integers(0, spec.classes, size=batch)).astype(np.float32))
+    return p, x, y
+
+
+def _unit_dir(seed, d):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=d)
+    return jnp.asarray((v / np.linalg.norm(v)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# spec / layout
+# ---------------------------------------------------------------------------
+
+
+@given(f=st.integers(1, 40), h1=st.integers(1, 40), h2=st.integers(1, 40),
+       c=st.integers(2, 12))
+@settings(**_SETTINGS)
+def test_dim_matches_shapes(f, h1, h2, c):
+    s = M.MLPSpec(f, h1, h2, c)
+    total = sum(int(np.prod(shp)) for shp in s.shapes())
+    assert s.dim == total
+
+
+def test_unflatten_roundtrip():
+    p, _, _ = _inputs(0)
+    parts = M.unflatten(SPEC, p)
+    flat = jnp.concatenate([t.reshape(-1) for t in parts])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(p))
+
+
+def test_unflatten_shapes():
+    p, _, _ = _inputs(1)
+    shapes = tuple(t.shape for t in M.unflatten(SPEC, p))
+    assert shapes == SPEC.shapes()
+
+
+# ---------------------------------------------------------------------------
+# pallas model vs oracle model
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_logits_match_oracle(seed):
+    p, x, _ = _inputs(seed)
+    np.testing.assert_allclose(
+        np.asarray(M.logits(SPEC, p, x)),
+        np.asarray(M.logits_oracle(SPEC, p, x)),
+        rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_loss_matches_oracle(seed):
+    p, x, y = _inputs(seed)
+    lo = R.softmax_xent_ref(M.logits_oracle(SPEC, p, x), y.astype(jnp.int32))
+    np.testing.assert_allclose(float(M.loss(SPEC, p, x, y)[0]), float(lo),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_grad_matches_oracle_grad(seed):
+    p, x, y = _inputs(seed)
+    g, gl = M.grad(SPEC, p, x, y)
+    go = jax.grad(lambda pp: R.softmax_xent_ref(
+        M.logits_oracle(SPEC, pp, x), y.astype(jnp.int32)))(p)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(go),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(gl), float(M.loss(SPEC, p, x, y)[0]),
+                               rtol=1e-6)
+
+
+def test_grad_matches_numerical():
+    """Central finite differences on a handful of coordinates."""
+    p, x, y = _inputs(11, scale=0.2)
+    g, _ = M.grad(SPEC, p, x, y)
+    eps = 1e-3
+    for idx in [0, 7, SPEC.dim // 2, SPEC.dim - 1]:
+        e = np.zeros(SPEC.dim, np.float32)
+        e[idx] = eps
+        lp = float(M.loss(SPEC, p + jnp.asarray(e), x, y)[0])
+        lm = float(M.loss(SPEC, p - jnp.asarray(e), x, y)[0])
+        num = (lp - lm) / (2 * eps)
+        assert abs(num - float(g[idx])) < 5e-3, (idx, num, float(g[idx]))
+
+
+# ---------------------------------------------------------------------------
+# loss_pair / ZO estimator properties
+# ---------------------------------------------------------------------------
+
+
+def test_loss_pair_base_equals_loss():
+    p, x, y = _inputs(2)
+    v = _unit_dir(3, SPEC.dim)
+    lp, lb = M.loss_pair(SPEC, p, v, jnp.float32(1e-3), x, y)
+    np.testing.assert_allclose(float(lb), float(M.loss(SPEC, p, x, y)[0]),
+                               rtol=1e-6)
+    assert float(lp) != float(lb)  # generic direction moves the loss
+
+
+def test_loss_pair_plus_equals_shifted_loss():
+    p, x, y = _inputs(4)
+    v = _unit_dir(5, SPEC.dim)
+    mu = jnp.float32(1e-2)
+    lp, _ = M.loss_pair(SPEC, p, v, mu, x, y)
+    direct = float(M.loss(SPEC, p + mu * v, x, y)[0])
+    np.testing.assert_allclose(float(lp), direct, rtol=1e-5, atol=1e-6)
+
+
+def test_zo_scalar_approximates_directional_derivative():
+    """(F(x+mu v)-F(x))/mu -> <grad, v> as mu -> 0 (the estimator core)."""
+    p, x, y = _inputs(6, scale=0.2)
+    v = _unit_dir(7, SPEC.dim)
+    g, _ = M.grad(SPEC, p, x, y)
+    dd = float(jnp.dot(g, v))
+    mu = 1e-4
+    lp, lb = M.loss_pair(SPEC, p, v, jnp.float32(mu), x, y)
+    fd = (float(lp) - float(lb)) / mu
+    assert abs(fd - dd) < 5e-2 * max(1.0, abs(dd)), (fd, dd)
+
+
+# ---------------------------------------------------------------------------
+# accuracy / predict
+# ---------------------------------------------------------------------------
+
+
+def test_accuracy_bounds_and_value():
+    p, x, y = _inputs(8)
+    acc = float(M.accuracy(SPEC, p, x, y)[0])
+    assert 0.0 <= acc <= BATCH
+    pred = np.argmax(np.asarray(M.predict(SPEC, p, x)[0]), axis=-1)
+    assert acc == float(np.sum(pred == np.asarray(y).astype(np.int64)))
+
+
+def test_accuracy_perfect_when_labels_are_predictions():
+    p, x, _ = _inputs(9)
+    pred = np.argmax(np.asarray(M.predict(SPEC, p, x)[0]), axis=-1)
+    acc = float(M.accuracy(SPEC, p, x, jnp.asarray(pred.astype(np.float32)))[0])
+    assert acc == BATCH
+
+
+# ---------------------------------------------------------------------------
+# CW attack objective (Appendix A)
+# ---------------------------------------------------------------------------
+
+CLF = M.MLPSpec(features=36, hidden1=12, hidden2=8, classes=4)
+NIMG = 5
+
+
+def _attack_inputs(seed):
+    rng = np.random.default_rng(seed)
+    cp = jnp.asarray(rng.normal(size=CLF.dim, scale=0.3).astype(np.float32))
+    img = jnp.asarray((0.45 * np.tanh(rng.normal(size=(NIMG, 36)))).astype(np.float32))
+    y = jnp.asarray((rng.integers(0, 4, size=NIMG)).astype(np.float32))
+    return cp, img, y
+
+
+def test_attack_zero_perturbation_zero_distortion():
+    cp, img, _ = _attack_inputs(0)
+    xp = jnp.zeros((36,), jnp.float32)
+    _, dist = M.attack_eval(CLF, xp, cp, img)
+    np.testing.assert_allclose(np.asarray(dist), 0.0, atol=1e-5)
+
+
+def test_attack_loss_zero_c_is_pure_distortion():
+    cp, img, y = _attack_inputs(1)
+    xp = jnp.asarray(np.full(36, 0.05, np.float32))
+    lo = float(M.attack_loss(CLF, xp, cp, img, y, jnp.float32(0.0))[0])
+    z = 0.5 * jnp.tanh(jnp.arctanh(2.0 * img) + xp[None, :])
+    expect = float(jnp.mean(jnp.sum((z - img) ** 2, axis=-1)))
+    np.testing.assert_allclose(lo, expect, rtol=1e-5)
+
+
+def test_attack_loss_monotone_in_c():
+    cp, img, y = _attack_inputs(2)
+    xp = jnp.asarray(np.full(36, 0.02, np.float32))
+    l1 = float(M.attack_loss(CLF, xp, cp, img, y, jnp.float32(0.1))[0])
+    l2 = float(M.attack_loss(CLF, xp, cp, img, y, jnp.float32(10.0))[0])
+    assert l2 >= l1  # margin term is non-negative
+
+
+def test_attack_grad_matches_numerical():
+    cp, img, y = _attack_inputs(3)
+    xp = jnp.asarray(np.full(36, 0.01, np.float32))
+    c = jnp.float32(0.5)
+    g, gl = M.attack_grad(CLF, xp, cp, img, y, c)
+    eps = 1e-3
+    for idx in [0, 5, 17, 35]:
+        e = np.zeros(36, np.float32)
+        e[idx] = eps
+        lp = float(M.attack_loss(CLF, xp + jnp.asarray(e), cp, img, y, c)[0])
+        lm = float(M.attack_loss(CLF, xp - jnp.asarray(e), cp, img, y, c)[0])
+        num = (lp - lm) / (2 * eps)
+        assert abs(num - float(g[idx])) < 5e-3
+
+
+def test_attack_pair_base_matches_loss():
+    cp, img, y = _attack_inputs(4)
+    xp = jnp.asarray(np.full(36, 0.01, np.float32))
+    v = _unit_dir(5, 36)
+    lp, lb = M.attack_pair(CLF, xp, v, jnp.float32(1e-3), cp, img, y,
+                           jnp.float32(0.5))
+    np.testing.assert_allclose(
+        float(lb),
+        float(M.attack_loss(CLF, xp, cp, img, y, jnp.float32(0.5))[0]),
+        rtol=1e-6)
+
+
+def test_attack_images_stay_in_valid_box():
+    cp, img, _ = _attack_inputs(6)
+    xp = jnp.asarray(np.full(36, 3.0, np.float32))  # huge perturbation
+    z = 0.5 * jnp.tanh(jnp.arctanh(2.0 * img) + xp[None, :])
+    assert float(jnp.max(jnp.abs(z))) <= 0.5 + 1e-6

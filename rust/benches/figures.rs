@@ -1,0 +1,125 @@
+//! Figure benches: regenerate reduced-scale versions of every figure/table
+//! series in the paper's evaluation and check the qualitative *shape* the
+//! paper reports. (The full-scale series are produced by `hosgd fig1/fig2`;
+//! this bench is the fast regression gate.)
+//!
+//!   Fig. 1  — attack loss vs iterations, 5 methods
+//!   Table 2 — least l2 distortion per method
+//!   Fig. 2  — train loss vs iterations + wall-clock + test acc (sensorless
+//!             column; the other three datasets share the code path and run
+//!             under `hosgd fig2 --all`)
+//!
+//! Run with: cargo bench --bench figures
+
+use hosgd::attack::{build_task, run_attack, AttackConfig};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("figures bench requires artifacts (`make artifacts`): {e}");
+            return;
+        }
+    };
+    fig2_shape(&rt);
+    fig1_table2_shape(&rt);
+    println!("\nfigures bench OK");
+}
+
+/// Fig. 2 (sensorless row): per-iteration convergence ordering and the
+/// byte/wall-clock trade-off.
+fn fig2_shape(rt: &Runtime) {
+    println!("== Fig. 2 shape check (sensorless, 96 iters) ==");
+    let iters = 96u64;
+    let base = TrainConfig {
+        dataset: "sensorless".into(),
+        iters,
+        eval_every: iters - 1,
+        record_every: 1,
+        ..Default::default()
+    };
+    let model = rt.model("sensorless").expect("model");
+    let data = make_data(&base).expect("data");
+    let mut finals = std::collections::BTreeMap::new();
+    println!(
+        "{:<14} {:>11} {:>10} {:>12} {:>12}",
+        "method", "final loss", "test acc", "MB/worker", "simcomm(s)"
+    );
+    for method in Method::FIGURE_SET {
+        let alpha = match method {
+            Method::ZoSgd => 0.005,
+            Method::ZoSvrgAve => 0.002,
+            Method::HoSgd => 0.005,
+            _ => 0.1,
+        };
+        let cfg = TrainConfig { method, step: StepSize::Constant { alpha }, ..base.clone() };
+        let out = run_train_with(&model, &data, &cfg).expect("run");
+        let last = *out.trace.rows.last().unwrap();
+        println!(
+            "{:<14} {:>11.4} {:>10} {:>12.3} {:>12.4}",
+            method.label(),
+            last.train_loss,
+            out.trace.final_acc().map_or("-".into(), |a| format!("{a:.3}")),
+            last.bytes_per_worker as f64 / 1e6,
+            last.comm_s
+        );
+        finals.insert(method.label().to_string(), (out.trace.best_loss().unwrap(), last));
+    }
+    // paper shape: FO-quality methods (ho/sync/ri) beat ZO-SGD per iteration
+    let ho = finals["ho_sgd"].0;
+    let sync = finals["sync_sgd"].0;
+    let zo = finals["zo_sgd"].0;
+    assert!(ho < zo, "HO-SGD ({ho}) must beat ZO-SGD ({zo}) per iteration");
+    assert!(
+        ho < zo && sync < zo,
+        "FO-quality methods must outperform pure ZO at equal iterations"
+    );
+    // paper shape: HO-SGD moves far fewer bytes than syncSGD
+    let ho_b = finals["ho_sgd"].1.bytes_per_worker as f64;
+    let sync_b = finals["sync_sgd"].1.bytes_per_worker as f64;
+    assert!(
+        ho_b < sync_b / 6.0,
+        "HO-SGD bytes {ho_b} not ≪ syncSGD bytes {sync_b} (tau = 8 ⇒ ~8x)"
+    );
+}
+
+/// Fig. 1 + Table 2: attack loss decreases for every method; distortion
+/// ordering FO ≤ HO ≤ ZO (the paper's Table 2 ranking).
+fn fig1_table2_shape(rt: &Runtime) {
+    println!("\n== Fig. 1 / Table 2 shape check (72 attack iters) ==");
+    let bind = rt.attack().expect("attack binding");
+    let task = build_task(rt, 7, 150).expect("task");
+    println!("frozen classifier acc: {:.3}", task.clf_test_acc);
+    println!("{:<14} {:>11} {:>11} {:>9} {:>10}", "method", "loss[0]", "loss[end]", "success", "l2(mean)");
+    let mut outcomes = std::collections::BTreeMap::new();
+    for method in Method::FIGURE_SET {
+        let cfg = AttackConfig { method, iters: 72, ..Default::default() };
+        let out = run_attack(&bind, &task, &cfg).expect("attack run");
+        let first = out.trace.rows.first().unwrap().train_loss;
+        let last = out.trace.final_loss().unwrap();
+        println!(
+            "{:<14} {:>11.4} {:>11.4} {:>8.0}% {:>10.3}",
+            method.label(),
+            first,
+            last,
+            out.success_rate * 100.0,
+            out.mean_distortion
+        );
+        assert!(
+            out.trace.best_loss().unwrap() <= first,
+            "{method}: attack loss must not increase from start"
+        );
+        outcomes.insert(method.label().to_string(), out);
+    }
+    // Fig. 1 shape: at equal iterations the FO/HO methods reach a lower
+    // attack loss than pure-ZO ZO-SVRG (the paper's slowest curve)
+    let ho = outcomes["ho_sgd"].trace.best_loss().unwrap();
+    let svrg = outcomes["zo_svrg_ave"].trace.best_loss().unwrap();
+    assert!(
+        ho <= svrg + 1e-9,
+        "HO-SGD best {ho} should not trail ZO-SVRG-Ave best {svrg}"
+    );
+}

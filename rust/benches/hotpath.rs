@@ -1,0 +1,99 @@
+//! Hot-path microbenchmarks (§Perf L3): the per-iteration building blocks
+//! of every method, isolated. These are the quantities the optimization
+//! pass iterates on; EXPERIMENTS.md §Perf records before/after.
+//!
+//! Run with: cargo bench --bench hotpath
+
+use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use hosgd::optim::{axpy_acc, axpy_update, zo_scalar};
+use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry, Xoshiro256};
+use hosgd::runtime::{golden, Runtime};
+use hosgd::util::bench::{bench, print_table};
+
+fn main() {
+    let mut results = Vec::new();
+    let d = 24_203; // sensorless model dimension
+
+    // 1. direction regeneration — what every rank does per (ZO iter, worker)
+    let reg = SeedRegistry::new(1);
+    let mut dir = vec![0.0f32; d];
+    let mut scratch = Vec::new();
+    let mut t = 0u64;
+    results.push(bench("regen_direction d=24203", 3, 50, || {
+        t += 1;
+        unit_sphere_direction_scratch(reg.direction_seed(t, 0), &mut dir, &mut scratch);
+        std::hint::black_box(&dir);
+    }));
+
+    // 2. the ZO aggregation: m=4 direction regens + scaled accumulation
+    let mut gsum = vec![0.0f32; d];
+    results.push(bench("zo_aggregate m=4 d=24203", 3, 30, || {
+        gsum.fill(0.0);
+        for i in 0..4u64 {
+            t += 1;
+            unit_sphere_direction_scratch(reg.direction_seed(t, i), &mut dir, &mut scratch);
+            let s = zo_scalar(d, 1e-3, 1.001, 1.0);
+            axpy_acc(&mut gsum, s / 4.0, &dir);
+        }
+        std::hint::black_box(&gsum);
+    }));
+
+    // 3. the parameter update
+    let mut params = vec![0.1f32; d];
+    results.push(bench("axpy_update d=24203", 3, 200, || {
+        axpy_update(&mut params, 1e-4, &gsum);
+        std::hint::black_box(&params);
+    }));
+
+    // 4. QSGD quantize + dequantize round
+    let mut qrng = Xoshiro256::seeded(9);
+    let grad: Vec<f32> = (0..d).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect();
+    let mut deq = vec![0.0f32; d];
+    results.push(bench("qsgd_quantize+decode s=4 d=24203", 3, 30, || {
+        let q = quantize(&grad, 4, &mut qrng);
+        std::hint::black_box(encoded_bytes(&q));
+        deq.fill(0.0);
+        dequantize_into(&q, 1.0, &mut deq);
+        std::hint::black_box(&deq);
+    }));
+
+    // 5-7. PJRT executable dispatches (needs artifacts)
+    match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => {
+            let model = rt.model("sensorless").expect("model");
+            let p = golden::golden_params(model.dim());
+            let (x, y) = golden::golden_batch(model.batch(), model.features(), model.classes());
+            let v = golden::golden_direction(model.dim());
+            let mut g = vec![0.0f32; model.dim()];
+
+            results.push(bench("exec loss (sensorless B=64)", 2, 20, || {
+                std::hint::black_box(model.loss(&p, &x, &y).unwrap());
+            }));
+            results.push(bench("exec loss_pair (fused 2-point ZO)", 2, 20, || {
+                std::hint::black_box(model.loss_pair(&p, &v, 1e-3, &x, &y).unwrap());
+            }));
+            results.push(bench("exec grad (FO oracle)", 2, 20, || {
+                std::hint::black_box(model.grad(&p, &x, &y, &mut g).unwrap());
+            }));
+        }
+        Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e}"),
+    }
+
+    print_table("hot-path microbenchmarks", &results);
+
+    // roofline context for §Perf: one ZO iteration = 1 pair-exec + m regens
+    // + m axpys; one FO iteration = m grad-execs + allreduce.
+    let find = |n: &str| results.iter().find(|r| r.name.starts_with(n)).map(|r| r.median_s);
+    if let (Some(pair), Some(regen)) = (find("exec loss_pair"), find("regen_direction")) {
+        println!(
+            "\nZO iteration budget: pair-exec {:.3}ms vs direction-regen {:.3}ms (x4 workers) — {}",
+            pair * 1e3,
+            regen * 1e3,
+            if pair > 4.0 * regen {
+                "executable dispatch dominates (L2/XLA bound)"
+            } else {
+                "direction regeneration dominates (L3 bound)"
+            }
+        );
+    }
+}

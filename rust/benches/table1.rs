@@ -1,0 +1,106 @@
+//! Table 1 bench: measure the per-iteration cost of every method end-to-end
+//! (time, scalars, bytes, SFO-normalized compute) on the `sensorless`
+//! profile and print the measured rows next to the paper's analytic ones.
+//!
+//! You are not expected to match the paper's testbed numbers — what must
+//! hold is the *shape*: ZO ≪ HO ≪ sync in communication; ZO ≈ HO ≪ FO in
+//! compute; and HO's ratios (1 + (τ-1)/d comm vs model averaging,
+//! 1/τ + 1/d compute vs FO).
+//!
+//! Run with: cargo bench --bench table1
+
+use hosgd::config::{Method, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::runtime::Runtime;
+use hosgd::theory::{ratios, table1, Table1Params};
+use hosgd::util::bench::fmt_time;
+
+fn main() {
+    let rt = match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("table1 bench requires artifacts (`make artifacts`): {e}");
+            return;
+        }
+    };
+    let dataset = "sensorless";
+    let iters: u64 = 48;
+    let tau = 8usize;
+    let model = rt.model(dataset).expect("model");
+    let d = model.dim();
+
+    println!("== Table 1 — analytic (d={d}, m=4, N={iters}, tau={tau}) ==");
+    println!(
+        "{:<18} {:<26} {:>15} {:>14}",
+        "METHOD", "CONVERGENCE ORDER", "COMM/ITER(f32)", "NORM.COMPUTE"
+    );
+    let p = Table1Params { d, m: 4, n: iters, tau, redundancy: 0.25, s: 4 };
+    for row in table1(p) {
+        println!(
+            "{:<18} {:<26} {:>15.3} {:>14.5}",
+            row.method.paper_name(),
+            row.convergence_order,
+            row.comm_scalars_per_iter,
+            row.normalized_compute
+        );
+    }
+
+    println!("\n== Table 1 — measured ({iters} iters end-to-end on {dataset}) ==");
+    println!(
+        "{:<18} {:>12} {:>15} {:>14} {:>12}",
+        "METHOD", "TIME/ITER", "COMM/ITER(f32)", "NORM.COMPUTE", "SIM-COMM/IT"
+    );
+    let base = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        tau,
+        eval_every: 0,
+        record_every: iters,
+        ..Default::default()
+    };
+    let data = make_data(&base).expect("data");
+    let mut measured = Vec::new();
+    for method in Method::ALL {
+        let cfg = TrainConfig { method, ..base.clone() };
+        let t0 = std::time::Instant::now();
+        let out = run_train_with(&model, &data, &cfg).expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let last = *out.trace.rows.last().unwrap();
+        let per_iter_scalars = last.scalars_per_worker as f64 / iters as f64;
+        let norm_compute = (last.grad_evals as f64 + last.fn_evals as f64 / d as f64)
+            / (iters as f64 * 4.0 * model.batch() as f64);
+        println!(
+            "{:<18} {:>12} {:>15.3} {:>14.5} {:>12}",
+            method.paper_name(),
+            fmt_time(wall / iters as f64),
+            per_iter_scalars,
+            norm_compute,
+            fmt_time(last.comm_s / iters as f64),
+        );
+        measured.push((method, per_iter_scalars, norm_compute));
+    }
+
+    // shape assertions — fail loudly if the reproduction breaks the table
+    let get = |m: Method| measured.iter().find(|(mm, _, _)| *mm == m).unwrap().clone();
+    let (_, ho_c, ho_n) = get(Method::HoSgd);
+    let (_, sync_c, sync_n) = get(Method::SyncSgd);
+    let (_, ri_c, _) = get(Method::RiSgd);
+    let (_, zo_c, zo_n) = get(Method::ZoSgd);
+    assert!(zo_c < ho_c && ho_c < sync_c, "comm ordering violated");
+    assert!(zo_n < ho_n && ho_n < sync_n, "compute ordering violated");
+    let comm_ratio = ho_c / ri_c;
+    let expect_comm = ratios::hosgd_over_ri_comm(d, tau);
+    println!(
+        "\nHO/RI comm ratio measured {comm_ratio:.5} vs analytic {expect_comm:.5} \
+         (Table 1: 1 + (tau-1)/d)"
+    );
+    assert!((comm_ratio - expect_comm).abs() / expect_comm < 0.05);
+    let compute_ratio = ho_n / sync_n;
+    let expect_compute = ratios::hosgd_over_fo_compute(d, tau);
+    println!(
+        "HO/FO compute ratio measured {compute_ratio:.5} vs analytic {expect_compute:.5} \
+         (Table 1: 1/tau + 1/d)"
+    );
+    assert!((compute_ratio - expect_compute).abs() / expect_compute < 0.05);
+    println!("\ntable1 bench OK — measured counters match the analytic table");
+}

@@ -1,0 +1,424 @@
+//! Section 5.1: generating **universal adversarial perturbations** with
+//! distributed hybrid-order SGD — Fig. 1 (attack loss vs iterations),
+//! Table 2 (l2 distortion) and Table 3 (per-image labels).
+//!
+//! The paper attacks a well-trained MNIST DNN; per DESIGN.md §4 we first
+//! *train our own* frozen classifier on the synthetic 30×30 digit corpus
+//! using this library's own syncSGD, then optimize the d = 900 universal
+//! perturbation over n = 10 same-class images with every method (m = 5
+//! workers, B = 5, step 30/d, μ = O(1/√(dN)) — the paper's §5.1 setup).
+//!
+//! The optimization reuses the *same* [`Algorithm`] implementations as the
+//! training experiments through [`AttackOracle`] — only the oracle differs.
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::CommSim;
+use crate::config::{Method, StepSize, TrainConfig};
+use crate::coordinator::run_train_with;
+use crate::data::Dataset;
+use crate::metrics::{Stopwatch, Trace, TraceRow};
+use crate::optim::{build, AlgoConfig, Algorithm, Oracle, World};
+use crate::rng::{SeedRegistry, Xoshiro256};
+use crate::runtime::{AttackBinding, Runtime};
+use crate::util::json::Json;
+
+/// The frozen attack target + the natural images being perturbed.
+#[derive(Clone)]
+pub struct AttackTask {
+    pub clf_params: Vec<f32>,
+    /// n = eval_batch natural images (row-major [n, 900])
+    pub images: Vec<f32>,
+    /// their true labels (f32 class ids)
+    pub labels: Vec<f32>,
+    /// CW regularization constant c
+    pub c: f32,
+    /// classifier accuracy on its test split (sanity metadata)
+    pub clf_test_acc: f64,
+}
+
+/// Attack-run configuration (defaults = the paper's §5.1 setup).
+#[derive(Debug, Clone)]
+pub struct AttackConfig {
+    pub method: Method,
+    pub iters: u64,
+    /// m — paper uses 5
+    pub workers: usize,
+    pub tau: usize,
+    /// None ⇒ Theorem 1's 1/√(dN)
+    pub mu: Option<f64>,
+    /// None ⇒ the paper's 30/d
+    pub lr: Option<f64>,
+    pub seed: u64,
+    pub record_every: u64,
+    /// override of the CW trade-off constant c (None = task default)
+    pub c: Option<f32>,
+    pub redundancy: f64,
+    pub svrg_epoch: usize,
+    pub svrg_probes: usize,
+    pub qsgd_levels: u32,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::HoSgd,
+            iters: 300,
+            workers: 5, // paper §5.1
+            tau: 8,
+            mu: None,
+            lr: None,
+            seed: 7,
+            record_every: 1,
+            c: None,
+            redundancy: 0.25,
+            svrg_epoch: 10,
+            svrg_probes: 4,
+            qsgd_levels: 4,
+        }
+    }
+}
+
+/// Train the frozen classifier with the library's own syncSGD and assemble
+/// the attack task: n correctly-classified same-class images (the paper
+/// picks n = 10 examples from the same class).
+pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask> {
+    let bind = rt.attack()?;
+    let model = rt.model(&bind.meta.clf_profile)?;
+    let classes = model.classes();
+
+    // 1. train the classifier on the digit corpus
+    let corpus = Dataset::digits(classes, 4096, seed, 0);
+    let test = Dataset::digits(classes, 1024, seed, 1);
+    let cfg = TrainConfig {
+        method: Method::SyncSgd,
+        dataset: bind.meta.clf_profile.clone(),
+        iters: clf_iters,
+        workers: 4,
+        tau: 1,
+        step: StepSize::Constant { alpha: 0.1 },
+        seed,
+        eval_every: 0,
+        record_every: clf_iters.max(1),
+        ..Default::default()
+    };
+    let data = crate::coordinator::RunData { train: corpus, test };
+    let outcome = run_train_with(&model, &data, &cfg)?;
+    let clf_params = outcome.params;
+    let clf_test_acc = crate::coordinator::eval_accuracy(&model, &clf_params, &data.test)?;
+
+    // 2. pick eval_batch same-class images the classifier gets right
+    let n = bind.eval_batch();
+    let dim = bind.dim();
+    let pool = Dataset::digits(classes, 512, seed, 2);
+    let mut best: Option<AttackTask> = None;
+    for class in 0..classes {
+        let candidates: Vec<usize> =
+            (0..pool.len()).filter(|&i| pool.y[i] as usize == class).take(n).collect();
+        if candidates.len() < n {
+            continue;
+        }
+        let mut images = Vec::with_capacity(n * dim);
+        for &i in &candidates {
+            images.extend_from_slice(&pool.x[i * dim..(i + 1) * dim]);
+        }
+        let labels = vec![class as f32; n];
+        // verify with the attack_eval artifact at xp = 0
+        let (logits, _) = bind.eval(&vec![0.0; dim], &clf_params, &images)?;
+        let correct = (0..n)
+            .filter(|&k| argmax(&logits[k * classes..(k + 1) * classes]) == class)
+            .count();
+        let task = AttackTask {
+            clf_params: clf_params.clone(),
+            images,
+            labels,
+            c: 20.0,
+            clf_test_acc,
+        };
+        if correct == n {
+            return Ok(task);
+        }
+        if best.is_none() {
+            best = Some(task);
+        }
+    }
+    best.ok_or_else(|| anyhow!("could not assemble {n} same-class images"))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// AttackOracle
+// ---------------------------------------------------------------------------
+
+/// Stochastic oracle over the CW attack objective: a "minibatch" is
+/// `batch` images drawn (with replacement, pre-shared seeds) from the n
+/// natural images; the decision variable is the universal perturbation.
+pub struct AttackOracle<'a> {
+    bind: &'a AttackBinding,
+    task: &'a AttackTask,
+    reg: SeedRegistry,
+    bi: Vec<f32>,
+    by: Vec<f32>,
+}
+
+impl<'a> AttackOracle<'a> {
+    pub fn new(bind: &'a AttackBinding, task: &'a AttackTask, seed: u64) -> Self {
+        let b = bind.batch();
+        let d = bind.dim();
+        Self {
+            bind,
+            task,
+            reg: SeedRegistry::new(seed),
+            bi: vec![0.0; b * d],
+            by: vec![0.0; b],
+        }
+    }
+
+    fn fill_batch(&mut self, iter: u64, worker: u64) {
+        let mut rng = Xoshiro256::seeded(self.reg.data_seed(iter, worker));
+        let n = self.bind.eval_batch();
+        let d = self.bind.dim();
+        for k in 0..self.bind.batch() {
+            let i = rng.next_below(n);
+            self.bi[k * d..(k + 1) * d].copy_from_slice(&self.task.images[i * d..(i + 1) * d]);
+            self.by[k] = self.task.labels[i];
+        }
+    }
+}
+
+impl Oracle for AttackOracle<'_> {
+    fn dim(&self) -> usize {
+        self.bind.dim()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.bind.batch()
+    }
+
+    fn grad(&mut self, params: &[f32], iter: u64, worker: u64, out: &mut [f32]) -> Result<f32> {
+        self.fill_batch(iter, worker);
+        self.bind.grad(params, &self.task.clf_params, &self.bi, &self.by, self.task.c, out)
+    }
+
+    fn pair(
+        &mut self,
+        params: &[f32],
+        v: &[f32],
+        mu: f32,
+        iter: u64,
+        worker: u64,
+    ) -> Result<(f32, f32)> {
+        self.fill_batch(iter, worker);
+        self.bind.loss_pair(
+            params,
+            v,
+            mu,
+            &self.task.clf_params,
+            &self.bi,
+            &self.by,
+            self.task.c,
+        )
+    }
+
+    fn loss(&mut self, params: &[f32], iter: u64, worker: u64) -> Result<f32> {
+        self.fill_batch(iter, worker);
+        self.bind.loss(params, &self.task.clf_params, &self.bi, &self.by, self.task.c)
+    }
+
+    fn init_params(&self, _seed: u64) -> Vec<f32> {
+        vec![0.0; self.bind.dim()] // the attack starts from zero perturbation
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The attack run + outcome (Fig. 1 / Tables 2–3)
+// ---------------------------------------------------------------------------
+
+/// Per-image outcome of the final universal perturbation.
+#[derive(Debug, Clone)]
+pub struct ImageOutcome {
+    pub index: usize,
+    pub true_label: usize,
+    pub adv_label: usize,
+    pub l2_distortion: f64,
+    pub success: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct AttackOutcome {
+    pub trace: Trace,
+    pub images: Vec<ImageOutcome>,
+    pub success_rate: f64,
+    /// Table 2's metric: least l2 distortion among successful examples
+    pub least_distortion: Option<f64>,
+    pub mean_distortion: f64,
+    pub perturbation: Vec<f32>,
+}
+
+/// Run one attack experiment with the given method.
+pub fn run_attack(bind: &AttackBinding, task: &AttackTask, cfg: &AttackConfig) -> Result<AttackOutcome> {
+    // allow the config to override the CW constant without rebuilding the task
+    let task_override;
+    let task = if let Some(c) = cfg.c {
+        task_override = AttackTask { c, ..(*task).clone() };
+        &task_override
+    } else {
+        task
+    };
+    let d = bind.dim();
+    let n_iters = cfg.iters;
+    let mu = cfg.mu.unwrap_or(1.0 / ((d as f64) * (n_iters as f64)).sqrt());
+    let lr = cfg.lr.unwrap_or(30.0 / d as f64); // paper: step 30/d
+    let acfg = AlgoConfig {
+        m: cfg.workers,
+        tau: cfg.tau,
+        step: StepSize::Constant { alpha: lr },
+        iters: n_iters,
+        mu: mu as f32,
+        redundancy: cfg.redundancy,
+        svrg_epoch: cfg.svrg_epoch,
+        svrg_probes: cfg.svrg_probes,
+        qsgd_levels: cfg.qsgd_levels,
+        qsgd_error_feedback: false,
+        momentum: 0.9,
+        seed: cfg.seed,
+    };
+    let oracle = AttackOracle::new(bind, task, cfg.seed);
+    let init = oracle.init_params(cfg.seed);
+    let comm = CommSim::new(Default::default(), cfg.workers);
+    let mut world = World::new(oracle, comm, acfg.clone());
+    let mut algo: Box<dyn Algorithm<AttackOracle>> = build(cfg.method, init, &acfg);
+
+    let watch = Stopwatch::start();
+    let mut rows = Vec::new();
+    for t in 0..n_iters {
+        let loss = algo.step(t, &mut world)?;
+        if t % cfg.record_every.max(1) == 0 || t + 1 == n_iters {
+            let compute_s = watch.elapsed_s();
+            let comm_s = world.comm.stats.sim_time_s;
+            rows.push(TraceRow {
+                iter: t,
+                train_loss: loss,
+                test_acc: None,
+                compute_s,
+                comm_s,
+                total_s: compute_s + comm_s,
+                bytes_per_worker: world.comm.stats.bytes_per_worker,
+                scalars_per_worker: world.comm.stats.scalars_per_worker,
+                fn_evals: world.compute.fn_evals,
+                grad_evals: world.compute.grad_evals,
+            });
+        }
+    }
+
+    let mut xp = Vec::with_capacity(d);
+    algo.eval_params(&mut xp);
+    let (logits, dists) = bind.eval(&xp, &task.clf_params, &task.images)?;
+    let n = bind.eval_batch();
+    let classes = logits.len() / n;
+    let mut images = Vec::with_capacity(n);
+    let mut succ_dists = Vec::new();
+    for k in 0..n {
+        let true_label = task.labels[k] as usize;
+        let adv_label = argmax(&logits[k * classes..(k + 1) * classes]);
+        let success = adv_label != true_label;
+        if success {
+            succ_dists.push(dists[k] as f64);
+        }
+        images.push(ImageOutcome {
+            index: k,
+            true_label,
+            adv_label,
+            l2_distortion: dists[k] as f64,
+            success,
+        });
+    }
+    let success_rate = succ_dists.len() as f64 / n as f64;
+    let mean_distortion = dists.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let least_distortion = succ_dists.iter().copied().fold(None, |acc: Option<f64>, x| {
+        Some(acc.map_or(x, |a| a.min(x)))
+    });
+
+    Ok(AttackOutcome {
+        trace: Trace {
+            method: cfg.method.label().to_string(),
+            dataset: "attack_mnist_like".into(),
+            dim: d,
+            workers: cfg.workers,
+            batch: bind.batch(),
+            tau: cfg.tau,
+            seed: cfg.seed,
+            rows,
+        },
+        images,
+        success_rate,
+        least_distortion,
+        mean_distortion,
+        perturbation: xp,
+    })
+}
+
+impl ImageOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::num(self.index as f64)),
+            ("true_label", Json::num(self.true_label as f64)),
+            ("adv_label", Json::num(self.adv_label as f64)),
+            ("l2_distortion", Json::num(self.l2_distortion)),
+            ("success", Json::Bool(self.success)),
+        ])
+    }
+}
+
+impl AttackOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", self.trace.to_json()),
+            (
+                "images",
+                Json::Arr(self.images.iter().map(ImageOutcome::to_json).collect()),
+            ),
+            ("success_rate", Json::num(self.success_rate)),
+            (
+                "least_distortion",
+                self.least_distortion.map_or(Json::Null, Json::num),
+            ),
+            ("mean_distortion", Json::num(self.mean_distortion)),
+        ])
+    }
+}
+
+/// Dump the adversarial images as ASCII-art PGMs (Table 3 visual check).
+pub fn dump_adversarial_pgm(
+    task: &AttackTask,
+    xp: &[f32],
+    dir: impl AsRef<std::path::Path>,
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let side = (xp.len() as f64).sqrt() as usize;
+    let n = task.labels.len();
+    for k in 0..n {
+        let img = &task.images[k * xp.len()..(k + 1) * xp.len()];
+        // z = 0.5*tanh(atanh(2a) + xp), same transform as the model
+        let mut buf = format!("P2\n{side} {side}\n255\n");
+        for p in 0..xp.len() {
+            let a = (img[p] as f64).clamp(-0.499, 0.499);
+            let z = 0.5 * ((2.0 * a).atanh() + xp[p] as f64).tanh();
+            let px = ((z + 0.5) * 255.0).round().clamp(0.0, 255.0) as u8;
+            buf.push_str(&px.to_string());
+            buf.push(if (p + 1) % side == 0 { '\n' } else { ' ' });
+        }
+        std::fs::write(dir.join(format!("adv_{k:02}.pgm")), buf)?;
+    }
+    Ok(())
+}

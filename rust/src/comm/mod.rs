@@ -1,0 +1,213 @@
+//! Communication substrate: simulated collectives with **exact byte
+//! accounting** and an α–β network-cost model.
+//!
+//! The paper's comparison (Table 1, Fig. 2 wall-clock columns) is driven by
+//! *how many scalars cross the network per iteration*:
+//!
+//! * FO iterations / syncSGD: a `d`-float all-reduce per worker,
+//! * ZO iterations of HO-SGD / ZO-SGD: **one scalar** per worker
+//!   (directions are regenerated from pre-shared seeds — see [`crate::rng`]),
+//! * RI-SGD: a `d`-float model average every τ iterations,
+//! * QSGD: the encoded quantized gradient.
+//!
+//! Our testbed is a single process, so the *numerics* of a collective are
+//! trivially exact (workers are simulated in-process); what we model is the
+//! *cost*: every transfer is logged against [`CommStats`] and priced by the
+//! α–β [`NetworkModel`] (per-message latency α + per-byte cost β), giving
+//! the simulated wall-clock axis of Fig. 2. Compute time is measured, comm
+//! time is modelled; both are reported separately in the traces.
+
+pub mod qsgd;
+
+/// α–β cost model of the interconnect (per message latency + bandwidth).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// per-message latency in seconds (α)
+    pub latency_s: f64,
+    /// link bandwidth in bits per second (1/β)
+    pub bandwidth_bps: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // commodity 1 GbE with 50 µs latency — the "commodity worker nodes"
+        // regime the paper motivates (§1 point 2).
+        Self { latency_s: 50e-6, bandwidth_bps: 1e9 }
+    }
+}
+
+impl NetworkModel {
+    fn xfer(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes * 8.0 / self.bandwidth_bps
+    }
+
+    /// Ring all-reduce of `bytes` per node across `m` nodes:
+    /// 2(m-1) steps, each moving bytes/m.
+    pub fn allreduce_time(&self, bytes: u64, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (m - 1);
+        steps as f64 * self.xfer(bytes as f64 / m as f64)
+    }
+
+    /// All-gather of `bytes` contributed per node (ring, m-1 steps).
+    pub fn allgather_time(&self, bytes_per_node: u64, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        (m - 1) as f64 * self.xfer(bytes_per_node as f64)
+    }
+
+    /// One-to-all broadcast (binomial tree, ⌈log2 m⌉ rounds).
+    pub fn broadcast_time(&self, bytes: u64, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let rounds = (m as f64).log2().ceil();
+        rounds * self.xfer(bytes as f64)
+    }
+}
+
+/// Cumulative communication counters (per-worker egress, i.e. the paper's
+/// "communication load ... by each worker node").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommStats {
+    /// bytes sent by one worker (egress), total
+    pub bytes_per_worker: u64,
+    /// number of scalar (f32) values sent by one worker
+    pub scalars_per_worker: u64,
+    /// number of collective rounds
+    pub rounds: u64,
+    /// modelled network time in seconds (critical path)
+    pub sim_time_s: f64,
+}
+
+/// The collective-communication simulator: numerics happen in-process, cost
+/// and volume are accounted here.
+#[derive(Debug, Clone)]
+pub struct CommSim {
+    pub net: NetworkModel,
+    pub m: usize,
+    pub stats: CommStats,
+}
+
+impl CommSim {
+    pub fn new(net: NetworkModel, m: usize) -> Self {
+        Self { net, m, stats: CommStats::default() }
+    }
+
+    /// Account an all-reduce where every worker contributes `floats` f32s
+    /// (the FO gradient exchange of Algorithm 1 eq. (3) / syncSGD).
+    pub fn allreduce_floats(&mut self, floats: u64) {
+        let bytes = floats * 4;
+        self.stats.bytes_per_worker += bytes;
+        self.stats.scalars_per_worker += floats;
+        self.stats.rounds += 1;
+        self.stats.sim_time_s += self.net.allreduce_time(bytes, self.m);
+    }
+
+    /// Account the ZO scalar exchange: every worker sends ONE f32
+    /// directional-derivative value (the paper's headline trick).
+    pub fn allgather_scalar(&mut self) {
+        self.stats.bytes_per_worker += 4;
+        self.stats.scalars_per_worker += 1;
+        self.stats.rounds += 1;
+        self.stats.sim_time_s += self.net.allgather_time(4, self.m);
+    }
+
+    /// Account an all-gather of an arbitrary per-worker payload (QSGD's
+    /// encoded gradients: `bytes` is the *encoded* size).
+    pub fn allgather_bytes(&mut self, bytes: u64, logical_scalars: u64) {
+        self.stats.bytes_per_worker += bytes;
+        self.stats.scalars_per_worker += logical_scalars;
+        self.stats.rounds += 1;
+        self.stats.sim_time_s += self.net.allgather_time(bytes, self.m);
+    }
+
+    /// Numeric helper: element-wise mean of `m` worker vectors into `out`.
+    /// (The collective's arithmetic — free in-process, priced separately.)
+    pub fn mean_into(vecs: &[Vec<f32>], out: &mut [f32]) {
+        let m = vecs.len() as f32;
+        out.fill(0.0);
+        for v in vecs {
+            debug_assert_eq!(v.len(), out.len());
+            for (o, &x) in out.iter_mut().zip(v.iter()) {
+                *o += x;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_time_zero_for_single_node() {
+        let n = NetworkModel::default();
+        assert_eq!(n.allreduce_time(1_000_000, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_time_increases_with_bytes_and_nodes() {
+        let n = NetworkModel::default();
+        assert!(n.allreduce_time(1000, 4) < n.allreduce_time(100_000, 4));
+        assert!(n.allreduce_time(100_000, 2) < n.allreduce_time(100_000, 8));
+    }
+
+    #[test]
+    fn scalar_exchange_is_d_times_cheaper_in_bytes() {
+        // the paper's claim: ZO iteration sends 1 scalar vs d for FO
+        let d = 24_203u64;
+        let mut fo = CommSim::new(NetworkModel::default(), 4);
+        fo.allreduce_floats(d);
+        let mut zo = CommSim::new(NetworkModel::default(), 4);
+        zo.allgather_scalar();
+        assert_eq!(fo.stats.bytes_per_worker / zo.stats.bytes_per_worker, d);
+        assert!(zo.stats.sim_time_s < fo.stats.sim_time_s);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let vecs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        let mut out = vec![0.0f32; 2];
+        CommSim::mean_into(&vecs, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut c = CommSim::new(NetworkModel::default(), 4);
+        c.allreduce_floats(10);
+        c.allgather_scalar();
+        c.allgather_bytes(100, 25);
+        assert_eq!(c.stats.bytes_per_worker, 40 + 4 + 100);
+        assert_eq!(c.stats.scalars_per_worker, 10 + 1 + 25);
+        assert_eq!(c.stats.rounds, 3);
+        assert!(c.stats.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn hosgd_comm_ratio_matches_table1() {
+        // Table 1: HO-SGD sends (τ-1+d)/τ scalars per iteration per worker;
+        // model averaging sends d/τ. Ratio over τ iterations: 1 + (τ-1)/d.
+        let (d, tau) = (24_203u64, 8u64);
+        let mut ho = CommSim::new(NetworkModel::default(), 4);
+        for t in 0..tau {
+            if t == 0 {
+                ho.allreduce_floats(d);
+            } else {
+                ho.allgather_scalar();
+            }
+        }
+        let mut ri = CommSim::new(NetworkModel::default(), 4);
+        ri.allreduce_floats(d); // one model average per τ iterations
+        let ratio = ho.stats.scalars_per_worker as f64 / ri.stats.scalars_per_worker as f64;
+        let expect = 1.0 + (tau as f64 - 1.0) / d as f64;
+        assert!((ratio - expect).abs() < 1e-9, "ratio {ratio} expect {expect}");
+    }
+}

@@ -1,0 +1,154 @@
+//! QSGD quantization substrate (Alistarh et al., 2017) — the gradient-
+//! compression baseline row of Table 1.
+//!
+//! Stochastic s-level quantization: `Q_s(v_i) = ||v||_2 · sgn(v_i) · ξ_i`
+//! where `ξ_i ∈ {0, 1/s, …, s/s}` is randomly rounded so the quantizer is
+//! unbiased. The encoded size follows the paper's Elias(+sign) coding
+//! bound; we account the *actual* Elias-γ length of each level so the
+//! communication numbers respond to gradient sparsity exactly like QSGD's
+//! analysis says (Θ(s² + s√d) bits in expectation).
+
+use crate::rng::Xoshiro256;
+
+/// A quantized gradient: norm + per-coordinate signed levels in [-s, s].
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub norm: f32,
+    pub levels: Vec<i32>,
+    pub s: u32,
+}
+
+/// Stochastically quantize `v` to `s` levels (unbiased).
+pub fn quantize(v: &[f32], s: u32, rng: &mut Xoshiro256) -> Quantized {
+    debug_assert!(s >= 1);
+    let norm = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+    if norm == 0.0 {
+        return Quantized { norm: 0.0, levels: vec![0; v.len()], s };
+    }
+    let levels = v
+        .iter()
+        .map(|&x| {
+            let r = (x.abs() / norm) as f64 * s as f64; // in [0, s]
+            let lo = r.floor();
+            let p = r - lo; // round up with prob p -> unbiased
+            let l = lo as i32 + if rng.next_f64() < p { 1 } else { 0 };
+            if x < 0.0 {
+                -l
+            } else {
+                l
+            }
+        })
+        .collect();
+    Quantized { norm, levels, s }
+}
+
+/// Reconstruct the (unbiased) estimate into `out`, accumulating with weight
+/// `w` (so m workers can be averaged without temporaries).
+pub fn dequantize_into(q: &Quantized, w: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.levels.len(), out.len());
+    let scale = w * q.norm / q.s as f32;
+    for (o, &l) in out.iter_mut().zip(q.levels.iter()) {
+        *o += scale * l as f32;
+    }
+}
+
+/// Elias-γ code length in bits for a non-negative level magnitude
+/// (0 encoded as the codeword for 1, shifted alphabet), plus 1 sign bit for
+/// non-zero levels.
+fn elias_gamma_bits(level: i32) -> u64 {
+    let mag = level.unsigned_abs() + 1; // shift so 0 is encodable
+    let n = 64 - u64::from(mag).leading_zeros() as u64; // floor(log2)+1
+    let code = 2 * n - 1;
+    code + if level != 0 { 1 } else { 0 }
+}
+
+/// Encoded size in bytes: 32-bit norm + Elias-coded levels + sign bits.
+pub fn encoded_bytes(q: &Quantized) -> u64 {
+    let bits: u64 = 32 + q.levels.iter().map(|&l| elias_gamma_bits(l)).sum::<u64>();
+    bits.div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec_rng(seed: u64, d: usize) -> Vec<f32> {
+        let mut r = Xoshiro256::seeded(seed);
+        (0..d).map(|_| r.next_normal() as f32).collect()
+    }
+
+    #[test]
+    fn quantize_levels_bounded() {
+        let v = vec_rng(1, 500);
+        let mut r = Xoshiro256::seeded(2);
+        let q = quantize(&v, 4, &mut r);
+        assert!(q.levels.iter().all(|&l| l.unsigned_abs() <= 4));
+    }
+
+    #[test]
+    fn quantizer_is_unbiased() {
+        let v = vec_rng(3, 64);
+        let mut acc = vec![0.0f32; 64];
+        let trials = 2000;
+        let mut r = Xoshiro256::seeded(4);
+        for _ in 0..trials {
+            let q = quantize(&v, 2, &mut r);
+            dequantize_into(&q, 1.0 / trials as f32, &mut acc);
+        }
+        let err: f64 = acc
+            .iter()
+            .zip(v.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let norm: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(err / norm < 0.05, "relative bias {}", err / norm);
+    }
+
+    #[test]
+    fn zero_vector_roundtrips() {
+        let v = vec![0.0f32; 10];
+        let mut r = Xoshiro256::seeded(5);
+        let q = quantize(&v, 4, &mut r);
+        let mut out = vec![0.0f32; 10];
+        dequantize_into(&q, 1.0, &mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn more_levels_less_error() {
+        let v = vec_rng(6, 1000);
+        let mut err = Vec::new();
+        for s in [1u32, 4, 16, 64] {
+            let mut r = Xoshiro256::seeded(7);
+            let q = quantize(&v, s, &mut r);
+            let mut out = vec![0.0f32; 1000];
+            dequantize_into(&q, 1.0, &mut out);
+            let e: f64 = out
+                .iter()
+                .zip(v.iter())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            err.push(e);
+        }
+        assert!(err.windows(2).all(|w| w[1] < w[0]), "{err:?}");
+    }
+
+    #[test]
+    fn encoded_size_below_raw_and_grows_with_s() {
+        let v = vec_rng(8, 10_000);
+        let mut r = Xoshiro256::seeded(9);
+        let q1 = quantize(&v, 1, &mut r);
+        let q16 = quantize(&v, 16, &mut r);
+        let raw = 4 * 10_000;
+        assert!(encoded_bytes(&q1) < raw / 4, "s=1 should compress >4x");
+        assert!(encoded_bytes(&q1) < encoded_bytes(&q16));
+        assert!(encoded_bytes(&q16) < raw as u64);
+    }
+
+    #[test]
+    fn elias_bits_monotone() {
+        assert_eq!(elias_gamma_bits(0), 1);
+        assert!(elias_gamma_bits(1) < elias_gamma_bits(100));
+    }
+}

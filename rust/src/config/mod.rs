@@ -1,0 +1,462 @@
+//! Typed experiment configuration: every knob of Algorithm 1 and of the
+//! baselines, loadable from a JSON file and overridable from the CLI.
+//!
+//! Defaults follow the paper's experimental setup (Section 5.2): m = 4
+//! workers, τ = 8, B = 64 (taken from the model profile), RI-SGD
+//! redundancy μ_r = 0.25, smoothing μ = 1/√(dN) (Theorem 1), and the
+//! theory step size α = √(Bm)/(L√N) with a configurable smoothness guess.
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::comm::NetworkModel;
+use crate::util::json::Json;
+
+/// The algorithms of the paper's evaluation (Table 1 / Figs. 1–2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// the paper's contribution (Algorithm 1)
+    HoSgd,
+    /// fully synchronous distributed SGD (Wang & Joshi 2018)
+    SyncSgd,
+    /// model averaging with infused redundancy (Haddadpour et al. 2019)
+    RiSgd,
+    /// distributed zeroth-order SGD (Sahu et al. 2019)
+    ZoSgd,
+    /// zeroth-order SVRG, averaged variant (Liu et al. 2018)
+    ZoSvrgAve,
+    /// quantized SGD (Alistarh et al. 2017)
+    Qsgd,
+    /// momentum extension of Algorithm 1 (this repo's future-work feature)
+    HoSgdM,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::HoSgd,
+        Method::SyncSgd,
+        Method::RiSgd,
+        Method::ZoSgd,
+        Method::ZoSvrgAve,
+        Method::Qsgd,
+    ];
+
+    /// The five methods in the paper's figures (QSGD only appears in
+    /// Table 1).
+    pub const FIGURE_SET: [Method; 5] = [
+        Method::HoSgd,
+        Method::SyncSgd,
+        Method::RiSgd,
+        Method::ZoSgd,
+        Method::ZoSvrgAve,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::HoSgd => "ho_sgd",
+            Method::SyncSgd => "sync_sgd",
+            Method::RiSgd => "ri_sgd",
+            Method::ZoSgd => "zo_sgd",
+            Method::ZoSvrgAve => "zo_svrg_ave",
+            Method::Qsgd => "qsgd",
+            Method::HoSgdM => "ho_sgd_m",
+        }
+    }
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Method::HoSgd => "HO-SGD (proposed)",
+            Method::SyncSgd => "syncSGD",
+            Method::RiSgd => "RI-SGD",
+            Method::ZoSgd => "ZO-SGD",
+            Method::ZoSvrgAve => "ZO-SVRG-Ave",
+            Method::Qsgd => "QSGD",
+            Method::HoSgdM => "HO-SGD+M (ext)",
+        }
+    }
+
+    /// Does this method ever call the first-order oracle?
+    pub fn uses_fo(&self) -> bool {
+        !matches!(self, Method::ZoSgd | Method::ZoSvrgAve)
+    }
+
+    /// Extensions implemented beyond the paper's method set.
+    pub const EXTENSIONS: [Method; 1] = [Method::HoSgdM];
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "ho_sgd" | "hosgd" | "proposed" => Ok(Method::HoSgd),
+            "sync_sgd" | "syncsgd" | "sync" => Ok(Method::SyncSgd),
+            "ri_sgd" | "risgd" | "ri" => Ok(Method::RiSgd),
+            "zo_sgd" | "zosgd" | "zo" => Ok(Method::ZoSgd),
+            "zo_svrg_ave" | "zo_svrg" | "zosvrg" => Ok(Method::ZoSvrgAve),
+            "qsgd" => Ok(Method::Qsgd),
+            "ho_sgd_m" | "hosgdm" | "ho_sgd_momentum" => Ok(Method::HoSgdM),
+            other => Err(anyhow!("unknown method {other:?}")),
+        }
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Step-size rule. `Theory` is Theorem 1's α = √(Bm)/(L√N).
+#[derive(Debug, Clone, Copy)]
+pub enum StepSize {
+    Constant { alpha: f64 },
+    /// α_t = alpha0 / (1 + gamma·t)
+    InvDecay { alpha0: f64, gamma: f64 },
+    /// Theorem 1's rule with smoothness guess `l_guess`
+    Theory { l_guess: f64 },
+}
+
+impl StepSize {
+    pub fn at(&self, t: u64, batch: usize, m: usize, n_total: u64) -> f64 {
+        match *self {
+            StepSize::Constant { alpha } => alpha,
+            StepSize::InvDecay { alpha0, gamma } => alpha0 / (1.0 + gamma * t as f64),
+            StepSize::Theory { l_guess } => {
+                ((batch * m) as f64).sqrt() / (l_guess * (n_total as f64).sqrt())
+            }
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    /// model/dataset profile name (must exist in the artifact manifest)
+    pub dataset: String,
+    /// N — total iterations
+    pub iters: u64,
+    /// m — number of worker nodes
+    pub workers: usize,
+    /// τ — period of first-order exchanges (HO-SGD) / model averaging
+    /// (RI-SGD)
+    pub tau: usize,
+    /// μ — ZO smoothing parameter; None ⇒ Theorem 1's 1/√(dN)
+    pub mu: Option<f64>,
+    pub step: StepSize,
+    pub seed: u64,
+    /// evaluate test accuracy every this many iterations (0 = never)
+    pub eval_every: u64,
+    /// record a trace row every this many iterations
+    pub record_every: u64,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// RI-SGD redundancy factor μ_r
+    pub redundancy: f64,
+    /// ZO-SVRG epoch length (q) and #probe directions per estimate
+    pub svrg_epoch: usize,
+    pub svrg_probes: usize,
+    /// QSGD quantization levels s
+    pub qsgd_levels: u32,
+    /// QSGD error-feedback (EF) memory — keeps the quantization residual
+    /// locally and re-injects it next round (extension; default off = the
+    /// paper's plain QSGD)
+    pub qsgd_error_feedback: bool,
+    /// heavy-ball coefficient for the HO-SGD+M extension
+    pub momentum: f64,
+    pub network: NetworkModel,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            method: Method::HoSgd,
+            dataset: "sensorless".into(),
+            iters: 400,
+            workers: 4,      // paper §5.2
+            tau: 8,          // paper §5.2
+            mu: None,        // Theorem 1 rule
+            step: StepSize::Constant { alpha: 0.05 },
+            seed: 1,
+            eval_every: 20,
+            record_every: 1,
+            train_size: 0, // 0 ⇒ profile default
+            test_size: 0,
+            redundancy: 0.25, // paper §5.2
+            svrg_epoch: 10,
+            svrg_probes: 4,
+            qsgd_levels: 4,
+            qsgd_error_feedback: false,
+            momentum: 0.9,
+            network: NetworkModel::default(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Theorem 1's smoothing rule μ = 1/√(dN).
+    pub fn resolve_mu(&self, d: usize) -> f64 {
+        self.mu.unwrap_or_else(|| 1.0 / ((d as f64) * (self.iters as f64)).sqrt())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.iters == 0 {
+            return Err(anyhow!("iters must be > 0"));
+        }
+        if self.workers == 0 {
+            return Err(anyhow!("workers must be > 0"));
+        }
+        if self.tau == 0 {
+            return Err(anyhow!("tau must be >= 1"));
+        }
+        if let Some(mu) = self.mu {
+            if mu <= 0.0 {
+                return Err(anyhow!("mu must be positive"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.redundancy) {
+            return Err(anyhow!("redundancy must be in [0,1]"));
+        }
+        if self.qsgd_levels == 0 {
+            return Err(anyhow!("qsgd_levels must be >= 1"));
+        }
+        if self.svrg_epoch == 0 || self.svrg_probes == 0 {
+            return Err(anyhow!("svrg_epoch and svrg_probes must be >= 1"));
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            return Err(anyhow!("momentum must be in [0,1)"));
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON file; absent keys keep their defaults.
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing JSON config")?;
+        let cfg = Self::from_json(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = Self::default();
+        let gs = |k: &str| v.get(k).and_then(Json::as_str);
+        let gn = |k: &str| v.get(k).and_then(Json::as_f64);
+        if let Some(s) = gs("method") {
+            cfg.method = s.parse()?;
+        }
+        if let Some(s) = gs("dataset") {
+            cfg.dataset = s.to_string();
+        }
+        if let Some(x) = gn("iters") {
+            cfg.iters = x as u64;
+        }
+        if let Some(x) = gn("workers") {
+            cfg.workers = x as usize;
+        }
+        if let Some(x) = gn("tau") {
+            cfg.tau = x as usize;
+        }
+        if let Some(x) = gn("mu") {
+            cfg.mu = Some(x);
+        }
+        if let Some(step) = v.get("step") {
+            cfg.step = StepSize::from_json(step)?;
+        }
+        if let Some(x) = gn("seed") {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = gn("eval_every") {
+            cfg.eval_every = x as u64;
+        }
+        if let Some(x) = gn("record_every") {
+            cfg.record_every = x as u64;
+        }
+        if let Some(x) = gn("train_size") {
+            cfg.train_size = x as usize;
+        }
+        if let Some(x) = gn("test_size") {
+            cfg.test_size = x as usize;
+        }
+        if let Some(x) = gn("redundancy") {
+            cfg.redundancy = x;
+        }
+        if let Some(x) = gn("svrg_epoch") {
+            cfg.svrg_epoch = x as usize;
+        }
+        if let Some(x) = gn("svrg_probes") {
+            cfg.svrg_probes = x as usize;
+        }
+        if let Some(x) = gn("qsgd_levels") {
+            cfg.qsgd_levels = x as u32;
+        }
+        if let Some(b) = v.get("qsgd_error_feedback").and_then(Json::as_bool) {
+            cfg.qsgd_error_feedback = b;
+        }
+        if let Some(x) = gn("momentum") {
+            cfg.momentum = x;
+        }
+        if let Some(n) = v.get("network") {
+            if let (Some(lat), Some(bw)) = (
+                n.get("latency_s").and_then(Json::as_f64),
+                n.get("bandwidth_bps").and_then(Json::as_f64),
+            ) {
+                cfg.network = NetworkModel { latency_s: lat, bandwidth_bps: bw };
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.label())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            (
+                "mu",
+                self.mu.map_or(Json::Null, Json::num),
+            ),
+            ("step", self.step.to_json()),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("record_every", Json::num(self.record_every as f64)),
+            ("train_size", Json::num(self.train_size as f64)),
+            ("test_size", Json::num(self.test_size as f64)),
+            ("redundancy", Json::num(self.redundancy)),
+            ("svrg_epoch", Json::num(self.svrg_epoch as f64)),
+            ("svrg_probes", Json::num(self.svrg_probes as f64)),
+            ("qsgd_levels", Json::num(self.qsgd_levels as f64)),
+            ("qsgd_error_feedback", Json::Bool(self.qsgd_error_feedback)),
+            ("momentum", Json::num(self.momentum)),
+            (
+                "network",
+                Json::obj(vec![
+                    ("latency_s", Json::num(self.network.latency_s)),
+                    ("bandwidth_bps", Json::num(self.network.bandwidth_bps)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl StepSize {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or("constant");
+        match kind {
+            "constant" => Ok(StepSize::Constant {
+                alpha: v.req("alpha")?.as_f64().ok_or_else(|| anyhow!("alpha not a number"))?,
+            }),
+            "inv_decay" => Ok(StepSize::InvDecay {
+                alpha0: v.req("alpha0")?.as_f64().ok_or_else(|| anyhow!("alpha0"))?,
+                gamma: v.req("gamma")?.as_f64().ok_or_else(|| anyhow!("gamma"))?,
+            }),
+            "theory" => Ok(StepSize::Theory {
+                l_guess: v.req("l_guess")?.as_f64().ok_or_else(|| anyhow!("l_guess"))?,
+            }),
+            other => Err(anyhow!("unknown step-size kind {other:?}")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            StepSize::Constant { alpha } => Json::obj(vec![
+                ("kind", Json::str("constant")),
+                ("alpha", Json::num(alpha)),
+            ]),
+            StepSize::InvDecay { alpha0, gamma } => Json::obj(vec![
+                ("kind", Json::str("inv_decay")),
+                ("alpha0", Json::num(alpha0)),
+                ("gamma", Json::num(gamma)),
+            ]),
+            StepSize::Theory { l_guess } => Json::obj(vec![
+                ("kind", Json::str("theory")),
+                ("l_guess", Json::num(l_guess)),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_aliases() {
+        assert_eq!("HO-SGD".parse::<Method>().unwrap(), Method::HoSgd);
+        assert_eq!("proposed".parse::<Method>().unwrap(), Method::HoSgd);
+        assert_eq!("syncsgd".parse::<Method>().unwrap(), Method::SyncSgd);
+        assert_eq!("zo_svrg".parse::<Method>().unwrap(), Method::ZoSvrgAve);
+        assert!("nope".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn default_config_is_valid_and_paperlike() {
+        let c = TrainConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.tau, 8);
+        assert_eq!(c.redundancy, 0.25);
+    }
+
+    #[test]
+    fn mu_rule_matches_theorem1() {
+        let c = TrainConfig { iters: 400, mu: None, ..Default::default() };
+        let d = 10_000;
+        let mu = c.resolve_mu(d);
+        assert!((mu - 1.0 / ((d as f64 * 400.0).sqrt())).abs() < 1e-12);
+        let c2 = TrainConfig { mu: Some(0.01), ..Default::default() };
+        assert_eq!(c2.resolve_mu(d), 0.01);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = TrainConfig { iters: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.iters = 1;
+        c.tau = 0;
+        assert!(c.validate().is_err());
+        c.tau = 1;
+        c.redundancy = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = TrainConfig { mu: Some(0.01), ..Default::default() };
+        let text = c.to_json().pretty();
+        let back = TrainConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.method, c.method);
+        assert_eq!(back.tau, c.tau);
+        assert_eq!(back.dataset, c.dataset);
+        assert_eq!(back.mu, c.mu);
+        assert_eq!(back.qsgd_levels, c.qsgd_levels);
+    }
+
+    #[test]
+    fn json_partial_keeps_defaults() {
+        let v = Json::parse(r#"{"method": "zo_sgd", "iters": 9}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.method, Method::ZoSgd);
+        assert_eq!(c.iters, 9);
+        assert_eq!(c.tau, TrainConfig::default().tau);
+    }
+
+    #[test]
+    fn step_size_rules() {
+        let s = StepSize::Constant { alpha: 0.1 };
+        assert_eq!(s.at(100, 64, 4, 1000), 0.1);
+        let d = StepSize::InvDecay { alpha0: 1.0, gamma: 1.0 };
+        assert!(d.at(9, 64, 4, 1000) < d.at(0, 64, 4, 1000));
+        let t = StepSize::Theory { l_guess: 10.0 };
+        // α = sqrt(64*4) / (10 * sqrt(400)) = 16 / 200
+        assert!((t.at(0, 64, 4, 400) - 0.08).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,155 @@
+//! Checkpointing substrate: persist/restore a flat model state (the `x^t`
+//! of Algorithm 1) with an in-tree binary format.
+//!
+//! Format (little-endian): magic `HOSGDCK1` · u64 dim · u64 seed ·
+//! u64 iter · dim×f32 payload · u64 FNV-1a checksum over everything
+//! before it. Used by the attack driver (frozen classifier weights), the
+//! e2e example (resume), and anything that wants to hand a trained model
+//! to `ModelBinding::predict`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"HOSGDCK1";
+
+/// A saved model state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub params: Vec<f32>,
+    pub seed: u64,
+    pub iter: u64,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new(params: Vec<f32>, seed: u64, iter: u64) -> Self {
+        Self { params, seed, iter }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 24 + 4 * self.params.len() + 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.iter.to_le_bytes());
+        for p in &self.params {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 + 24 + 8 {
+            bail!("checkpoint too short ({} bytes)", bytes.len());
+        }
+        if &bytes[0..8] != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into()?);
+        let computed = fnv1a(body);
+        if stored != computed {
+            bail!("checkpoint checksum mismatch (corrupt file)");
+        }
+        let u64_at = |off: usize| -> Result<u64> {
+            Ok(u64::from_le_bytes(
+                bytes[off..off + 8].try_into().map_err(|_| anyhow!("truncated"))?,
+            ))
+        };
+        let dim = u64_at(8)? as usize;
+        let seed = u64_at(16)?;
+        let iter = u64_at(24)?;
+        let payload = &bytes[32..bytes.len() - 8];
+        if payload.len() != dim * 4 {
+            bail!("checkpoint dim {dim} does not match payload {} bytes", payload.len());
+        }
+        let params = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { params, seed, iter })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck() -> Checkpoint {
+        Checkpoint::new((0..513).map(|i| i as f32 * 0.25 - 64.0).collect(), 42, 399)
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = ck();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let c = ck();
+        let dir = std::env::temp_dir().join("hosgd_ckpt_test");
+        let path = dir.join("m.ckpt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let c = ck();
+        let mut bytes = c.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_short_input() {
+        assert!(Checkpoint::from_bytes(b"short").is_err());
+        let mut bytes = ck().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let c = ck();
+        let mut bytes = c.to_bytes();
+        // tamper with dim and refresh the checksum so only the dim check fires
+        bytes[8..16].copy_from_slice(&(1u64).to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = super::fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+}

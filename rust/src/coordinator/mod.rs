@@ -1,0 +1,143 @@
+//! The leader loop: drives `m` simulated workers through N iterations of a
+//! chosen method over an AOT-compiled model profile, producing a [`Trace`].
+//!
+//! Responsibilities (DESIGN.md §5): dataset materialization + sharding,
+//! initial-point broadcast (all methods start from the same Glorot init —
+//! §5.2 "all the methods are run from the same initial points"), the
+//! iteration schedule, periodic test evaluation, wall-clock vs simulated-
+//! clock bookkeeping, and trace recording.
+
+pub mod checkpoint;
+
+use anyhow::Result;
+
+use crate::comm::CommSim;
+use crate::config::TrainConfig;
+use crate::data::{profile, Dataset};
+use crate::metrics::{Stopwatch, Trace, TraceRow};
+use crate::optim::{build, AlgoConfig, Oracle, TrainOracle, World};
+use crate::runtime::{ModelBinding, Runtime};
+
+/// Materialized datasets for one run.
+pub struct RunData {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Generate the (synthetic) train/test corpora for a dataset profile.
+pub fn make_data(cfg: &TrainConfig) -> Result<RunData> {
+    let p = profile(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("no dataset profile named {:?}", cfg.dataset))?;
+    let train_n = if cfg.train_size > 0 { cfg.train_size } else { p.train };
+    let test_n = if cfg.test_size > 0 { cfg.test_size } else { p.test };
+    // same mixture (split-independent class means), disjoint sample splits
+    let train = Dataset::synth(&p, train_n, cfg.seed, 0);
+    let test = Dataset::synth(&p, test_n, cfg.seed, 1);
+    Ok(RunData { train, test })
+}
+
+/// Test-set accuracy of `params`, evaluated in model-batch chunks.
+pub fn eval_accuracy(model: &ModelBinding, params: &[f32], test: &Dataset) -> Result<f64> {
+    let b = model.batch();
+    let f = model.features();
+    let chunks = test.len() / b;
+    if chunks == 0 {
+        return Ok(f64::NAN);
+    }
+    let mut correct = 0.0f64;
+    for c in 0..chunks {
+        let x = &test.x[c * b * f..(c + 1) * b * f];
+        let y = &test.y[c * b..(c + 1) * b];
+        correct += model.accuracy(params, x, y)? as f64;
+    }
+    Ok(correct / (chunks * b) as f64)
+}
+
+/// A finished training run: the trace plus the final (deployable) model.
+pub struct TrainOutcome {
+    pub trace: Trace,
+    pub params: Vec<f32>,
+}
+
+/// Run one full training experiment; returns the iteration trace.
+pub fn run_train(rt: &Runtime, cfg: &TrainConfig) -> Result<Trace> {
+    cfg.validate()?;
+    let model = rt.model(&cfg.dataset)?;
+    let data = make_data(cfg)?;
+    Ok(run_train_with(&model, &data, cfg)?.trace)
+}
+
+/// Same, with caller-provided model binding + datasets (lets sweeps share
+/// compiled executables and corpora across methods).
+pub fn run_train_with(
+    model: &ModelBinding,
+    data: &RunData,
+    cfg: &TrainConfig,
+) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    let acfg = AlgoConfig::from_train(cfg, model.dim());
+    // RI-SGD samples from redundant pools; everyone else from iid shards
+    let redundancy = if cfg.method == crate::config::Method::RiSgd {
+        cfg.redundancy
+    } else {
+        0.0
+    };
+    let oracle = TrainOracle::new(model, &data.train, cfg.workers, redundancy, cfg.seed);
+    let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
+    let comm = CommSim::new(cfg.network, cfg.workers);
+    let mut world = World::new(oracle, comm, acfg.clone());
+    let mut algo = build(cfg.method, init, &acfg);
+
+    let mut rows = Vec::with_capacity((cfg.iters / cfg.record_every.max(1)) as usize + 2);
+    let mut eval_buf = Vec::with_capacity(model.dim());
+    let watch = Stopwatch::start();
+    let mut eval_overhead = 0.0f64; // test evals are not training compute
+
+    for t in 0..cfg.iters {
+        let train_loss = algo.step(t, &mut world)?;
+
+        let record = cfg.record_every > 0 && t % cfg.record_every.max(1) == 0;
+        let last = t + 1 == cfg.iters;
+        let do_eval = cfg.eval_every > 0 && (t % cfg.eval_every == 0 || last);
+        if record || last || do_eval {
+            let test_acc = if do_eval {
+                let e0 = watch.elapsed_s();
+                algo.eval_params(&mut eval_buf);
+                let acc = eval_accuracy(model, &eval_buf, &data.test)?;
+                eval_overhead += watch.elapsed_s() - e0;
+                Some(acc)
+            } else {
+                None
+            };
+            let compute_s = (watch.elapsed_s() - eval_overhead).max(0.0);
+            let comm_s = world.comm.stats.sim_time_s;
+            rows.push(TraceRow {
+                iter: t,
+                train_loss,
+                test_acc,
+                compute_s,
+                comm_s,
+                total_s: compute_s + comm_s,
+                bytes_per_worker: world.comm.stats.bytes_per_worker,
+                scalars_per_worker: world.comm.stats.scalars_per_worker,
+                fn_evals: world.compute.fn_evals,
+                grad_evals: world.compute.grad_evals,
+            });
+        }
+    }
+
+    algo.eval_params(&mut eval_buf);
+    Ok(TrainOutcome {
+        trace: Trace {
+            method: cfg.method.label().to_string(),
+            dataset: cfg.dataset.clone(),
+            dim: model.dim(),
+            workers: cfg.workers,
+            batch: model.batch(),
+            tau: cfg.tau,
+            seed: cfg.seed,
+            rows,
+        },
+        params: eval_buf,
+    })
+}

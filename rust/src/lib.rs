@@ -1,0 +1,46 @@
+//! # hosgd — Hybrid-Order Distributed SGD
+//!
+//! A production-shaped reproduction of *"A Hybrid-Order Distributed SGD
+//! Method for Non-Convex Optimization to Balance Communication Overhead,
+//! Computational Complexity, and Convergence Rate"* (Omidvar, Maddah-Ali,
+//! Mahdavi, 2020).
+//!
+//! ## Architecture (see DESIGN.md)
+//!
+//! This crate is **Layer 3** of a three-layer stack: a rust coordinator that
+//! owns the entire training/attack loop — the hybrid FO/ZO iteration
+//! schedule, the pre-shared-seed scalar communication trick, the simulated
+//! collectives with exact byte accounting, and all five baselines from the
+//! paper's evaluation. The model compute (Layer 2 JAX graphs built on
+//! Layer 1 Pallas kernels) is AOT-compiled once by `python/compile/aot.py`
+//! into `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
+//! the PJRT C API (`xla` crate). Python never runs on the training path.
+//!
+//! ## Module map
+//!
+//! - [`runtime`] — PJRT client, artifact manifest, model bindings
+//! - [`rng`] — deterministic RNG + the paper's pre-shared direction seeds
+//! - [`data`] — Table-4 dataset profiles (synthetic substitutes) + batching
+//! - [`comm`] — simulated collectives, byte accounting, α–β network model,
+//!   QSGD quantizer substrate
+//! - [`optim`] — HO-SGD (the contribution) and the baselines:
+//!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD
+//! - [`coordinator`] — the leader loop driving `m` workers
+//! - [`attack`] — Section 5.1 universal adversarial perturbation driver
+//! - [`metrics`] — counters, traces, CSV/JSON writers
+//! - [`theory`] — closed-form Table-1 rows printed next to measured counters
+//! - [`config`] — typed experiment configuration (TOML + CLI overrides)
+
+pub mod attack;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod theory;
+pub mod util;
+
+pub use anyhow::Result;

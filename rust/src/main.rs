@@ -1,0 +1,620 @@
+//! `hosgd` — the leader entrypoint/CLI.
+//!
+//! One subcommand per paper artifact (DESIGN.md §6):
+//! `table1`, `fig1` (+ Table 2/3), `fig2`, `datasets` (Table 4),
+//! `ablate-tau` (Remark 3), plus `train` for single runs, `e2e` for the
+//! end-to-end driver, and `golden-check` for cross-language numerics.
+
+use anyhow::{bail, Result};
+
+use hosgd::attack::{build_task, dump_adversarial_pgm, run_attack, AttackConfig};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::data::table4_profiles;
+use hosgd::metrics::Trace;
+use hosgd::runtime::{golden, Runtime};
+use hosgd::theory::{table1, Table1Params};
+use hosgd::util::cli::Args;
+
+const USAGE: &str = "\
+hosgd — Hybrid-Order Distributed SGD (Omidvar et al. 2020) reproduction
+
+USAGE: hosgd [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
+
+SUBCOMMANDS
+  train          single training run
+                 --method M --dataset D --iters N --workers M --tau T
+                 --mu F --lr F --seed S --eval-every K --config FILE.json
+  fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
+  fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
+                 --dump-images
+  table1         Table 1 analytic + measured  --dataset D --iters N --tau T
+  table4|datasets  print the dataset profiles (Table 4)
+  ablate-tau     Remark 3 ablation --dataset D --iters N --taus 1,2,4,8
+  e2e            end-to-end driver on the largest profile --iters N
+  report         ASCII-plot result CSVs  --kind fig1|fig2 --dataset D
+  sweep-workers  linear-speedup sweep --dataset D --workers 1,2,4,8
+  sweep-mu       smoothing-parameter ablation --dataset D --mus a,b,c
+  ablate-ef      QSGD error-feedback extension ablation --dataset D
+  golden-check   cross-language numerics vs manifest goldens
+  list-artifacts print the artifact manifest
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let out_dir = args.get_str("out", "results");
+    let Some(cmd) = args.subcommand() else {
+        eprint!("{USAGE}");
+        bail!("missing subcommand");
+    };
+    let rt = Runtime::load(&artifacts)?;
+    eprintln!("# platform: {}", rt.platform());
+    std::fs::create_dir_all(&out_dir)?;
+
+    match cmd {
+        "train" => cmd_train(&rt, &args, &out_dir)?,
+        "fig2" => {
+            let iters = args.get::<u64>("iters", 400)?;
+            let seed = args.get::<u64>("seed", 1)?;
+            let datasets: Vec<String> = if args.has("all") {
+                table4_profiles().iter().map(|p| p.name.to_string()).collect()
+            } else {
+                vec![args.get_str("dataset", "sensorless")]
+            };
+            args.finish()?;
+            for ds in datasets {
+                run_fig2(&rt, &out_dir, &ds, iters, seed)?;
+            }
+        }
+        "fig1" | "attack" => {
+            let iters = args.get::<u64>("iters", 300)?;
+            let seed = args.get::<u64>("seed", 7)?;
+            let clf_iters = args.get::<u64>("clf-iters", 400)?;
+            let dump = args.has("dump-images");
+            let c = args.get_opt::<f32>("c")?;
+            args.finish()?;
+            run_fig1(&rt, &out_dir, iters, seed, clf_iters, dump, c)?;
+        }
+        "table1" => {
+            let dataset = args.get_str("dataset", "sensorless");
+            let iters = args.get::<u64>("iters", 64)?;
+            let tau = args.get::<usize>("tau", 8)?;
+            args.finish()?;
+            run_table1(&rt, &dataset, iters, tau)?;
+        }
+        "table4" | "datasets" => {
+            args.finish()?;
+            println!(
+                "{:<12} {:>8} {:>9} {:>8} {:>8}  {}",
+                "DATASET", "CLASSES", "FEATURES", "TRAIN", "TEST", "DESCRIPTION"
+            );
+            for p in table4_profiles() {
+                println!(
+                    "{:<12} {:>8} {:>9} {:>8} {:>8}  {}",
+                    p.name, p.classes, p.features, p.train, p.test, p.description
+                );
+            }
+        }
+        "ablate-tau" => {
+            let dataset = args.get_str("dataset", "sensorless");
+            let iters = args.get::<u64>("iters", 240)?;
+            let taus: Vec<usize> = args
+                .get_list("taus", &["1", "2", "4", "8", "16", "32"])
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<std::result::Result<_, _>>()?;
+            args.finish()?;
+            run_ablate_tau(&rt, &out_dir, &dataset, iters, &taus)?;
+        }
+        "e2e" => {
+            let iters = args.get::<u64>("iters", 300)?;
+            let seed = args.get::<u64>("seed", 1)?;
+            args.finish()?;
+            let cfg = TrainConfig {
+                method: Method::HoSgd,
+                dataset: "e2e".into(),
+                iters,
+                seed,
+                eval_every: 25,
+                step: StepSize::Constant { alpha: 0.002 }, // ZO-stable at d = 85k
+                ..Default::default()
+            };
+            let model = rt.model(&cfg.dataset)?;
+            println!(
+                "# e2e: d = {} parameters, m = {}, tau = {}",
+                model.dim(),
+                cfg.workers,
+                cfg.tau
+            );
+            let data = make_data(&cfg)?;
+            let out = run_train_with(&model, &data, &cfg)?;
+            print_trace_summary(&out.trace);
+            out.trace.write_csv(format!("{out_dir}/e2e_ho_sgd.csv"))?;
+        }
+        "report" => {
+            let kind = args.get_str("kind", "fig2");
+            let dataset = args.get_str("dataset", "sensorless");
+            args.finish()?;
+            run_report(&out_dir, &kind, &dataset)?;
+        }
+        "sweep-workers" => {
+            let dataset = args.get_str("dataset", "sensorless");
+            let iters = args.get::<u64>("iters", 200)?;
+            let workers: Vec<usize> = args
+                .get_list("workers", &["1", "2", "4", "8"])
+                .iter()
+                .map(|s| s.parse::<usize>())
+                .collect::<std::result::Result<_, _>>()?;
+            args.finish()?;
+            run_sweep_workers(&rt, &dataset, iters, &workers)?;
+        }
+        "sweep-mu" => {
+            let dataset = args.get_str("dataset", "quickstart");
+            let iters = args.get::<u64>("iters", 200)?;
+            let mus: Vec<f64> = args
+                .get_list("mus", &["1e-5", "1e-4", "1e-3", "1e-2", "1e-1"])
+                .iter()
+                .map(|s| s.parse::<f64>())
+                .collect::<std::result::Result<_, _>>()?;
+            args.finish()?;
+            run_sweep_mu(&rt, &dataset, iters, &mus)?;
+        }
+        "ablate-ef" => {
+            let dataset = args.get_str("dataset", "quickstart");
+            let iters = args.get::<u64>("iters", 200)?;
+            args.finish()?;
+            run_ablate_ef(&rt, &dataset, iters)?;
+        }
+        "golden-check" => {
+            args.finish()?;
+            golden_check(&rt)?;
+        }
+        "list-artifacts" => {
+            args.finish()?;
+            let m = rt.manifest();
+            for (name, p) in &m.profiles {
+                println!(
+                    "{name}: d={} batch={} features={} classes={}",
+                    p.dim, p.batch, p.features, p.classes
+                );
+                for (ep, file) in &p.artifacts {
+                    println!("  {ep:<12} {file}");
+                }
+            }
+            if let Some(a) = &m.attack {
+                println!(
+                    "attack: d={} batch={} eval_batch={}",
+                    a.image_dim, a.batch, a.eval_batch
+                );
+                for (ep, file) in &a.artifacts {
+                    println!("  {ep:<12} {file}");
+                }
+            }
+        }
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(rt: &Runtime, args: &Args, out_dir: &str) -> Result<()> {
+    let mut cfg = match args.get_opt::<String>("config")? {
+        Some(path) => TrainConfig::from_json_file(path)?,
+        None => TrainConfig::default(),
+    };
+    cfg.method = args.get_str("method", cfg.method.label()).parse()?;
+    cfg.dataset = args.get_str("dataset", &cfg.dataset);
+    cfg.iters = args.get("iters", cfg.iters)?;
+    cfg.workers = args.get("workers", cfg.workers)?;
+    cfg.tau = args.get("tau", cfg.tau)?;
+    if let Some(mu) = args.get_opt::<f64>("mu")? {
+        cfg.mu = Some(mu);
+    }
+    if let Some(lr) = args.get_opt::<f64>("lr")? {
+        cfg.step = StepSize::Constant { alpha: lr };
+    }
+    cfg.seed = args.get("seed", cfg.seed)?;
+    cfg.eval_every = args.get("eval-every", cfg.eval_every)?;
+    args.finish()?;
+    let model = rt.model(&cfg.dataset)?;
+    let data = make_data(&cfg)?;
+    let out = run_train_with(&model, &data, &cfg)?;
+    print_trace_summary(&out.trace);
+    let base = format!("{}/train_{}_{}", out_dir, cfg.dataset, cfg.method.label());
+    out.trace.write_csv(format!("{base}.csv"))?;
+    out.trace.write_json(format!("{base}.json"))?;
+    println!("wrote {base}.csv");
+    Ok(())
+}
+
+fn print_trace_summary(t: &Trace) {
+    let last = t.rows.last().expect("empty trace");
+    println!(
+        "{:<12} {:<12} iters={:<6} loss {:.4} -> {:.4}  acc={}  compute={:.2}s comm(sim)={:.3}s bytes/worker={}",
+        t.method,
+        t.dataset,
+        last.iter + 1,
+        t.rows.first().map(|r| r.train_loss).unwrap_or(f64::NAN),
+        last.train_loss,
+        t.final_acc().map_or("n/a".into(), |a| format!("{a:.3}")),
+        last.compute_s,
+        last.comm_s,
+        last.bytes_per_worker,
+    );
+}
+
+fn run_fig2(rt: &Runtime, out_dir: &str, dataset: &str, iters: u64, seed: u64) -> Result<()> {
+    println!("== Fig. 2 [{dataset}]: training loss / wall-clock / test accuracy ==");
+    let base_cfg = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        seed,
+        eval_every: (iters / 20).max(1),
+        ..Default::default()
+    };
+    let model = rt.model(dataset)?;
+    let data = make_data(&base_cfg)?;
+    for method in Method::FIGURE_SET {
+        let cfg = TrainConfig { method, step: fig2_lr(method), ..base_cfg.clone() };
+        let outc = run_train_with(&model, &data, &cfg)?;
+        print_trace_summary(&outc.trace);
+        outc.trace.write_csv(format!("{out_dir}/fig2_{dataset}_{}.csv", method.label()))?;
+    }
+    println!("CSV series written to {out_dir}/fig2_{dataset}_*.csv");
+    Ok(())
+}
+
+/// Per-method tuned constant step sizes ("we have optimized the learning
+/// rates of all the methods" — §5.2). ZO estimators carry d-scaled variance,
+/// so their stable step is smaller.
+pub fn fig2_lr(method: Method) -> StepSize {
+    let alpha = match method {
+        // ZO estimator noise scales ~sqrt(d); stable steps shrink with it
+        Method::HoSgd => 0.005,
+        Method::SyncSgd => 0.1,
+        Method::RiSgd => 0.1,
+        Method::ZoSgd => 0.005,
+        Method::ZoSvrgAve => 0.002,
+        Method::Qsgd => 0.1,
+        Method::HoSgdM => 0.003, // momentum amplifies by 1/(1-beta)
+    };
+    StepSize::Constant { alpha }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_fig1(
+    rt: &Runtime,
+    out_dir: &str,
+    iters: u64,
+    seed: u64,
+    clf_iters: u64,
+    dump_images: bool,
+    c: Option<f32>,
+) -> Result<()> {
+    println!("== Fig. 1: universal adversarial perturbation (d=900, m=5, B=5) ==");
+    let bind = rt.attack()?;
+    let task = build_task(rt, seed, clf_iters)?;
+    println!("# frozen classifier test accuracy: {:.3}", task.clf_test_acc);
+    println!("# CW constant c = {}", c.unwrap_or(task.c));
+    println!(
+        "{:<18} {:>10} {:>9} {:>12} {:>10}",
+        "METHOD", "FINAL LOSS", "SUCCESS", "L2 (least)", "L2 (mean)"
+    );
+    for method in Method::FIGURE_SET {
+        let cfg = AttackConfig { method, iters, seed, c, ..Default::default() };
+        let outcome = run_attack(&bind, &task, &cfg)?;
+        outcome.trace.write_csv(format!("{out_dir}/fig1_{}.csv", method.label()))?;
+        println!(
+            "{:<18} {:>10.4} {:>8.0}% {:>12} {:>10.3}",
+            method.paper_name(),
+            outcome.trace.final_loss().unwrap_or(f64::NAN),
+            outcome.success_rate * 100.0,
+            outcome.least_distortion.map_or("n/a".into(), |d| format!("{d:.3}")),
+            outcome.mean_distortion,
+        );
+        // Table 3: per-image true/adversarial labels
+        let labels: Vec<String> = outcome
+            .images
+            .iter()
+            .map(|im| format!("{}->{}", im.true_label, im.adv_label))
+            .collect();
+        println!("   labels: {}", labels.join(" "));
+        if dump_images {
+            let dir = format!("{out_dir}/table3_{}", method.label());
+            dump_adversarial_pgm(&task, &outcome.perturbation, &dir)?;
+            println!("   images dumped to {dir}/");
+        }
+        std::fs::write(
+            format!("{out_dir}/fig1_{}_outcome.json", method.label()),
+            outcome.to_json().pretty(),
+        )?;
+    }
+    println!("Table 2 column = 'L2 (least)' above; series in {out_dir}/fig1_*.csv");
+    Ok(())
+}
+
+fn run_table1(rt: &Runtime, dataset: &str, iters: u64, tau: usize) -> Result<()> {
+    let model = rt.model(dataset)?;
+    let d = model.dim();
+    let p = Table1Params { d, m: 4, n: iters, tau, redundancy: 0.25, s: 4 };
+    println!("== Table 1 (analytic @ d={d}, m=4, N={iters}, tau={tau}) ==");
+    println!(
+        "{:<18} {:<24} {:>16} {:>16}",
+        "METHOD", "CONVERGENCE ORDER", "COMM/ITER (f32)", "NORM. COMPUTE"
+    );
+    for row in table1(p) {
+        println!(
+            "{:<18} {:<24} {:>16.3} {:>16.5}  {}",
+            row.method.paper_name(),
+            row.convergence_order,
+            row.comm_scalars_per_iter,
+            row.normalized_compute,
+            row.comments
+        );
+    }
+
+    println!("\n== measured per-iteration counters ({iters} iters on {dataset}) ==");
+    println!(
+        "{:<18} {:>16} {:>18} {:>16}",
+        "METHOD", "SCALARS/ITER", "BYTES/ITER/WORKER", "NORM. COMPUTE"
+    );
+    let base = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        tau,
+        eval_every: 0,
+        record_every: 1,
+        ..Default::default()
+    };
+    let data = make_data(&base)?;
+    for method in Method::ALL {
+        let cfg = TrainConfig { method, ..base.clone() };
+        let outc = run_train_with(&model, &data, &cfg)?;
+        let last = outc.trace.rows.last().unwrap();
+        let iters_f = iters as f64;
+        // measured normalized compute: SFO-equivalents per iteration per
+        // worker, normalized to one minibatch gradient (B samples)
+        let b = model.batch() as f64;
+        let m = cfg.workers as f64;
+        let norm = (last.grad_evals as f64 + last.fn_evals as f64 / d as f64) / (iters_f * m * b);
+        println!(
+            "{:<18} {:>16.3} {:>18.1} {:>16.5}",
+            method.paper_name(),
+            last.scalars_per_worker as f64 / iters_f,
+            last.bytes_per_worker as f64 / iters_f,
+            norm,
+        );
+    }
+    Ok(())
+}
+
+fn run_ablate_tau(
+    rt: &Runtime,
+    out_dir: &str,
+    dataset: &str,
+    iters: u64,
+    taus: &[usize],
+) -> Result<()> {
+    println!("== Remark 3 ablation: final loss vs tau (error should grow O(1) in tau) ==");
+    let model = rt.model(dataset)?;
+    let base = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        eval_every: 0,
+        // one ZO-stable rate across all tau so the sweep isolates tau
+        step: fig2_lr(Method::HoSgd),
+        ..Default::default()
+    };
+    let data = make_data(&base)?;
+    println!("{:>6} {:>12} {:>12} {:>16}", "TAU", "FINAL LOSS", "BEST LOSS", "SCALARS/ITER");
+    for &tau in taus {
+        let cfg = TrainConfig { tau, ..base.clone() };
+        let outc = run_train_with(&model, &data, &cfg)?;
+        let last = outc.trace.rows.last().unwrap();
+        println!(
+            "{:>6} {:>12.4} {:>12.4} {:>16.2}",
+            tau,
+            outc.trace.final_loss().unwrap_or(f64::NAN),
+            outc.trace.best_loss().unwrap_or(f64::NAN),
+            last.scalars_per_worker as f64 / iters as f64
+        );
+        outc.trace.write_csv(format!("{out_dir}/ablate_tau{tau}_{dataset}.csv"))?;
+    }
+    Ok(())
+}
+
+fn golden_check(rt: &Runtime) -> Result<()> {
+    let tol = 2e-3;
+    for (name, prof) in &rt.manifest().profiles {
+        let Some(g) = &prof.golden else { continue };
+        let model = rt.model(name)?;
+        let params = golden::golden_params(prof.dim);
+        let (x, y) = golden::golden_batch(prof.batch, prof.features, prof.classes);
+        let loss = model.loss(&params, &x, &y)? as f64;
+        let rel = (loss - g.loss).abs() / g.loss.abs().max(1e-9);
+        println!("{name:<12} loss {loss:.6} vs golden {:.6} (rel err {rel:.2e})", g.loss);
+        if rel > tol {
+            bail!("golden mismatch for {name}");
+        }
+    }
+    println!("golden-check OK");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// report / sweeps / extension ablations
+// ---------------------------------------------------------------------------
+
+/// Render the stored CSV series of a figure as terminal plots.
+fn run_report(out_dir: &str, kind: &str, dataset: &str) -> Result<()> {
+    use hosgd::metrics::csv::read_trace_csv;
+    use hosgd::util::plot::{render, PlotCfg, Series};
+
+    let (pattern, title): (Vec<String>, &str) = match kind {
+        "fig2" => (
+            Method::FIGURE_SET
+                .iter()
+                .map(|m| format!("{out_dir}/fig2_{dataset}_{}.csv", m.label()))
+                .collect(),
+            "Fig. 2: training loss vs iterations",
+        ),
+        "fig1" => (
+            Method::FIGURE_SET
+                .iter()
+                .map(|m| format!("{out_dir}/fig1_{}.csv", m.label()))
+                .collect(),
+            "Fig. 1: attack loss vs iterations",
+        ),
+        other => bail!("unknown report kind {other:?} (fig1|fig2)"),
+    };
+
+    let mut loss_iter = Vec::new();
+    let mut loss_time = Vec::new();
+    let mut acc_time = Vec::new();
+    for path in &pattern {
+        let Ok(rows) = read_trace_csv(path) else {
+            eprintln!("skipping missing {path} (run `hosgd {kind}` first)");
+            continue;
+        };
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .unwrap()
+            .to_string_lossy()
+            .replace(&format!("{kind}_"), "")
+            .replace(&format!("{dataset}_"), "");
+        loss_iter.push(Series {
+            name: name.clone(),
+            points: rows.iter().map(|r| (r.iter as f64, r.train_loss)).collect(),
+        });
+        loss_time.push(Series {
+            name: name.clone(),
+            points: rows.iter().map(|r| (r.total_s, r.train_loss)).collect(),
+        });
+        let accs: Vec<(f64, f64)> = rows
+            .iter()
+            .filter_map(|r| r.test_acc.map(|a| (r.total_s, a)))
+            .collect();
+        if !accs.is_empty() {
+            acc_time.push(Series { name, points: accs });
+        }
+    }
+    if loss_iter.is_empty() {
+        bail!("no series found under {out_dir}");
+    }
+    let cfg = PlotCfg {
+        title: title.into(),
+        x_label: "iteration".into(),
+        y_label: "loss".into(),
+        ..Default::default()
+    };
+    print!("{}", render(&loss_iter, &cfg));
+    let cfg_t = PlotCfg {
+        title: "training loss vs wall-clock (compute + modelled comm)".into(),
+        x_label: "seconds".into(),
+        y_label: "loss".into(),
+        ..Default::default()
+    };
+    print!("{}", render(&loss_time, &cfg_t));
+    if !acc_time.is_empty() {
+        let cfg_a = PlotCfg {
+            title: "test accuracy vs wall-clock".into(),
+            x_label: "seconds".into(),
+            y_label: "accuracy".into(),
+            ..Default::default()
+        };
+        print!("{}", render(&acc_time, &cfg_a));
+    }
+    Ok(())
+}
+
+/// Worker-count sweep: Theorem 1 predicts the error scales 1/√m at fixed N.
+fn run_sweep_workers(rt: &Runtime, dataset: &str, iters: u64, workers: &[usize]) -> Result<()> {
+    println!("== worker sweep on {dataset} (HO-SGD, {iters} iters, tau=8) ==");
+    let model = rt.model(dataset)?;
+    println!("{:>8} {:>12} {:>12} {:>14}", "WORKERS", "FINAL LOSS", "BEST LOSS", "SCALARS/WORKER");
+    for &m in workers {
+        let cfg = TrainConfig {
+            dataset: dataset.into(),
+            iters,
+            workers: m,
+            eval_every: 0,
+            step: fig2_lr(Method::HoSgd),
+            ..Default::default()
+        };
+        let data = make_data(&cfg)?;
+        let out = run_train_with(&model, &data, &cfg)?;
+        let last = out.trace.rows.last().unwrap();
+        println!(
+            "{:>8} {:>12.4} {:>12.4} {:>14}",
+            m,
+            out.trace.final_loss().unwrap_or(f64::NAN),
+            out.trace.best_loss().unwrap_or(f64::NAN),
+            last.scalars_per_worker
+        );
+    }
+    println!("(expected: loss improves with m — the √m averaging gain — at identical per-worker comm)");
+    Ok(())
+}
+
+/// Smoothing-parameter ablation for the ZO estimator (Theorem 1 requires
+/// μ ≤ 1/√(dN); too large biases the estimator, too small hits f32 noise).
+fn run_sweep_mu(rt: &Runtime, dataset: &str, iters: u64, mus: &[f64]) -> Result<()> {
+    println!("== mu sweep on {dataset} (ZO-SGD, {iters} iters) ==");
+    let model = rt.model(dataset)?;
+    let d = model.dim();
+    println!("theorem rule mu = 1/sqrt(dN) = {:.2e}", 1.0 / ((d as f64 * iters as f64).sqrt()));
+    println!("{:>10} {:>12} {:>12}", "MU", "FINAL LOSS", "BEST LOSS");
+    for &mu in mus {
+        let cfg = TrainConfig {
+            method: Method::ZoSgd,
+            dataset: dataset.into(),
+            iters,
+            mu: Some(mu),
+            eval_every: 0,
+            step: StepSize::Constant { alpha: 0.02 },
+            ..Default::default()
+        };
+        let data = make_data(&cfg)?;
+        let out = run_train_with(&model, &data, &cfg)?;
+        println!(
+            "{:>10.1e} {:>12.4} {:>12.4}",
+            mu,
+            out.trace.final_loss().unwrap_or(f64::NAN),
+            out.trace.best_loss().unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}
+
+/// QSGD ± error feedback at aggressive quantization (extension ablation).
+fn run_ablate_ef(rt: &Runtime, dataset: &str, iters: u64) -> Result<()> {
+    println!("== QSGD error-feedback ablation on {dataset} ({iters} iters, s=1) ==");
+    let model = rt.model(dataset)?;
+    println!("{:>6} {:>14} {:>12} {:>12}", "EF", "LEVELS", "FINAL LOSS", "BEST LOSS");
+    for (ef, s) in [(false, 1u32), (true, 1), (false, 4), (true, 4)] {
+        let cfg = TrainConfig {
+            method: Method::Qsgd,
+            dataset: dataset.into(),
+            iters,
+            qsgd_levels: s,
+            qsgd_error_feedback: ef,
+            eval_every: 0,
+            step: StepSize::Constant { alpha: 0.05 },
+            ..Default::default()
+        };
+        let data = make_data(&cfg)?;
+        let out = run_train_with(&model, &data, &cfg)?;
+        println!(
+            "{:>6} {:>14} {:>12.4} {:>12.4}",
+            ef,
+            s,
+            out.trace.final_loss().unwrap_or(f64::NAN),
+            out.trace.best_loss().unwrap_or(f64::NAN)
+        );
+    }
+    println!("(EF trades the unbiased estimator for a contractive one; its payoff shows under\n aggressive biased compression — recorded as an extension ablation in EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! CSV reader for the trace files this crate writes — used by
+//! `hosgd report` to re-load result series for terminal plotting, and by
+//! analysis tests that round-trip traces through disk.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::TraceRow;
+
+/// Parse a trace CSV produced by [`super::Trace::write_csv`].
+pub fn read_trace_csv(path: impl AsRef<Path>) -> Result<Vec<TraceRow>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_trace_csv(&text)
+}
+
+pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRow>> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty CSV"))?;
+    let cols: Vec<&str> = header.split(',').collect();
+    let idx = |name: &str| -> Result<usize> {
+        cols.iter()
+            .position(|c| *c == name)
+            .ok_or_else(|| anyhow!("missing column {name:?}"))
+    };
+    let (ci, cl, ca, ccs, cms, cts, cb, csc, cf, cg) = (
+        idx("iter")?,
+        idx("train_loss")?,
+        idx("test_acc")?,
+        idx("compute_s")?,
+        idx("comm_s")?,
+        idx("total_s")?,
+        idx("bytes_per_worker")?,
+        idx("scalars_per_worker")?,
+        idx("fn_evals")?,
+        idx("grad_evals")?,
+    );
+    let mut rows = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        let num = |i: usize| -> Result<f64> {
+            f.get(i)
+                .ok_or_else(|| anyhow!("line {}: missing field {i}", ln + 2))?
+                .parse::<f64>()
+                .map_err(|e| anyhow!("line {}: {e}", ln + 2))
+        };
+        let acc_raw = f.get(ca).copied().unwrap_or("");
+        rows.push(TraceRow {
+            iter: num(ci)? as u64,
+            train_loss: num(cl)?,
+            test_acc: if acc_raw.is_empty() { None } else { Some(acc_raw.parse()?) },
+            compute_s: num(ccs)?,
+            comm_s: num(cms)?,
+            total_s: num(cts)?,
+            bytes_per_worker: num(cb)? as u64,
+            scalars_per_worker: num(csc)? as u64,
+            fn_evals: num(cf)? as u64,
+            grad_evals: num(cg)? as u64,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Trace;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            method: "ho_sgd".into(),
+            dataset: "quickstart".into(),
+            dim: 10,
+            workers: 4,
+            batch: 8,
+            tau: 8,
+            seed: 0,
+            rows: vec![
+                TraceRow {
+                    iter: 0,
+                    train_loss: 2.5,
+                    test_acc: None,
+                    compute_s: 0.1,
+                    comm_s: 0.01,
+                    total_s: 0.11,
+                    bytes_per_worker: 40,
+                    scalars_per_worker: 10,
+                    fn_evals: 0,
+                    grad_evals: 32,
+                },
+                TraceRow {
+                    iter: 1,
+                    train_loss: 2.25,
+                    test_acc: Some(0.5),
+                    compute_s: 0.2,
+                    comm_s: 0.02,
+                    total_s: 0.22,
+                    bytes_per_worker: 44,
+                    scalars_per_worker: 11,
+                    fn_evals: 64,
+                    grad_evals: 32,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("hosgd_csv_test");
+        let path = dir.join("trace.csv");
+        t.write_csv(&path).unwrap();
+        let rows = read_trace_csv(&path).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].iter, 0);
+        assert!((rows[0].train_loss - 2.5).abs() < 1e-9);
+        assert_eq!(rows[0].test_acc, None);
+        assert_eq!(rows[1].test_acc, Some(0.5));
+        assert_eq!(rows[1].bytes_per_worker, 44);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_columns() {
+        assert!(parse_trace_csv("a,b,c\n1,2,3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_numbers() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("hosgd_csv_test2");
+        let path = dir.join("trace.csv");
+        t.write_csv(&path).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("2.5", "banana");
+        assert!(parse_trace_csv(&text).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,257 @@
+//! Metrics substrate: compute counters, iteration traces, CSV/JSON output.
+//!
+//! The paper's evaluation axes are (i) iterations, (ii) wall-clock and
+//! (iii) communication/computation *load*, so every run produces a
+//! [`Trace`]: one [`TraceRow`] per recorded iteration carrying the training
+//! loss, optional test accuracy, measured compute seconds, modelled comm
+//! seconds and the cumulative counters. `hosgd fig2`/`fig1` write these as
+//! CSV — the exact series of the paper's figures.
+
+pub mod csv;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Cumulative computation counters, in the paper's units: single-sample
+/// function evaluations (ZO probes) and single-sample gradient evaluations
+/// (SFO calls). "Normalized computational load" in Table 1 divides by the
+/// cost of one first-order gradient ≈ d-times one function eval.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeCounters {
+    /// single-sample F(x, ζ) evaluations (each ZO probe on a batch of B
+    /// counts 2·B)
+    pub fn_evals: u64,
+    /// single-sample ∇F(x, ζ) evaluations (a batch gradient counts B)
+    pub grad_evals: u64,
+}
+
+impl ComputeCounters {
+    /// Table 1's "normalized computational load" per SFO-equivalent units:
+    /// grad_evals + fn_evals/d (one FO gradient ≈ d function evals,
+    /// Nesterov & Spokoiny 2017).
+    pub fn normalized_load(&self, d: usize) -> f64 {
+        self.grad_evals as f64 + self.fn_evals as f64 / d as f64
+    }
+}
+
+/// One recorded iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRow {
+    pub iter: u64,
+    /// mean training loss across workers at this iteration
+    pub train_loss: f64,
+    /// test accuracy in [0,1], if evaluated at this iteration
+    pub test_acc: Option<f64>,
+    /// measured compute wall-clock since run start (seconds)
+    pub compute_s: f64,
+    /// modelled communication time since run start (seconds)
+    pub comm_s: f64,
+    /// compute + modelled comm — the Fig. 2 wall-clock axis
+    pub total_s: f64,
+    pub bytes_per_worker: u64,
+    pub scalars_per_worker: u64,
+    pub fn_evals: u64,
+    pub grad_evals: u64,
+}
+
+/// A full run trace plus identifying metadata.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub method: String,
+    pub dataset: String,
+    pub dim: usize,
+    pub workers: usize,
+    pub batch: usize,
+    pub tau: usize,
+    pub seed: u64,
+    pub rows: Vec<TraceRow>,
+}
+
+impl Trace {
+    pub fn final_loss(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.train_loss)
+    }
+
+    pub fn final_acc(&self) -> Option<f64> {
+        self.rows.iter().rev().find_map(|r| r.test_acc)
+    }
+
+    pub fn best_loss(&self) -> Option<f64> {
+        self.rows.iter().map(|r| r.train_loss).fold(None, |acc, l| {
+            Some(acc.map_or(l, |a: f64| a.min(l)))
+        })
+    }
+
+    /// CSV with a header row; one line per recorded iteration.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(
+            f,
+            "iter,train_loss,test_acc,compute_s,comm_s,total_s,bytes_per_worker,scalars_per_worker,fn_evals,grad_evals"
+        )?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{:.6},{},{:.6},{:.6},{:.6},{},{},{},{}",
+                r.iter,
+                r.train_loss,
+                r.test_acc.map_or(String::new(), |a| format!("{a:.5}")),
+                r.compute_s,
+                r.comm_s,
+                r.total_s,
+                r.bytes_per_worker,
+                r.scalars_per_worker,
+                r.fn_evals,
+                r.grad_evals
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(TraceRow::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+impl TraceRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iter", Json::num(self.iter as f64)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("test_acc", self.test_acc.map_or(Json::Null, Json::num)),
+            ("compute_s", Json::num(self.compute_s)),
+            ("comm_s", Json::num(self.comm_s)),
+            ("total_s", Json::num(self.total_s)),
+            ("bytes_per_worker", Json::num(self.bytes_per_worker as f64)),
+            ("scalars_per_worker", Json::num(self.scalars_per_worker as f64)),
+            ("fn_evals", Json::num(self.fn_evals as f64)),
+            ("grad_evals", Json::num(self.grad_evals as f64)),
+        ])
+    }
+}
+
+/// Simple monotonic stopwatch for the measured-compute axis.
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(iter: u64, loss: f64, acc: Option<f64>) -> TraceRow {
+        TraceRow {
+            iter,
+            train_loss: loss,
+            test_acc: acc,
+            compute_s: 0.1,
+            comm_s: 0.05,
+            total_s: 0.15,
+            bytes_per_worker: 100,
+            scalars_per_worker: 25,
+            fn_evals: 10,
+            grad_evals: 5,
+        }
+    }
+
+    fn trace() -> Trace {
+        Trace {
+            method: "ho_sgd".into(),
+            dataset: "quickstart".into(),
+            dim: 499,
+            workers: 4,
+            batch: 8,
+            tau: 8,
+            seed: 0,
+            rows: vec![row(0, 2.0, None), row(1, 1.5, Some(0.5)), row(2, 1.7, None)],
+        }
+    }
+
+    #[test]
+    fn trace_summaries() {
+        let t = trace();
+        assert_eq!(t.final_loss(), Some(1.7));
+        assert_eq!(t.best_loss(), Some(1.5));
+        assert_eq!(t.final_acc(), Some(0.5));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let t = trace();
+        let dir = std::env::temp_dir().join("hosgd_metrics_test");
+        let path = dir.join("t.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 rows
+        assert!(lines[0].starts_with("iter,train_loss"));
+        assert!(lines[2].contains("0.50000")); // acc formatted
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_serializes() {
+        let t = trace();
+        let s = t.to_json().compact();
+        assert!(s.contains("\"method\":\"ho_sgd\""));
+        assert!(s.contains("\"rows\":["));
+        // null test_acc for unevaluated rows
+        assert!(s.contains("\"test_acc\":null"));
+    }
+
+    #[test]
+    fn normalized_load_units() {
+        // one batch-64 FO gradient vs one batch-64 ZO probe pair, d = 640:
+        // FO = 64 SFO units; ZO = 2*64 fn evals = 128/640 = 0.2 units.
+        let fo = ComputeCounters { fn_evals: 0, grad_evals: 64 };
+        let zo = ComputeCounters { fn_evals: 128, grad_evals: 0 };
+        assert!(fo.normalized_load(640) / zo.normalized_load(640) > 100.0);
+    }
+}

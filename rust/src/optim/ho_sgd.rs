@@ -1,0 +1,108 @@
+//! **HO-SGD — Algorithm 1, the paper's contribution.**
+//!
+//! Iteration schedule: every `τ`-th iteration is a first-order exchange
+//! (each worker computes a minibatch gradient vector, all-reduced across
+//! the cluster — eq. (3)); all other iterations are zeroth-order (each
+//! worker evaluates the two-point finite difference along its pre-shared
+//! random direction and transmits ONE scalar — eq. (4)). All workers apply
+//! the identical averaged update (5)–(6), so there is a single global model
+//! at all times (unlike model averaging, there is no local-model drift —
+//! Remark 3's O(1) growth in τ).
+//!
+//! `τ = 1` reduces to [`super::sync_sgd`]; `τ ≥ N` reduces to
+//! [`super::zo_sgd`] (§3.3), which the integration tests assert.
+
+use anyhow::Result;
+
+use crate::config::Method;
+
+use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, Oracle, World};
+
+pub struct HoSgd {
+    params: Vec<f32>,
+}
+
+impl HoSgd {
+    pub fn new(init: Vec<f32>) -> Self {
+        Self { params: init }
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+}
+
+/// One first-order iteration (eq. (3) + (5)-(6)): m worker gradients,
+/// one d-float all-reduce, shared update. Returns the mean worker loss.
+pub(crate) fn fo_iteration<O: Oracle>(
+    params: &mut [f32],
+    t: u64,
+    w: &mut World<O>,
+    alpha: f32,
+) -> Result<f64> {
+    let m = w.cfg.m;
+    let d = w.oracle.dim();
+    let b = w.oracle.batch_size();
+    w.gsum.fill(0.0);
+    let mut loss_sum = 0.0f64;
+    for i in 0..m {
+        let l = w.oracle.grad(params, t, i as u64, &mut w.g)?;
+        loss_sum += l as f64;
+        axpy_acc(&mut w.gsum, 1.0 / m as f32, &w.g);
+        w.compute.grad_evals += b as u64;
+    }
+    // each worker's egress: its d-float gradient vector
+    w.comm.allreduce_floats(d as u64);
+    axpy_update(params, alpha, &w.gsum);
+    Ok(loss_sum / m as f64)
+}
+
+/// One zeroth-order iteration (eq. (4) + (5)-(6)): every worker probes its
+/// pre-shared direction, transmits one scalar; every rank regenerates all
+/// directions locally and applies the shared update. Returns the mean
+/// base loss (free — it is one of the two function evaluations).
+pub(crate) fn zo_iteration<O: Oracle>(
+    params: &mut [f32],
+    t: u64,
+    w: &mut World<O>,
+    alpha: f32,
+) -> Result<f64> {
+    let m = w.cfg.m;
+    let d = w.oracle.dim();
+    let b = w.oracle.batch_size();
+    let mu = w.cfg.mu;
+    w.gsum.fill(0.0);
+    let mut loss_sum = 0.0f64;
+    for i in 0..m {
+        w.regen_direction(t, i as u64);
+        let (lp, lb) = w.zo_probe(params, mu, t, i as u64)?;
+        let s = zo_scalar(d, mu, lp, lb);
+        loss_sum += lb as f64;
+        axpy_acc(&mut w.gsum, s / m as f32, &w.dir);
+        w.compute.fn_evals += 2 * b as u64;
+    }
+    // each worker's egress: ONE f32 scalar (the paper's headline saving)
+    w.comm.allgather_scalar();
+    axpy_update(params, alpha, &w.gsum);
+    Ok(loss_sum / m as f64)
+}
+
+impl<O: Oracle> Algorithm<O> for HoSgd {
+    fn method(&self) -> Method {
+        Method::HoSgd
+    }
+
+    fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
+        let alpha = w.cfg.alpha(t, w.oracle.batch_size());
+        if t % w.cfg.tau as u64 == 0 {
+            fo_iteration(&mut self.params, t, w, alpha)
+        } else {
+            zo_iteration(&mut self.params, t, w, alpha)
+        }
+    }
+
+    fn eval_params(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.params);
+    }
+}

@@ -1,0 +1,403 @@
+//! The optimization algorithms: HO-SGD (Algorithm 1, the paper's
+//! contribution) and the five baselines of its evaluation.
+//!
+//! Algorithms are written against the [`Oracle`] trait — "give me a
+//! stochastic gradient / a two-point function evaluation for (iteration,
+//! worker)" — so the *same* algorithm code drives both the Section 5.2
+//! training experiments (oracle = [`TrainOracle`], an AOT-compiled MLP over
+//! a dataset) and the Section 5.1 adversarial-attack experiments (oracle =
+//! [`crate::attack::AttackOracle`], the CW loss over frozen-classifier
+//! artifacts). Batch sampling inside an oracle is keyed by the pre-shared
+//! seeds, so calling the oracle twice for the same `(iter, worker)` re-uses
+//! the same minibatch — which is exactly what ZO-SVRG's control variate
+//! requires.
+//!
+//! All state updates are deterministic given the config seed; workers are
+//! stepped sequentially (single-core testbed, DESIGN.md §7), while the
+//! *cost* of the parallel execution is accounted in [`CommSim`] /
+//! [`ComputeCounters`].
+
+pub mod ho_sgd;
+pub mod ho_sgd_m;
+pub mod qsgd;
+pub mod ri_sgd;
+pub mod sync_sgd;
+pub mod zo_sgd;
+pub mod zo_svrg;
+
+use anyhow::Result;
+
+use crate::comm::CommSim;
+use crate::config::{Method, StepSize, TrainConfig};
+use crate::metrics::ComputeCounters;
+use crate::rng::{SeedRegistry, Xoshiro256};
+use crate::runtime::ProfileMeta;
+
+// ---------------------------------------------------------------------------
+// Oracle: the stochastic first/zeroth-order oracle of the paper
+// ---------------------------------------------------------------------------
+
+/// A stochastic oracle over some objective `f(x) = E[F(x, ζ)]`.
+///
+/// `(iter, worker)` identify the minibatch ζ via the pre-shared data seeds;
+/// repeated calls with the same pair observe the same sample (needed by
+/// ZO-SVRG's variance-reduced estimator).
+pub trait Oracle {
+    /// d — decision-variable dimension.
+    fn dim(&self) -> usize;
+
+    /// B — samples per minibatch (for compute accounting).
+    fn batch_size(&self) -> usize;
+
+    /// First-order oracle: writes `∇F(params; ζ_{t,i})` into `out`,
+    /// returns `F(params; ζ_{t,i})`.
+    fn grad(&mut self, params: &[f32], iter: u64, worker: u64, out: &mut [f32]) -> Result<f32>;
+
+    /// Two-point zeroth-order evaluation along `v`:
+    /// `(F(params + mu·v; ζ), F(params; ζ))`.
+    fn pair(
+        &mut self,
+        params: &[f32],
+        v: &[f32],
+        mu: f32,
+        iter: u64,
+        worker: u64,
+    ) -> Result<(f32, f32)>;
+
+    /// Plain loss evaluation on the `(iter, worker)` minibatch.
+    fn loss(&mut self, params: &[f32], iter: u64, worker: u64) -> Result<f32>;
+
+    /// Initial decision variable.
+    fn init_params(&self, seed: u64) -> Vec<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// World: everything an algorithm step sees
+// ---------------------------------------------------------------------------
+
+/// Algorithm-facing knobs (a distilled [`TrainConfig`]).
+#[derive(Debug, Clone)]
+pub struct AlgoConfig {
+    pub m: usize,
+    pub tau: usize,
+    pub step: StepSize,
+    pub iters: u64,
+    pub mu: f32,
+    pub redundancy: f64,
+    pub svrg_epoch: usize,
+    pub svrg_probes: usize,
+    pub qsgd_levels: u32,
+    pub qsgd_error_feedback: bool,
+    pub momentum: f64,
+    pub seed: u64,
+}
+
+impl AlgoConfig {
+    pub fn from_train(cfg: &TrainConfig, d: usize) -> Self {
+        Self {
+            m: cfg.workers,
+            tau: cfg.tau,
+            step: cfg.step,
+            iters: cfg.iters,
+            mu: cfg.resolve_mu(d) as f32,
+            redundancy: cfg.redundancy,
+            svrg_epoch: cfg.svrg_epoch,
+            svrg_probes: cfg.svrg_probes,
+            qsgd_levels: cfg.qsgd_levels,
+            qsgd_error_feedback: cfg.qsgd_error_feedback,
+            momentum: cfg.momentum,
+            seed: cfg.seed,
+        }
+    }
+
+    pub fn alpha(&self, t: u64, batch: usize) -> f32 {
+        self.step.at(t, batch, self.m, self.iters) as f32
+    }
+}
+
+/// Mutable per-run context shared by all algorithms: the oracle, the comm
+/// simulator, compute counters, pre-shared seeds and reusable scratch.
+pub struct World<O: Oracle> {
+    pub oracle: O,
+    pub comm: CommSim,
+    pub compute: ComputeCounters,
+    pub reg: SeedRegistry,
+    pub cfg: AlgoConfig,
+    // reusable scratch buffers (hot path: no per-iteration allocation)
+    pub dir: Vec<f32>,
+    pub scratch64: Vec<f64>,
+    pub g: Vec<f32>,
+    pub gsum: Vec<f32>,
+    /// perturbed-parameter buffer for the two-point ZO probe (§Perf L2)
+    pub pplus: Vec<f32>,
+}
+
+impl<O: Oracle> World<O> {
+    pub fn new(oracle: O, comm: CommSim, cfg: AlgoConfig) -> Self {
+        let d = oracle.dim();
+        Self {
+            oracle,
+            comm,
+            compute: ComputeCounters::default(),
+            reg: SeedRegistry::new(cfg.seed),
+            cfg,
+            dir: vec![0.0; d],
+            scratch64: Vec::with_capacity(d),
+            g: vec![0.0; d],
+            gsum: vec![0.0; d],
+            pplus: vec![0.0; d],
+        }
+    }
+
+    /// Regenerate worker `i`'s iteration-`t` direction into `self.dir`
+    /// (what every rank does locally from the pre-shared seeds).
+    pub fn regen_direction(&mut self, iter: u64, worker: u64) {
+        let seed = self.reg.direction_seed(iter, worker);
+        crate::rng::unit_sphere_direction_scratch(seed, &mut self.dir, &mut self.scratch64);
+    }
+
+    /// Two-point ZO probe along `self.dir`: `(F(params + mu·v), F(params))`
+    /// on the `(iter, worker)` minibatch.
+    ///
+    /// §Perf L2: measured on the CPU PJRT backend, two plain `loss`
+    /// dispatches with a rust-side perturbation are ~15% faster than the
+    /// fused `loss_pair` executable (the fused graph re-runs the perturb
+    /// kernel + two forwards inside one program with no cross-point fusion
+    /// to exploit). The fused entry point remains available via
+    /// [`Oracle::pair`] and is compared in `benches/hotpath.rs`. Both paths
+    /// evaluate identical math on the identical seed-keyed batch.
+    pub fn zo_probe(
+        &mut self,
+        params: &[f32],
+        mu: f32,
+        iter: u64,
+        worker: u64,
+    ) -> Result<(f32, f32)> {
+        self.pplus.copy_from_slice(params);
+        axpy_acc(&mut self.pplus, mu, &self.dir);
+        let lp = self.oracle.loss(&self.pplus, iter, worker)?;
+        let lb = self.oracle.loss(params, iter, worker)?;
+        Ok((lp, lb))
+    }
+}
+
+/// `x ← x − α·g` (the update (6) of Algorithm 1).
+#[inline]
+pub fn axpy_update(params: &mut [f32], alpha: f32, g: &[f32]) {
+    debug_assert_eq!(params.len(), g.len());
+    for (p, &gi) in params.iter_mut().zip(g.iter()) {
+        *p -= alpha * gi;
+    }
+}
+
+/// `acc += w·v`
+#[inline]
+pub fn axpy_acc(acc: &mut [f32], w: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (a, &x) in acc.iter_mut().zip(v.iter()) {
+        *a += w * x;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm trait + factory
+// ---------------------------------------------------------------------------
+
+/// One distributed-SGD method.
+pub trait Algorithm<O: Oracle> {
+    fn method(&self) -> Method;
+
+    /// Perform iteration `t`; returns the mean training loss observed by
+    /// the workers at this iteration.
+    fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64>;
+
+    /// The parameters an external evaluator should use (for model-averaging
+    /// methods this is the mean of the local models).
+    fn eval_params(&self, out: &mut Vec<f32>);
+}
+
+/// Instantiate a method with its initial parameter vector.
+pub fn build<O: Oracle>(method: Method, init: Vec<f32>, cfg: &AlgoConfig) -> Box<dyn Algorithm<O>> {
+    match method {
+        Method::HoSgd => Box::new(ho_sgd::HoSgd::new(init)),
+        Method::SyncSgd => Box::new(sync_sgd::SyncSgd::new(init)),
+        Method::RiSgd => Box::new(ri_sgd::RiSgd::new(init, cfg.m)),
+        Method::ZoSgd => Box::new(zo_sgd::ZoSgd::new(init)),
+        Method::ZoSvrgAve => Box::new(zo_svrg::ZoSvrgAve::new(init)),
+        Method::Qsgd => Box::new(qsgd::Qsgd::new(init, cfg.m, cfg.qsgd_error_feedback)),
+        Method::HoSgdM => Box::new(ho_sgd_m::HoSgdM::new(init)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrainOracle: the Section 5.2 objective (AOT MLP over a dataset)
+// ---------------------------------------------------------------------------
+
+use crate::data::{BatchSampler, Dataset, Sharding};
+use crate::runtime::ModelBinding;
+
+/// Stochastic oracle over an AOT-compiled model profile + dataset shards.
+pub struct TrainOracle<'a> {
+    pub model: &'a ModelBinding,
+    pub data: &'a Dataset,
+    pub sharding: Sharding,
+    sampler: BatchSampler,
+    reg: SeedRegistry,
+    // scratch batch buffers
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    idx: Vec<usize>,
+}
+
+impl<'a> TrainOracle<'a> {
+    /// `redundancy > 0` builds RI-SGD's overlapping pools; 0 gives disjoint
+    /// iid shards.
+    pub fn new(
+        model: &'a ModelBinding,
+        data: &'a Dataset,
+        workers: usize,
+        redundancy: f64,
+        seed: u64,
+    ) -> Self {
+        let sharding = if redundancy > 0.0 {
+            Sharding::redundant(data.len(), workers, redundancy, seed)
+        } else {
+            Sharding::iid(data.len(), workers, seed)
+        };
+        let batch = model.batch();
+        Self {
+            model,
+            data,
+            sharding,
+            sampler: BatchSampler::new(batch),
+            reg: SeedRegistry::new(seed),
+            bx: vec![0.0; batch * model.features()],
+            by: vec![0.0; batch],
+            idx: Vec::with_capacity(batch),
+        }
+    }
+
+    fn fill_batch(&mut self, iter: u64, worker: u64) {
+        let pool = &self.sharding.pools[worker as usize % self.sharding.pools.len()];
+        self.sampler.sample(&self.reg, iter, worker, pool, &mut self.idx);
+        self.data.gather(&self.idx, &mut self.bx, &mut self.by);
+    }
+}
+
+impl Oracle for TrainOracle<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.model.batch()
+    }
+
+    fn grad(&mut self, params: &[f32], iter: u64, worker: u64, out: &mut [f32]) -> Result<f32> {
+        self.fill_batch(iter, worker);
+        self.model.grad(params, &self.bx, &self.by, out)
+    }
+
+    fn pair(
+        &mut self,
+        params: &[f32],
+        v: &[f32],
+        mu: f32,
+        iter: u64,
+        worker: u64,
+    ) -> Result<(f32, f32)> {
+        self.fill_batch(iter, worker);
+        self.model.loss_pair(params, v, mu, &self.bx, &self.by)
+    }
+
+    fn loss(&mut self, params: &[f32], iter: u64, worker: u64) -> Result<f32> {
+        self.fill_batch(iter, worker);
+        self.model.loss(params, &self.bx, &self.by)
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<f32> {
+        init_mlp_params(&self.model.meta, seed)
+    }
+}
+
+/// Glorot-uniform init for the flat MLP layout of `model.py` (weights per
+/// layer, zero biases) — the shared initial point all methods start from
+/// ("all the methods are run from the same initial points", §5.2).
+pub fn init_mlp_params(meta: &ProfileMeta, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut p = Vec::with_capacity(meta.dim);
+    let layers = [
+        (meta.features, meta.hidden1),
+        (meta.hidden1, meta.hidden2),
+        (meta.hidden2, meta.classes),
+    ];
+    for (fan_in, fan_out) in layers {
+        let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+        for _ in 0..fan_in * fan_out {
+            p.push((limit * (2.0 * rng.next_f64() - 1.0)) as f32);
+        }
+        for _ in 0..fan_out {
+            p.push(0.0);
+        }
+    }
+    debug_assert_eq!(p.len(), meta.dim);
+    p
+}
+
+/// The ZO scalar of Algorithm 1: `d/μ · (F(x+μv) − F(x))` — the ONLY value
+/// a worker transmits at a ZO iteration.
+#[inline]
+pub fn zo_scalar(d: usize, mu: f32, loss_plus: f32, loss_base: f32) -> f32 {
+    (d as f64 / mu as f64 * (loss_plus as f64 - loss_base as f64)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_update_subtracts() {
+        let mut p = vec![1.0f32, 2.0];
+        axpy_update(&mut p, 0.5, &[2.0, 4.0]);
+        assert_eq!(p, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_acc_accumulates() {
+        let mut a = vec![1.0f32, 1.0];
+        axpy_acc(&mut a, 2.0, &[1.0, 2.0]);
+        assert_eq!(a, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn zo_scalar_scales_by_d_over_mu() {
+        let s = zo_scalar(100, 0.01, 1.5, 1.0);
+        assert!((s - 100.0 / 0.01 * 0.5).abs() < 1e-2);
+    }
+
+    #[test]
+    fn init_params_layout_and_determinism() {
+        let meta = ProfileMeta {
+            features: 10,
+            hidden1: 16,
+            hidden2: 16,
+            classes: 3,
+            dim: 10 * 16 + 16 + 16 * 16 + 16 + 16 * 3 + 3,
+            batch: 8,
+            artifacts: Default::default(),
+            golden: None,
+        };
+        let a = init_mlp_params(&meta, 1);
+        let b = init_mlp_params(&meta, 1);
+        let c = init_mlp_params(&meta, 2);
+        assert_eq!(a.len(), meta.dim);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // biases of layer 1 are zero
+        let w1 = 10 * 16;
+        assert!(a[w1..w1 + 16].iter().all(|&x| x == 0.0));
+        // glorot bound
+        let lim = (6.0f64 / 26.0).sqrt() as f32;
+        assert!(a[..w1].iter().all(|&x| x.abs() <= lim));
+    }
+}

@@ -1,0 +1,96 @@
+//! **QSGD** (Alistarh et al. 2017): gradient quantization — the
+//! bit-reduction (rather than round-reduction) communication baseline of
+//! Table 1.
+//!
+//! Every iteration each worker computes a first-order minibatch gradient,
+//! stochastically quantizes it to `s` levels ([`crate::comm::qsgd`]), and
+//! transmits the Elias-coded payload; all ranks dequantize and average, so
+//! the quantization error enters the trajectory exactly as in the real
+//! algorithm. Bytes accounted are the *actual encoded sizes*.
+//!
+//! Extension (off by default — `qsgd_error_feedback`): EF-style memory
+//! (Seide et al. / Stich et al.): each worker keeps its local quantization
+//! residual `r_i` and quantizes `g_i + r_i` next round. Error feedback is
+//! only stable with a *contractive* compressor, and stochastic QSGD is
+//! unbiased-but-expansive, so the EF path applies the standard fix of
+//! down-scaling the decoded value by `1/(1 + ω)` with `ω = √d/s` (the QSGD
+//! variance bound), which turns it into a contraction. The paper's Table 1
+//! row is plain QSGD; the EF ablation belongs to this repo's extension set.
+
+use anyhow::Result;
+
+use crate::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use crate::config::Method;
+use crate::rng::{hash_u64s, Xoshiro256};
+
+use super::{axpy_update, Algorithm, Oracle, World};
+
+pub struct Qsgd {
+    params: Vec<f32>,
+    /// per-worker EF residual memory (empty when EF is disabled)
+    residuals: Vec<Vec<f32>>,
+    error_feedback: bool,
+}
+
+impl Qsgd {
+    pub fn new(init: Vec<f32>, workers: usize, error_feedback: bool) -> Self {
+        let d = init.len();
+        let residuals = if error_feedback { vec![vec![0.0; d]; workers] } else { Vec::new() };
+        Self { params: init, residuals, error_feedback }
+    }
+}
+
+impl<O: Oracle> Algorithm<O> for Qsgd {
+    fn method(&self) -> Method {
+        Method::Qsgd
+    }
+
+    fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
+        let m = w.cfg.m;
+        let d = w.oracle.dim();
+        let b = w.oracle.batch_size();
+        let s = w.cfg.qsgd_levels;
+        let alpha = w.cfg.alpha(t, b);
+        w.gsum.fill(0.0);
+        let mut loss_sum = 0.0f64;
+        let mut bytes_total = 0u64;
+        for i in 0..m {
+            let l = w.oracle.grad(&self.params, t, i as u64, &mut w.g)?;
+            loss_sum += l as f64;
+            w.compute.grad_evals += b as u64;
+            if self.error_feedback {
+                // inject the residual memory before quantizing
+                for (g, &r) in w.g.iter_mut().zip(self.residuals[i].iter()) {
+                    *g += r;
+                }
+            }
+            // quantization randomness is part of the algorithm, seeded per
+            // (iter, worker) for reproducibility
+            let mut qrng = Xoshiro256::seeded(hash_u64s(&[w.reg.base(), 0x9_5D, t, i as u64]));
+            let q = quantize(&w.g, s, &mut qrng);
+            bytes_total += encoded_bytes(&q);
+            // contractive scaling for the EF path (1 for plain QSGD)
+            let omega = (d as f32).sqrt() / s as f32;
+            let ef_scale = if self.error_feedback { 1.0 / (1.0 + omega) } else { 1.0 };
+            if self.error_feedback {
+                // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
+                let res = &mut self.residuals[i];
+                res.copy_from_slice(&w.g);
+                let scale = -ef_scale * q.norm / q.s as f32;
+                for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
+                    *r += scale * l as f32;
+                }
+            }
+            dequantize_into(&q, ef_scale / m as f32, &mut w.gsum);
+        }
+        // per-worker egress: its own encoded gradient (mean across workers)
+        w.comm.allgather_bytes(bytes_total / m as u64, d as u64);
+        axpy_update(&mut self.params, alpha, &w.gsum);
+        Ok(loss_sum / m as f64)
+    }
+
+    fn eval_params(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.params);
+    }
+}

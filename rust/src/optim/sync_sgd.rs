@@ -1,0 +1,39 @@
+//! **syncSGD** (Wang & Joshi 2018; Dekel et al. 2012): fully synchronous
+//! distributed SGD — a first-order gradient exchange at *every* iteration.
+//!
+//! This is exactly HO-SGD with τ = 1 (§3.3), so it reuses
+//! [`super::ho_sgd::fo_iteration`]; it exists as its own type because the
+//! paper benchmarks it as a named baseline (Table 1 row "syncSGD") and the
+//! τ-independence keeps its counters honest.
+
+use anyhow::Result;
+
+use crate::config::Method;
+
+use super::{ho_sgd::fo_iteration, Algorithm, Oracle, World};
+
+pub struct SyncSgd {
+    params: Vec<f32>,
+}
+
+impl SyncSgd {
+    pub fn new(init: Vec<f32>) -> Self {
+        Self { params: init }
+    }
+}
+
+impl<O: Oracle> Algorithm<O> for SyncSgd {
+    fn method(&self) -> Method {
+        Method::SyncSgd
+    }
+
+    fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
+        let alpha = w.cfg.alpha(t, w.oracle.batch_size());
+        fo_iteration(&mut self.params, t, w, alpha)
+    }
+
+    fn eval_params(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.params);
+    }
+}

@@ -1,0 +1,40 @@
+//! **ZO-SGD** (Sahu et al. 2019): distributed zeroth-order SGD — a
+//! two-point gradient estimate at *every* iteration, scalar-only
+//! communication.
+//!
+//! This is HO-SGD with τ ≥ N (§3.3); it reuses
+//! [`super::ho_sgd::zo_iteration`]. Its convergence is the
+//! O((d/m)^{1/3}/N^{1/4}) row of Table 1 — the slow baseline HO-SGD's
+//! periodic FO rounds are designed to beat.
+
+use anyhow::Result;
+
+use crate::config::Method;
+
+use super::{ho_sgd::zo_iteration, Algorithm, Oracle, World};
+
+pub struct ZoSgd {
+    params: Vec<f32>,
+}
+
+impl ZoSgd {
+    pub fn new(init: Vec<f32>) -> Self {
+        Self { params: init }
+    }
+}
+
+impl<O: Oracle> Algorithm<O> for ZoSgd {
+    fn method(&self) -> Method {
+        Method::ZoSgd
+    }
+
+    fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
+        let alpha = w.cfg.alpha(t, w.oracle.batch_size());
+        zo_iteration(&mut self.params, t, w, alpha)
+    }
+
+    fn eval_params(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.params);
+    }
+}

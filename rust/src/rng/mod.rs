@@ -1,0 +1,472 @@
+//! Deterministic RNG substrate and the paper's **pre-shared direction
+//! seeds**.
+//!
+//! Algorithm 1's communication trick rests on every worker being able to
+//! regenerate every other worker's random direction `v_{t+1,i}` locally:
+//! the seeds are exchanged once before optimization, and afterwards only the
+//! *scalar* finite-difference value crosses the network. [`SeedRegistry`]
+//! is that pre-shared state: a single `u64` base seed from which the
+//! direction seed of any `(iteration, worker)` pair is derived by a
+//! splitmix64 hash — every rank holding the registry derives identical
+//! directions with zero coordination.
+//!
+//! No external RNG crates: xoshiro256++ (stream), splitmix64 (seeding /
+//! hashing), Box–Muller normals, and a ZIGNOR ziggurat (the §Perf direction
+//! sampler) are implemented here so the whole simulation is
+//! bit-reproducible from one config seed, across platforms.
+
+/// splitmix64 step — used both as a seeder and as a (k1, k2) -> u64 hash.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a tuple of u64s into one u64 (order-sensitive).
+pub fn hash_u64s(parts: &[u64]) -> u64 {
+    let mut state = 0x51_7C_C1_B7_27_22_0A_95u64;
+    let mut out = 0u64;
+    for &p in parts {
+        state ^= p;
+        out = out.wrapping_add(splitmix64(&mut state)).rotate_left(17) ^ p;
+    }
+    // final avalanche
+    let mut s = out;
+    splitmix64(&mut s)
+}
+
+/// xoshiro256++ — the workhorse stream generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free enough for simulation purposes:
+        // 64-bit multiply-shift keeps bias < 2^-53 for any realistic n.
+        ((self.next_u64() >> 11) as u128 * n as u128 >> 53) as usize
+    }
+
+    /// Standard normal via Box–Muller (computed in f64).
+    #[inline]
+    pub fn next_normal(&mut self) -> f64 {
+        // avoid log(0)
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Both Box–Muller outputs at once — amortizes the ln/sqrt over two
+    /// samples and gets sin for free via `sin_cos` (§Perf L3: direction
+    /// regeneration is the ZO-iteration hot spot).
+    #[inline]
+    pub fn next_normal_pair(&mut self) -> (f64, f64) {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        (r * c, r * s)
+    }
+
+    /// Fisher–Yates shuffle of indices.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// The pre-shared seed state of Algorithm 1.
+///
+/// Exchanged once before optimization ("the seeds are pre-shared among the
+/// nodes"); afterwards any rank can regenerate the direction of any
+/// `(iteration, worker)` pair. Separate domains keep direction seeds,
+/// data-sampling seeds and init seeds statistically independent.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedRegistry {
+    base: u64,
+}
+
+/// Domain tags so different uses of the registry never collide.
+const DOM_DIRECTION: u64 = 0xD1;
+const DOM_DATA: u64 = 0xDA;
+const DOM_INIT: u64 = 0x11;
+const DOM_SVRG: u64 = 0x55;
+
+impl SeedRegistry {
+    pub fn new(base: u64) -> Self {
+        Self { base }
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Seed of worker `i`'s ZO direction at iteration `t` — the value every
+    /// rank derives identically (the scalar-communication enabler).
+    pub fn direction_seed(&self, iter: u64, worker: u64) -> u64 {
+        hash_u64s(&[self.base, DOM_DIRECTION, iter, worker])
+    }
+
+    /// Seed of worker `i`'s minibatch sampling at iteration `t`.
+    pub fn data_seed(&self, iter: u64, worker: u64) -> u64 {
+        hash_u64s(&[self.base, DOM_DATA, iter, worker])
+    }
+
+    /// Seed for parameter initialisation.
+    pub fn init_seed(&self) -> u64 {
+        hash_u64s(&[self.base, DOM_INIT])
+    }
+
+    /// Seed for ZO-SVRG snapshot direction at (epoch, worker, probe).
+    pub fn svrg_seed(&self, epoch: u64, worker: u64, probe: u64) -> u64 {
+        hash_u64s(&[self.base, DOM_SVRG, epoch, worker, probe])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ziggurat normal sampler (§Perf L3 iteration 2)
+//
+// Doornik's ZIGNOR formulation, 128 layers: the common case is one u64
+// draw, one compare against a precomputed ratio and one multiply — much
+// cheaper than Box–Muller's ln + sin_cos. X[0] is the base-layer pseudo
+// width V/f(R); the tail beyond R uses Marsaglia's exponential method; the
+// wedge test interpolates the pdf between layer edges. Tables are built
+// once per process. Validated by the moment/tail tests below.
+// ---------------------------------------------------------------------------
+
+const ZIG_LAYERS: usize = 128;
+const ZIG_R: f64 = 3.442619855899;
+const ZIG_V: f64 = 9.91256303526217e-3;
+
+struct ZigTables {
+    /// X[i] for i in 0..=ZIG_LAYERS (X[0] = V/f(R) pseudo-width, X[128] = 0)
+    x: [f64; ZIG_LAYERS + 1],
+    /// ratio[i] = X[i+1] / X[i]
+    ratio: [f64; ZIG_LAYERS],
+    /// F[i] = exp(-X[i]^2 / 2)
+    f: [f64; ZIG_LAYERS + 1],
+}
+
+fn zig_tables() -> &'static ZigTables {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<ZigTables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let pdf = |x: f64| (-0.5 * x * x).exp();
+        let mut x = [0.0f64; ZIG_LAYERS + 1];
+        x[0] = ZIG_V / pdf(ZIG_R);
+        x[1] = ZIG_R;
+        x[ZIG_LAYERS] = 0.0;
+        for i in 2..ZIG_LAYERS {
+            let prev = x[i - 1];
+            x[i] = (-2.0 * (ZIG_V / prev + pdf(prev)).ln()).sqrt();
+        }
+        let mut ratio = [0.0f64; ZIG_LAYERS];
+        let mut f = [0.0f64; ZIG_LAYERS + 1];
+        for i in 0..ZIG_LAYERS {
+            ratio[i] = x[i + 1] / x[i];
+        }
+        for i in 0..=ZIG_LAYERS {
+            f[i] = pdf(x[i]);
+        }
+        ZigTables { x, ratio, f }
+    })
+}
+
+impl Xoshiro256 {
+    /// Standard normal via the ZIGNOR ziggurat (fast path: one draw,
+    /// one compare, one multiply).
+    #[inline]
+    pub fn next_normal_zig(&mut self) -> f64 {
+        let t = zig_tables();
+        loop {
+            let bits = self.next_u64();
+            let layer = (bits & 0x7F) as usize;
+            // signed uniform in (-1, 1) from the top 53 bits
+            let u = ((bits >> 11) as f64) * (2.0 / (1u64 << 53) as f64) - 1.0;
+            if u.abs() < t.ratio[layer] {
+                return u * t.x[layer]; // inside the rectangle — common case
+            }
+            if layer == 0 {
+                // tail beyond R (Marsaglia exponential method)
+                let sign = if u < 0.0 { -1.0 } else { 1.0 };
+                loop {
+                    let e1 = -self.next_f64().max(1e-300).ln() / ZIG_R;
+                    let e2 = -self.next_f64().max(1e-300).ln();
+                    if e1 * e1 <= 2.0 * e2 {
+                        return sign * (ZIG_R + e1);
+                    }
+                }
+            }
+            // wedge: accept against the interpolated pdf
+            let xx = u * t.x[layer];
+            let f_lo = t.f[layer]; // f at the wider edge (smaller value)
+            let f_hi = t.f[layer + 1];
+            let y = f_lo + self.next_f64() * (f_hi - f_lo);
+            if y < (-0.5 * xx * xx).exp() {
+                return xx;
+            }
+        }
+    }
+}
+
+/// Fill `out` with a direction drawn uniformly from the unit sphere in
+/// `R^d` (Gaussian sample normalized in f64, then cast to f32) — the
+/// `v_{t+1,i}` of Algorithm 1 eq. (4).
+pub fn unit_sphere_direction(seed: u64, out: &mut [f32]) {
+    let mut scratch = Vec::with_capacity(out.len());
+    unit_sphere_direction_scratch(seed, out, &mut scratch);
+}
+
+/// Direction generation without the f64 scratch allocation — used on the
+/// hot path with a caller-provided scratch buffer (§Perf).
+///
+/// Generates normals in Box–Muller pairs (2× fewer transcendentals than
+/// the one-at-a-time path) — see EXPERIMENTS.md §Perf for the before/after.
+/// NOTE: uses a different RNG consumption pattern than
+/// [`unit_sphere_direction`] would with single draws, so both paths share
+/// this pair-wise implementation to stay bit-identical.
+pub fn unit_sphere_direction_scratch(seed: u64, out: &mut [f32], scratch: &mut Vec<f64>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let d = out.len();
+    scratch.clear();
+    scratch.resize(d, 0.0);
+    let mut norm2 = 0.0f64;
+    for zi in scratch.iter_mut() {
+        let z = rng.next_normal_zig();
+        *zi = z;
+        norm2 += z * z;
+    }
+    let inv = if norm2 > 0.0 { 1.0 / norm2.sqrt() } else { 0.0 };
+    for (o, gi) in out.iter_mut().zip(scratch.iter()) {
+        *o = (gi * inv) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xoshiro_is_deterministic() {
+        let mut a = Xoshiro256::seeded(42);
+        let mut b = Xoshiro256::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::seeded(1);
+        let mut b = Xoshiro256::seeded(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Xoshiro256::seeded(7);
+        for _ in 0..1000 {
+            let u = r.next_f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = Xoshiro256::seeded(8);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let k = r.next_below(7);
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seeded(9);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.next_normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sphere_direction_is_unit_norm() {
+        for d in [1usize, 2, 10, 900, 24203] {
+            let mut v = vec![0.0f32; d];
+            unit_sphere_direction(123, &mut v);
+            let n2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            assert!((n2.sqrt() - 1.0).abs() < 1e-4, "d={d} norm={}", n2.sqrt());
+        }
+    }
+
+    #[test]
+    fn preshared_seeds_reproduce_directions_across_ranks() {
+        // Two "ranks" holding the same registry derive identical directions.
+        let reg_a = SeedRegistry::new(0xBEEF);
+        let reg_b = SeedRegistry::new(0xBEEF);
+        let mut va = vec![0.0f32; 128];
+        let mut vb = vec![0.0f32; 128];
+        unit_sphere_direction(reg_a.direction_seed(17, 3), &mut va);
+        unit_sphere_direction(reg_b.direction_seed(17, 3), &mut vb);
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn seed_domains_do_not_collide() {
+        let reg = SeedRegistry::new(5);
+        assert_ne!(reg.direction_seed(0, 0), reg.data_seed(0, 0));
+        assert_ne!(reg.direction_seed(1, 0), reg.direction_seed(0, 1));
+        assert_ne!(reg.init_seed(), reg.direction_seed(0, 0));
+    }
+
+    #[test]
+    fn scratch_variant_matches_alloc_variant() {
+        let mut a = vec![0.0f32; 500];
+        let mut b = vec![0.0f32; 500];
+        let mut scratch = Vec::new();
+        unit_sphere_direction(99, &mut a);
+        unit_sphere_direction_scratch(99, &mut b, &mut scratch);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seeded(4);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}
+
+#[cfg(test)]
+mod zig_tests {
+    use super::*;
+
+    #[test]
+    fn ziggurat_moments_and_tail() {
+        let mut r = Xoshiro256::seeded(77);
+        let n = 400_000;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        let mut tail = 0usize;
+        for _ in 0..n {
+            let z = r.next_normal_zig();
+            s1 += z;
+            s2 += z * z;
+            s3 += z * z * z;
+            s4 += z * z * z * z;
+            if z.abs() > ZIG_R {
+                tail += 1;
+            }
+        }
+        let nf = n as f64;
+        let mean = s1 / nf;
+        let var = s2 / nf - mean * mean;
+        let skew = s3 / nf;
+        let kurt = s4 / nf;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.01, "var {var}");
+        assert!(skew.abs() < 0.03, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurtosis {kurt}");
+        // P(|Z| > 3.4426) ≈ 5.76e-4
+        let tail_frac = tail as f64 / nf;
+        assert!((tail_frac - 5.76e-4).abs() < 2.5e-4, "tail {tail_frac}");
+    }
+
+    #[test]
+    fn ziggurat_is_deterministic() {
+        let mut a = Xoshiro256::seeded(5);
+        let mut b = Xoshiro256::seeded(5);
+        for _ in 0..1000 {
+            assert_eq!(a.next_normal_zig().to_bits(), b.next_normal_zig().to_bits());
+        }
+    }
+
+    #[test]
+    fn ziggurat_layer_tables_are_sane() {
+        let t = zig_tables();
+        // widths strictly decreasing, ratios in (0,1)
+        for i in 1..ZIG_LAYERS {
+            assert!(t.x[i] > t.x[i + 1], "layer {i}");
+        }
+        for i in 0..ZIG_LAYERS - 1 {
+            assert!(t.ratio[i] > 0.0 && t.ratio[i] < 1.0, "ratio {i}");
+        }
+        // innermost layer has X[128] = 0, so its ratio is exactly 0 (the
+        // wedge test handles all of layer 127)
+        assert_eq!(t.ratio[ZIG_LAYERS - 1], 0.0);
+        // the recursion should close: Doornik's 128-block construction
+        // ends with x[127] = 0.2723... (x[128] = 0 is wedge-only)
+        assert!((t.x[ZIG_LAYERS - 1] - 0.27232).abs() < 1e-4,
+                "x[127] = {}", t.x[ZIG_LAYERS - 1]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Deterministic golden inputs — the rust replica of the closed-form f64
+//! formulas in `python/compile/aot.py` (`golden_params`, `golden_batch`,
+//! `golden_direction`, `golden_images`).
+//!
+//! Both sides evaluate the same trigonometric expressions in f64 and cast
+//! to f32 at the very end, so the literals fed to the PJRT executables are
+//! bit-identical to what the python side used when it recorded the golden
+//! outputs into `manifest.json`. `rust/tests/golden.rs` closes the loop:
+//! recompute → execute artifacts → compare against the manifest.
+
+/// `params[i] = 0.1 * sin(0.01*i + 0.5)`
+pub fn golden_params(d: usize) -> Vec<f32> {
+    (0..d).map(|i| (0.1 * ((0.01 * i as f64) + 0.5).sin()) as f32).collect()
+}
+
+/// `x[b,f] = sin(0.1*b + 0.01*f)`, `y[b] = b % classes`
+pub fn golden_batch(batch: usize, features: usize, classes: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut x = Vec::with_capacity(batch * features);
+    for b in 0..batch {
+        for f in 0..features {
+            x.push((0.1 * b as f64 + 0.01 * f as f64).sin() as f32);
+        }
+    }
+    let y = (0..batch).map(|b| (b % classes) as f32).collect();
+    (x, y)
+}
+
+/// `v[i] = cos(0.01*i + 0.1)`, normalized to unit l2 in f64.
+pub fn golden_direction(d: usize) -> Vec<f32> {
+    let v: Vec<f64> = (0..d).map(|i| (0.01 * i as f64 + 0.1).cos()).collect();
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    v.iter().map(|x| (x / norm) as f32).collect()
+}
+
+/// `img[b,f] = 0.45 * sin(0.07*b + 0.013*f)` — always inside (-0.5, 0.5).
+pub fn golden_images(batch: usize, dim: usize) -> Vec<f32> {
+    let mut img = Vec::with_capacity(batch * dim);
+    for b in 0..batch {
+        for f in 0..dim {
+            img.push((0.45 * (0.07 * b as f64 + 0.013 * f as f64).sin()) as f32);
+        }
+    }
+    img
+}
+
+pub const GOLDEN_MU: f32 = 1e-3;
+pub const GOLDEN_C: f32 = 0.5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_params_deterministic_and_bounded() {
+        let a = golden_params(1000);
+        assert_eq!(a, golden_params(1000));
+        assert!(a.iter().all(|x| x.abs() <= 0.1 + f32::EPSILON));
+    }
+
+    #[test]
+    fn golden_direction_unit_norm() {
+        let v = golden_direction(900);
+        let n: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((n.sqrt() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn golden_images_inside_open_box() {
+        let img = golden_images(10, 900);
+        assert!(img.iter().all(|&x| x.abs() < 0.5));
+    }
+
+    #[test]
+    fn golden_batch_labels_cover_classes() {
+        let (_, y) = golden_batch(64, 48, 11);
+        for c in 0..11 {
+            assert!(y.contains(&(c as f32)));
+        }
+    }
+}

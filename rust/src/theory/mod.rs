@@ -1,0 +1,220 @@
+//! Closed-form Table 1: convergence order, communication load per
+//! iteration, and normalized computational load for every method, as
+//! functions of (d, m, N, τ, μ_r, s, B).
+//!
+//! `hosgd table1` prints these analytic rows side by side with the
+//! *measured* per-iteration counters from an instrumented run, so the
+//! reproduction checks the paper's comparison table against the actual
+//! implementation rather than restating it.
+
+use crate::config::Method;
+
+/// Analytic per-iteration, per-worker characterization of a method.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub method: Method,
+    /// human-readable convergence order (Table 1 col. 2)
+    pub convergence_order: String,
+    /// numeric convergence-order value at the given parameters
+    pub convergence_value: f64,
+    /// scalars transmitted per worker per iteration (Table 1 col. 3)
+    pub comm_scalars_per_iter: f64,
+    /// computational load per iteration normalized to one first-order
+    /// minibatch gradient (Table 1 col. 4)
+    pub normalized_compute: f64,
+    pub comments: &'static str,
+}
+
+/// Parameters the table is evaluated at.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Params {
+    pub d: usize,
+    pub m: usize,
+    pub n: u64,
+    pub tau: usize,
+    /// RI-SGD redundancy factor μ
+    pub redundancy: f64,
+    /// QSGD levels s
+    pub s: u32,
+}
+
+pub fn table1_row(method: Method, p: Table1Params) -> Table1Row {
+    let d = p.d as f64;
+    let m = p.m as f64;
+    let n = p.n as f64;
+    let tau = p.tau as f64;
+    let s = p.s as f64;
+    match method {
+        Method::HoSgd => Table1Row {
+            method,
+            convergence_order: if p.tau > 1 {
+                "O(d/sqrt(mN))".into()
+            } else {
+                "O(1/sqrt(mN))".into()
+            },
+            convergence_value: if p.tau > 1 { d / (m * n).sqrt() } else { 1.0 / (m * n).sqrt() },
+            comm_scalars_per_iter: (tau - 1.0 + d) / tau,
+            normalized_compute: 1.0 / tau + 1.0 / d,
+            comments: "",
+        },
+        Method::RiSgd => Table1Row {
+            method,
+            convergence_order: "O(tau/sqrt(mN))".into(),
+            convergence_value: tau / (m * n).sqrt(),
+            comm_scalars_per_iter: d / tau,
+            normalized_compute: p.redundancy * m + 1.0,
+            comments: "requires high storage; mu: redundancy factor",
+        },
+        Method::SyncSgd => Table1Row {
+            method,
+            convergence_order: "O(1/sqrt(mN))".into(),
+            convergence_value: 1.0 / (m * n).sqrt(),
+            comm_scalars_per_iter: d,
+            normalized_compute: 1.0,
+            comments: "",
+        },
+        Method::ZoSgd => Table1Row {
+            method,
+            convergence_order: "O((d/m)^{1/3}/N^{1/4})".into(),
+            convergence_value: (d / m).powf(1.0 / 3.0) / n.powf(0.25),
+            comm_scalars_per_iter: 1.0,
+            normalized_compute: 1.0 / d,
+            comments: "",
+        },
+        Method::ZoSvrgAve => Table1Row {
+            method,
+            convergence_order: "O(d/N + 1/min{d,m})".into(),
+            convergence_value: d / n + 1.0 / d.min(m),
+            comm_scalars_per_iter: 1.0,
+            // the paper writes O(K/d) with K the dataset size; per
+            // iteration with q probes it is O(q/d) function evals
+            normalized_compute: 4.0 / d,
+            comments: "requires dataset storage; K: dataset size",
+        },
+        // the momentum extension shares HO-SGD's comm/compute profile
+        Method::HoSgdM => {
+            let mut row = table1_row(Method::HoSgd, p);
+            row.method = method;
+            row.comments = "extension: heavy-ball over the hybrid update";
+            row
+        }
+        Method::Qsgd => Table1Row {
+            method,
+            convergence_order: "O(1/N + sqrt(d))".into(),
+            convergence_value: 1.0 / n + d.sqrt(),
+            comm_scalars_per_iter: (s * s + s * d.sqrt()) / 32.0,
+            normalized_compute: 1.0 + 0.1, // gradient + quantization pass
+            comments: "s: num. of quantization levels",
+        },
+    }
+}
+
+/// The full table in the paper's row order.
+pub fn table1(p: Table1Params) -> Vec<Table1Row> {
+    [
+        Method::HoSgd,
+        Method::RiSgd,
+        Method::SyncSgd,
+        Method::ZoSgd,
+        Method::ZoSvrgAve,
+        Method::Qsgd,
+    ]
+    .into_iter()
+    .map(|mth| table1_row(mth, p))
+    .collect()
+}
+
+/// Key paper ratios, used by tests and the table printer.
+pub mod ratios {
+    /// HO-SGD comm / model-averaging comm over τ iterations = 1 + (τ-1)/d.
+    pub fn hosgd_over_ri_comm(d: usize, tau: usize) -> f64 {
+        1.0 + (tau as f64 - 1.0) / d as f64
+    }
+
+    /// HO-SGD compute / FO-methods compute ≈ 1/τ + 1/d.
+    pub fn hosgd_over_fo_compute(d: usize, tau: usize) -> f64 {
+        1.0 / tau as f64 + 1.0 / d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Table1Params {
+        Table1Params { d: 24203, m: 4, n: 400, tau: 8, redundancy: 0.25, s: 4 }
+    }
+
+    #[test]
+    fn hosgd_beats_zo_orderwise() {
+        let p = params();
+        let ho = table1_row(Method::HoSgd, p);
+        let zo = table1_row(Method::ZoSgd, p);
+        let svrg = table1_row(Method::ZoSvrgAve, p);
+        // paper claim: for moderate N the ZO orders are worse than d/sqrt(mN)
+        // once N >> d^... at these params ZO-SGD's value is smaller in raw
+        // numbers, so compare the *scaling* in N instead:
+        // the crossover N where d/√(mN) dips below (d/m)^{1/3}/N^{1/4} is
+        // ≈ 2e11 at d = 24203 — evaluate beyond it
+        let big_n = Table1Params { n: 100_000_000_000_000, ..p };
+        let ho_big = table1_row(Method::HoSgd, big_n);
+        let zo_big = table1_row(Method::ZoSgd, big_n);
+        let svrg_big = table1_row(Method::ZoSvrgAve, big_n);
+        assert!(ho_big.convergence_value < zo_big.convergence_value);
+        assert!(ho_big.convergence_value < svrg_big.convergence_value);
+        // and HO-SGD τ>1 matches RI-SGD's order up to d/τ
+        assert!(ho.convergence_value > 0.0 && zo.convergence_value > 0.0);
+        assert!(svrg.convergence_value > 0.0);
+    }
+
+    #[test]
+    fn hosgd_tau1_is_syncsgd_order() {
+        let p = Table1Params { tau: 1, ..params() };
+        let ho = table1_row(Method::HoSgd, p);
+        let sync = table1_row(Method::SyncSgd, p);
+        assert_eq!(ho.convergence_value, sync.convergence_value);
+        assert_eq!(ho.convergence_order, "O(1/sqrt(mN))");
+    }
+
+    #[test]
+    fn comm_load_rows_match_paper() {
+        let p = params();
+        let ho = table1_row(Method::HoSgd, p);
+        let ri = table1_row(Method::RiSgd, p);
+        let sync = table1_row(Method::SyncSgd, p);
+        let zo = table1_row(Method::ZoSgd, p);
+        assert!((ho.comm_scalars_per_iter - (8.0 - 1.0 + 24203.0) / 8.0).abs() < 1e-9);
+        assert!((ri.comm_scalars_per_iter - 24203.0 / 8.0).abs() < 1e-9);
+        assert_eq!(sync.comm_scalars_per_iter, 24203.0);
+        assert_eq!(zo.comm_scalars_per_iter, 1.0);
+        // ZO methods communicate least; syncSGD most
+        assert!(zo.comm_scalars_per_iter < ho.comm_scalars_per_iter);
+        assert!(ho.comm_scalars_per_iter < sync.comm_scalars_per_iter);
+    }
+
+    #[test]
+    fn compute_rows_match_paper() {
+        let p = params();
+        let ho = table1_row(Method::HoSgd, p);
+        let ri = table1_row(Method::RiSgd, p);
+        let zo = table1_row(Method::ZoSgd, p);
+        assert!((ho.normalized_compute - (1.0 / 8.0 + 1.0 / 24203.0)).abs() < 1e-12);
+        assert!((ri.normalized_compute - 2.0).abs() < 1e-12); // 0.25*4 + 1
+        assert!(zo.normalized_compute < ho.normalized_compute);
+        assert!(ho.normalized_compute < 1.0); // cheaper than any FO method
+    }
+
+    #[test]
+    fn ratio_helpers() {
+        assert!((ratios::hosgd_over_ri_comm(900, 8) - (1.0 + 7.0 / 900.0)).abs() < 1e-12);
+        assert!((ratios::hosgd_over_fo_compute(900, 8) - (0.125 + 1.0 / 900.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_has_six_rows_in_paper_order() {
+        let t = table1(params());
+        assert_eq!(t.len(), 6);
+        assert_eq!(t[0].method, Method::HoSgd);
+        assert_eq!(t[1].method, Method::RiSgd);
+    }
+}

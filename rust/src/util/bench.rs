@@ -1,0 +1,124 @@
+//! Minimal benchmarking harness (the offline substitute for `criterion`):
+//! warmup + timed iterations, robust summary statistics, and a fixed-width
+//! table printer. Used by every target in `rust/benches/`.
+
+use std::time::Instant;
+
+/// Summary statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p05_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Build a result from pre-collected per-iteration samples.
+pub fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: q(0.5),
+        p05_s: q(0.05),
+        p95_s: q(0.95),
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Human-scale time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Print a criterion-style summary table.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "iters", "median", "mean", "p95", "stddev"
+    );
+    for r in results {
+        println!(
+            "{:<44} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            r.name,
+            r.iters,
+            fmt_time(r.median_s),
+            fmt_time(r.mean_s),
+            fmt_time(r.p95_s),
+            fmt_time(r.stddev_s)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_expected_sample_count() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.p05_s <= r.median_s && r.median_s <= r.p95_s);
+    }
+
+    #[test]
+    fn summarize_quantiles_ordered() {
+        let mut s = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let r = summarize("x", &mut s);
+        assert_eq!(r.median_s, 3.0);
+        assert_eq!(r.p05_s, 1.0);
+        assert_eq!(r.p95_s, 5.0);
+        assert!((r.mean_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,178 @@
+//! Tiny CLI argument parser (the offline substitute for `clap`).
+//!
+//! Grammar: `hosgd [--global value]* <subcommand> [--flag | --key value]*`.
+//! Flags may be written `--key value` or `--key=value`. Unknown flags are
+//! collected and reported by [`Args::finish`], so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// positional arguments (subcommand first)
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// flags read so far (for unknown-flag detection)
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // boolean flag or --key value
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow!("invalid value {raw:?} for --{key}: {e}")),
+        }
+    }
+
+    /// Optional typed flag.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("invalid value {raw:?} for --{key}: {e}")),
+        }
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch (present, `--x`, `--x=true`).
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.flags.get(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error on any flag that was never queried (typo protection). Call
+    /// after all `get*` calls for the chosen subcommand.
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !used.contains(k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("train --iters 100 --dataset sensorless --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get::<u64>("iters", 0).unwrap(), 100);
+        assert_eq!(a.get_str("dataset", "x"), "sensorless");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = args("fig2 --iters=250");
+        assert_eq!(a.get::<u64>("iters", 0).unwrap(), 250);
+        assert_eq!(a.get::<usize>("tau", 8).unwrap(), 8);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = args("train --lr 0.05 --seed 3");
+        assert!((a.get::<f64>("lr", 0.0).unwrap() - 0.05).abs() < 1e-12);
+        assert_eq!(a.get::<u64>("seed", 0).unwrap(), 3);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = args("ablate --taus 1,2,4");
+        assert_eq!(a.get_list("taus", &[]), vec!["1", "2", "4"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let a = args("train --itres 100");
+        let _ = a.get::<u64>("iters", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = args("train --iters banana");
+        assert!(a.get::<u64>("iters", 0).is_err());
+    }
+}

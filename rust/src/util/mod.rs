@@ -1,0 +1,13 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` PJRT bridge and
+//! `anyhow` resolve from the vendored crate set), so the pieces a serving/
+//! training framework would normally pull from crates.io are implemented
+//! in-tree: a JSON parser/emitter ([`json`]) for the artifact manifest and
+//! result files, and a CLI argument parser ([`cli`]) for the `hosgd`
+//! binary.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod plot;

@@ -1,0 +1,173 @@
+//! Terminal line plots — the offline substitute for a plotting stack, used
+//! by `hosgd report` to render the Fig. 1 / Fig. 2 series directly from the
+//! result CSVs.
+//!
+//! Multi-series braille-free ASCII rendering: each series gets a glyph,
+//! points are binned onto a fixed-size canvas, y is linear or log10, and a
+//! legend + axis labels are printed around the canvas.
+
+/// One named data series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotCfg {
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    pub x_label: String,
+    pub y_label: String,
+    pub title: String,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        Self {
+            width: 72,
+            height: 20,
+            log_y: false,
+            x_label: "x".into(),
+            y_label: "y".into(),
+            title: String::new(),
+        }
+    }
+}
+
+const GLYPHS: [char; 8] = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// Render the series onto an ASCII canvas and return it as a string.
+pub fn render(series: &[Series], cfg: &PlotCfg) -> String {
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite() && (!cfg.log_y || *y > 0.0))
+        .collect();
+    if pts.is_empty() {
+        out.push_str("  (no finite data)\n");
+        return out;
+    }
+    let ty = |y: f64| if cfg.log_y { y.log10() } else { y };
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(ty(y));
+        ymax = ymax.max(ty(y));
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+
+    let (w, h) = (cfg.width, cfg.height);
+    let mut canvas = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() || (cfg.log_y && y <= 0.0) {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+            let cy = ((ty(y) - ymin) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+            let row = h - 1 - cy.min(h - 1);
+            let col = cx.min(w - 1);
+            // first-writer-wins keeps early series visible on overlap
+            if canvas[row][col] == ' ' {
+                canvas[row][col] = glyph;
+            }
+        }
+    }
+
+    let fmt_y = |v: f64| {
+        let val = if cfg.log_y { 10f64.powf(v) } else { v };
+        format!("{val:>9.3}")
+    };
+    for (r, row) in canvas.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (h - 1) as f64;
+        let label = if r == 0 || r == h - 1 || r == h / 2 {
+            fmt_y(yv)
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(9), "-".repeat(w)));
+    out.push_str(&format!(
+        "{} {:<20}{:>width$.1}\n",
+        " ".repeat(9),
+        format!("{} = {:.1}", cfg.x_label, xmin),
+        xmax,
+        width = w.saturating_sub(20)
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{} {}   ", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out.push('\n');
+    if cfg.log_y {
+        out.push_str(&format!("  ({} on log10 scale)\n", cfg.y_label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(name: &str, f: impl Fn(f64) -> f64) -> Series {
+        Series {
+            name: name.into(),
+            points: (0..50).map(|i| (i as f64, f(i as f64))).collect(),
+        }
+    }
+
+    #[test]
+    fn renders_without_panic_and_contains_legend() {
+        let s = [line("a", |x| x), line("b", |x| 50.0 - x)];
+        let out = render(&s, &PlotCfg::default());
+        assert!(out.contains("legend: * a"));
+        assert!(out.contains("+ b"));
+        assert!(out.lines().count() >= 20);
+    }
+
+    #[test]
+    fn log_scale_filters_nonpositive() {
+        let s = [Series { name: "l".into(), points: vec![(0.0, 0.0), (1.0, 10.0), (2.0, 100.0)] }];
+        let cfg = PlotCfg { log_y: true, ..Default::default() };
+        let out = render(&s, &cfg);
+        assert!(out.contains("log10"));
+    }
+
+    #[test]
+    fn empty_series_is_graceful() {
+        let out = render(&[Series { name: "e".into(), points: vec![] }], &PlotCfg::default());
+        assert!(out.contains("no finite data"));
+    }
+
+    #[test]
+    fn nan_points_are_skipped() {
+        let s = [Series { name: "n".into(), points: vec![(0.0, f64::NAN), (1.0, 1.0), (2.0, 2.0)] }];
+        let out = render(&s, &PlotCfg::default());
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = [Series { name: "c".into(), points: vec![(0.0, 5.0), (1.0, 5.0)] }];
+        let out = render(&s, &PlotCfg::default());
+        assert!(out.contains('*'));
+    }
+}

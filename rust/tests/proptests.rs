@@ -1,0 +1,314 @@
+//! Property-based tests over the coordinator substrates (sharding/batching/
+//! state, RNG, quantizer, comm model, JSON).
+//!
+//! The environment is offline, so instead of the `proptest` crate this uses
+//! an in-tree driver: [`cases`] runs a property over `n` pseudo-random
+//! cases drawn from the crate's own deterministic RNG, printing the failing
+//! case seed on assertion failure (rerun with that seed to reproduce).
+
+use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use hosgd::comm::{CommSim, NetworkModel};
+use hosgd::config::StepSize;
+use hosgd::data::{BatchSampler, Dataset, Sharding};
+use hosgd::optim::{axpy_acc, axpy_update, zo_scalar};
+use hosgd::rng::{hash_u64s, unit_sphere_direction, SeedRegistry, Xoshiro256};
+use hosgd::util::json::Json;
+
+/// Run `property` over `n` cases; each case gets its own deterministic RNG.
+fn cases(n: u64, property: impl Fn(u64, &mut Xoshiro256)) {
+    for case in 0..n {
+        let seed = hash_u64s(&[0x9120_7E57, case]);
+        let mut rng = Xoshiro256::seeded(seed);
+        property(seed, &mut rng);
+    }
+}
+
+fn rand_vec(rng: &mut Xoshiro256, d: usize, scale: f64) -> Vec<f32> {
+    (0..d).map(|_| (scale * rng.next_normal()) as f32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// sharding / batching (coordinator routing & state invariants)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_iid_sharding_is_balanced_partition() {
+    cases(40, |seed, rng| {
+        let n = 1 + rng.next_below(500);
+        let m = 1 + rng.next_below(8);
+        let s = Sharding::iid(n, m, seed);
+        assert_eq!(s.pools.len(), m);
+        let mut all: Vec<usize> = s.pools.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "seed {seed}");
+        let lens: Vec<usize> = s.pools.iter().map(|p| p.len()).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    });
+}
+
+#[test]
+fn prop_redundant_sharding_storage_factor() {
+    cases(30, |seed, rng| {
+        let n = 40 + rng.next_below(400);
+        let m = 2 + rng.next_below(6);
+        let mu = rng.next_f64();
+        let s = Sharding::redundant(n, m, mu, seed);
+        // every index still appears somewhere; each worker keeps its shard
+        let mut all: Vec<usize> = s.pools.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "seed {seed}");
+        // storage factor ≈ 1 + mu(m-1), within ceil slack
+        let f = s.storage_factor(n);
+        let expect = 1.0 + mu * (m as f64 - 1.0);
+        assert!(f + 1e-9 >= expect, "seed {seed}: {f} < {expect}");
+        assert!(f <= expect + m as f64 * m as f64 / n as f64 + 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_batch_sampler_in_pool_and_deterministic() {
+    cases(30, |seed, rng| {
+        let reg = SeedRegistry::new(seed);
+        let pool: Vec<usize> = (0..(1 + rng.next_below(200))).map(|i| i * 3).collect();
+        let b = 1 + rng.next_below(64);
+        let sampler = BatchSampler::new(b);
+        let (mut i1, mut i2) = (Vec::new(), Vec::new());
+        let t = rng.next_u64() % 1000;
+        let w = rng.next_u64() % 8;
+        sampler.sample(&reg, t, w, &pool, &mut i1);
+        sampler.sample(&reg, t, w, &pool, &mut i2);
+        assert_eq!(i1, i2, "same (iter,worker) must resample identically");
+        assert_eq!(i1.len(), b);
+        assert!(i1.iter().all(|i| pool.contains(i)), "seed {seed}");
+        // different worker ⇒ (almost surely) different batch when pool > 1
+        if pool.len() > 4 && b > 2 {
+            let mut i3 = Vec::new();
+            sampler.sample(&reg, t, w + 1, &pool, &mut i3);
+            assert_ne!(i1, i3, "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_synth_labels_and_shapes() {
+    cases(10, |seed, rng| {
+        let p = hosgd::data::profile("quickstart").unwrap();
+        let n = 1 + rng.next_below(300);
+        let d = Dataset::synth(&p, n, seed, 0);
+        assert_eq!(d.len(), n);
+        assert_eq!(d.x.len(), n * p.features);
+        assert!(d.y.iter().all(|&y| (y as usize) < p.classes));
+        assert!(d.x.iter().all(|v| v.is_finite()));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RNG / pre-shared directions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_directions_unit_norm_any_dim() {
+    cases(25, |seed, rng| {
+        let d = 1 + rng.next_below(5000);
+        let mut v = vec![0.0f32; d];
+        unit_sphere_direction(seed, &mut v);
+        let n2: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((n2.sqrt() - 1.0).abs() < 1e-4, "seed {seed} d {d}");
+    });
+}
+
+#[test]
+fn prop_direction_seeds_unique_across_iter_worker() {
+    cases(5, |seed, _| {
+        let reg = SeedRegistry::new(seed);
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..50u64 {
+            for w in 0..8u64 {
+                assert!(seen.insert(reg.direction_seed(t, w)), "collision at ({t},{w})");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// QSGD quantizer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qsgd_error_bound() {
+    // per-coordinate |err| ≤ norm/s ⇒ l2 err ≤ norm·√d / s
+    cases(25, |seed, rng| {
+        let d = 1 + rng.next_below(2000);
+        let s = 1 + (rng.next_below(16) as u32);
+        let v = rand_vec(rng, d, 1.0);
+        let norm: f64 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let q = quantize(&v, s, &mut Xoshiro256::seeded(seed ^ 1));
+        let mut out = vec![0.0f32; d];
+        dequantize_into(&q, 1.0, &mut out);
+        let err: f64 = out
+            .iter()
+            .zip(v.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let bound = norm * (d as f64).sqrt() / s as f64 + 1e-5;
+        assert!(err <= bound, "seed {seed}: err {err} > bound {bound}");
+    });
+}
+
+#[test]
+fn prop_qsgd_encoded_size_sane() {
+    cases(20, |seed, rng| {
+        let d = 1 + rng.next_below(4000);
+        let s = 1 + (rng.next_below(8) as u32);
+        let v = rand_vec(rng, d, 2.0);
+        let q = quantize(&v, s, &mut Xoshiro256::seeded(seed ^ 2));
+        let bytes = encoded_bytes(&q);
+        assert!(bytes >= 4, "must at least carry the norm");
+        // never worse than ~2 bits-per-level overhead vs raw f32
+        assert!(bytes <= 4 + 4 * d as u64, "seed {seed}: {bytes} > raw");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// comm model + counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_network_times_monotone() {
+    cases(20, |seed, rng| {
+        let net = NetworkModel {
+            latency_s: 1e-6 + rng.next_f64() * 1e-3,
+            bandwidth_bps: 1e6 + rng.next_f64() * 1e10,
+        };
+        let b1 = 1 + rng.next_below(100_000) as u64;
+        let b2 = b1 + 1 + rng.next_below(100_000) as u64;
+        let m = 2 + rng.next_below(14);
+        assert!(net.allreduce_time(b1, m) <= net.allreduce_time(b2, m), "seed {seed}");
+        assert!(net.allgather_time(b1, m) <= net.allgather_time(b2, m));
+        assert!(net.broadcast_time(b1, m) <= net.broadcast_time(b2, m));
+        assert!(net.allreduce_time(b1, m) <= net.allreduce_time(b1, m + 1));
+    });
+}
+
+#[test]
+fn prop_comm_counters_additive() {
+    cases(15, |_seed, rng| {
+        let m = 2 + rng.next_below(6);
+        let mut c = CommSim::new(NetworkModel::default(), m);
+        let mut bytes = 0u64;
+        let mut scalars = 0u64;
+        let rounds = 1 + rng.next_below(20);
+        for _ in 0..rounds {
+            match rng.next_below(3) {
+                0 => {
+                    let f = 1 + rng.next_below(1000) as u64;
+                    c.allreduce_floats(f);
+                    bytes += 4 * f;
+                    scalars += f;
+                }
+                1 => {
+                    c.allgather_scalar();
+                    bytes += 4;
+                    scalars += 1;
+                }
+                _ => {
+                    let b = 1 + rng.next_below(500) as u64;
+                    c.allgather_bytes(b, 7);
+                    bytes += b;
+                    scalars += 7;
+                }
+            }
+        }
+        assert_eq!(c.stats.bytes_per_worker, bytes);
+        assert_eq!(c.stats.scalars_per_worker, scalars);
+        assert_eq!(c.stats.rounds, rounds as u64);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// optimizer state helpers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_axpy_identities() {
+    cases(20, |seed, rng| {
+        let d = 1 + rng.next_below(1000);
+        let p0 = rand_vec(rng, d, 1.0);
+        let g = rand_vec(rng, d, 1.0);
+        // update then inverse-update returns to start (exact in f32 when
+        // the intermediate is representable; use small alpha)
+        let mut p = p0.clone();
+        axpy_update(&mut p, 0.5, &g);
+        for i in 0..d {
+            assert_eq!(p[i], p0[i] - 0.5 * g[i], "seed {seed}");
+        }
+        let mut acc = vec![0.0f32; d];
+        axpy_acc(&mut acc, 2.0, &g);
+        for i in 0..d {
+            assert_eq!(acc[i], 2.0 * g[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_zo_scalar_linear_in_loss_gap() {
+    cases(20, |_seed, rng| {
+        let d = 1 + rng.next_below(100_000);
+        let mu = (rng.next_f64() * 0.1 + 1e-5) as f32;
+        let base = rng.next_normal() as f32;
+        let gap = rng.next_normal() as f32 * 0.01;
+        let s = zo_scalar(d, mu, base + gap, base);
+        let expect = d as f64 / mu as f64 * gap as f64;
+        assert!(
+            (s as f64 - expect).abs() <= 1e-3 * expect.abs().max(1.0),
+            "{s} vs {expect}"
+        );
+    });
+}
+
+#[test]
+fn prop_step_size_rules_positive_and_decaying() {
+    cases(15, |_seed, rng| {
+        let alpha0 = rng.next_f64() + 1e-3;
+        let gamma = rng.next_f64();
+        let s = StepSize::InvDecay { alpha0, gamma };
+        let mut prev = f64::INFINITY;
+        for t in [0u64, 1, 10, 100, 1000] {
+            let a = s.at(t, 64, 4, 1000);
+            assert!(a > 0.0 && a <= prev);
+            prev = a;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON substrate
+// ---------------------------------------------------------------------------
+
+fn rand_json(rng: &mut Xoshiro256, depth: usize) -> Json {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_normal() * 1e3).round() / 16.0),
+        3 => Json::Str(format!("s{}-\"q\"\n{}", rng.next_u64() % 1000, rng.next_below(10))),
+        4 => Json::Arr((0..rng.next_below(5)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.next_below(5))
+                .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(60, |seed, rng| {
+        let v = rand_json(rng, 3);
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        let compact = Json::parse(&v.compact()).unwrap();
+        assert_eq!(v, pretty, "seed {seed}");
+        assert_eq!(v, compact, "seed {seed}");
+    });
+}
