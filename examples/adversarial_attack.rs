@@ -3,28 +3,31 @@
 //! (Fig. 1 / Table 2 / Table 3).
 //!
 //! The example first trains the attack target with the library's own
-//! syncSGD (the "well-trained DNN" substitution of DESIGN.md §4), then runs
-//! the CW attack with HO-SGD and prints the loss curve, per-image outcomes
-//! and l2 distortions.
+//! syncSGD (the offline substitution for the paper's "well-trained DNN"),
+//! then runs the CW attack with HO-SGD and prints the loss curve, per-image
+//! outcomes and l2 distortions.
 //!
 //! Run with:
 //!   cargo run --release --example adversarial_attack [method] [iters]
 
+use std::path::Path;
+
 use anyhow::Result;
 use hosgd::attack::{build_task, run_attack, AttackConfig};
+use hosgd::backend::{self, AttackBackend, Backend};
 use hosgd::config::Method;
-use hosgd::runtime::Runtime;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let method: Method = args.get(1).map(String::as_str).unwrap_or("ho_sgd").parse()?;
     let iters: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
 
-    let rt = Runtime::load("artifacts")?;
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let rt = backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
     let bind = rt.attack()?;
 
     println!("training the frozen classifier (syncSGD, 300 iters)...");
-    let task = build_task(&rt, 7, 300)?;
+    let task = build_task(rt.as_ref(), 7, 300)?;
     println!("classifier test accuracy: {:.3}", task.clf_test_acc);
     println!(
         "attacking n = {} images of class {} with {} (d = 900, m = 5, B = 5, lr = 30/d)",
@@ -34,7 +37,7 @@ fn main() -> Result<()> {
     );
 
     let cfg = AttackConfig { method, iters, ..Default::default() };
-    let out = run_attack(&bind, &task, &cfg)?;
+    let out = run_attack(bind.as_ref(), &task, &cfg)?;
 
     println!("\niter   attack_loss");
     for row in out.trace.rows.iter().filter(|r| r.iter % (iters / 10).max(1) == 0) {

@@ -7,14 +7,17 @@
 //!
 //! Run with: cargo run --release --example e2e_train [iters]
 
+use std::path::Path;
+
 use anyhow::Result;
+use hosgd::backend::{self, Backend, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
-use hosgd::runtime::Runtime;
 
 fn main() -> Result<()> {
     let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
-    let rt = Runtime::load("artifacts")?;
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let rt = backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
     let cfg = TrainConfig {
         method: Method::HoSgd,
         dataset: "e2e".into(),
@@ -31,8 +34,8 @@ fn main() -> Result<()> {
         "e2e: d = {} params ({}→{}→{}→{}), m = {}, B = {}, tau = {}, N = {iters}",
         model.dim(),
         model.features(),
-        model.meta.hidden1,
-        model.meta.hidden2,
+        model.meta().hidden1,
+        model.meta().hidden2,
         model.classes(),
         cfg.workers,
         model.batch(),
@@ -40,7 +43,7 @@ fn main() -> Result<()> {
     );
 
     let data = make_data(&cfg)?;
-    let out = run_train_with(&model, &data, &cfg)?;
+    let out = run_train_with(model.as_ref(), &data, &cfg)?;
 
     println!("\niter   train_loss   test_acc     compute_s   comm_s(sim)");
     for row in &out.trace.rows {

@@ -1,21 +1,24 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! Loads the AOT artifacts, trains the tiny `quickstart` profile with
-//! HO-SGD (the paper's Algorithm 1) for 200 iterations, and prints the loss
-//! curve plus the communication/computation counters that make the method
-//! interesting.
+//! Binds the default pure-rust backend (set `HOSGD_BACKEND=pjrt` for the
+//! AOT artifacts), trains the tiny `quickstart` profile with HO-SGD (the
+//! paper's Algorithm 1) for 200 iterations, and prints the loss curve plus
+//! the communication/computation counters that make the method interesting.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use std::path::Path;
+
 use anyhow::Result;
+use hosgd::backend::{self, Backend, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
-use hosgd::runtime::Runtime;
 use hosgd::theory::ratios;
 
 fn main() -> Result<()> {
-    let rt = Runtime::load("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let rt = backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
+    println!("backend: {} ({})", rt.kind(), rt.platform());
 
     let cfg = TrainConfig {
         method: Method::HoSgd,
@@ -34,14 +37,14 @@ fn main() -> Result<()> {
         "model: d = {} parameters ({}→{}→{}→{}), batch {}",
         model.dim(),
         model.features(),
-        model.meta.hidden1,
-        model.meta.hidden2,
+        model.meta().hidden1,
+        model.meta().hidden2,
         model.classes(),
         model.batch()
     );
 
     let data = make_data(&cfg)?;
-    let out = run_train_with(&model, &data, &cfg)?;
+    let out = run_train_with(model.as_ref(), &data, &cfg)?;
 
     println!("\niter   train_loss   test_acc");
     for row in out.trace.rows.iter().filter(|r| r.iter % 20 == 0 || r.test_acc.is_some()) {

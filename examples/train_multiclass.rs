@@ -6,17 +6,20 @@
 //!   cargo run --release --example train_multiclass [dataset] [iters]
 //! (defaults: sensorless 200)
 
+use std::path::Path;
+
 use anyhow::Result;
+use hosgd::backend::{self, Backend, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
-use hosgd::runtime::Runtime;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let dataset = args.get(1).map(String::as_str).unwrap_or("sensorless").to_string();
     let iters: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
 
-    let rt = Runtime::load("artifacts")?;
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let rt = backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
     let model = rt.model(&dataset)?;
     println!(
         "== {dataset}: d = {}, m = 4 workers, B = {}, tau = 8, {iters} iters ==",
@@ -44,7 +47,7 @@ fn main() -> Result<()> {
             _ => 0.1,
         };
         let cfg = TrainConfig { method, step: StepSize::Constant { alpha }, ..base.clone() };
-        let out = run_train_with(&model, &data, &cfg)?;
+        let out = run_train_with(model.as_ref(), &data, &cfg)?;
         let last = out.trace.rows.last().unwrap();
         println!(
             "{:<14} {:>11.4} {:>10} {:>10.2} {:>14.4} {:>12.3}",

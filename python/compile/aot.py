@@ -46,7 +46,8 @@ def lower(fn, *specs) -> str:
 
 
 # ---------------------------------------------------------------------------
-# Model profiles (Table 4 of the paper, scaled — see DESIGN.md §4)
+# Model profiles (Table 4 of the paper, scaled down to the CPU testbed;
+# mirrored by rust/src/backend/native.rs::PROFILES)
 # ---------------------------------------------------------------------------
 
 # name -> (features, hidden1, hidden2, classes, train_batch)

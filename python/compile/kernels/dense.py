@@ -4,7 +4,7 @@ These are the compute hot-spot of the HO-SGD model stack (the 2-hidden-layer
 MLP of the paper's Section 5.2 experiments, and the frozen classifier inside
 the Section 5.1 CW attack loss).
 
-TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 2-D over
+TPU mapping: the grid is 2-D over
 (batch-blocks, out-feature-blocks); each kernel instance holds one
 ``(bB, F)`` activation block and one ``(F, bH)`` weight block in VMEM and
 performs a full-K contraction feeding MXU-shaped tiles. ``interpret=True``

@@ -5,3 +5,9 @@ import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "pjrt: exercises the AOT artifacts / PJRT execution path "
+        "(deselect in CI with -m 'not pjrt')")

@@ -72,6 +72,7 @@ def test_golden_values_reproduce():
     assert np.isfinite(g1["loss"]) and g1["grad_norm"] > 0
 
 
+@pytest.mark.pjrt
 @pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
                     reason="artifacts not built (run `make artifacts`)")
 class TestBuiltArtifacts:

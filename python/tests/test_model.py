@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile import model as M
 from compile.kernels import ref as R

@@ -3,14 +3,27 @@
 //! pass iterates on; EXPERIMENTS.md §Perf records before/after.
 //!
 //! Run with: cargo bench --bench hotpath
+//! CI smoke: cargo bench --bench hotpath -- --smoke   (few iterations, same
+//! code paths — keeps the bench compiling and running without burning CI
+//! minutes)
+//!
+//! Backend dispatch cases run on the native backend by default; set
+//! `HOSGD_BACKEND=pjrt` (artifacts + real xla crate required) to measure
+//! the PJRT executables instead.
 
+use std::path::Path;
+
+use hosgd::backend::{self, golden, Backend, ModelBackend};
 use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
 use hosgd::optim::{axpy_acc, axpy_update, zo_scalar};
 use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry, Xoshiro256};
-use hosgd::runtime::{golden, Runtime};
 use hosgd::util::bench::{bench, print_table};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let reps = |full: usize| if smoke { 3 } else { full };
+    let warm = |full: usize| if smoke { 1 } else { full };
+
     let mut results = Vec::new();
     let d = 24_203; // sensorless model dimension
 
@@ -19,7 +32,7 @@ fn main() {
     let mut dir = vec![0.0f32; d];
     let mut scratch = Vec::new();
     let mut t = 0u64;
-    results.push(bench("regen_direction d=24203", 3, 50, || {
+    results.push(bench("regen_direction d=24203", warm(3), reps(50), || {
         t += 1;
         unit_sphere_direction_scratch(reg.direction_seed(t, 0), &mut dir, &mut scratch);
         std::hint::black_box(&dir);
@@ -27,7 +40,7 @@ fn main() {
 
     // 2. the ZO aggregation: m=4 direction regens + scaled accumulation
     let mut gsum = vec![0.0f32; d];
-    results.push(bench("zo_aggregate m=4 d=24203", 3, 30, || {
+    results.push(bench("zo_aggregate m=4 d=24203", warm(3), reps(30), || {
         gsum.fill(0.0);
         for i in 0..4u64 {
             t += 1;
@@ -40,7 +53,7 @@ fn main() {
 
     // 3. the parameter update
     let mut params = vec![0.1f32; d];
-    results.push(bench("axpy_update d=24203", 3, 200, || {
+    results.push(bench("axpy_update d=24203", warm(3), reps(200), || {
         axpy_update(&mut params, 1e-4, &gsum);
         std::hint::black_box(&params);
     }));
@@ -49,7 +62,7 @@ fn main() {
     let mut qrng = Xoshiro256::seeded(9);
     let grad: Vec<f32> = (0..d).map(|i| ((i % 97) as f32 - 48.0) / 97.0).collect();
     let mut deq = vec![0.0f32; d];
-    results.push(bench("qsgd_quantize+decode s=4 d=24203", 3, 30, || {
+    results.push(bench("qsgd_quantize+decode s=4 d=24203", warm(3), reps(30), || {
         let q = quantize(&grad, 4, &mut qrng);
         std::hint::black_box(encoded_bytes(&q));
         deq.fill(0.0);
@@ -57,26 +70,28 @@ fn main() {
         std::hint::black_box(&deq);
     }));
 
-    // 5-7. PJRT executable dispatches (needs artifacts)
-    match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
-        Ok(rt) => {
-            let model = rt.model("sensorless").expect("model");
+    // 5-7. backend entry-point dispatches
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts)) {
+        Ok(be) => {
+            let model = be.model("sensorless").expect("model");
             let p = golden::golden_params(model.dim());
-            let (x, y) = golden::golden_batch(model.batch(), model.features(), model.classes());
+            let (x, y) =
+                golden::golden_batch(model.batch(), model.features(), model.classes());
             let v = golden::golden_direction(model.dim());
             let mut g = vec![0.0f32; model.dim()];
 
-            results.push(bench("exec loss (sensorless B=64)", 2, 20, || {
+            results.push(bench("exec loss (sensorless B=64)", warm(2), reps(20), || {
                 std::hint::black_box(model.loss(&p, &x, &y).unwrap());
             }));
-            results.push(bench("exec loss_pair (fused 2-point ZO)", 2, 20, || {
+            results.push(bench("exec loss_pair (fused 2-point ZO)", warm(2), reps(20), || {
                 std::hint::black_box(model.loss_pair(&p, &v, 1e-3, &x, &y).unwrap());
             }));
-            results.push(bench("exec grad (FO oracle)", 2, 20, || {
+            results.push(bench("exec grad (FO oracle)", warm(2), reps(20), || {
                 std::hint::black_box(model.grad(&p, &x, &y, &mut g).unwrap());
             }));
         }
-        Err(e) => eprintln!("skipping PJRT benches (run `make artifacts`): {e}"),
+        Err(e) => eprintln!("skipping backend dispatch benches: {e}"),
     }
 
     print_table("hot-path microbenchmarks", &results);
@@ -90,7 +105,7 @@ fn main() {
             pair * 1e3,
             regen * 1e3,
             if pair > 4.0 * regen {
-                "executable dispatch dominates (L2/XLA bound)"
+                "model dispatch dominates (backend bound)"
             } else {
                 "direction regeneration dominates (L3 bound)"
             }

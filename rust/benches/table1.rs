@@ -5,26 +5,32 @@
 //! You are not expected to match the paper's testbed numbers — what must
 //! hold is the *shape*: ZO ≪ HO ≪ sync in communication; ZO ≈ HO ≪ FO in
 //! compute; and HO's ratios (1 + (τ-1)/d comm vs model averaging,
-//! 1/τ + 1/d compute vs FO).
+//! 1/τ + 1/d compute vs FO). The counter ratios are deterministic, so they
+//! are asserted even in `--smoke` mode.
 //!
-//! Run with: cargo bench --bench table1
+//! Run with: cargo bench --bench table1   (CI smoke: `-- --smoke`)
+//! Runs on the native backend by default; HOSGD_BACKEND=pjrt switches.
 
+use std::path::Path;
+
+use hosgd::backend::{self, Backend, ModelBackend};
 use hosgd::config::{Method, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
-use hosgd::runtime::Runtime;
 use hosgd::theory::{ratios, table1, Table1Params};
 use hosgd::util::bench::fmt_time;
 
 fn main() {
-    let rt = match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let rt = match backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts)) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("table1 bench requires artifacts (`make artifacts`): {e}");
+            eprintln!("table1 bench could not load a backend: {e}");
             return;
         }
     };
     let dataset = "sensorless";
-    let iters: u64 = 48;
+    let iters: u64 = if smoke { 16 } else { 48 };
     let tau = 8usize;
     let model = rt.model(dataset).expect("model");
     let d = model.dim();
@@ -63,7 +69,7 @@ fn main() {
     for method in Method::ALL {
         let cfg = TrainConfig { method, ..base.clone() };
         let t0 = std::time::Instant::now();
-        let out = run_train_with(&model, &data, &cfg).expect("run");
+        let out = run_train_with(model.as_ref(), &data, &cfg).expect("run");
         let wall = t0.elapsed().as_secs_f64();
         let last = *out.trace.rows.last().unwrap();
         let per_iter_scalars = last.scalars_per_worker as f64 / iters as f64;
@@ -81,7 +87,7 @@ fn main() {
     }
 
     // shape assertions — fail loudly if the reproduction breaks the table
-    let get = |m: Method| measured.iter().find(|(mm, _, _)| *mm == m).unwrap().clone();
+    let get = |m: Method| *measured.iter().find(|(mm, _, _)| *mm == m).unwrap();
     let (_, ho_c, ho_n) = get(Method::HoSgd);
     let (_, sync_c, sync_n) = get(Method::SyncSgd);
     let (_, ri_c, _) = get(Method::RiSgd);

@@ -2,8 +2,9 @@
 //! distributed hybrid-order SGD — Fig. 1 (attack loss vs iterations),
 //! Table 2 (l2 distortion) and Table 3 (per-image labels).
 //!
-//! The paper attacks a well-trained MNIST DNN; per DESIGN.md §4 we first
-//! *train our own* frozen classifier on the synthetic 30×30 digit corpus
+//! The paper attacks a well-trained MNIST DNN; no MNIST is available
+//! offline, so we first *train our own* frozen classifier on the synthetic
+//! 30×30 digit corpus
 //! using this library's own syncSGD, then optimize the d = 900 universal
 //! perturbation over n = 10 same-class images with every method (m = 5
 //! workers, B = 5, step 30/d, μ = O(1/√(dN)) — the paper's §5.1 setup).
@@ -13,6 +14,8 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::mlp::argmax;
+use crate::backend::{AttackBackend, Backend, ModelBackend};
 use crate::comm::CommSim;
 use crate::config::{Method, StepSize, TrainConfig};
 use crate::coordinator::run_train_with;
@@ -20,7 +23,6 @@ use crate::data::Dataset;
 use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Algorithm, Oracle, World};
 use crate::rng::{SeedRegistry, Xoshiro256};
-use crate::runtime::{AttackBinding, Runtime};
 use crate::util::json::Json;
 
 /// The frozen attack target + the natural images being perturbed.
@@ -82,9 +84,9 @@ impl Default for AttackConfig {
 /// Train the frozen classifier with the library's own syncSGD and assemble
 /// the attack task: n correctly-classified same-class images (the paper
 /// picks n = 10 examples from the same class).
-pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask> {
-    let bind = rt.attack()?;
-    let model = rt.model(&bind.meta.clf_profile)?;
+pub fn build_task(backend: &dyn Backend, seed: u64, clf_iters: u64) -> Result<AttackTask> {
+    let bind = backend.attack()?;
+    let model = backend.model(&bind.meta().clf_profile)?;
     let classes = model.classes();
 
     // 1. train the classifier on the digit corpus
@@ -92,7 +94,7 @@ pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask>
     let test = Dataset::digits(classes, 1024, seed, 1);
     let cfg = TrainConfig {
         method: Method::SyncSgd,
-        dataset: bind.meta.clf_profile.clone(),
+        dataset: bind.meta().clf_profile.clone(),
         iters: clf_iters,
         workers: 4,
         tau: 1,
@@ -103,9 +105,9 @@ pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask>
         ..Default::default()
     };
     let data = crate::coordinator::RunData { train: corpus, test };
-    let outcome = run_train_with(&model, &data, &cfg)?;
+    let outcome = run_train_with(model.as_ref(), &data, &cfg)?;
     let clf_params = outcome.params;
-    let clf_test_acc = crate::coordinator::eval_accuracy(&model, &clf_params, &data.test)?;
+    let clf_test_acc = crate::coordinator::eval_accuracy(model.as_ref(), &clf_params, &data.test)?;
 
     // 2. pick eval_batch same-class images the classifier gets right
     let n = bind.eval_batch();
@@ -123,8 +125,9 @@ pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask>
             images.extend_from_slice(&pool.x[i * dim..(i + 1) * dim]);
         }
         let labels = vec![class as f32; n];
-        // verify with the attack_eval artifact at xp = 0
-        let (logits, _) = bind.eval(&vec![0.0; dim], &clf_params, &images)?;
+        // verify with the attack_eval entry point at xp = 0
+        let zero_xp = vec![0.0; dim];
+        let (logits, _) = bind.eval(&zero_xp, &clf_params, &images)?;
         let correct = (0..n)
             .filter(|&k| argmax(&logits[k * classes..(k + 1) * classes]) == class)
             .count();
@@ -145,16 +148,6 @@ pub fn build_task(rt: &Runtime, seed: u64, clf_iters: u64) -> Result<AttackTask>
     best.ok_or_else(|| anyhow!("could not assemble {n} same-class images"))
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
 // ---------------------------------------------------------------------------
 // AttackOracle
 // ---------------------------------------------------------------------------
@@ -163,7 +156,7 @@ fn argmax(xs: &[f32]) -> usize {
 /// `batch` images drawn (with replacement, pre-shared seeds) from the n
 /// natural images; the decision variable is the universal perturbation.
 pub struct AttackOracle<'a> {
-    bind: &'a AttackBinding,
+    bind: &'a dyn AttackBackend,
     task: &'a AttackTask,
     reg: SeedRegistry,
     bi: Vec<f32>,
@@ -171,7 +164,7 @@ pub struct AttackOracle<'a> {
 }
 
 impl<'a> AttackOracle<'a> {
-    pub fn new(bind: &'a AttackBinding, task: &'a AttackTask, seed: u64) -> Self {
+    pub fn new(bind: &'a dyn AttackBackend, task: &'a AttackTask, seed: u64) -> Self {
         let b = bind.batch();
         let d = bind.dim();
         Self {
@@ -265,7 +258,11 @@ pub struct AttackOutcome {
 }
 
 /// Run one attack experiment with the given method.
-pub fn run_attack(bind: &AttackBinding, task: &AttackTask, cfg: &AttackConfig) -> Result<AttackOutcome> {
+pub fn run_attack(
+    bind: &dyn AttackBackend,
+    task: &AttackTask,
+    cfg: &AttackConfig,
+) -> Result<AttackOutcome> {
     // allow the config to override the CW constant without rebuilding the task
     let task_override;
     let task = if let Some(c) = cfg.c {

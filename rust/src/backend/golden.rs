@@ -3,10 +3,12 @@
 //! `golden_direction`, `golden_images`).
 //!
 //! Both sides evaluate the same trigonometric expressions in f64 and cast
-//! to f32 at the very end, so the literals fed to the PJRT executables are
+//! to f32 at the very end, so the tensors a backend consumes are
 //! bit-identical to what the python side used when it recorded the golden
-//! outputs into `manifest.json`. `rust/tests/golden.rs` closes the loop:
-//! recompute → execute artifacts → compare against the manifest.
+//! outputs (into `manifest.json` for the PJRT artifacts, into
+//! [`super::native`]'s embedded tables for the native backend).
+//! `rust/tests/golden.rs` closes the loop: recompute → evaluate through a
+//! backend → compare against the recorded values.
 
 /// `params[i] = 0.1 * sin(0.01*i + 0.5)`
 pub fn golden_params(d: usize) -> Vec<f32> {

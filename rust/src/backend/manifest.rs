@@ -1,0 +1,223 @@
+//! Model-profile metadata shared by every compute backend.
+//!
+//! [`Manifest`] describes the model profiles a backend can serve: shapes,
+//! the flat model dimension `d` of Algorithm 1, per-profile artifact files
+//! (PJRT backend only — the native backend carries none) and optional
+//! golden values on the deterministic inputs of [`super::golden`].
+//!
+//! The JSON form is written by `python/compile/aot.py` next to the HLO
+//! artifacts; the native backend builds the same structure from its
+//! built-in profile table, so `hosgd list-artifacts` and `hosgd
+//! golden-check` work identically against either backend.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub profiles: BTreeMap<String, ProfileMeta>,
+    pub attack: Option<AttackMeta>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ProfileMeta {
+    pub features: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub classes: usize,
+    /// d — the flat model dimension of Algorithm 1.
+    pub dim: usize,
+    pub batch: usize,
+    pub artifacts: BTreeMap<String, String>,
+    pub golden: Option<ProfileGolden>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ProfileGolden {
+    pub mu: f64,
+    pub loss: f64,
+    pub grad_loss: f64,
+    pub grad_norm: f64,
+    pub grad_head: Vec<f64>,
+    pub pair_plus: f64,
+    pub pair_base: f64,
+    pub accuracy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct AttackMeta {
+    pub clf_profile: String,
+    pub image_dim: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub artifacts: BTreeMap<String, String>,
+    pub golden: Option<AttackGolden>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AttackGolden {
+    pub mu: f64,
+    pub c: f64,
+    pub loss: f64,
+    pub grad_loss: f64,
+    pub grad_norm: f64,
+    pub grad_head: Vec<f64>,
+    pub pair_plus: f64,
+    pub pair_base: f64,
+    pub eval_logit00: f64,
+    pub eval_dist0: f64,
+}
+
+fn j_usize(v: &Json, key: &str) -> Result<usize> {
+    v.req(key)?.as_usize().ok_or_else(|| anyhow!("{key} is not a number"))
+}
+
+fn j_f64(v: &Json, key: &str) -> Result<f64> {
+    v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} is not a number"))
+}
+
+fn j_artifacts(v: &Json) -> Result<BTreeMap<String, String>> {
+    let obj = v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts not an object"))?;
+    Ok(obj
+        .iter()
+        .filter_map(|(k, val)| val.as_str().map(|s| (k.clone(), s.to_string())))
+        .collect())
+}
+
+impl Manifest {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let version = j_usize(v, "version")? as u32;
+        let mut profiles = BTreeMap::new();
+        let pobj = v.req("profiles")?.as_obj().ok_or_else(|| anyhow!("profiles not an object"))?;
+        for (name, pv) in pobj {
+            profiles.insert(name.clone(), ProfileMeta::from_json(pv)?);
+        }
+        let attack = match v.get("attack") {
+            Some(a) if !a.is_null() => Some(AttackMeta::from_json(a)?),
+            _ => None,
+        };
+        Ok(Self { version, profiles, attack })
+    }
+}
+
+impl ProfileMeta {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            features: j_usize(v, "features")?,
+            hidden1: j_usize(v, "hidden1")?,
+            hidden2: j_usize(v, "hidden2")?,
+            classes: j_usize(v, "classes")?,
+            dim: j_usize(v, "dim")?,
+            batch: j_usize(v, "batch")?,
+            artifacts: j_artifacts(v)?,
+            golden: match v.get("golden") {
+                Some(g) if !g.is_null() => Some(ProfileGolden::from_json(g)?),
+                _ => None,
+            },
+        })
+    }
+}
+
+impl ProfileGolden {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let head = v
+            .req("grad_head")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("grad_head not an array"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .collect();
+        Ok(Self {
+            mu: j_f64(v, "mu")?,
+            loss: j_f64(v, "loss")?,
+            grad_loss: j_f64(v, "grad_loss")?,
+            grad_norm: j_f64(v, "grad_norm")?,
+            grad_head: head,
+            pair_plus: j_f64(v, "pair_plus")?,
+            pair_base: j_f64(v, "pair_base")?,
+            accuracy: j_f64(v, "accuracy")?,
+        })
+    }
+}
+
+impl AttackMeta {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            clf_profile: v
+                .req("clf_profile")?
+                .as_str()
+                .ok_or_else(|| anyhow!("clf_profile not a string"))?
+                .to_string(),
+            image_dim: j_usize(v, "image_dim")?,
+            batch: j_usize(v, "batch")?,
+            eval_batch: j_usize(v, "eval_batch")?,
+            artifacts: j_artifacts(v)?,
+            golden: match v.get("golden") {
+                Some(g) if !g.is_null() => Some(AttackGolden::from_json(g)?),
+                _ => None,
+            },
+        })
+    }
+}
+
+impl AttackGolden {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let head = v
+            .req("grad_head")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("grad_head not an array"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .collect();
+        Ok(Self {
+            mu: j_f64(v, "mu")?,
+            c: j_f64(v, "c")?,
+            loss: j_f64(v, "loss")?,
+            grad_loss: j_f64(v, "grad_loss")?,
+            grad_norm: j_f64(v, "grad_norm")?,
+            grad_head: head,
+            pair_plus: j_f64(v, "pair_plus")?,
+            pair_base: j_f64(v, "pair_base")?,
+            eval_logit00: j_f64(v, "eval_logit00")?,
+            eval_dist0: j_f64(v, "eval_dist0")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip_from_json() {
+        let text = r#"{
+            "version": 1,
+            "profiles": {
+                "tiny": {
+                    "features": 4, "hidden1": 8, "hidden2": 8, "classes": 3,
+                    "dim": 123, "batch": 2,
+                    "artifacts": {"loss": "tiny_loss.hlo.txt"},
+                    "golden": null
+                }
+            },
+            "attack": null
+        }"#;
+        let m = Manifest::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.version, 1);
+        let p = &m.profiles["tiny"];
+        assert_eq!((p.features, p.classes, p.dim, p.batch), (4, 3, 123, 2));
+        assert_eq!(p.artifacts["loss"], "tiny_loss.hlo.txt");
+        assert!(p.golden.is_none());
+        assert!(m.attack.is_none());
+    }
+
+    #[test]
+    fn missing_key_is_an_error() {
+        let text = r#"{"version": 1}"#;
+        assert!(Manifest::from_json(&Json::parse(text).unwrap()).is_err());
+    }
+}

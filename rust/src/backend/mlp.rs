@@ -1,0 +1,605 @@
+//! Pure-rust MLP kernels for the native backend: the rust port of
+//! `python/compile/kernels/ref.py` + `model.py`'s two-hidden-layer MLP.
+//!
+//! The model is the paper's Section 5.2 network — `features → hidden1 →
+//! hidden2 → classes` with relu — over a FLAT `f32[d]` parameter vector in
+//! the exact layout of `model.py::unflatten` (row-major `W1·b1·W2·b2·W3·
+//! b3`), so parameters, checkpoints and golden inputs are interchangeable
+//! between backends. Forward/backward are hand-written (`softmax - onehot`
+//! backprop, relu masks from the stored activations, `(out > 0)` matching
+//! `jax`'s relu VJP convention); reductions that feed reported scalars
+//! accumulate in f64.
+
+use crate::backend::ProfileMeta;
+
+/// Shape of one MLP profile (mirrors `model.py::MLPSpec`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub features: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub classes: usize,
+}
+
+impl MlpSpec {
+    pub fn from_meta(meta: &ProfileMeta) -> Self {
+        Self {
+            features: meta.features,
+            hidden1: meta.hidden1,
+            hidden2: meta.hidden2,
+            classes: meta.classes,
+        }
+    }
+
+    /// d — total flat parameter count.
+    pub fn dim(&self) -> usize {
+        let (f, h1, h2, c) = (self.features, self.hidden1, self.hidden2, self.classes);
+        f * h1 + h1 + h1 * h2 + h2 + h2 * c + c
+    }
+
+    /// Byte-compatible flat layout: offsets of (w1, b1, w2, b2, w3, b3).
+    fn offsets(&self) -> [usize; 7] {
+        let (f, h1, h2, c) = (self.features, self.hidden1, self.hidden2, self.classes);
+        let mut off = [0usize; 7];
+        let sizes = [f * h1, h1, h1 * h2, h2, h2 * c, c];
+        for (i, s) in sizes.iter().enumerate() {
+            off[i + 1] = off[i] + s;
+        }
+        off
+    }
+
+    /// Split a flat parameter vector into the six layer slices.
+    pub fn split<'a>(&self, params: &'a [f32]) -> Layers<'a> {
+        debug_assert_eq!(params.len(), self.dim());
+        let o = self.offsets();
+        Layers {
+            w1: &params[o[0]..o[1]],
+            b1: &params[o[1]..o[2]],
+            w2: &params[o[2]..o[3]],
+            b2: &params[o[3]..o[4]],
+            w3: &params[o[4]..o[5]],
+            b3: &params[o[5]..o[6]],
+        }
+    }
+
+    /// Split a flat gradient vector into six mutable layer slices.
+    pub fn split_mut<'a>(&self, grad: &'a mut [f32]) -> LayersMut<'a> {
+        debug_assert_eq!(grad.len(), self.dim());
+        let o = self.offsets();
+        let (w1, rest) = grad.split_at_mut(o[1]);
+        let (b1, rest) = rest.split_at_mut(o[2] - o[1]);
+        let (w2, rest) = rest.split_at_mut(o[3] - o[2]);
+        let (b2, rest) = rest.split_at_mut(o[4] - o[3]);
+        let (w3, b3) = rest.split_at_mut(o[5] - o[4]);
+        LayersMut { w1, b1, w2, b2, w3, b3 }
+    }
+}
+
+/// Borrowed layer views over a flat parameter vector.
+pub struct Layers<'a> {
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+    pub w3: &'a [f32],
+    pub b3: &'a [f32],
+}
+
+/// Mutable layer views over a flat gradient vector.
+pub struct LayersMut<'a> {
+    pub w1: &'a mut [f32],
+    pub b1: &'a mut [f32],
+    pub w2: &'a mut [f32],
+    pub b2: &'a mut [f32],
+    pub w3: &'a mut [f32],
+    pub b3: &'a mut [f32],
+}
+
+/// Reusable activation/backprop buffers (no per-call allocation on the
+/// training hot path).
+pub struct Scratch {
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub logits: Vec<f32>,
+    d_logits: Vec<f32>,
+    d_h1: Vec<f32>,
+    d_h2: Vec<f32>,
+    pub pplus: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(spec: &MlpSpec, max_batch: usize) -> Self {
+        Self {
+            h1: vec![0.0; max_batch * spec.hidden1],
+            h2: vec![0.0; max_batch * spec.hidden2],
+            logits: vec![0.0; max_batch * spec.classes],
+            d_logits: vec![0.0; max_batch * spec.classes],
+            d_h1: vec![0.0; max_batch * spec.hidden1],
+            d_h2: vec![0.0; max_batch * spec.hidden2],
+            pplus: vec![0.0; spec.dim()],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense kernels (the rust analogue of kernels/dense.py)
+// ---------------------------------------------------------------------------
+
+/// `out[b, j] = act(bias[j] + Σ_f x[b, f] · w[f, j])`, row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn dense(
+    x: &[f32],
+    batch: usize,
+    f_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    h_out: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * f_in);
+    debug_assert_eq!(w.len(), f_in * h_out);
+    debug_assert_eq!(bias.len(), h_out);
+    debug_assert_eq!(out.len(), batch * h_out);
+    for b in 0..batch {
+        let row = &mut out[b * h_out..(b + 1) * h_out];
+        row.copy_from_slice(bias);
+        let xrow = &x[b * f_in..(b + 1) * f_in];
+        for (f, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[f * h_out..(f + 1) * h_out];
+            for (o, &wv) in row.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+        if relu {
+            for o in row.iter_mut() {
+                if *o < 0.0 {
+                    *o = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// `dw[i, j] += Σ_b a[b, i] · g[b, j]` (i.e. `dw += aᵀ g`).
+fn accumulate_wgrad(a: &[f32], batch: usize, rows: usize, g: &[f32], cols: usize, dw: &mut [f32]) {
+    debug_assert_eq!(a.len(), batch * rows);
+    debug_assert_eq!(g.len(), batch * cols);
+    debug_assert_eq!(dw.len(), rows * cols);
+    for b in 0..batch {
+        let grow = &g[b * cols..(b + 1) * cols];
+        for (i, &av) in a[b * rows..(b + 1) * rows].iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let drow = &mut dw[i * cols..(i + 1) * cols];
+            for (d, &gv) in drow.iter_mut().zip(grow.iter()) {
+                *d += av * gv;
+            }
+        }
+    }
+}
+
+/// `db[j] += Σ_b g[b, j]`.
+fn accumulate_bgrad(g: &[f32], batch: usize, cols: usize, db: &mut [f32]) {
+    debug_assert_eq!(g.len(), batch * cols);
+    debug_assert_eq!(db.len(), cols);
+    for b in 0..batch {
+        for (d, &gv) in db.iter_mut().zip(g[b * cols..(b + 1) * cols].iter()) {
+            *d += gv;
+        }
+    }
+}
+
+/// `dx[b, i] = (Σ_j g[b, j] · w[i, j]) · relu'(act[b, i])` — backprop one
+/// dense layer to its input, applying the mask of the *input* activation
+/// (`act > 0`, jax's relu VJP convention). Pass `act = &[]` to skip the
+/// mask (input layer of the attack objective).
+fn backprop_dense(
+    g: &[f32],
+    batch: usize,
+    cols: usize,
+    w: &[f32],
+    rows: usize,
+    act: &[f32],
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(g.len(), batch * cols);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(dx.len(), batch * rows);
+    debug_assert!(act.is_empty() || act.len() == batch * rows);
+    for b in 0..batch {
+        let grow = &g[b * cols..(b + 1) * cols];
+        let drow = &mut dx[b * rows..(b + 1) * rows];
+        for (i, d) in drow.iter_mut().enumerate() {
+            let masked = !act.is_empty() && act[b * rows + i] <= 0.0;
+            if masked {
+                *d = 0.0;
+                continue;
+            }
+            let wrow = &w[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for (&gv, &wv) in grow.iter().zip(wrow.iter()) {
+                acc += gv * wv;
+            }
+            *d = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model entry points (the rust analogue of model.py)
+// ---------------------------------------------------------------------------
+
+/// Forward pass: fills `scratch.h1`, `scratch.h2` and `scratch.logits`.
+pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut Scratch) {
+    let l = spec.split(params);
+    dense(
+        x,
+        batch,
+        spec.features,
+        l.w1,
+        l.b1,
+        spec.hidden1,
+        true,
+        &mut s.h1[..batch * spec.hidden1],
+    );
+    dense(
+        &s.h1[..batch * spec.hidden1],
+        batch,
+        spec.hidden1,
+        l.w2,
+        l.b2,
+        spec.hidden2,
+        true,
+        &mut s.h2[..batch * spec.hidden2],
+    );
+    dense(
+        &s.h2[..batch * spec.hidden2],
+        batch,
+        spec.hidden2,
+        l.w3,
+        l.b3,
+        spec.classes,
+        false,
+        &mut s.logits[..batch * spec.classes],
+    );
+}
+
+/// Mean softmax cross-entropy over logits rows; `y` holds f32 class ids.
+pub fn loss_from_logits(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> f32 {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(y.len(), batch);
+    let mut total = 0.0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - m) as f64).exp();
+        }
+        let lse = m as f64 + sum.ln();
+        total += lse - row[y[b] as usize] as f64;
+    }
+    (total / batch as f64) as f32
+}
+
+/// `F(params; batch)` — one loss evaluation.
+pub fn loss(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+) -> f32 {
+    forward(spec, params, x, batch, s);
+    loss_from_logits(&s.logits[..batch * spec.classes], y, batch, spec.classes)
+}
+
+/// `∇F(params; batch)` into `out_grad` (overwritten); returns the loss.
+pub fn grad(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    out_grad: &mut [f32],
+) -> f32 {
+    forward(spec, params, x, batch, s);
+    let c = spec.classes;
+    let loss = loss_from_logits(&s.logits[..batch * c], y, batch, c);
+    // dL/dlogits = (softmax - onehot) / B
+    let inv_b = 1.0f32 / batch as f32;
+    for b in 0..batch {
+        let row = &s.logits[b * c..(b + 1) * c];
+        let drow = &mut s.d_logits[b * c..(b + 1) * c];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row.iter()) {
+            *d = (v - m).exp();
+            sum += *d;
+        }
+        for d in drow.iter_mut() {
+            *d *= inv_b / sum;
+        }
+        drow[y[b] as usize] -= inv_b;
+    }
+    out_grad.fill(0.0);
+    let (h1n, h2n) = (batch * spec.hidden1, batch * spec.hidden2);
+    let l = spec.split(params);
+    let g = spec.split_mut(out_grad);
+    accumulate_wgrad(&s.h2[..h2n], batch, spec.hidden2, &s.d_logits[..batch * c], c, g.w3);
+    accumulate_bgrad(&s.d_logits[..batch * c], batch, c, g.b3);
+    backprop_dense(
+        &s.d_logits[..batch * c],
+        batch,
+        c,
+        l.w3,
+        spec.hidden2,
+        &s.h2[..h2n],
+        &mut s.d_h2[..h2n],
+    );
+    accumulate_wgrad(&s.h1[..h1n], batch, spec.hidden1, &s.d_h2[..h2n], spec.hidden2, g.w2);
+    accumulate_bgrad(&s.d_h2[..h2n], batch, spec.hidden2, g.b2);
+    backprop_dense(
+        &s.d_h2[..h2n],
+        batch,
+        spec.hidden2,
+        l.w2,
+        spec.hidden1,
+        &s.h1[..h1n],
+        &mut s.d_h1[..h1n],
+    );
+    accumulate_wgrad(x, batch, spec.features, &s.d_h1[..h1n], spec.hidden1, g.w1);
+    accumulate_bgrad(&s.d_h1[..h1n], batch, spec.hidden1, g.b1);
+    loss
+}
+
+/// Backprop an upstream `d_logits` to the *input* of the network (used by
+/// the attack objective, which differentiates w.r.t. the image, not the
+/// weights). `forward` must have been called for the same inputs.
+pub fn input_grad(
+    spec: &MlpSpec,
+    params: &[f32],
+    d_logits: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    dx: &mut [f32],
+) {
+    let (h1n, h2n) = (batch * spec.hidden1, batch * spec.hidden2);
+    let l = spec.split(params);
+    backprop_dense(
+        d_logits,
+        batch,
+        spec.classes,
+        l.w3,
+        spec.hidden2,
+        &s.h2[..h2n],
+        &mut s.d_h2[..h2n],
+    );
+    backprop_dense(
+        &s.d_h2[..h2n],
+        batch,
+        spec.hidden2,
+        l.w2,
+        spec.hidden1,
+        &s.h1[..h1n],
+        &mut s.d_h1[..h1n],
+    );
+    backprop_dense(&s.d_h1[..h1n], batch, spec.hidden1, l.w1, spec.features, &[], dx);
+}
+
+/// Index of the row maximum (first index on exact ties, like `jnp.argmax`).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Number of correct predictions in the batch, as f32.
+pub fn accuracy_from_logits(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> f32 {
+    let mut correct = 0u32;
+    for b in 0..batch {
+        if argmax(&logits[b * classes..(b + 1) * classes]) == y[b] as usize {
+            correct += 1;
+        }
+    }
+    correct as f32
+}
+
+/// `out = params + mu·v` (the ZO probe point of Algorithm 1 eq. (4)).
+pub fn perturb(params: &[f32], v: &[f32], mu: f32, out: &mut [f32]) {
+    debug_assert_eq!(params.len(), v.len());
+    debug_assert_eq!(params.len(), out.len());
+    for ((o, &p), &vi) in out.iter_mut().zip(params.iter()).zip(v.iter()) {
+        *o = p + mu * vi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn tiny() -> MlpSpec {
+        MlpSpec { features: 3, hidden1: 4, hidden2: 4, classes: 3 }
+    }
+
+    fn rand_vec(rng: &mut Xoshiro256, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (scale * rng.next_normal()) as f32).collect()
+    }
+
+    #[test]
+    fn spec_dim_matches_model_py() {
+        // quickstart: (10, 16, 16, 3) -> 499 (the value model.py computes)
+        let s = MlpSpec { features: 10, hidden1: 16, hidden2: 16, classes: 3 };
+        assert_eq!(s.dim(), 10 * 16 + 16 + 16 * 16 + 16 + 16 * 3 + 3);
+        let o = s.offsets();
+        assert_eq!(o[6], s.dim());
+    }
+
+    #[test]
+    fn split_and_split_mut_cover_the_vector() {
+        let s = tiny();
+        let p: Vec<f32> = (0..s.dim()).map(|i| i as f32).collect();
+        let l = s.split(&p);
+        assert_eq!(l.w1.len(), 12);
+        assert_eq!(l.b1.len(), 4);
+        assert_eq!(l.w3.len(), 12);
+        assert_eq!(l.b3.len(), 3);
+        assert_eq!(l.w1[0], 0.0);
+        assert_eq!(l.b3[2], (s.dim() - 1) as f32);
+        let mut g = vec![0.0f32; s.dim()];
+        let lm = s.split_mut(&mut g);
+        lm.b3[2] = 7.0;
+        assert_eq!(g[s.dim() - 1], 7.0);
+    }
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // x = [[1, 2]], w = [[1, 0], [0, 1]], b = [10, -10]
+        let x = [1.0f32, 2.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [10.0f32, -10.0];
+        let mut out = [0.0f32; 2];
+        dense(&x, 1, 2, &w, &b, 2, false, &mut out);
+        assert_eq!(out, [11.0, -8.0]);
+        dense(&x, 1, 2, &w, &b, 2, true, &mut out);
+        assert_eq!(out, [11.0, 0.0]);
+    }
+
+    #[test]
+    fn uniform_logits_give_ln_c_loss() {
+        let logits = [0.5f32; 6]; // 2 rows, 3 classes, all equal
+        let y = [0.0f32, 2.0];
+        let l = loss_from_logits(&logits, &y, 2, 3);
+        assert!((l - (3.0f32).ln()).abs() < 1e-6, "loss {l}");
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        let logits = [1.0f32, 2.0, 0.0, 5.0, 1.0, 0.0];
+        let y = [1.0f32, 0.0];
+        assert_eq!(accuracy_from_logits(&logits, &y, 2, 3), 2.0);
+        let y2 = [0.0f32, 0.0];
+        assert_eq!(accuracy_from_logits(&logits, &y2, 2, 3), 1.0);
+    }
+
+    #[test]
+    fn argmax_first_index_on_ties() {
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(argmax(&[0.0, 2.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn perturb_is_axpy() {
+        let p = [1.0f32, 2.0];
+        let v = [10.0f32, -10.0];
+        let mut out = [0.0f32; 2];
+        perturb(&p, &v, 0.1, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!((out[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference_directional_derivative() {
+        let spec = tiny();
+        let d = spec.dim();
+        let batch = 4;
+        let mut rng = Xoshiro256::seeded(11);
+        let params = rand_vec(&mut rng, d, 0.4);
+        let x = rand_vec(&mut rng, batch * spec.features, 1.0);
+        let y: Vec<f32> = (0..batch).map(|b| (b % spec.classes) as f32).collect();
+        let mut s = Scratch::new(&spec, batch);
+        let mut g = vec![0.0f32; d];
+        grad(&spec, &params, &x, &y, batch, &mut s, &mut g);
+
+        let v = rand_vec(&mut rng, d, 1.0);
+        let dd: f64 = g.iter().zip(v.iter()).map(|(&gi, &vi)| gi as f64 * vi as f64).sum();
+        let eps = 1e-3f32;
+        let mut pp = vec![0.0f32; d];
+        perturb(&params, &v, eps, &mut pp);
+        let lp = loss(&spec, &pp, &x, &y, batch, &mut s) as f64;
+        perturb(&params, &v, -eps, &mut pp);
+        let lm = loss(&spec, &pp, &x, &y, batch, &mut s) as f64;
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!(
+            (fd - dd).abs() < 2e-2 * dd.abs().max(0.05),
+            "finite difference {fd} vs analytic {dd}"
+        );
+    }
+
+    #[test]
+    fn grad_of_dead_relu_inputs_is_zero() {
+        // With large negative b1 every hidden unit is dead: dL/dw1 = 0 but
+        // dL/db3 is still the softmax residual.
+        let spec = tiny();
+        let d = spec.dim();
+        let mut params = vec![0.1f32; d];
+        {
+            let o = spec.offsets();
+            for b in params[o[1]..o[2]].iter_mut() {
+                *b = -100.0;
+            }
+        }
+        let batch = 2;
+        let x = vec![0.3f32; batch * spec.features];
+        let y = vec![0.0f32; batch];
+        let mut s = Scratch::new(&spec, batch);
+        let mut g = vec![0.0f32; d];
+        grad(&spec, &params, &x, &y, batch, &mut s, &mut g);
+        let gl = spec.split(&g);
+        assert!(gl.w1.iter().all(|&v| v == 0.0));
+        assert!(gl.b1.iter().all(|&v| v == 0.0));
+        assert!(gl.b3.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn input_grad_matches_finite_difference() {
+        let spec = tiny();
+        let batch = 2;
+        let mut rng = Xoshiro256::seeded(5);
+        let params = rand_vec(&mut rng, spec.dim(), 0.4);
+        let x = rand_vec(&mut rng, batch * spec.features, 0.7);
+        let mut s = Scratch::new(&spec, batch);
+        forward(&spec, &params, &x, batch, &mut s);
+        // upstream: dL/dlogits = softmax of a fixed linear functional — use
+        // a simple smooth functional L = Σ 0.1·j·logit[b, j]
+        let c = spec.classes;
+        let dlg: Vec<f32> = (0..batch * c).map(|i| 0.1 * (i % c) as f32).collect();
+        let mut dx = vec![0.0f32; batch * spec.features];
+        input_grad(&spec, &params, &dlg, batch, &mut s, &mut dx);
+
+        let lval = |xv: &[f32], s: &mut Scratch| -> f64 {
+            forward(&spec, &params, xv, batch, s);
+            s.logits[..batch * c]
+                .iter()
+                .zip(dlg.iter())
+                .map(|(&l, &w)| l as f64 * w as f64)
+                .sum()
+        };
+        let mut xp = x.clone();
+        let (bi, fi) = (1usize, 2usize);
+        let idx = bi * spec.features + fi;
+        let eps = 1e-3f32;
+        xp[idx] = x[idx] + eps;
+        let lp = lval(&xp, &mut s);
+        xp[idx] = x[idx] - eps;
+        let lm = lval(&xp, &mut s);
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!(
+            (fd - dx[idx] as f64).abs() < 1e-3 + 2e-2 * fd.abs(),
+            "fd {fd} vs analytic {}",
+            dx[idx]
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! Pluggable compute backends for all model/attack compute.
+//!
+//! Every optimizer, the coordinator, the attack driver and the benches talk
+//! to the model through three object-safe traits:
+//!
+//! * [`Backend`] — a source of model profiles (and the Section 5.1 attack
+//!   objective): the [`Manifest`] plus `model()`/`attack()` constructors,
+//! * [`ModelBackend`] — one profile's entry points with flat `&[f32]`
+//!   in/out signatures: loss, gradient, fused two-point ZO pair, accuracy,
+//!   logits,
+//! * [`AttackBackend`] — the CW universal-perturbation entry points.
+//!
+//! Two implementations exist:
+//!
+//! * [`native::NativeBackend`] (default, always available): the pure-rust
+//!   port of the `python/compile` kernels in [`mlp`] — no artifacts, no
+//!   external libraries, runs everywhere `cargo test` does,
+//! * `runtime::Runtime` (behind the off-by-default `pjrt` cargo feature):
+//!   executes the AOT-lowered HLO artifacts through the PJRT C API.
+//!
+//! Selection is wired through the CLI (`hosgd --backend native|pjrt`) and
+//! the JSON config (`"backend": "native"`); [`load`] is the single
+//! construction point.
+
+pub mod golden;
+pub mod manifest;
+pub mod mlp;
+pub mod native;
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+pub use manifest::{AttackGolden, AttackMeta, Manifest, ProfileGolden, ProfileMeta};
+pub use native::NativeBackend;
+
+/// One model profile's compiled/bound entry points.
+///
+/// Signatures mirror `python/compile/model.py`; labels are f32 class ids.
+pub trait ModelBackend {
+    /// Shape metadata of this profile.
+    fn meta(&self) -> &ProfileMeta;
+
+    /// F(params; batch) — one loss evaluation.
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
+
+    /// ∇F(params; batch) written into `out_grad`; returns the loss.
+    fn grad(&self, params: &[f32], x: &[f32], y: &[f32], out_grad: &mut [f32]) -> Result<f32>;
+
+    /// (F(params + mu·v; batch), F(params; batch)) — the fused two-point ZO
+    /// evaluation of Algorithm 1 eq. (4).
+    fn loss_pair(
+        &self,
+        params: &[f32],
+        v: &[f32],
+        mu: f32,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(f32, f32)>;
+
+    /// Number of correct predictions in the batch.
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
+
+    /// Logits [batch, classes], row-major.
+    fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>>;
+
+    /// d — the flat model dimension of Algorithm 1.
+    fn dim(&self) -> usize {
+        self.meta().dim
+    }
+
+    fn batch(&self) -> usize {
+        self.meta().batch
+    }
+
+    fn features(&self) -> usize {
+        self.meta().features
+    }
+
+    fn classes(&self) -> usize {
+        self.meta().classes
+    }
+}
+
+/// The Section 5.1 CW universal-perturbation entry points.
+pub trait AttackBackend {
+    fn meta(&self) -> &AttackMeta;
+
+    /// CW objective averaged over the image batch.
+    fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32>;
+
+    /// d(objective)/d(xp) into `out_grad`; returns the loss.
+    fn grad(
+        &self,
+        xp: &[f32],
+        clf: &[f32],
+        images: &[f32],
+        y: &[f32],
+        c: f32,
+        out_grad: &mut [f32],
+    ) -> Result<f32>;
+
+    /// Two-point ZO evaluation of the attack objective.
+    #[allow(clippy::too_many_arguments)]
+    fn loss_pair(
+        &self,
+        xp: &[f32],
+        v: &[f32],
+        mu: f32,
+        clf: &[f32],
+        images: &[f32],
+        y: &[f32],
+        c: f32,
+    ) -> Result<(f32, f32)>;
+
+    /// (logits [eval_batch, classes], per-image l2 distortion [eval_batch]).
+    fn eval(&self, xp: &[f32], clf: &[f32], images: &[f32]) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// d — the perturbation dimension (= image dimension).
+    fn dim(&self) -> usize {
+        self.meta().image_dim
+    }
+
+    fn batch(&self) -> usize {
+        self.meta().batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.meta().eval_batch
+    }
+}
+
+/// A provider of model profiles and the attack objective.
+pub trait Backend {
+    /// Which implementation this is.
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable execution platform (e.g. `cpu` for PJRT-CPU).
+    fn platform(&self) -> String;
+
+    /// Profile metadata (+ golden values where recorded).
+    fn manifest(&self) -> &Manifest;
+
+    /// Bind one model profile.
+    fn model(&self, profile: &str) -> Result<Box<dyn ModelBackend>>;
+
+    /// Bind the attack entry points.
+    fn attack(&self) -> Result<Box<dyn AttackBackend>>;
+}
+
+/// Backend selector (CLI `--backend`, config key `"backend"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-rust reference implementation (always available).
+    #[default]
+    Native,
+    /// AOT artifacts through the PJRT C API (`--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" | "cpu" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(anyhow!("unknown backend {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Construct a backend selected by an environment variable (the examples
+/// and benches use `HOSGD_BACKEND`): unset ⇒ native, invalid ⇒ error.
+pub fn load_from_env(var: &str, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    let kind = match std::env::var(var) {
+        Ok(s) => s.parse()?,
+        Err(_) => BackendKind::default(),
+    };
+    load(kind, artifact_dir)
+}
+
+/// Construct a backend. `artifact_dir` is only read by the PJRT backend
+/// (it holds the AOT-lowered HLO artifacts + `manifest.json`).
+pub fn load(kind: BackendKind, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    let _ = artifact_dir; // unused by the native backend
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(crate::runtime::Runtime::load(artifact_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => Err(anyhow!(
+            "this build has no pjrt backend; rebuild with `--features pjrt` \
+             (and a real `xla` dependency — see rust/Cargo.toml)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_displays() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("PJRT".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("tpu9000".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default().to_string(), "native");
+    }
+
+    #[test]
+    fn load_native_works_without_artifacts() {
+        let be = load(BackendKind::Native, Path::new("does/not/exist")).unwrap();
+        assert_eq!(be.kind(), BackendKind::Native);
+        assert!(be.manifest().profiles.contains_key("quickstart"));
+        let model = be.model("quickstart").unwrap();
+        assert_eq!(model.dim(), 499);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn load_pjrt_errors_when_feature_is_off() {
+        let err = load(BackendKind::Pjrt, Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn load_from_env_defaults_to_native_when_unset() {
+        let be = load_from_env("HOSGD_TEST_UNSET_BACKEND_VAR", Path::new("x")).unwrap();
+        assert_eq!(be.kind(), BackendKind::Native);
+    }
+}

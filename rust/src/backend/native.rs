@@ -1,0 +1,619 @@
+//! The pure-rust reference backend: [`NativeBackend`].
+//!
+//! Serves the same model profiles as `python/compile/aot.py` (the table
+//! below mirrors `aot.PROFILES`) but computes everything in-process with
+//! the [`super::mlp`] kernels — no artifacts, no PJRT, no python. This is
+//! the default backend: it makes `cargo test` and CI exercise the full
+//! training/attack stack on any machine.
+//!
+//! The embedded golden values were produced by evaluating the pure-jnp
+//! oracle graphs (`python/compile/kernels/ref.py` composed exactly like
+//! `model.py`) at the deterministic inputs of [`super::golden`] — the same
+//! recipe `aot.py` uses for `manifest.json` — so `rust/tests/golden.rs`
+//! checks python↔rust numerics end-to-end without any artifacts on disk.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::mlp::{self, MlpSpec, Scratch};
+use super::{
+    AttackBackend, AttackGolden, AttackMeta, Backend, BackendKind, Manifest, ModelBackend,
+    ProfileGolden, ProfileMeta,
+};
+
+/// f64 twins of [`super::golden::GOLDEN_MU`] / [`super::golden::GOLDEN_C`]
+/// — the values `aot.py` records into golden tables (a test below pins the
+/// f32 constants to these).
+const MU: f64 = 1e-3;
+const C: f64 = 0.5;
+
+/// `(name, features, hidden1, hidden2, classes, batch)` — mirrors
+/// `aot.PROFILES`.
+const PROFILES: &[(&str, usize, usize, usize, usize, usize)] = &[
+    ("quickstart", 10, 16, 16, 3, 8),
+    ("sensorless", 48, 128, 128, 11, 64),
+    ("acoustic", 50, 128, 128, 3, 64),
+    ("covtype", 54, 128, 128, 7, 64),
+    ("seismic", 50, 128, 128, 3, 64),
+    ("e2e", 64, 256, 256, 10, 64),
+    ("attack_clf", 900, 64, 32, 10, 64),
+];
+
+const ATTACK_CLF: &str = "attack_clf";
+const IMAGE_DIM: usize = 900;
+const ATTACK_BATCH: usize = 5;
+const ATTACK_EVAL_BATCH: usize = 10;
+
+/// Golden values at the deterministic inputs (recorded from the jnp oracle
+/// at mu = 1e-3; see the module docs).
+fn profile_golden(name: &str) -> Option<ProfileGolden> {
+    let g = match name {
+        "quickstart" => ProfileGolden {
+            mu: MU,
+            loss: 1.098698378,
+            grad_loss: 1.098698378,
+            grad_norm: 1.023432612e-1,
+            grad_head: vec![0.0, 0.0, 0.0, 0.0],
+            pair_plus: 1.098698497,
+            pair_base: 1.098698378,
+            accuracy: 2.0,
+        },
+        "sensorless" => ProfileGolden {
+            mu: MU,
+            loss: 2.397665977,
+            grad_loss: 2.397665977,
+            grad_norm: 2.797369473e-2,
+            grad_head: vec![-1.090911269e-6, 1.596348284e-6, 2.006294380e-6, -4.458650267e-7],
+            pair_plus: 2.397665977,
+            pair_base: 2.397665977,
+            accuracy: 6.0,
+        },
+        "acoustic" => ProfileGolden {
+            mu: MU,
+            loss: 1.098602414,
+            grad_loss: 1.098602414,
+            grad_norm: 1.249576360e-2,
+            grad_head: vec![0.0, 0.0, 0.0, 0.0],
+            pair_plus: 1.098602295,
+            pair_base: 1.098602414,
+            accuracy: 22.0,
+        },
+        "covtype" => ProfileGolden {
+            mu: MU,
+            loss: 1.945983887,
+            grad_loss: 1.945983887,
+            grad_norm: 1.674981602e-2,
+            grad_head: vec![-1.681964257e-8, -2.901778942e-7, -1.496450892e-7, 2.043975940e-7],
+            pair_plus: 1.945983768,
+            pair_base: 1.945983887,
+            accuracy: 9.0,
+        },
+        "seismic" => ProfileGolden {
+            mu: MU,
+            loss: 1.098602414,
+            grad_loss: 1.098602414,
+            grad_norm: 1.249576360e-2,
+            grad_head: vec![0.0, 0.0, 0.0, 0.0],
+            pair_plus: 1.098602295,
+            pair_base: 1.098602414,
+            accuracy: 22.0,
+        },
+        "e2e" => ProfileGolden {
+            mu: MU,
+            loss: 2.302636147,
+            grad_loss: 2.302636147,
+            grad_norm: 3.470246121e-2,
+            grad_head: vec![-6.771325388e-6, 6.321477940e-6, -3.793083806e-6, 1.736155220e-8],
+            pair_plus: 2.302636147,
+            pair_base: 2.302636147,
+            accuracy: 6.0,
+        },
+        "attack_clf" => ProfileGolden {
+            mu: MU,
+            loss: 2.302270412,
+            grad_loss: 2.302270412,
+            grad_norm: 2.812298760e-2,
+            grad_head: vec![-8.175068797e-5, -4.711458314e-5, -7.694982742e-6, 3.250588634e-5],
+            pair_plus: 2.302270412,
+            pair_base: 2.302270412,
+            accuracy: 7.0,
+        },
+        _ => return None,
+    };
+    Some(g)
+}
+
+fn attack_golden() -> AttackGolden {
+    AttackGolden {
+        mu: MU,
+        c: C,
+        loss: 9.390085004e-3,
+        grad_loss: 9.390085004e-3,
+        grad_norm: 7.900845259e-2,
+        grad_head: vec![4.753833637e-3, 4.723735154e-3, 4.691301845e-3, 4.656593315e-3],
+        pair_plus: 9.395650588e-3,
+        pair_base: 9.390085004e-3,
+        eval_logit00: -1.991832256e-2,
+        eval_dist0: 9.678767622e-2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeBackend
+// ---------------------------------------------------------------------------
+
+/// Pure-rust compute backend over the built-in profile table.
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        let mut profiles = BTreeMap::new();
+        for &(name, features, hidden1, hidden2, classes, batch) in PROFILES {
+            let spec = MlpSpec { features, hidden1, hidden2, classes };
+            profiles.insert(
+                name.to_string(),
+                ProfileMeta {
+                    features,
+                    hidden1,
+                    hidden2,
+                    classes,
+                    dim: spec.dim(),
+                    batch,
+                    artifacts: BTreeMap::new(),
+                    golden: profile_golden(name),
+                },
+            );
+        }
+        let attack = Some(AttackMeta {
+            clf_profile: ATTACK_CLF.to_string(),
+            image_dim: IMAGE_DIM,
+            batch: ATTACK_BATCH,
+            eval_batch: ATTACK_EVAL_BATCH,
+            artifacts: BTreeMap::new(),
+            golden: Some(attack_golden()),
+        });
+        Self { manifest: Manifest { version: 1, profiles, attack } }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn platform(&self) -> String {
+        format!("rust-{}", std::env::consts::ARCH)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn model(&self, profile: &str) -> Result<Box<dyn ModelBackend>> {
+        let meta = self
+            .manifest
+            .profiles
+            .get(profile)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown profile {profile:?} (have: {:?})",
+                    self.manifest.profiles.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        Ok(Box::new(NativeModel::new(meta)))
+    }
+
+    fn attack(&self) -> Result<Box<dyn AttackBackend>> {
+        let meta = self
+            .manifest
+            .attack
+            .clone()
+            .ok_or_else(|| anyhow!("native manifest has no attack section"))?;
+        let clf_spec = self
+            .manifest
+            .profiles
+            .get(&meta.clf_profile)
+            .map(MlpSpec::from_meta)
+            .ok_or_else(|| anyhow!("attack classifier profile {:?} missing", meta.clf_profile))?;
+        Ok(Box::new(NativeAttack::new(meta, clf_spec)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeModel
+// ---------------------------------------------------------------------------
+
+/// One profile bound to the in-process MLP kernels.
+pub struct NativeModel {
+    meta: ProfileMeta,
+    spec: MlpSpec,
+    scratch: RefCell<Scratch>,
+}
+
+impl NativeModel {
+    pub fn new(meta: ProfileMeta) -> Self {
+        let spec = MlpSpec::from_meta(&meta);
+        let scratch = RefCell::new(Scratch::new(&spec, meta.batch));
+        Self { meta, spec, scratch }
+    }
+
+    fn check_xy(&self, x: &[f32], y: &[f32]) {
+        debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
+        debug_assert_eq!(y.len(), self.meta.batch);
+    }
+}
+
+impl ModelBackend for NativeModel {
+    fn meta(&self) -> &ProfileMeta {
+        &self.meta
+    }
+
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        self.check_xy(x, y);
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        Ok(mlp::loss(&self.spec, params, x, y, self.meta.batch, s))
+    }
+
+    fn grad(&self, params: &[f32], x: &[f32], y: &[f32], out_grad: &mut [f32]) -> Result<f32> {
+        self.check_xy(x, y);
+        debug_assert_eq!(out_grad.len(), self.meta.dim);
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        Ok(mlp::grad(&self.spec, params, x, y, self.meta.batch, s, out_grad))
+    }
+
+    fn loss_pair(
+        &self,
+        params: &[f32],
+        v: &[f32],
+        mu: f32,
+        x: &[f32],
+        y: &[f32],
+    ) -> Result<(f32, f32)> {
+        self.check_xy(x, y);
+        debug_assert_eq!(v.len(), self.meta.dim);
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let mut pplus = std::mem::take(&mut s.pplus);
+        mlp::perturb(params, v, mu, &mut pplus);
+        let lp = mlp::loss(&self.spec, &pplus, x, y, self.meta.batch, s);
+        let lb = mlp::loss(&self.spec, params, x, y, self.meta.batch, s);
+        s.pplus = pplus;
+        Ok((lp, lb))
+    }
+
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        self.check_xy(x, y);
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let b = self.meta.batch;
+        mlp::forward(&self.spec, params, x, b, s);
+        Ok(mlp::accuracy_from_logits(&s.logits[..b * self.meta.classes], y, b, self.meta.classes))
+    }
+
+    fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let b = self.meta.batch;
+        mlp::forward(&self.spec, params, x, b, s);
+        Ok(s.logits[..b * self.meta.classes].to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NativeAttack
+// ---------------------------------------------------------------------------
+
+struct AttackScratch {
+    z: Vec<f32>,
+    dz: Vec<f32>,
+    d_logits: Vec<f32>,
+    xp_plus: Vec<f32>,
+    clf: Scratch,
+}
+
+/// The CW universal-perturbation objective over the in-process classifier.
+pub struct NativeAttack {
+    meta: AttackMeta,
+    clf_spec: MlpSpec,
+    scratch: RefCell<AttackScratch>,
+}
+
+impl NativeAttack {
+    pub fn new(meta: AttackMeta, clf_spec: MlpSpec) -> Self {
+        let maxb = meta.batch.max(meta.eval_batch);
+        let scratch = RefCell::new(AttackScratch {
+            z: vec![0.0; maxb * meta.image_dim],
+            dz: vec![0.0; meta.batch * meta.image_dim],
+            d_logits: vec![0.0; meta.batch * clf_spec.classes],
+            xp_plus: vec![0.0; meta.image_dim],
+            clf: Scratch::new(&clf_spec, maxb),
+        });
+        Self { meta, clf_spec, scratch }
+    }
+
+    /// `z_k = 0.5·tanh(atanh(2·a_k) + xp)` — the box-keeping transform.
+    fn transform(&self, xp: &[f32], images: &[f32], n: usize, z: &mut [f32]) {
+        let d = self.meta.image_dim;
+        debug_assert_eq!(xp.len(), d);
+        debug_assert_eq!(images.len(), n * d);
+        for k in 0..n {
+            for j in 0..d {
+                let w = (2.0 * images[k * d + j]).atanh() + xp[j];
+                z[k * d + j] = 0.5 * w.tanh();
+            }
+        }
+    }
+
+    /// Margin of one logits row: `(max(f_y − max_{j≠y} f_j, 0), argmax_{j≠y})`.
+    fn row_margin(row: &[f32], yi: usize) -> (f32, usize) {
+        let mut jmax = if yi == 0 { 1 } else { 0 };
+        for (j, &v) in row.iter().enumerate() {
+            if j != yi && v > row[jmax] {
+                jmax = j;
+            }
+        }
+        ((row[yi] - row[jmax]).max(0.0), jmax)
+    }
+
+    /// Mean CW objective over the transformed batch held in `s` (requires
+    /// `transform` + `mlp::forward` to have run for the same inputs).
+    fn objective_from_scratch(&self, images: &[f32], y: &[f32], c: f32, s: &AttackScratch) -> f32 {
+        let d = self.meta.image_dim;
+        let n = self.meta.batch;
+        let classes = self.clf_spec.classes;
+        let mut total = 0.0f64;
+        for k in 0..n {
+            let row = &s.clf.logits[k * classes..(k + 1) * classes];
+            let (margin, _) = Self::row_margin(row, y[k] as usize);
+            let mut dist = 0.0f64;
+            for j in 0..d {
+                let diff = (s.z[k * d + j] - images[k * d + j]) as f64;
+                dist += diff * diff;
+            }
+            total += c as f64 * margin as f64 + dist;
+        }
+        (total / n as f64) as f32
+    }
+}
+
+impl AttackBackend for NativeAttack {
+    fn meta(&self) -> &AttackMeta {
+        &self.meta
+    }
+
+    fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32> {
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let n = self.meta.batch;
+        let d = self.meta.image_dim;
+        self.transform(xp, images, n, &mut s.z);
+        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
+        Ok(self.objective_from_scratch(images, y, c, s))
+    }
+
+    fn grad(
+        &self,
+        xp: &[f32],
+        clf: &[f32],
+        images: &[f32],
+        y: &[f32],
+        c: f32,
+        out_grad: &mut [f32],
+    ) -> Result<f32> {
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let n = self.meta.batch;
+        let d = self.meta.image_dim;
+        let classes = self.clf_spec.classes;
+        debug_assert_eq!(out_grad.len(), d);
+        self.transform(xp, images, n, &mut s.z);
+        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
+        let loss = self.objective_from_scratch(images, y, c, s);
+
+        // d(mean margin term)/d(logits): ±c/n on the active margin rows
+        let inv_n = 1.0f32 / n as f32;
+        s.d_logits.fill(0.0);
+        for k in 0..n {
+            let yi = y[k] as usize;
+            let row = &s.clf.logits[k * classes..(k + 1) * classes];
+            let (margin, jmax) = Self::row_margin(row, yi);
+            if margin > 0.0 {
+                s.d_logits[k * classes + yi] = c * inv_n;
+                s.d_logits[k * classes + jmax] = -c * inv_n;
+            }
+        }
+        mlp::input_grad(&self.clf_spec, clf, &s.d_logits, n, &mut s.clf, &mut s.dz);
+
+        // chain through z = 0.5·tanh(w): dz/dxp = 0.5·(1 − (2z)²); the
+        // distortion term contributes 2/n·(z − a) directly at z.
+        out_grad.fill(0.0);
+        for k in 0..n {
+            for (j, o) in out_grad.iter_mut().enumerate() {
+                let zv = s.z[k * d + j];
+                let dz_total = s.dz[k * d + j] + 2.0 * inv_n * (zv - images[k * d + j]);
+                *o += dz_total * 0.5 * (1.0 - 4.0 * zv * zv);
+            }
+        }
+        Ok(loss)
+    }
+
+    fn loss_pair(
+        &self,
+        xp: &[f32],
+        v: &[f32],
+        mu: f32,
+        clf: &[f32],
+        images: &[f32],
+        y: &[f32],
+        c: f32,
+    ) -> Result<(f32, f32)> {
+        debug_assert_eq!(v.len(), self.meta.image_dim);
+        // two full evaluations, like the fused attack_pair artifact. The
+        // probe buffer is taken out of the scratch (not borrowed) because
+        // `loss` re-borrows the RefCell.
+        let mut xp_plus = std::mem::take(&mut self.scratch.borrow_mut().xp_plus);
+        xp_plus.resize(self.meta.image_dim, 0.0);
+        mlp::perturb(xp, v, mu, &mut xp_plus);
+        let lp = self.loss(&xp_plus, clf, images, y, c)?;
+        let lb = self.loss(xp, clf, images, y, c)?;
+        self.scratch.borrow_mut().xp_plus = xp_plus;
+        Ok((lp, lb))
+    }
+
+    fn eval(&self, xp: &[f32], clf: &[f32], images: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut guard = self.scratch.borrow_mut();
+        let s = &mut *guard;
+        let n = self.meta.eval_batch;
+        let d = self.meta.image_dim;
+        let classes = self.clf_spec.classes;
+        debug_assert_eq!(images.len(), n * d);
+        self.transform(xp, images, n, &mut s.z);
+        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
+        let logits = s.clf.logits[..n * classes].to_vec();
+        let mut dist = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut acc = 0.0f64;
+            for j in 0..d {
+                let diff = (s.z[k * d + j] - images[k * d + j]) as f64;
+                acc += diff * diff;
+            }
+            dist.push(acc.sqrt() as f32);
+        }
+        Ok((logits, dist))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::golden::{golden_images, golden_params};
+
+    #[test]
+    fn profile_dims_match_aot_py() {
+        let be = NativeBackend::new();
+        let dims: Vec<(&str, usize)> = vec![
+            ("quickstart", 499),
+            ("sensorless", 24_203),
+            ("acoustic", 23_427),
+            ("covtype", 24_455),
+            ("seismic", 23_427),
+            ("e2e", 85_002),
+            ("attack_clf", 60_074),
+        ];
+        for (name, d) in dims {
+            assert_eq!(be.manifest().profiles[name].dim, d, "{name}");
+            assert_eq!(be.model(name).unwrap().dim(), d, "{name}");
+        }
+        let a = be.manifest().attack.as_ref().unwrap();
+        assert_eq!((a.image_dim, a.batch, a.eval_batch), (900, 5, 10));
+    }
+
+    #[test]
+    fn golden_constants_agree_with_recording_inputs() {
+        // the embedded tables were recorded at golden.rs's (mu, c)
+        assert_eq!(MU as f32, crate::backend::golden::GOLDEN_MU);
+        assert_eq!(C as f32, crate::backend::golden::GOLDEN_C);
+    }
+
+    #[test]
+    fn every_profile_has_golden_values() {
+        let be = NativeBackend::new();
+        for (name, p) in &be.manifest().profiles {
+            assert!(p.golden.is_some(), "{name} missing golden");
+        }
+        assert!(be.manifest().attack.as_ref().unwrap().golden.is_some());
+    }
+
+    #[test]
+    fn loss_pair_equals_two_plain_losses() {
+        let be = NativeBackend::new();
+        let model = be.model("quickstart").unwrap();
+        let d = model.dim();
+        let params = golden_params(d);
+        let v = crate::backend::golden::golden_direction(d);
+        let (x, y) =
+            crate::backend::golden::golden_batch(model.batch(), model.features(), model.classes());
+        let mu = 1e-3f32;
+        let (lp, lb) = model.loss_pair(&params, &v, mu, &x, &y).unwrap();
+        let mut pplus = vec![0.0f32; d];
+        mlp::perturb(&params, &v, mu, &mut pplus);
+        assert_eq!(lp.to_bits(), model.loss(&pplus, &x, &y).unwrap().to_bits());
+        assert_eq!(lb.to_bits(), model.loss(&params, &x, &y).unwrap().to_bits());
+    }
+
+    #[test]
+    fn model_calls_are_deterministic() {
+        let be = NativeBackend::new();
+        let model = be.model("quickstart").unwrap();
+        let params = golden_params(model.dim());
+        let (x, y) =
+            crate::backend::golden::golden_batch(model.batch(), model.features(), model.classes());
+        let a = model.loss(&params, &x, &y).unwrap();
+        let b = model.loss(&params, &x, &y).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        let mut g1 = vec![0.0f32; model.dim()];
+        let mut g2 = vec![0.0f32; model.dim()];
+        model.grad(&params, &x, &y, &mut g1).unwrap();
+        model.grad(&params, &x, &y, &mut g2).unwrap();
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn attack_distortion_grad_matches_finite_difference() {
+        // c = 0 isolates the smooth ‖z − a‖² term (no margin kink), so a
+        // central difference is a reliable oracle for the tanh chain rule.
+        let be = NativeBackend::new();
+        let attack = be.attack().unwrap();
+        let d = attack.dim();
+        let clf = golden_params(be.manifest().profiles[ATTACK_CLF].dim);
+        let images = golden_images(attack.batch(), d);
+        let y: Vec<f32> = (0..attack.batch()).map(|k| (k % 10) as f32).collect();
+        let mut xp = vec![0.01f32; d];
+        let mut g = vec![0.0f32; d];
+        attack.grad(&xp, &clf, &images, &y, 0.0, &mut g).unwrap();
+        for &j in &[0usize, 17, 449, 899] {
+            let eps = 1e-3f32;
+            let orig = xp[j];
+            xp[j] = orig + eps;
+            let lp = attack.loss(&xp, &clf, &images, &y, 0.0).unwrap() as f64;
+            xp[j] = orig - eps;
+            let lm = attack.loss(&xp, &clf, &images, &y, 0.0).unwrap() as f64;
+            xp[j] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - g[j] as f64).abs() < 1e-4 + 2e-2 * fd.abs(),
+                "coord {j}: fd {fd} vs analytic {}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn attack_eval_shapes_and_finite() {
+        let be = NativeBackend::new();
+        let attack = be.attack().unwrap();
+        let d = attack.dim();
+        let clf = golden_params(be.manifest().profiles[ATTACK_CLF].dim);
+        let images = golden_images(attack.eval_batch(), d);
+        let xp = vec![0.01f32; d];
+        let (logits, dist) = attack.eval(&xp, &clf, &images).unwrap();
+        assert_eq!(logits.len(), attack.eval_batch() * 10);
+        assert_eq!(dist.len(), attack.eval_batch());
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(dist.iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+}

@@ -1,5 +1,6 @@
 //! Typed experiment configuration: every knob of Algorithm 1 and of the
-//! baselines, loadable from a JSON file and overridable from the CLI.
+//! baselines — including the compute [`BackendKind`] — loadable from a
+//! JSON file and overridable from the CLI (`--backend native|pjrt`).
 //!
 //! Defaults follow the paper's experimental setup (Section 5.2): m = 4
 //! workers, τ = 8, B = 64 (taken from the model profile), RI-SGD
@@ -12,6 +13,7 @@ use std::str::FromStr;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::backend::BackendKind;
 use crate::comm::NetworkModel;
 use crate::util::json::Json;
 
@@ -136,6 +138,8 @@ impl StepSize {
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub method: Method,
+    /// compute backend serving the model (`native` | `pjrt`)
+    pub backend: BackendKind,
     /// model/dataset profile name (must exist in the artifact manifest)
     pub dataset: String,
     /// N — total iterations
@@ -175,6 +179,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             method: Method::HoSgd,
+            backend: BackendKind::Native,
             dataset: "sensorless".into(),
             iters: 400,
             workers: 4,      // paper §5.2
@@ -251,6 +256,9 @@ impl TrainConfig {
         if let Some(s) = gs("method") {
             cfg.method = s.parse()?;
         }
+        if let Some(s) = gs("backend") {
+            cfg.backend = s.parse()?;
+        }
         if let Some(s) = gs("dataset") {
             cfg.dataset = s.to_string();
         }
@@ -316,6 +324,7 @@ impl TrainConfig {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("method", Json::str(self.method.label())),
+            ("backend", Json::str(self.backend.label())),
             ("dataset", Json::str(self.dataset.clone())),
             ("iters", Json::num(self.iters as f64)),
             ("workers", Json::num(self.workers as f64)),
@@ -430,10 +439,11 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let c = TrainConfig { mu: Some(0.01), ..Default::default() };
+        let c = TrainConfig { mu: Some(0.01), backend: BackendKind::Pjrt, ..Default::default() };
         let text = c.to_json().pretty();
         let back = TrainConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.method, c.method);
+        assert_eq!(back.backend, BackendKind::Pjrt);
         assert_eq!(back.tau, c.tau);
         assert_eq!(back.dataset, c.dataset);
         assert_eq!(back.mu, c.mu);

@@ -5,7 +5,7 @@
 //! u64 iter · dim×f32 payload · u64 FNV-1a checksum over everything
 //! before it. Used by the attack driver (frozen classifier weights), the
 //! e2e example (resume), and anything that wants to hand a trained model
-//! to `ModelBinding::predict`.
+//! to `ModelBackend::predict` on either backend.
 
 use std::path::Path;
 

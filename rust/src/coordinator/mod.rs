@@ -1,22 +1,23 @@
 //! The leader loop: drives `m` simulated workers through N iterations of a
-//! chosen method over an AOT-compiled model profile, producing a [`Trace`].
+//! chosen method over a backend-bound model profile, producing a [`Trace`].
 //!
-//! Responsibilities (DESIGN.md §5): dataset materialization + sharding,
-//! initial-point broadcast (all methods start from the same Glorot init —
-//! §5.2 "all the methods are run from the same initial points"), the
-//! iteration schedule, periodic test evaluation, wall-clock vs simulated-
-//! clock bookkeeping, and trace recording.
+//! Responsibilities: dataset materialization + sharding, initial-point
+//! broadcast (all methods start from the same Glorot init — §5.2 "all the
+//! methods are run from the same initial points"), the iteration schedule,
+//! periodic test evaluation, wall-clock vs simulated-clock bookkeeping, and
+//! trace recording. The model is an abstract [`ModelBackend`], so the same
+//! loop runs against the native kernels or the PJRT artifacts.
 
 pub mod checkpoint;
 
 use anyhow::Result;
 
+use crate::backend::{Backend, ModelBackend};
 use crate::comm::CommSim;
 use crate::config::TrainConfig;
 use crate::data::{profile, Dataset};
 use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Oracle, TrainOracle, World};
-use crate::runtime::{ModelBinding, Runtime};
 
 /// Materialized datasets for one run.
 pub struct RunData {
@@ -37,7 +38,7 @@ pub fn make_data(cfg: &TrainConfig) -> Result<RunData> {
 }
 
 /// Test-set accuracy of `params`, evaluated in model-batch chunks.
-pub fn eval_accuracy(model: &ModelBinding, params: &[f32], test: &Dataset) -> Result<f64> {
+pub fn eval_accuracy(model: &dyn ModelBackend, params: &[f32], test: &Dataset) -> Result<f64> {
     let b = model.batch();
     let f = model.features();
     let chunks = test.len() / b;
@@ -60,17 +61,17 @@ pub struct TrainOutcome {
 }
 
 /// Run one full training experiment; returns the iteration trace.
-pub fn run_train(rt: &Runtime, cfg: &TrainConfig) -> Result<Trace> {
+pub fn run_train(backend: &dyn Backend, cfg: &TrainConfig) -> Result<Trace> {
     cfg.validate()?;
-    let model = rt.model(&cfg.dataset)?;
+    let model = backend.model(&cfg.dataset)?;
     let data = make_data(cfg)?;
-    Ok(run_train_with(&model, &data, cfg)?.trace)
+    Ok(run_train_with(model.as_ref(), &data, cfg)?.trace)
 }
 
 /// Same, with caller-provided model binding + datasets (lets sweeps share
-/// compiled executables and corpora across methods).
+/// bound models and corpora across methods).
 pub fn run_train_with(
-    model: &ModelBinding,
+    model: &dyn ModelBackend,
     data: &RunData,
     cfg: &TrainConfig,
 ) -> Result<TrainOutcome> {

@@ -3,7 +3,7 @@
 //!
 //! The paper evaluates on four LIBSVM multi-class datasets (SENSORLESS,
 //! ACOUSTIC, COVTYPE, SEISMIC) and a well-trained MNIST classifier. Neither
-//! is available offline, so per DESIGN.md §4 we substitute seeded synthetic
+//! is available offline, so we substitute seeded synthetic
 //! generators that preserve exactly what the algorithms consume: the
 //! feature dimension, the class count, i.i.d. minibatches, and a learnable
 //! (non-convex) decision structure. Convergence *ordering* between methods

@@ -5,20 +5,28 @@
 //! Computational Complexity, and Convergence Rate"* (Omidvar, Maddah-Ali,
 //! Mahdavi, 2020).
 //!
-//! ## Architecture (see DESIGN.md)
+//! ## Architecture (see README.md)
 //!
-//! This crate is **Layer 3** of a three-layer stack: a rust coordinator that
-//! owns the entire training/attack loop — the hybrid FO/ZO iteration
-//! schedule, the pre-shared-seed scalar communication trick, the simulated
-//! collectives with exact byte accounting, and all five baselines from the
-//! paper's evaluation. The model compute (Layer 2 JAX graphs built on
-//! Layer 1 Pallas kernels) is AOT-compiled once by `python/compile/aot.py`
-//! into `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
-//! the PJRT C API (`xla` crate). Python never runs on the training path.
+//! A rust coordinator owns the entire training/attack loop — the hybrid
+//! FO/ZO iteration schedule, the pre-shared-seed scalar communication
+//! trick, the simulated collectives with exact byte accounting, and all
+//! five baselines from the paper's evaluation. All model compute flows
+//! through the pluggable [`backend`] layer:
+//!
+//! * **native** (default): a pure-rust port of the `python/compile`
+//!   reference kernels — dense layers, softmax cross-entropy, manual
+//!   backprop, the two-point ZO pair and the CW attack objective. No
+//!   artifacts or external libraries; this is what CI exercises.
+//! * **pjrt** (cargo feature `pjrt`): the AOT path — JAX graphs built on
+//!   Pallas kernels are lowered once by `python/compile/aot.py` into
+//!   `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
+//!   the PJRT C API (`xla` crate). Python never runs on the training path.
 //!
 //! ## Module map
 //!
-//! - [`runtime`] — PJRT client, artifact manifest, model bindings
+//! - [`backend`] — the `Backend`/`ModelBackend`/`AttackBackend` traits,
+//!   the native implementation, profile metadata and golden inputs
+//! - `runtime` (feature `pjrt`) — PJRT client, artifact manifest loader
 //! - [`rng`] — deterministic RNG + the paper's pre-shared direction seeds
 //! - [`data`] — Table-4 dataset profiles (synthetic substitutes) + batching
 //! - [`comm`] — simulated collectives, byte accounting, α–β network model,
@@ -29,9 +37,10 @@
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
-//! - [`config`] — typed experiment configuration (TOML + CLI overrides)
+//! - [`config`] — typed experiment configuration (JSON + CLI overrides)
 
 pub mod attack;
+pub mod backend;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
@@ -39,6 +48,7 @@ pub mod data;
 pub mod metrics;
 pub mod optim;
 pub mod rng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod theory;
 pub mod util;

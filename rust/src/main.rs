@@ -1,25 +1,35 @@
 //! `hosgd` — the leader entrypoint/CLI.
 //!
-//! One subcommand per paper artifact (DESIGN.md §6):
-//! `table1`, `fig1` (+ Table 2/3), `fig2`, `datasets` (Table 4),
-//! `ablate-tau` (Remark 3), plus `train` for single runs, `e2e` for the
-//! end-to-end driver, and `golden-check` for cross-language numerics.
+//! One subcommand per paper artifact: `table1`, `fig1` (+ Table 2/3),
+//! `fig2`, `datasets` (Table 4), `ablate-tau` (Remark 3), plus `train` for
+//! single runs, `e2e` for the end-to-end driver, and `golden-check` for
+//! cross-language numerics. Model compute is served by a pluggable backend
+//! (`--backend native|pjrt`); the default pure-rust `native` backend needs
+//! no artifacts.
+
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use hosgd::attack::{build_task, dump_adversarial_pgm, run_attack, AttackConfig};
+use hosgd::backend::{self, golden, Backend, BackendKind, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
 use hosgd::data::table4_profiles;
 use hosgd::metrics::Trace;
-use hosgd::runtime::{golden, Runtime};
 use hosgd::theory::{table1, Table1Params};
 use hosgd::util::cli::Args;
 
 const USAGE: &str = "\
 hosgd — Hybrid-Order Distributed SGD (Omidvar et al. 2020) reproduction
 
-USAGE: hosgd [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
+USAGE: hosgd [--backend native|pjrt] [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
+
+GLOBAL FLAGS
+  --backend B    compute backend: native (default, pure rust) or pjrt
+                 (AOT artifacts through PJRT; needs --features pjrt)
+  --artifacts D  artifact directory for the pjrt backend (default: artifacts)
+  --out D        result directory (default: results)
 
 SUBCOMMANDS
   train          single training run
@@ -36,25 +46,31 @@ SUBCOMMANDS
   sweep-workers  linear-speedup sweep --dataset D --workers 1,2,4,8
   sweep-mu       smoothing-parameter ablation --dataset D --mus a,b,c
   ablate-ef      QSGD error-feedback extension ablation --dataset D
-  golden-check   cross-language numerics vs manifest goldens
-  list-artifacts print the artifact manifest
+  golden-check   cross-language numerics vs recorded goldens
+  list-artifacts print the backend's profile manifest
 ";
+
+fn open_backend(kind: BackendKind, artifacts: &str) -> Result<Box<dyn Backend>> {
+    let be = backend::load(kind, Path::new(artifacts))?;
+    eprintln!("# backend: {} ({})", be.kind(), be.platform());
+    Ok(be)
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let artifacts = args.get_str("artifacts", "artifacts");
     let out_dir = args.get_str("out", "results");
+    let cli_backend: Option<BackendKind> = args.get_opt("backend")?;
     let Some(cmd) = args.subcommand() else {
         eprint!("{USAGE}");
         bail!("missing subcommand");
     };
-    let rt = Runtime::load(&artifacts)?;
-    eprintln!("# platform: {}", rt.platform());
     std::fs::create_dir_all(&out_dir)?;
 
     match cmd {
-        "train" => cmd_train(&rt, &args, &out_dir)?,
+        "train" => cmd_train(&args, &artifacts, cli_backend, &out_dir)?,
         "fig2" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let iters = args.get::<u64>("iters", 400)?;
             let seed = args.get::<u64>("seed", 1)?;
             let datasets: Vec<String> = if args.has("all") {
@@ -64,24 +80,26 @@ fn main() -> Result<()> {
             };
             args.finish()?;
             for ds in datasets {
-                run_fig2(&rt, &out_dir, &ds, iters, seed)?;
+                run_fig2(be.as_ref(), &out_dir, &ds, iters, seed)?;
             }
         }
         "fig1" | "attack" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 7)?;
             let clf_iters = args.get::<u64>("clf-iters", 400)?;
             let dump = args.has("dump-images");
             let c = args.get_opt::<f32>("c")?;
             args.finish()?;
-            run_fig1(&rt, &out_dir, iters, seed, clf_iters, dump, c)?;
+            run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c)?;
         }
         "table1" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 64)?;
             let tau = args.get::<usize>("tau", 8)?;
             args.finish()?;
-            run_table1(&rt, &dataset, iters, tau)?;
+            run_table1(be.as_ref(), &dataset, iters, tau)?;
         }
         "table4" | "datasets" => {
             args.finish()?;
@@ -97,6 +115,7 @@ fn main() -> Result<()> {
             }
         }
         "ablate-tau" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 240)?;
             let taus: Vec<usize> = args
@@ -105,9 +124,10 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .collect::<std::result::Result<_, _>>()?;
             args.finish()?;
-            run_ablate_tau(&rt, &out_dir, &dataset, iters, &taus)?;
+            run_ablate_tau(be.as_ref(), &out_dir, &dataset, iters, &taus)?;
         }
         "e2e" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 1)?;
             args.finish()?;
@@ -120,7 +140,7 @@ fn main() -> Result<()> {
                 step: StepSize::Constant { alpha: 0.002 }, // ZO-stable at d = 85k
                 ..Default::default()
             };
-            let model = rt.model(&cfg.dataset)?;
+            let model = be.model(&cfg.dataset)?;
             println!(
                 "# e2e: d = {} parameters, m = {}, tau = {}",
                 model.dim(),
@@ -128,7 +148,7 @@ fn main() -> Result<()> {
                 cfg.tau
             );
             let data = make_data(&cfg)?;
-            let out = run_train_with(&model, &data, &cfg)?;
+            let out = run_train_with(model.as_ref(), &data, &cfg)?;
             print_trace_summary(&out.trace);
             out.trace.write_csv(format!("{out_dir}/e2e_ho_sgd.csv"))?;
         }
@@ -139,6 +159,7 @@ fn main() -> Result<()> {
             run_report(&out_dir, &kind, &dataset)?;
         }
         "sweep-workers" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 200)?;
             let workers: Vec<usize> = args
@@ -147,9 +168,10 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<usize>())
                 .collect::<std::result::Result<_, _>>()?;
             args.finish()?;
-            run_sweep_workers(&rt, &dataset, iters, &workers)?;
+            run_sweep_workers(be.as_ref(), &dataset, iters, &workers)?;
         }
         "sweep-mu" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
             let mus: Vec<f64> = args
@@ -158,21 +180,24 @@ fn main() -> Result<()> {
                 .map(|s| s.parse::<f64>())
                 .collect::<std::result::Result<_, _>>()?;
             args.finish()?;
-            run_sweep_mu(&rt, &dataset, iters, &mus)?;
+            run_sweep_mu(be.as_ref(), &dataset, iters, &mus)?;
         }
         "ablate-ef" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
             args.finish()?;
-            run_ablate_ef(&rt, &dataset, iters)?;
+            run_ablate_ef(be.as_ref(), &dataset, iters)?;
         }
         "golden-check" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             args.finish()?;
-            golden_check(&rt)?;
+            golden_check(be.as_ref())?;
         }
         "list-artifacts" => {
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
             args.finish()?;
-            let m = rt.manifest();
+            let m = be.manifest();
             for (name, p) in &m.profiles {
                 println!(
                     "{name}: d={} batch={} features={} classes={}",
@@ -200,11 +225,20 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(rt: &Runtime, args: &Args, out_dir: &str) -> Result<()> {
+fn cmd_train(
+    args: &Args,
+    artifacts: &str,
+    cli_backend: Option<BackendKind>,
+    out_dir: &str,
+) -> Result<()> {
     let mut cfg = match args.get_opt::<String>("config")? {
         Some(path) => TrainConfig::from_json_file(path)?,
         None => TrainConfig::default(),
     };
+    // CLI wins over the config file; the config file wins over the default
+    if let Some(kind) = cli_backend {
+        cfg.backend = kind;
+    }
     cfg.method = args.get_str("method", cfg.method.label()).parse()?;
     cfg.dataset = args.get_str("dataset", &cfg.dataset);
     cfg.iters = args.get("iters", cfg.iters)?;
@@ -219,9 +253,10 @@ fn cmd_train(rt: &Runtime, args: &Args, out_dir: &str) -> Result<()> {
     cfg.seed = args.get("seed", cfg.seed)?;
     cfg.eval_every = args.get("eval-every", cfg.eval_every)?;
     args.finish()?;
-    let model = rt.model(&cfg.dataset)?;
+    let be = open_backend(cfg.backend, artifacts)?;
+    let model = be.model(&cfg.dataset)?;
     let data = make_data(&cfg)?;
-    let out = run_train_with(&model, &data, &cfg)?;
+    let out = run_train_with(model.as_ref(), &data, &cfg)?;
     print_trace_summary(&out.trace);
     let base = format!("{}/train_{}_{}", out_dir, cfg.dataset, cfg.method.label());
     out.trace.write_csv(format!("{base}.csv"))?;
@@ -246,7 +281,7 @@ fn print_trace_summary(t: &Trace) {
     );
 }
 
-fn run_fig2(rt: &Runtime, out_dir: &str, dataset: &str, iters: u64, seed: u64) -> Result<()> {
+fn run_fig2(be: &dyn Backend, out_dir: &str, dataset: &str, iters: u64, seed: u64) -> Result<()> {
     println!("== Fig. 2 [{dataset}]: training loss / wall-clock / test accuracy ==");
     let base_cfg = TrainConfig {
         dataset: dataset.into(),
@@ -255,11 +290,11 @@ fn run_fig2(rt: &Runtime, out_dir: &str, dataset: &str, iters: u64, seed: u64) -
         eval_every: (iters / 20).max(1),
         ..Default::default()
     };
-    let model = rt.model(dataset)?;
+    let model = be.model(dataset)?;
     let data = make_data(&base_cfg)?;
     for method in Method::FIGURE_SET {
         let cfg = TrainConfig { method, step: fig2_lr(method), ..base_cfg.clone() };
-        let outc = run_train_with(&model, &data, &cfg)?;
+        let outc = run_train_with(model.as_ref(), &data, &cfg)?;
         print_trace_summary(&outc.trace);
         outc.trace.write_csv(format!("{out_dir}/fig2_{dataset}_{}.csv", method.label()))?;
     }
@@ -286,7 +321,7 @@ pub fn fig2_lr(method: Method) -> StepSize {
 
 #[allow(clippy::too_many_arguments)]
 fn run_fig1(
-    rt: &Runtime,
+    be: &dyn Backend,
     out_dir: &str,
     iters: u64,
     seed: u64,
@@ -295,8 +330,8 @@ fn run_fig1(
     c: Option<f32>,
 ) -> Result<()> {
     println!("== Fig. 1: universal adversarial perturbation (d=900, m=5, B=5) ==");
-    let bind = rt.attack()?;
-    let task = build_task(rt, seed, clf_iters)?;
+    let bind = be.attack()?;
+    let task = build_task(be, seed, clf_iters)?;
     println!("# frozen classifier test accuracy: {:.3}", task.clf_test_acc);
     println!("# CW constant c = {}", c.unwrap_or(task.c));
     println!(
@@ -305,7 +340,7 @@ fn run_fig1(
     );
     for method in Method::FIGURE_SET {
         let cfg = AttackConfig { method, iters, seed, c, ..Default::default() };
-        let outcome = run_attack(&bind, &task, &cfg)?;
+        let outcome = run_attack(bind.as_ref(), &task, &cfg)?;
         outcome.trace.write_csv(format!("{out_dir}/fig1_{}.csv", method.label()))?;
         println!(
             "{:<18} {:>10.4} {:>8.0}% {:>12} {:>10.3}",
@@ -336,8 +371,8 @@ fn run_fig1(
     Ok(())
 }
 
-fn run_table1(rt: &Runtime, dataset: &str, iters: u64, tau: usize) -> Result<()> {
-    let model = rt.model(dataset)?;
+fn run_table1(be: &dyn Backend, dataset: &str, iters: u64, tau: usize) -> Result<()> {
+    let model = be.model(dataset)?;
     let d = model.dim();
     let p = Table1Params { d, m: 4, n: iters, tau, redundancy: 0.25, s: 4 };
     println!("== Table 1 (analytic @ d={d}, m=4, N={iters}, tau={tau}) ==");
@@ -372,7 +407,7 @@ fn run_table1(rt: &Runtime, dataset: &str, iters: u64, tau: usize) -> Result<()>
     let data = make_data(&base)?;
     for method in Method::ALL {
         let cfg = TrainConfig { method, ..base.clone() };
-        let outc = run_train_with(&model, &data, &cfg)?;
+        let outc = run_train_with(model.as_ref(), &data, &cfg)?;
         let last = outc.trace.rows.last().unwrap();
         let iters_f = iters as f64;
         // measured normalized compute: SFO-equivalents per iteration per
@@ -392,14 +427,14 @@ fn run_table1(rt: &Runtime, dataset: &str, iters: u64, tau: usize) -> Result<()>
 }
 
 fn run_ablate_tau(
-    rt: &Runtime,
+    be: &dyn Backend,
     out_dir: &str,
     dataset: &str,
     iters: u64,
     taus: &[usize],
 ) -> Result<()> {
     println!("== Remark 3 ablation: final loss vs tau (error should grow O(1) in tau) ==");
-    let model = rt.model(dataset)?;
+    let model = be.model(dataset)?;
     let base = TrainConfig {
         dataset: dataset.into(),
         iters,
@@ -412,7 +447,7 @@ fn run_ablate_tau(
     println!("{:>6} {:>12} {:>12} {:>16}", "TAU", "FINAL LOSS", "BEST LOSS", "SCALARS/ITER");
     for &tau in taus {
         let cfg = TrainConfig { tau, ..base.clone() };
-        let outc = run_train_with(&model, &data, &cfg)?;
+        let outc = run_train_with(model.as_ref(), &data, &cfg)?;
         let last = outc.trace.rows.last().unwrap();
         println!(
             "{:>6} {:>12.4} {:>12.4} {:>16.2}",
@@ -426,11 +461,12 @@ fn run_ablate_tau(
     Ok(())
 }
 
-fn golden_check(rt: &Runtime) -> Result<()> {
+fn golden_check(be: &dyn Backend) -> Result<()> {
     let tol = 2e-3;
-    for (name, prof) in &rt.manifest().profiles {
+    let mut checked = 0;
+    for (name, prof) in &be.manifest().profiles {
         let Some(g) = &prof.golden else { continue };
-        let model = rt.model(name)?;
+        let model = be.model(name)?;
         let params = golden::golden_params(prof.dim);
         let (x, y) = golden::golden_batch(prof.batch, prof.features, prof.classes);
         let loss = model.loss(&params, &x, &y)? as f64;
@@ -439,8 +475,12 @@ fn golden_check(rt: &Runtime) -> Result<()> {
         if rel > tol {
             bail!("golden mismatch for {name}");
         }
+        checked += 1;
     }
-    println!("golden-check OK");
+    if checked == 0 {
+        bail!("no golden values recorded in this backend's manifest");
+    }
+    println!("golden-check OK ({checked} profiles)");
     Ok(())
 }
 
@@ -531,9 +571,9 @@ fn run_report(out_dir: &str, kind: &str, dataset: &str) -> Result<()> {
 }
 
 /// Worker-count sweep: Theorem 1 predicts the error scales 1/√m at fixed N.
-fn run_sweep_workers(rt: &Runtime, dataset: &str, iters: u64, workers: &[usize]) -> Result<()> {
+fn run_sweep_workers(be: &dyn Backend, dataset: &str, iters: u64, workers: &[usize]) -> Result<()> {
     println!("== worker sweep on {dataset} (HO-SGD, {iters} iters, tau=8) ==");
-    let model = rt.model(dataset)?;
+    let model = be.model(dataset)?;
     println!("{:>8} {:>12} {:>12} {:>14}", "WORKERS", "FINAL LOSS", "BEST LOSS", "SCALARS/WORKER");
     for &m in workers {
         let cfg = TrainConfig {
@@ -545,7 +585,7 @@ fn run_sweep_workers(rt: &Runtime, dataset: &str, iters: u64, workers: &[usize])
             ..Default::default()
         };
         let data = make_data(&cfg)?;
-        let out = run_train_with(&model, &data, &cfg)?;
+        let out = run_train_with(model.as_ref(), &data, &cfg)?;
         let last = out.trace.rows.last().unwrap();
         println!(
             "{:>8} {:>12.4} {:>12.4} {:>14}",
@@ -561,9 +601,9 @@ fn run_sweep_workers(rt: &Runtime, dataset: &str, iters: u64, workers: &[usize])
 
 /// Smoothing-parameter ablation for the ZO estimator (Theorem 1 requires
 /// μ ≤ 1/√(dN); too large biases the estimator, too small hits f32 noise).
-fn run_sweep_mu(rt: &Runtime, dataset: &str, iters: u64, mus: &[f64]) -> Result<()> {
+fn run_sweep_mu(be: &dyn Backend, dataset: &str, iters: u64, mus: &[f64]) -> Result<()> {
     println!("== mu sweep on {dataset} (ZO-SGD, {iters} iters) ==");
-    let model = rt.model(dataset)?;
+    let model = be.model(dataset)?;
     let d = model.dim();
     println!("theorem rule mu = 1/sqrt(dN) = {:.2e}", 1.0 / ((d as f64 * iters as f64).sqrt()));
     println!("{:>10} {:>12} {:>12}", "MU", "FINAL LOSS", "BEST LOSS");
@@ -578,7 +618,7 @@ fn run_sweep_mu(rt: &Runtime, dataset: &str, iters: u64, mus: &[f64]) -> Result<
             ..Default::default()
         };
         let data = make_data(&cfg)?;
-        let out = run_train_with(&model, &data, &cfg)?;
+        let out = run_train_with(model.as_ref(), &data, &cfg)?;
         println!(
             "{:>10.1e} {:>12.4} {:>12.4}",
             mu,
@@ -590,9 +630,9 @@ fn run_sweep_mu(rt: &Runtime, dataset: &str, iters: u64, mus: &[f64]) -> Result<
 }
 
 /// QSGD ± error feedback at aggressive quantization (extension ablation).
-fn run_ablate_ef(rt: &Runtime, dataset: &str, iters: u64) -> Result<()> {
+fn run_ablate_ef(be: &dyn Backend, dataset: &str, iters: u64) -> Result<()> {
     println!("== QSGD error-feedback ablation on {dataset} ({iters} iters, s=1) ==");
-    let model = rt.model(dataset)?;
+    let model = be.model(dataset)?;
     println!("{:>6} {:>14} {:>12} {:>12}", "EF", "LEVELS", "FINAL LOSS", "BEST LOSS");
     for (ef, s) in [(false, 1u32), (true, 1), (false, 4), (true, 4)] {
         let cfg = TrainConfig {
@@ -606,7 +646,7 @@ fn run_ablate_ef(rt: &Runtime, dataset: &str, iters: u64) -> Result<()> {
             ..Default::default()
         };
         let data = make_data(&cfg)?;
-        let out = run_train_with(&model, &data, &cfg)?;
+        let out = run_train_with(model.as_ref(), &data, &cfg)?;
         println!(
             "{:>6} {:>14} {:>12.4} {:>12.4}",
             ef,

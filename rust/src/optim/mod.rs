@@ -4,7 +4,7 @@
 //! Algorithms are written against the [`Oracle`] trait — "give me a
 //! stochastic gradient / a two-point function evaluation for (iteration,
 //! worker)" — so the *same* algorithm code drives both the Section 5.2
-//! training experiments (oracle = [`TrainOracle`], an AOT-compiled MLP over
+//! training experiments (oracle = [`TrainOracle`], a backend-bound MLP over
 //! a dataset) and the Section 5.1 adversarial-attack experiments (oracle =
 //! [`crate::attack::AttackOracle`], the CW loss over frozen-classifier
 //! artifacts). Batch sampling inside an oracle is keyed by the pre-shared
@@ -13,7 +13,7 @@
 //! requires.
 //!
 //! All state updates are deterministic given the config seed; workers are
-//! stepped sequentially (single-core testbed, DESIGN.md §7), while the
+//! stepped sequentially (single-core simulated testbed), while the
 //! *cost* of the parallel execution is accounted in [`CommSim`] /
 //! [`ComputeCounters`].
 
@@ -27,11 +27,11 @@ pub mod zo_svrg;
 
 use anyhow::Result;
 
+use crate::backend::ProfileMeta;
 use crate::comm::CommSim;
 use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
 use crate::rng::{SeedRegistry, Xoshiro256};
-use crate::runtime::ProfileMeta;
 
 // ---------------------------------------------------------------------------
 // Oracle: the stochastic first/zeroth-order oracle of the paper
@@ -233,12 +233,12 @@ pub fn build<O: Oracle>(method: Method, init: Vec<f32>, cfg: &AlgoConfig) -> Box
 // TrainOracle: the Section 5.2 objective (AOT MLP over a dataset)
 // ---------------------------------------------------------------------------
 
+use crate::backend::ModelBackend;
 use crate::data::{BatchSampler, Dataset, Sharding};
-use crate::runtime::ModelBinding;
 
-/// Stochastic oracle over an AOT-compiled model profile + dataset shards.
+/// Stochastic oracle over a backend-bound model profile + dataset shards.
 pub struct TrainOracle<'a> {
-    pub model: &'a ModelBinding,
+    pub model: &'a dyn ModelBackend,
     pub data: &'a Dataset,
     pub sharding: Sharding,
     sampler: BatchSampler,
@@ -253,7 +253,7 @@ impl<'a> TrainOracle<'a> {
     /// `redundancy > 0` builds RI-SGD's overlapping pools; 0 gives disjoint
     /// iid shards.
     pub fn new(
-        model: &'a ModelBinding,
+        model: &'a dyn ModelBackend,
         data: &'a Dataset,
         workers: usize,
         redundancy: f64,
@@ -316,7 +316,7 @@ impl Oracle for TrainOracle<'_> {
     }
 
     fn init_params(&self, seed: u64) -> Vec<f32> {
-        init_mlp_params(&self.model.meta, seed)
+        init_mlp_params(self.model.meta(), seed)
     }
 }
 

@@ -1,202 +1,33 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute from the
-//! training hot path.
+//! PJRT runtime (the `pjrt`-feature backend): load `artifacts/*.hlo.txt`,
+//! compile once, execute from the training hot path.
 //!
-//! The interchange format is HLO **text** (see DESIGN.md / the AOT recipe):
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. Every artifact was lowered with
-//! `return_tuple=True`, so each call unwraps a tuple literal.
+//! The interchange format is HLO **text** (see README.md / the AOT recipe
+//! in `python/compile/aot.py`): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`. Every
+//! artifact was lowered with `return_tuple=True`, so each call unwraps a
+//! tuple literal.
 //!
-//! [`Runtime`] owns the PJRT client plus a compile cache; [`ModelBinding`]
-//! and [`AttackBinding`] are thin typed facades over the per-profile entry
-//! points with flat `&[f32]` in/out signatures, so the optimizers never see
-//! XLA types.
-
-pub mod golden;
+//! [`Runtime`] owns the PJRT client plus a compile cache and implements
+//! [`Backend`]; [`ModelBinding`] and [`AttackBinding`] are thin typed
+//! facades over the per-profile entry points implementing [`ModelBackend`]
+//! / [`AttackBackend`], so the optimizers never see XLA types.
+//!
+//! NOTE: by default this module compiles against the vendored
+//! `rust/vendor/xla-stub` crate, which type-checks but fails at
+//! `PjRtClient::cpu()` with a clear message. Point the `xla` dependency at
+//! the published crate (see `rust/Cargo.toml`) to execute for real.
 
 use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
-// ---------------------------------------------------------------------------
-// Manifest (written by python/compile/aot.py; parsed with crate::util::json)
-// ---------------------------------------------------------------------------
-
+use crate::backend::{
+    AttackBackend, AttackMeta, Backend, BackendKind, Manifest, ModelBackend, ProfileMeta,
+};
 use crate::util::json::Json;
-
-#[derive(Debug, Clone)]
-pub struct Manifest {
-    pub version: u32,
-    pub profiles: BTreeMap<String, ProfileMeta>,
-    pub attack: Option<AttackMeta>,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct ProfileMeta {
-    pub features: usize,
-    pub hidden1: usize,
-    pub hidden2: usize,
-    pub classes: usize,
-    /// d — the flat model dimension of Algorithm 1.
-    pub dim: usize,
-    pub batch: usize,
-    pub artifacts: BTreeMap<String, String>,
-    pub golden: Option<ProfileGolden>,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct ProfileGolden {
-    pub mu: f64,
-    pub loss: f64,
-    pub grad_loss: f64,
-    pub grad_norm: f64,
-    pub grad_head: Vec<f64>,
-    pub pair_plus: f64,
-    pub pair_base: f64,
-    pub accuracy: f64,
-}
-
-#[derive(Debug, Clone)]
-pub struct AttackMeta {
-    pub clf_profile: String,
-    pub image_dim: usize,
-    pub batch: usize,
-    pub eval_batch: usize,
-    pub artifacts: BTreeMap<String, String>,
-    pub golden: Option<AttackGolden>,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct AttackGolden {
-    pub mu: f64,
-    pub c: f64,
-    pub loss: f64,
-    pub grad_loss: f64,
-    pub grad_norm: f64,
-    pub grad_head: Vec<f64>,
-    pub pair_plus: f64,
-    pub pair_base: f64,
-    pub eval_logit00: f64,
-    pub eval_dist0: f64,
-}
-
-fn j_usize(v: &Json, key: &str) -> Result<usize> {
-    v.req(key)?.as_usize().ok_or_else(|| anyhow!("{key} is not a number"))
-}
-
-fn j_f64(v: &Json, key: &str) -> Result<f64> {
-    v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} is not a number"))
-}
-
-fn j_artifacts(v: &Json) -> Result<BTreeMap<String, String>> {
-    let obj = v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts not an object"))?;
-    Ok(obj
-        .iter()
-        .filter_map(|(k, val)| val.as_str().map(|s| (k.clone(), s.to_string())))
-        .collect())
-}
-
-impl Manifest {
-    pub fn from_json(v: &Json) -> Result<Self> {
-        let version = j_usize(v, "version")? as u32;
-        let mut profiles = BTreeMap::new();
-        let pobj = v.req("profiles")?.as_obj().ok_or_else(|| anyhow!("profiles not an object"))?;
-        for (name, pv) in pobj {
-            profiles.insert(name.clone(), ProfileMeta::from_json(pv)?);
-        }
-        let attack = match v.get("attack") {
-            Some(a) if !a.is_null() => Some(AttackMeta::from_json(a)?),
-            _ => None,
-        };
-        Ok(Self { version, profiles, attack })
-    }
-}
-
-impl ProfileMeta {
-    pub fn from_json(v: &Json) -> Result<Self> {
-        Ok(Self {
-            features: j_usize(v, "features")?,
-            hidden1: j_usize(v, "hidden1")?,
-            hidden2: j_usize(v, "hidden2")?,
-            classes: j_usize(v, "classes")?,
-            dim: j_usize(v, "dim")?,
-            batch: j_usize(v, "batch")?,
-            artifacts: j_artifacts(v)?,
-            golden: match v.get("golden") {
-                Some(g) if !g.is_null() => Some(ProfileGolden::from_json(g)?),
-                _ => None,
-            },
-        })
-    }
-}
-
-impl ProfileGolden {
-    pub fn from_json(v: &Json) -> Result<Self> {
-        let head = v
-            .req("grad_head")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("grad_head not an array"))?
-            .iter()
-            .filter_map(|x| x.as_f64())
-            .collect();
-        Ok(Self {
-            mu: j_f64(v, "mu")?,
-            loss: j_f64(v, "loss")?,
-            grad_loss: j_f64(v, "grad_loss")?,
-            grad_norm: j_f64(v, "grad_norm")?,
-            grad_head: head,
-            pair_plus: j_f64(v, "pair_plus")?,
-            pair_base: j_f64(v, "pair_base")?,
-            accuracy: j_f64(v, "accuracy")?,
-        })
-    }
-}
-
-impl AttackMeta {
-    pub fn from_json(v: &Json) -> Result<Self> {
-        Ok(Self {
-            clf_profile: v
-                .req("clf_profile")?
-                .as_str()
-                .ok_or_else(|| anyhow!("clf_profile not a string"))?
-                .to_string(),
-            image_dim: j_usize(v, "image_dim")?,
-            batch: j_usize(v, "batch")?,
-            eval_batch: j_usize(v, "eval_batch")?,
-            artifacts: j_artifacts(v)?,
-            golden: match v.get("golden") {
-                Some(g) if !g.is_null() => Some(AttackGolden::from_json(g)?),
-                _ => None,
-            },
-        })
-    }
-}
-
-impl AttackGolden {
-    pub fn from_json(v: &Json) -> Result<Self> {
-        let head = v
-            .req("grad_head")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("grad_head not an array"))?
-            .iter()
-            .filter_map(|x| x.as_f64())
-            .collect();
-        Ok(Self {
-            mu: j_f64(v, "mu")?,
-            c: j_f64(v, "c")?,
-            loss: j_f64(v, "loss")?,
-            grad_loss: j_f64(v, "grad_loss")?,
-            grad_norm: j_f64(v, "grad_norm")?,
-            grad_head: head,
-            pair_plus: j_f64(v, "pair_plus")?,
-            pair_base: j_f64(v, "pair_base")?,
-            eval_logit00: j_f64(v, "eval_logit00")?,
-            eval_dist0: j_f64(v, "eval_dist0")?,
-        })
-    }
-}
 
 // ---------------------------------------------------------------------------
 // Literal helpers
@@ -257,16 +88,8 @@ impl Runtime {
         Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
     }
 
     /// Compile (or fetch from cache) one artifact file.
@@ -278,15 +101,14 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("loading HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
-        );
+        let exe =
+            Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {file}"))?);
         self.cache.borrow_mut().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Typed binding for one model profile (compiles its 5 entry points).
-    pub fn model(&self, profile: &str) -> Result<ModelBinding> {
+    fn model_binding(&self, profile: &str) -> Result<ModelBinding> {
         let meta = self
             .manifest
             .profiles
@@ -317,7 +139,7 @@ impl Runtime {
     }
 
     /// Typed binding for the Section 5.1 attack entry points.
-    pub fn attack(&self) -> Result<AttackBinding> {
+    fn attack_binding(&self) -> Result<AttackBinding> {
         let meta = self
             .manifest
             .attack
@@ -340,6 +162,28 @@ impl Runtime {
     }
 }
 
+impl Backend for Runtime {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn model(&self, profile: &str) -> Result<Box<dyn ModelBackend>> {
+        Ok(Box::new(self.model_binding(profile)?))
+    }
+
+    fn attack(&self) -> Result<Box<dyn AttackBackend>> {
+        Ok(Box::new(self.attack_binding()?))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // ModelBinding — the flat-f32 facade used by all optimizers
 // ---------------------------------------------------------------------------
@@ -358,49 +202,29 @@ pub struct ModelBinding {
 }
 
 impl ModelBinding {
-    pub fn dim(&self) -> usize {
-        self.meta.dim
-    }
-
-    pub fn batch(&self) -> usize {
-        self.meta.batch
-    }
-
-    pub fn features(&self) -> usize {
-        self.meta.features
-    }
-
-    pub fn classes(&self) -> usize {
-        self.meta.classes
-    }
-
     fn check_xy(&self, x: &[f32], y: &[f32]) {
         debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
         debug_assert_eq!(y.len(), self.meta.batch);
     }
+}
 
-    /// F(params; batch) — one loss evaluation.
-    pub fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+impl ModelBackend for ModelBinding {
+    fn meta(&self) -> &ProfileMeta {
+        &self.meta
+    }
+
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         self.check_xy(x, y);
-        let args = [
-            lit1(params),
-            lit2(x, self.meta.batch, self.meta.features)?,
-            lit1(y),
-        ];
+        let args = [lit1(params), lit2(x, self.meta.batch, self.meta.features)?, lit1(y)];
         let out = first_buffer(self.loss.execute(&args)?)?.to_literal_sync()?;
         let l = out.to_tuple1()?;
         Ok(l.to_vec::<f32>()?[0])
     }
 
-    /// ∇F(params; batch) written into `out_grad`; returns the loss.
-    pub fn grad(&self, params: &[f32], x: &[f32], y: &[f32], out_grad: &mut [f32]) -> Result<f32> {
+    fn grad(&self, params: &[f32], x: &[f32], y: &[f32], out_grad: &mut [f32]) -> Result<f32> {
         self.check_xy(x, y);
         debug_assert_eq!(out_grad.len(), self.meta.dim);
-        let args = [
-            lit1(params),
-            lit2(x, self.meta.batch, self.meta.features)?,
-            lit1(y),
-        ];
+        let args = [lit1(params), lit2(x, self.meta.batch, self.meta.features)?, lit1(y)];
         let out = first_buffer(self.grad.execute(&args)?)?.to_literal_sync()?;
         let (g, l) = out.to_tuple2()?;
         let gv = g.to_vec::<f32>()?;
@@ -408,9 +232,7 @@ impl ModelBinding {
         Ok(l.to_vec::<f32>()?[0])
     }
 
-    /// (F(params + mu·v; batch), F(params; batch)) — the fused two-point ZO
-    /// evaluation of Algorithm 1 eq. (4). One dispatch, two function evals.
-    pub fn loss_pair(
+    fn loss_pair(
         &self,
         params: &[f32],
         v: &[f32],
@@ -432,20 +254,14 @@ impl ModelBinding {
         Ok((lp.to_vec::<f32>()?[0], lb.to_vec::<f32>()?[0]))
     }
 
-    /// Number of correct predictions in the batch.
-    pub fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+    fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         self.check_xy(x, y);
-        let args = [
-            lit1(params),
-            lit2(x, self.meta.batch, self.meta.features)?,
-            lit1(y),
-        ];
+        let args = [lit1(params), lit2(x, self.meta.batch, self.meta.features)?, lit1(y)];
         let out = first_buffer(self.acc.execute(&args)?)?.to_literal_sync()?;
         Ok(out.to_tuple1()?.to_vec::<f32>()?[0])
     }
 
-    /// Logits [batch, classes], row-major.
-    pub fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+    fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
         debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
         let args = [lit1(params), lit2(x, self.meta.batch, self.meta.features)?];
         let out = first_buffer(self.pred.execute(&args)?)?.to_literal_sync()?;
@@ -465,20 +281,12 @@ pub struct AttackBinding {
     eval: Exe,
 }
 
-impl AttackBinding {
-    pub fn dim(&self) -> usize {
-        self.meta.image_dim
+impl AttackBackend for AttackBinding {
+    fn meta(&self) -> &AttackMeta {
+        &self.meta
     }
 
-    pub fn batch(&self) -> usize {
-        self.meta.batch
-    }
-
-    pub fn eval_batch(&self) -> usize {
-        self.meta.eval_batch
-    }
-
-    pub fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32> {
+    fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32> {
         let args = [
             lit1(xp),
             lit1(clf),
@@ -490,7 +298,7 @@ impl AttackBinding {
         Ok(out.to_tuple1()?.to_vec::<f32>()?[0])
     }
 
-    pub fn grad(
+    fn grad(
         &self,
         xp: &[f32],
         clf: &[f32],
@@ -512,8 +320,7 @@ impl AttackBinding {
         Ok(l.to_vec::<f32>()?[0])
     }
 
-    #[allow(clippy::too_many_arguments)]
-    pub fn loss_pair(
+    fn loss_pair(
         &self,
         xp: &[f32],
         v: &[f32],
@@ -537,13 +344,8 @@ impl AttackBinding {
         Ok((lp.to_vec::<f32>()?[0], lb.to_vec::<f32>()?[0]))
     }
 
-    /// (logits [eval_batch, classes], per-image l2 distortion [eval_batch]).
-    pub fn eval(&self, xp: &[f32], clf: &[f32], images: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let args = [
-            lit1(xp),
-            lit1(clf),
-            lit2(images, self.meta.eval_batch, self.meta.image_dim)?,
-        ];
+    fn eval(&self, xp: &[f32], clf: &[f32], images: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let args = [lit1(xp), lit1(clf), lit2(images, self.meta.eval_batch, self.meta.image_dim)?];
         let out = first_buffer(self.eval.execute(&args)?)?.to_literal_sync()?;
         let (lg, dist) = out.to_tuple2()?;
         Ok((lg.to_vec::<f32>()?, dist.to_vec::<f32>()?))

@@ -1,6 +1,9 @@
 //! Integration tests over the full stack: coordinator + optimizers +
-//! runtime + data + comm, on the `quickstart` profile (small enough to run
+//! backend + data + comm, on the `quickstart` profile (small enough to run
 //! many short trainings).
+//!
+//! These run on the always-available native backend, so they execute in
+//! every environment (no artifacts needed — this is the suite CI gates on).
 //!
 //! What is asserted:
 //! * every method decreases the training loss on a learnable mixture,
@@ -9,17 +12,12 @@
 //! * communication/computation counters match the Table-1 accounting,
 //! * the attack driver produces successful universal perturbations.
 
+use hosgd::backend::{Backend, NativeBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with, RunData};
-use hosgd::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping integration tests: run `make artifacts` first");
-        return None;
-    }
-    Some(Runtime::load(dir).expect("runtime load"))
+fn backend() -> NativeBackend {
+    NativeBackend::new()
 }
 
 fn qcfg(method: Method, iters: u64) -> TrainConfig {
@@ -38,14 +36,14 @@ fn qcfg(method: Method, iters: u64) -> TrainConfig {
     }
 }
 
-fn run(rt: &Runtime, cfg: &TrainConfig, data: &RunData) -> hosgd::coordinator::TrainOutcome {
-    let model = rt.model(&cfg.dataset).unwrap();
-    run_train_with(&model, data, cfg).unwrap()
+fn run(be: &dyn Backend, cfg: &TrainConfig, data: &RunData) -> hosgd::coordinator::TrainOutcome {
+    let model = be.model(&cfg.dataset).unwrap();
+    run_train_with(model.as_ref(), data, cfg).unwrap()
 }
 
 #[test]
 fn every_method_decreases_loss() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let base = qcfg(Method::HoSgd, 120);
     let data = make_data(&base).unwrap();
     for method in Method::ALL {
@@ -54,7 +52,7 @@ fn every_method_decreases_loss() {
         if matches!(method, Method::ZoSgd | Method::ZoSvrgAve) {
             cfg.step = StepSize::Constant { alpha: 0.02 };
         }
-        let out = run(&rt, &cfg, &data);
+        let out = run(&be, &cfg, &data);
         let first = out.trace.rows.first().unwrap().train_loss;
         let best = out.trace.best_loss().unwrap();
         assert!(
@@ -66,30 +64,30 @@ fn every_method_decreases_loss() {
 
 #[test]
 fn deterministic_given_seed() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let cfg = qcfg(Method::HoSgd, 30);
     let data = make_data(&cfg).unwrap();
-    let a = run(&rt, &cfg, &data);
-    let b = run(&rt, &cfg, &data);
+    let a = run(&be, &cfg, &data);
+    let b = run(&be, &cfg, &data);
     for (ra, rb) in a.trace.rows.iter().zip(b.trace.rows.iter()) {
         assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
     }
     assert_eq!(a.params, b.params);
     let mut cfg2 = cfg.clone();
     cfg2.seed = 4;
-    let c = run(&rt, &cfg2, &data);
+    let c = run(&be, &cfg2, &data);
     assert_ne!(a.trace.rows[5].train_loss.to_bits(), c.trace.rows[5].train_loss.to_bits());
 }
 
 #[test]
 fn hosgd_tau1_equals_syncsgd_trajectory() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut ho = qcfg(Method::HoSgd, 20);
     ho.tau = 1;
     let data = make_data(&ho).unwrap();
     let sync = TrainConfig { method: Method::SyncSgd, ..ho.clone() };
-    let a = run(&rt, &ho, &data);
-    let b = run(&rt, &sync, &data);
+    let a = run(&be, &ho, &data);
+    let b = run(&be, &sync, &data);
     for (ra, rb) in a.trace.rows.iter().zip(b.trace.rows.iter()) {
         assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
     }
@@ -102,11 +100,11 @@ fn hosgd_tau_ge_n_equals_zosgd_except_first_iteration() {
     // the same init, iterations 1.. must match ZO-SGD run from HO's post-t0
     // state; we assert the weaker but meaningful property: the ZO update
     // schedule of HO with huge τ does only one FO exchange.
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut ho = qcfg(Method::HoSgd, 24);
     ho.tau = 1000;
     let data = make_data(&ho).unwrap();
-    let out = run(&rt, &ho, &data);
+    let out = run(&be, &ho, &data);
     let last = out.trace.rows.last().unwrap();
     let d = out.trace.dim as u64;
     // exactly one FO all-reduce (d floats) + 23 ZO scalars
@@ -116,10 +114,10 @@ fn hosgd_tau_ge_n_equals_zosgd_except_first_iteration() {
 
 #[test]
 fn comm_accounting_matches_table1_hosgd() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let cfg = qcfg(Method::HoSgd, 32); // tau = 4 ⇒ 8 FO rounds
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let last = out.trace.rows.last().unwrap();
     let d = out.trace.dim as u64;
     let fo_rounds = 32 / 4;
@@ -133,11 +131,11 @@ fn comm_accounting_matches_table1_hosgd() {
 
 #[test]
 fn comm_accounting_sync_vs_zo() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let base = qcfg(Method::SyncSgd, 16);
     let data = make_data(&base).unwrap();
-    let sync = run(&rt, &base, &data);
-    let zo = run(&rt, &qcfg(Method::ZoSgd, 16), &data);
+    let sync = run(&be, &base, &data);
+    let zo = run(&be, &qcfg(Method::ZoSgd, 16), &data);
     let d = sync.trace.dim as u64;
     let s_last = sync.trace.rows.last().unwrap();
     let z_last = zo.trace.rows.last().unwrap();
@@ -149,10 +147,10 @@ fn comm_accounting_sync_vs_zo() {
 
 #[test]
 fn risgd_averages_only_every_tau() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let cfg = qcfg(Method::RiSgd, 16); // tau=4 ⇒ 4 averaging rounds
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let last = out.trace.rows.last().unwrap();
     let d = out.trace.dim as u64;
     assert_eq!(last.scalars_per_worker, 4 * d);
@@ -160,11 +158,11 @@ fn risgd_averages_only_every_tau() {
 
 #[test]
 fn qsgd_sends_fewer_bytes_than_syncsgd() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let base = qcfg(Method::SyncSgd, 12);
     let data = make_data(&base).unwrap();
-    let sync = run(&rt, &base, &data);
-    let qs = run(&rt, &qcfg(Method::Qsgd, 12), &data);
+    let sync = run(&be, &base, &data);
+    let qs = run(&be, &qcfg(Method::Qsgd, 12), &data);
     let sb = sync.trace.rows.last().unwrap().bytes_per_worker;
     let qb = qs.trace.rows.last().unwrap().bytes_per_worker;
     assert!(qb < sb / 3, "qsgd bytes {qb} not ≪ sync bytes {sb}");
@@ -172,12 +170,12 @@ fn qsgd_sends_fewer_bytes_than_syncsgd() {
 
 #[test]
 fn eval_accuracy_improves_with_training() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = qcfg(Method::HoSgd, 200);
     cfg.eval_every = 10;
     cfg.step = StepSize::Constant { alpha: 0.02 }; // ZO-stable at d = 499
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let accs: Vec<f64> = out.trace.rows.iter().filter_map(|r| r.test_acc).collect();
     assert!(accs.len() >= 3);
     let first = accs.first().unwrap();
@@ -192,12 +190,12 @@ fn eval_accuracy_improves_with_training() {
 #[test]
 fn mu_sensitivity_zo_still_learns_with_theorem_mu() {
     // Theorem 1's μ = 1/√(dN) should be stable for ZO iterations
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = qcfg(Method::ZoSgd, 150);
     cfg.mu = None; // resolve via 1/sqrt(dN)
     cfg.step = StepSize::Constant { alpha: 0.02 };
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let first = out.trace.rows.first().unwrap().train_loss;
     assert!(out.trace.best_loss().unwrap() < first);
 }
@@ -205,12 +203,13 @@ fn mu_sensitivity_zo_still_learns_with_theorem_mu() {
 #[test]
 fn attack_driver_end_to_end() {
     use hosgd::attack::{build_task, run_attack, AttackConfig};
-    let Some(rt) = runtime() else { return };
-    let bind = rt.attack().unwrap();
-    let task = build_task(&rt, 7, 120).unwrap();
+    use hosgd::backend::AttackBackend;
+    let be = backend();
+    let bind = be.attack().unwrap();
+    let task = build_task(&be, 7, 120).unwrap();
     assert!(task.clf_test_acc > 0.5, "classifier too weak: {}", task.clf_test_acc);
     let cfg = AttackConfig { method: Method::SyncSgd, iters: 60, ..Default::default() };
-    let out = run_attack(&bind, &task, &cfg).unwrap();
+    let out = run_attack(bind.as_ref(), &task, &cfg).unwrap();
     // the CW loss at zero perturbation starts at margin-dominated values
     // and must decrease as the attack optimizes
     let first = out.trace.rows.first().unwrap().train_loss;
@@ -222,25 +221,25 @@ fn attack_driver_end_to_end() {
 
 #[test]
 fn train_config_validation_rejects_bad_runs() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = qcfg(Method::HoSgd, 10);
     cfg.tau = 0;
     let data = make_data(&qcfg(Method::HoSgd, 10)).unwrap();
-    let model = rt.model("quickstart").unwrap();
-    assert!(run_train_with(&model, &data, &cfg).is_err());
+    let model = be.model("quickstart").unwrap();
+    assert!(run_train_with(model.as_ref(), &data, &cfg).is_err());
 }
 
 #[test]
 fn extension_hosgdm_learns_and_matches_ho_comm() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = qcfg(Method::HoSgdM, 80);
     cfg.step = StepSize::Constant { alpha: 0.02 };
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let first = out.trace.rows.first().unwrap().train_loss;
     assert!(out.trace.best_loss().unwrap() < first * 0.9, "momentum variant must learn");
     // momentum is integrated locally: communication identical to HO-SGD
-    let ho = run(&rt, &qcfg(Method::HoSgd, 80), &data);
+    let ho = run(&be, &qcfg(Method::HoSgd, 80), &data);
     assert_eq!(
         out.trace.rows.last().unwrap().scalars_per_worker,
         ho.trace.rows.last().unwrap().scalars_per_worker
@@ -253,12 +252,12 @@ fn extension_hosgdm_learns_and_matches_ho_comm() {
 
 #[test]
 fn extension_qsgd_error_feedback_is_stable_at_one_level() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = qcfg(Method::Qsgd, 100);
     cfg.qsgd_levels = 1;
     cfg.qsgd_error_feedback = true;
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let first = out.trace.rows.first().unwrap().train_loss;
     let last = out.trace.final_loss().unwrap();
     assert!(last.is_finite(), "EF-QSGD must not diverge");
@@ -268,10 +267,10 @@ fn extension_qsgd_error_feedback_is_stable_at_one_level() {
 #[test]
 fn checkpoint_roundtrips_trained_params() {
     use hosgd::coordinator::checkpoint::Checkpoint;
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let cfg = qcfg(Method::SyncSgd, 20);
     let data = make_data(&cfg).unwrap();
-    let out = run(&rt, &cfg, &data);
+    let out = run(&be, &cfg, &data);
     let ck = Checkpoint::new(out.params.clone(), cfg.seed, cfg.iters);
     let dir = std::env::temp_dir().join("hosgd_it_ckpt");
     let path = dir.join("m.ckpt");
@@ -279,9 +278,21 @@ fn checkpoint_roundtrips_trained_params() {
     let back = Checkpoint::load(&path).unwrap();
     assert_eq!(back.params, out.params);
     // restored params evaluate identically
-    let model = rt.model("quickstart").unwrap();
-    let a = hosgd::coordinator::eval_accuracy(&model, &out.params, &data.test).unwrap();
-    let b = hosgd::coordinator::eval_accuracy(&model, &back.params, &data.test).unwrap();
+    let model = be.model("quickstart").unwrap();
+    let a = hosgd::coordinator::eval_accuracy(model.as_ref(), &out.params, &data.test).unwrap();
+    let b = hosgd::coordinator::eval_accuracy(model.as_ref(), &back.params, &data.test).unwrap();
     assert_eq!(a, b);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn backend_selection_roundtrips_through_config() {
+    use hosgd::backend::BackendKind;
+    use hosgd::util::json::Json;
+    let v = Json::parse(r#"{"method": "ho_sgd", "backend": "native", "iters": 5}"#).unwrap();
+    let cfg = TrainConfig::from_json(&v).unwrap();
+    assert_eq!(cfg.backend, BackendKind::Native);
+    let v2 = Json::parse(r#"{"backend": "pjrt"}"#).unwrap();
+    assert_eq!(TrainConfig::from_json(&v2).unwrap().backend, BackendKind::Pjrt);
+    assert!(TrainConfig::from_json(&Json::parse(r#"{"backend": "gpu9000"}"#).unwrap()).is_err());
 }

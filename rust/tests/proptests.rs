@@ -1,11 +1,13 @@
 //! Property-based tests over the coordinator substrates (sharding/batching/
-//! state, RNG, quantizer, comm model, JSON).
+//! state, RNG, quantizer, comm model, JSON) and the native backend's ZO
+//! two-point estimator.
 //!
 //! The environment is offline, so instead of the `proptest` crate this uses
 //! an in-tree driver: [`cases`] runs a property over `n` pseudo-random
 //! cases drawn from the crate's own deterministic RNG, printing the failing
 //! case seed on assertion failure (rerun with that seed to reproduce).
 
+use hosgd::backend::{Backend, ModelBackend, NativeBackend};
 use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
 use hosgd::comm::{CommSim, NetworkModel};
 use hosgd::config::StepSize;
@@ -280,6 +282,58 @@ fn prop_step_size_rules_positive_and_decaying() {
             assert!(a > 0.0 && a <= prev);
             prev = a;
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// native backend: the ZO two-point estimator vs the analytic derivative
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_native_two_point_scalar_converges_to_directional_derivative() {
+    // eq. (4): (F(x + μ·v) − F(x))/μ → ⟨∇F(x), v⟩ as μ → 0. Probing along
+    // v = ∇F/‖∇F‖ keeps the signal well above the f32 evaluation noise, so
+    // the property is checkable at finite μ.
+    let be = NativeBackend::new();
+    let model = be.model("quickstart").unwrap();
+    let d = model.dim();
+    let (f, c, b) = (model.features(), model.classes(), model.batch());
+    cases(8, |seed, rng| {
+        let params = rand_vec(rng, d, 0.2);
+        let x = rand_vec(rng, b * f, 1.0);
+        let y: Vec<f32> = (0..b).map(|_| rng.next_below(c) as f32).collect();
+        let mut g = vec![0.0f32; d];
+        model.grad(&params, &x, &y, &mut g).unwrap();
+        let norm = g.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        if norm < 1e-4 {
+            return; // degenerate draw: no usable gradient signal
+        }
+        let v: Vec<f32> = g.iter().map(|&gi| (gi as f64 / norm) as f32).collect();
+        let dd = norm; // ⟨∇F, ∇F/‖∇F‖⟩ = ‖∇F‖
+        let mut errs = Vec::new();
+        for mu in [1e-2f32, 3e-3, 1e-3] {
+            let (lp, lb) = model.loss_pair(&params, &v, mu, &x, &y).unwrap();
+            let fd = (lp as f64 - lb as f64) / mu as f64;
+            errs.push((fd - dd).abs());
+            // optim::zo_scalar is exactly d·fd (up to one f32 rounding)
+            let s = zo_scalar(d, mu, lp, lb) as f64;
+            let expect = d as f64 * fd;
+            assert!(
+                (s - expect).abs() <= 1e-6 * expect.abs().max(1.0),
+                "seed {seed}: zo_scalar {s} vs d·fd {expect}"
+            );
+        }
+        // smallest-μ estimate lands on the analytic derivative...
+        assert!(
+            errs[2] <= 0.15 * dd + 5e-3,
+            "seed {seed}: err {} at mu=1e-3, dd {dd}",
+            errs[2]
+        );
+        // ...and the bias does not grow as μ shrinks (converging estimator)
+        assert!(
+            errs[2] <= errs[0] + 0.1 * dd + 5e-3,
+            "seed {seed}: errs {errs:?} not shrinking toward dd {dd}"
+        );
     });
 }
 

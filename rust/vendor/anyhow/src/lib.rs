@@ -1,0 +1,226 @@
+//! Vendored minimal reimplementation of the `anyhow` error-handling API.
+//!
+//! The build environment is fully offline, so instead of resolving the
+//! published crate from crates.io this in-tree copy provides the exact API
+//! surface the workspace uses: [`Error`], [`Result`], the [`anyhow!`] and
+//! [`bail!`] macros, and the [`Context`] extension trait. Error values
+//! carry a context chain that renders in `Debug` the same way anyhow's
+//! does (`Caused by:` sections), so `fn main() -> anyhow::Result<()>`
+//! failures stay readable.
+//!
+//! Swapping back to the published crate is a one-line change in
+//! `rust/Cargo.toml`; no call site depends on anything beyond the shared
+//! surface.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error with a chain of human-readable context frames.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error in an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    fn from_std<E: StdError + ?Sized>(err: &E) -> Self {
+        let mut frames = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in frames.into_iter().rev() {
+            out = Some(Error { msg, cause: out.map(Box::new) });
+        }
+        out.expect("at least one frame")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cause = self.cause.as_deref();
+            while let Some(c) = cause {
+                write!(f, ": {}", c.msg)?;
+                cause = c.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cause = self.cause.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::from_std(&err)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("n = {n}");
+        assert_eq!(b.to_string(), "n = 3");
+        let c = anyhow!("n = {}", n);
+        assert_eq!(c.to_string(), "n = 3");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero: 0");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_render_in_debug() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1");
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+        let o: Option<u8> = None;
+        assert_eq!(o.context("absent").unwrap_err().to_string(), "absent");
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 1, "too small: {x}");
+            Ok(x)
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(f(0).unwrap_err().to_string(), "too small: 0");
+    }
+}
