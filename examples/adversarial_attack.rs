@@ -9,6 +9,8 @@
 //!
 //! Run with:
 //!   cargo run --release --example adversarial_attack [method] [iters]
+//! (`HOSGD_THREADS=N` sizes the pool the m = 5 attack workers fan out on;
+//! unset = available parallelism — outcomes are identical at any count)
 
 use std::path::Path;
 

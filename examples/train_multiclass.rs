@@ -4,7 +4,8 @@
 //!
 //! Run with:
 //!   cargo run --release --example train_multiclass [dataset] [iters]
-//! (defaults: sensorless 200)
+//! (defaults: sensorless 200; `HOSGD_THREADS=N` sizes the worker pool,
+//! unset = available parallelism — results are identical at any count)
 
 use std::path::Path;
 

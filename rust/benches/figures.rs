@@ -23,6 +23,13 @@ use hosgd::attack::{build_task, run_attack, AttackConfig};
 use hosgd::backend::{self, Backend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::util::json::Json;
+
+/// `--flag value` lookup over raw argv.
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
@@ -34,14 +41,23 @@ fn main() {
             return;
         }
     };
-    fig2_shape(rt.as_ref(), smoke);
-    fig1_table2_shape(rt.as_ref(), smoke);
+    let fig2 = fig2_shape(rt.as_ref(), smoke);
+    let fig1 = fig1_table2_shape(rt.as_ref(), smoke);
+    if let Some(path) = arg_value("--json") {
+        let doc = Json::obj(vec![("fig2_sensorless", fig2), ("fig1_attack", fig1)]);
+        if let Some(dir) = Path::new(&path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(&path, doc.pretty()).expect("writing figures json");
+        println!("wrote bench results to {path}");
+    }
     println!("\nfigures bench OK{}", if smoke { " (smoke mode)" } else { "" });
 }
 
 /// Fig. 2 (sensorless row): per-iteration convergence ordering and the
-/// byte/wall-clock trade-off.
-fn fig2_shape(rt: &dyn Backend, smoke: bool) {
+/// byte/wall-clock trade-off. Returns the per-method series summary for
+/// the machine-readable artifact.
+fn fig2_shape(rt: &dyn Backend, smoke: bool) -> Json {
     let iters: u64 = if smoke { 32 } else { 96 };
     println!("== Fig. 2 shape check (sensorless, {iters} iters) ==");
     let base = TrainConfig {
@@ -54,6 +70,7 @@ fn fig2_shape(rt: &dyn Backend, smoke: bool) {
     let model = rt.model("sensorless").expect("model");
     let data = make_data(&base).expect("data");
     let mut finals = std::collections::BTreeMap::new();
+    let mut series = Vec::new();
     println!(
         "{:<14} {:>11} {:>10} {:>12} {:>12}",
         "method", "final loss", "test acc", "MB/worker", "simcomm(s)"
@@ -76,6 +93,16 @@ fn fig2_shape(rt: &dyn Backend, smoke: bool) {
             last.bytes_per_worker as f64 / 1e6,
             last.comm_s
         );
+        series.push((
+            method.label(),
+            Json::obj(vec![
+                ("final_loss", Json::num(last.train_loss)),
+                ("best_loss", Json::num(out.trace.best_loss().unwrap())),
+                ("test_acc", out.trace.final_acc().map_or(Json::Null, Json::num)),
+                ("bytes_per_worker", Json::num(last.bytes_per_worker as f64)),
+                ("sim_comm_s", Json::num(last.comm_s)),
+            ]),
+        ));
         finals.insert(method.label().to_string(), (out.trace.best_loss().unwrap(), last));
     }
     // paper shape: HO-SGD moves far fewer bytes than syncSGD — an exact
@@ -86,8 +113,9 @@ fn fig2_shape(rt: &dyn Backend, smoke: bool) {
         ho_b < sync_b / 6.0,
         "HO-SGD bytes {ho_b} not ≪ syncSGD bytes {sync_b} (tau = 8 ⇒ ~8x)"
     );
+    let doc = Json::obj(series);
     if smoke {
-        return;
+        return doc;
     }
     // paper shape: FO-quality methods (ho/sync/ri) beat ZO-SGD per iteration
     let ho = finals["ho_sgd"].0;
@@ -98,11 +126,13 @@ fn fig2_shape(rt: &dyn Backend, smoke: bool) {
         ho < zo && sync < zo,
         "FO-quality methods must outperform pure ZO at equal iterations"
     );
+    doc
 }
 
 /// Fig. 1 + Table 2: attack loss decreases for every method; distortion
-/// ordering FO ≤ HO ≤ ZO (the paper's Table 2 ranking).
-fn fig1_table2_shape(rt: &dyn Backend, smoke: bool) {
+/// ordering FO ≤ HO ≤ ZO (the paper's Table 2 ranking). Returns the
+/// per-method outcome summary for the machine-readable artifact.
+fn fig1_table2_shape(rt: &dyn Backend, smoke: bool) -> Json {
     let iters: u64 = if smoke { 24 } else { 72 };
     let clf_iters: u64 = if smoke { 80 } else { 150 };
     println!("\n== Fig. 1 / Table 2 shape check ({iters} attack iters) ==");
@@ -114,6 +144,7 @@ fn fig1_table2_shape(rt: &dyn Backend, smoke: bool) {
         "method", "loss[0]", "loss[end]", "success", "l2(mean)"
     );
     let mut outcomes = std::collections::BTreeMap::new();
+    let mut series = Vec::new();
     for method in Method::FIGURE_SET {
         let cfg = AttackConfig { method, iters, ..Default::default() };
         let out = run_attack(bind.as_ref(), &task, &cfg).expect("attack run");
@@ -131,10 +162,20 @@ fn fig1_table2_shape(rt: &dyn Backend, smoke: bool) {
             out.trace.best_loss().unwrap() <= first,
             "{method}: attack loss must not increase from start"
         );
+        series.push((
+            method.label(),
+            Json::obj(vec![
+                ("loss_first", Json::num(first)),
+                ("loss_final", Json::num(last)),
+                ("success_rate", Json::num(out.success_rate)),
+                ("l2_mean", Json::num(out.mean_distortion)),
+            ]),
+        ));
         outcomes.insert(method.label().to_string(), out);
     }
+    let doc = Json::obj(series);
     if smoke {
-        return;
+        return doc;
     }
     // Fig. 1 shape: at equal iterations the FO/HO methods reach a lower
     // attack loss than pure-ZO ZO-SVRG (the paper's slowest curve)
@@ -144,4 +185,5 @@ fn fig1_table2_shape(rt: &dyn Backend, smoke: bool) {
         ho <= svrg + 1e-9,
         "HO-SGD best {ho} should not trail ZO-SVRG-Ave best {svrg}"
     );
+    doc
 }

@@ -1,11 +1,16 @@
 //! Hot-path microbenchmarks (§Perf L3): the per-iteration building blocks
-//! of every method, isolated. These are the quantities the optimization
-//! pass iterates on; EXPERIMENTS.md §Perf records before/after.
+//! of every method, isolated, plus the end-to-end quickstart training
+//! segment at 1 thread vs all threads (the parallel worker engine's
+//! headline case). EXPERIMENTS.md §Perf records before/after.
 //!
 //! Run with: cargo bench --bench hotpath
-//! CI smoke: cargo bench --bench hotpath -- --smoke   (few iterations, same
-//! code paths — keeps the bench compiling and running without burning CI
-//! minutes)
+//! CI smoke: cargo bench --bench hotpath -- --smoke --json BENCH_hotpath.json \
+//!               --check rust/benches/baseline_smoke.json
+//!
+//! `--json PATH` writes the results as a machine-readable artifact;
+//! `--check BASELINE` exits non-zero if any case's median regressed more
+//! than 2× against the committed baseline (refresh the baseline by
+//! copying a fresh artifact over it — same JSON shape).
 //!
 //! Backend dispatch cases run on the native backend by default; set
 //! `HOSGD_BACKEND=pjrt` (artifacts + real xla crate required) to measure
@@ -13,11 +18,21 @@
 
 use std::path::Path;
 
-use hosgd::backend::{self, golden, Backend, ModelBackend};
+use hosgd::backend::{self, golden, Backend, ModelBackend, NativeBackend};
 use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with};
 use hosgd::optim::{axpy_acc, axpy_update, zo_scalar};
+use hosgd::pool::resolve_threads;
 use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry, Xoshiro256};
-use hosgd::util::bench::{bench, print_table};
+use hosgd::util::bench::{bench, check_against_baseline, print_table, write_results_json};
+use hosgd::util::json::Json;
+
+/// `--flag value` lookup over raw argv (the bench harness has no Args).
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
@@ -94,7 +109,45 @@ fn main() {
         Err(e) => eprintln!("skipping backend dispatch benches: {e}"),
     }
 
+    // 8-9. the worker engine end-to-end: a quickstart HO-SGD training
+    // segment, sequential vs all threads (bit-identical traces; only the
+    // wall-clock may differ)
+    let train_iters: u64 = if smoke { 30 } else { 150 };
+    let auto = resolve_threads(0);
+    let train_case = |threads: usize, label: &str| {
+        let be = NativeBackend::with_threads(threads);
+        let model = be.model("quickstart").expect("model");
+        let cfg = TrainConfig {
+            method: Method::HoSgd,
+            dataset: "quickstart".into(),
+            iters: train_iters,
+            workers: 4,
+            tau: 4,
+            step: StepSize::Constant { alpha: 0.02 },
+            seed: 3,
+            eval_every: 0,
+            record_every: train_iters,
+            threads,
+            ..Default::default()
+        };
+        let data = make_data(&cfg).expect("data");
+        let name = format!("train ho_sgd quickstart threads={label}");
+        bench(&name, warm(2), reps(10), || {
+            std::hint::black_box(run_train_with(model.as_ref(), &data, &cfg).unwrap());
+        })
+    };
+    let seq = train_case(1, "1");
+    let par = train_case(0, "auto");
+    let speedup = seq.median_s / par.median_s.max(1e-12);
+    results.push(seq);
+    results.push(par);
+
     print_table("hot-path microbenchmarks", &results);
+
+    println!(
+        "\nworker-engine speedup (quickstart, m=4, {train_iters} iters): \
+         {speedup:.2}x at {auto} thread(s) vs sequential"
+    );
 
     // roofline context for §Perf: one ZO iteration = 1 pair-exec + m regens
     // + m axpys; one FO iteration = m grad-execs + allreduce.
@@ -110,5 +163,25 @@ fn main() {
                 "direction regeneration dominates (L3 bound)"
             }
         );
+    }
+
+    if let Some(path) = arg_value("--json") {
+        write_results_json(&path, "hot-path microbenchmarks", &results).expect("writing json");
+    }
+
+    if let Some(baseline_path) = arg_value("--check") {
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("reading baseline {baseline_path}: {e}"));
+        let baseline = Json::parse(&text).expect("parsing baseline json");
+        let failures = check_against_baseline(&results, &baseline, 2.0);
+        if failures.is_empty() {
+            println!("\nbaseline check OK ({baseline_path}, factor 2.0)");
+        } else {
+            eprintln!("\nbaseline check FAILED against {baseline_path}:");
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            std::process::exit(1);
+        }
     }
 }

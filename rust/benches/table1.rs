@@ -18,6 +18,13 @@ use hosgd::config::{Method, TrainConfig};
 use hosgd::coordinator::{make_data, run_train_with};
 use hosgd::theory::{ratios, table1, Table1Params};
 use hosgd::util::bench::fmt_time;
+use hosgd::util::json::Json;
+
+/// `--flag value` lookup over raw argv.
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
@@ -66,6 +73,7 @@ fn main() {
     };
     let data = make_data(&base).expect("data");
     let mut measured = Vec::new();
+    let mut json_rows = Vec::new();
     for method in Method::ALL {
         let cfg = TrainConfig { method, ..base.clone() };
         let t0 = std::time::Instant::now();
@@ -83,7 +91,28 @@ fn main() {
             norm_compute,
             fmt_time(last.comm_s / iters as f64),
         );
+        json_rows.push((
+            method.label(),
+            Json::obj(vec![
+                ("time_per_iter_s", Json::num(wall / iters as f64)),
+                ("scalars_per_iter", Json::num(per_iter_scalars)),
+                ("normalized_compute", Json::num(norm_compute)),
+                ("sim_comm_per_iter_s", Json::num(last.comm_s / iters as f64)),
+            ]),
+        ));
         measured.push((method, per_iter_scalars, norm_compute));
+    }
+    if let Some(path) = arg_value("--json") {
+        let doc = Json::obj(vec![
+            ("dataset", Json::str(dataset)),
+            ("iters", Json::num(iters as f64)),
+            ("measured", Json::obj(json_rows)),
+        ]);
+        if let Some(dir) = Path::new(&path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(&path, doc.pretty()).expect("writing table1 json");
+        println!("wrote bench results to {path}");
     }
 
     // shape assertions — fail loudly if the reproduction breaks the table

@@ -22,6 +22,7 @@ use crate::coordinator::run_train_with;
 use crate::data::Dataset;
 use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Algorithm, Oracle, World};
+use crate::pool::{resolve_threads, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
 use crate::util::json::Json;
 
@@ -59,6 +60,11 @@ pub struct AttackConfig {
     pub svrg_epoch: usize,
     pub svrg_probes: usize,
     pub qsgd_levels: u32,
+    /// worker-pool lanes (0 ⇒ available parallelism; results are identical
+    /// at any count). Only consulted when the attack binding does not bring
+    /// its own pool ([`AttackBackend::pool`] returns `None`, e.g. pjrt) —
+    /// the native backend's pool, sized at backend construction, wins.
+    pub threads: usize,
 }
 
 impl Default for AttackConfig {
@@ -77,6 +83,7 @@ impl Default for AttackConfig {
             svrg_epoch: 10,
             svrg_probes: 4,
             qsgd_levels: 4,
+            threads: 0, // auto, like TrainConfig
         }
     }
 }
@@ -230,6 +237,16 @@ impl Oracle for AttackOracle<'_> {
     fn init_params(&self, _seed: u64) -> Vec<f32> {
         vec![0.0; self.bind.dim()] // the attack starts from zero perturbation
     }
+
+    fn shard(&self) -> Self {
+        Self {
+            bind: self.bind,
+            task: self.task,
+            reg: self.reg,
+            bi: vec![0.0; self.bi.len()],
+            by: vec![0.0; self.by.len()],
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -292,7 +309,12 @@ pub fn run_attack(
     let oracle = AttackOracle::new(bind, task, cfg.seed);
     let init = oracle.init_params(cfg.seed);
     let comm = CommSim::new(Default::default(), cfg.workers);
-    let mut world = World::new(oracle, comm, acfg.clone());
+    // reuse the binding's worker pool so kernels and the m-worker fan-out
+    // share one set of threads; fall back to a cfg-sized pool
+    let pool = bind
+        .pool()
+        .unwrap_or_else(|| std::sync::Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
+    let mut world = World::with_pool(oracle, comm, acfg.clone(), pool);
     let mut algo: Box<dyn Algorithm<AttackOracle>> = build(cfg.method, init, &acfg);
 
     let watch = Stopwatch::start();

@@ -11,6 +11,7 @@
 //! accumulate in f64.
 
 use crate::backend::ProfileMeta;
+use crate::pool::{SliceParts, WorkerPool};
 
 /// Shape of one MLP profile (mirrors `model.py::MLPSpec`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,7 +124,25 @@ impl Scratch {
 
 // ---------------------------------------------------------------------------
 // dense kernels (the rust analogue of kernels/dense.py)
+//
+// Each kernel has a sequential body plus a `_pooled` wrapper that chunks
+// work across a [`WorkerPool`]. Chunk sizes are FIXED constants — never a
+// function of the thread count — and every chunk writes a disjoint slice,
+// so the arithmetic (and hence every bit of the result) is identical at
+// any `--threads` setting. Forward/backprop chunk the batch dimension
+// (rows are independent); the weight-gradient reduction chunks the dw
+// *rows* instead: per (i, j) the adds happen in the same increasing-b
+// order as the sequential kernel, so that too is bit-identical.
 // ---------------------------------------------------------------------------
+
+/// Batch rows per parallel forward/backprop job (fixed; see above).
+const ROW_CHUNK: usize = 16;
+/// Below this many batch rows the row-parallel kernels run inline.
+const MIN_PAR_ROWS: usize = 2 * ROW_CHUNK;
+/// dw rows per parallel wgrad job.
+const WGRAD_CHUNK: usize = 32;
+/// Below this many dw rows the wgrad reduction runs inline.
+const MIN_PAR_WGRAD_ROWS: usize = 2 * WGRAD_CHUNK;
 
 /// `out[b, j] = act(bias[j] + Σ_f x[b, f] · w[f, j])`, row-major.
 #[allow(clippy::too_many_arguments)]
@@ -230,14 +249,121 @@ fn backprop_dense(
     }
 }
 
+/// Batch-chunked [`dense`]: rows are independent, so each job computes a
+/// disjoint row range — bit-identical to the sequential kernel.
+#[allow(clippy::too_many_arguments)]
+fn dense_pooled(
+    x: &[f32],
+    batch: usize,
+    f_in: usize,
+    w: &[f32],
+    bias: &[f32],
+    h_out: usize,
+    relu: bool,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
+    if pool.threads() == 1 || batch < MIN_PAR_ROWS {
+        dense(x, batch, f_in, w, bias, h_out, relu, out);
+        return;
+    }
+    let chunks = batch.div_ceil(ROW_CHUNK);
+    let parts = SliceParts::new(out);
+    pool.scatter(chunks, &|c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(batch);
+        // Safety: row chunks are disjoint by construction
+        let out_c = unsafe { parts.slice(r0 * h_out, (r1 - r0) * h_out) };
+        dense(&x[r0 * f_in..r1 * f_in], r1 - r0, f_in, w, bias, h_out, relu, out_c);
+    });
+}
+
+/// Batch-chunked [`backprop_dense`] — same disjoint-rows argument.
+#[allow(clippy::too_many_arguments)]
+fn backprop_dense_pooled(
+    g: &[f32],
+    batch: usize,
+    cols: usize,
+    w: &[f32],
+    rows: usize,
+    act: &[f32],
+    dx: &mut [f32],
+    pool: &WorkerPool,
+) {
+    if pool.threads() == 1 || batch < MIN_PAR_ROWS {
+        backprop_dense(g, batch, cols, w, rows, act, dx);
+        return;
+    }
+    let chunks = batch.div_ceil(ROW_CHUNK);
+    let parts = SliceParts::new(dx);
+    pool.scatter(chunks, &|c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(batch);
+        // Safety: row chunks are disjoint by construction
+        let dx_c = unsafe { parts.slice(r0 * rows, (r1 - r0) * rows) };
+        let act_c = if act.is_empty() { &[][..] } else { &act[r0 * rows..r1 * rows] };
+        backprop_dense(&g[r0 * cols..r1 * cols], r1 - r0, cols, w, rows, act_c, dx_c);
+    });
+}
+
+/// dw-row-chunked [`accumulate_wgrad`]: the batch reduction per (i, j)
+/// stays in increasing-b order inside every chunk, so the sums are
+/// bit-identical to the sequential kernel at any thread count.
+fn accumulate_wgrad_pooled(
+    a: &[f32],
+    batch: usize,
+    rows: usize,
+    g: &[f32],
+    cols: usize,
+    dw: &mut [f32],
+    pool: &WorkerPool,
+) {
+    if pool.threads() == 1 || rows < MIN_PAR_WGRAD_ROWS {
+        accumulate_wgrad(a, batch, rows, g, cols, dw);
+        return;
+    }
+    let chunks = rows.div_ceil(WGRAD_CHUNK);
+    let parts = SliceParts::new(dw);
+    pool.scatter(chunks, &|c| {
+        let i0 = c * WGRAD_CHUNK;
+        let i1 = (i0 + WGRAD_CHUNK).min(rows);
+        // Safety: dw row ranges are disjoint by construction
+        let dw_c = unsafe { parts.slice(i0 * cols, (i1 - i0) * cols) };
+        for b in 0..batch {
+            let grow = &g[b * cols..(b + 1) * cols];
+            for (i, &av) in a[b * rows + i0..b * rows + i1].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let drow = &mut dw_c[i * cols..(i + 1) * cols];
+                for (d, &gv) in drow.iter_mut().zip(grow.iter()) {
+                    *d += av * gv;
+                }
+            }
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // model entry points (the rust analogue of model.py)
 // ---------------------------------------------------------------------------
 
 /// Forward pass: fills `scratch.h1`, `scratch.h2` and `scratch.logits`.
 pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut Scratch) {
+    forward_pooled(spec, params, x, batch, s, WorkerPool::sequential());
+}
+
+/// [`forward`] with the batch dimension chunked across `pool`.
+pub fn forward_pooled(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    pool: &WorkerPool,
+) {
     let l = spec.split(params);
-    dense(
+    dense_pooled(
         x,
         batch,
         spec.features,
@@ -246,8 +372,9 @@ pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut 
         spec.hidden1,
         true,
         &mut s.h1[..batch * spec.hidden1],
+        pool,
     );
-    dense(
+    dense_pooled(
         &s.h1[..batch * spec.hidden1],
         batch,
         spec.hidden1,
@@ -256,8 +383,9 @@ pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut 
         spec.hidden2,
         true,
         &mut s.h2[..batch * spec.hidden2],
+        pool,
     );
-    dense(
+    dense_pooled(
         &s.h2[..batch * spec.hidden2],
         batch,
         spec.hidden2,
@@ -266,6 +394,7 @@ pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut 
         spec.classes,
         false,
         &mut s.logits[..batch * spec.classes],
+        pool,
     );
 }
 
@@ -296,7 +425,22 @@ pub fn loss(
     batch: usize,
     s: &mut Scratch,
 ) -> f32 {
-    forward(spec, params, x, batch, s);
+    loss_pooled(spec, params, x, y, batch, s, WorkerPool::sequential())
+}
+
+/// [`loss`] with the forward pass chunked across `pool`. The scalar
+/// reduction over logits rows stays sequential (cheap, and its f64
+/// accumulation order must not depend on scheduling).
+pub fn loss_pooled(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    pool: &WorkerPool,
+) -> f32 {
+    forward_pooled(spec, params, x, batch, s, pool);
     loss_from_logits(&s.logits[..batch * spec.classes], y, batch, spec.classes)
 }
 
@@ -310,10 +454,27 @@ pub fn grad(
     s: &mut Scratch,
     out_grad: &mut [f32],
 ) -> f32 {
-    forward(spec, params, x, batch, s);
+    grad_pooled(spec, params, x, y, batch, s, out_grad, WorkerPool::sequential())
+}
+
+/// [`grad`] with forward, backprop and the weight-gradient reductions
+/// chunked across `pool` (bit-identical at any thread count — see the
+/// kernel docs above).
+#[allow(clippy::too_many_arguments)]
+pub fn grad_pooled(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    out_grad: &mut [f32],
+    pool: &WorkerPool,
+) -> f32 {
+    forward_pooled(spec, params, x, batch, s, pool);
     let c = spec.classes;
     let loss = loss_from_logits(&s.logits[..batch * c], y, batch, c);
-    // dL/dlogits = (softmax - onehot) / B
+    // dL/dlogits = (softmax - onehot) / B — O(B·C), stays sequential
     let inv_b = 1.0f32 / batch as f32;
     for b in 0..batch {
         let row = &s.logits[b * c..(b + 1) * c];
@@ -333,9 +494,17 @@ pub fn grad(
     let (h1n, h2n) = (batch * spec.hidden1, batch * spec.hidden2);
     let l = spec.split(params);
     let g = spec.split_mut(out_grad);
-    accumulate_wgrad(&s.h2[..h2n], batch, spec.hidden2, &s.d_logits[..batch * c], c, g.w3);
+    accumulate_wgrad_pooled(
+        &s.h2[..h2n],
+        batch,
+        spec.hidden2,
+        &s.d_logits[..batch * c],
+        c,
+        g.w3,
+        pool,
+    );
     accumulate_bgrad(&s.d_logits[..batch * c], batch, c, g.b3);
-    backprop_dense(
+    backprop_dense_pooled(
         &s.d_logits[..batch * c],
         batch,
         c,
@@ -343,10 +512,19 @@ pub fn grad(
         spec.hidden2,
         &s.h2[..h2n],
         &mut s.d_h2[..h2n],
+        pool,
     );
-    accumulate_wgrad(&s.h1[..h1n], batch, spec.hidden1, &s.d_h2[..h2n], spec.hidden2, g.w2);
+    accumulate_wgrad_pooled(
+        &s.h1[..h1n],
+        batch,
+        spec.hidden1,
+        &s.d_h2[..h2n],
+        spec.hidden2,
+        g.w2,
+        pool,
+    );
     accumulate_bgrad(&s.d_h2[..h2n], batch, spec.hidden2, g.b2);
-    backprop_dense(
+    backprop_dense_pooled(
         &s.d_h2[..h2n],
         batch,
         spec.hidden2,
@@ -354,8 +532,9 @@ pub fn grad(
         spec.hidden1,
         &s.h1[..h1n],
         &mut s.d_h1[..h1n],
+        pool,
     );
-    accumulate_wgrad(x, batch, spec.features, &s.d_h1[..h1n], spec.hidden1, g.w1);
+    accumulate_wgrad_pooled(x, batch, spec.features, &s.d_h1[..h1n], spec.hidden1, g.w1, pool);
     accumulate_bgrad(&s.d_h1[..h1n], batch, spec.hidden1, g.b1);
     loss
 }
@@ -561,6 +740,32 @@ mod tests {
         assert!(gl.w1.iter().all(|&v| v == 0.0));
         assert!(gl.b1.iter().all(|&v| v == 0.0));
         assert!(gl.b3.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn pooled_kernels_bit_match_sequential() {
+        // batch ≥ MIN_PAR_ROWS and hidden ≥ MIN_PAR_WGRAD_ROWS so the
+        // parallel forward/backprop AND wgrad paths actually run
+        let spec = MlpSpec { features: 20, hidden1: 70, hidden2: 70, classes: 5 };
+        let batch = 48;
+        let mut rng = Xoshiro256::seeded(21);
+        let params = rand_vec(&mut rng, spec.dim(), 0.3);
+        let x = rand_vec(&mut rng, batch * spec.features, 1.0);
+        let y: Vec<f32> = (0..batch).map(|b| (b % spec.classes) as f32).collect();
+        let pool = crate::pool::WorkerPool::new(4);
+        let mut s1 = Scratch::new(&spec, batch);
+        let mut s2 = Scratch::new(&spec, batch);
+        let l1 = loss(&spec, &params, &x, &y, batch, &mut s1);
+        let l2 = loss_pooled(&spec, &params, &x, &y, batch, &mut s2, &pool);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        let mut g1 = vec![0.0f32; spec.dim()];
+        let mut g2 = vec![0.0f32; spec.dim()];
+        let gl1 = grad(&spec, &params, &x, &y, batch, &mut s1, &mut g1);
+        let gl2 = grad_pooled(&spec, &params, &x, &y, batch, &mut s2, &mut g2, &pool);
+        assert_eq!(gl1.to_bits(), gl2.to_bits());
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -38,9 +38,21 @@ pub use native::NativeBackend;
 /// One model profile's compiled/bound entry points.
 ///
 /// Signatures mirror `python/compile/model.py`; labels are f32 class ids.
-pub trait ModelBackend {
+///
+/// `Sync` is part of the contract: the worker execution engine drives one
+/// binding from `m` worker threads concurrently (each call must be a pure
+/// function of its arguments — interior scratch goes behind a lock or a
+/// per-call pool, as in [`native::NativeModel`]).
+pub trait ModelBackend: Sync {
     /// Shape metadata of this profile.
     fn meta(&self) -> &ProfileMeta;
+
+    /// The worker pool this binding chunks its kernels over, if any — the
+    /// coordinator reuses it for the per-worker oracle fan-out so the whole
+    /// run shares one set of threads.
+    fn pool(&self) -> Option<std::sync::Arc<crate::pool::WorkerPool>> {
+        None
+    }
 
     /// F(params; batch) — one loss evaluation.
     fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
@@ -84,8 +96,16 @@ pub trait ModelBackend {
 }
 
 /// The Section 5.1 CW universal-perturbation entry points.
-pub trait AttackBackend {
+///
+/// `Sync` for the same reason as [`ModelBackend`]: the attack oracle is
+/// fanned out across worker threads.
+pub trait AttackBackend: Sync {
     fn meta(&self) -> &AttackMeta;
+
+    /// See [`ModelBackend::pool`].
+    fn pool(&self) -> Option<std::sync::Arc<crate::pool::WorkerPool>> {
+        None
+    }
 
     /// CW objective averaged over the image batch.
     fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32>;
@@ -186,22 +206,39 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
-/// Construct a backend selected by an environment variable (the examples
-/// and benches use `HOSGD_BACKEND`): unset ⇒ native, invalid ⇒ error.
+/// Construct a backend selected by environment variables (the examples and
+/// benches use `HOSGD_BACKEND`): unset ⇒ native, invalid ⇒ error. The
+/// thread count comes from `HOSGD_THREADS` (unset/0 ⇒ available
+/// parallelism — results are bit-identical at any count).
 pub fn load_from_env(var: &str, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
     let kind = match std::env::var(var) {
         Ok(s) => s.parse()?,
         Err(_) => BackendKind::default(),
     };
-    load(kind, artifact_dir)
+    let threads = match std::env::var("HOSGD_THREADS") {
+        Ok(s) => s.parse::<usize>().map_err(|e| anyhow!("invalid HOSGD_THREADS {s:?}: {e}"))?,
+        Err(_) => 0,
+    };
+    load_with_threads(kind, artifact_dir, threads)
 }
 
-/// Construct a backend. `artifact_dir` is only read by the PJRT backend
-/// (it holds the AOT-lowered HLO artifacts + `manifest.json`).
+/// Construct a sequential backend (`threads = 1`). `artifact_dir` is only
+/// read by the PJRT backend (AOT-lowered HLO artifacts + `manifest.json`).
 pub fn load(kind: BackendKind, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    load_with_threads(kind, artifact_dir, 1)
+}
+
+/// Construct a backend whose kernels (and, via [`ModelBackend::pool`], the
+/// coordinator's worker fan-out) run on a `threads`-lane
+/// [`crate::pool::WorkerPool`] (`0` ⇒ available parallelism).
+pub fn load_with_threads(
+    kind: BackendKind,
+    artifact_dir: &Path,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
     let _ = artifact_dir; // unused by the native backend
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_threads(threads))),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Box::new(crate::runtime::Runtime::load(artifact_dir)?)),
         #[cfg(not(feature = "pjrt"))]

@@ -12,8 +12,8 @@
 //! recipe `aot.py` uses for `manifest.json` — so `rust/tests/golden.rs`
 //! checks python↔rust numerics end-to-end without any artifacts on disk.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -22,6 +22,31 @@ use super::{
     AttackBackend, AttackGolden, AttackMeta, Backend, BackendKind, Manifest, ModelBackend,
     ProfileGolden, ProfileMeta,
 };
+use crate::pool::{resolve_threads, WorkerPool};
+
+/// A lock-guarded free list of scratch buffers: bindings are `Sync` (the
+/// worker engine calls them from `m` threads at once), so each call pops a
+/// private scratch, computes, and pushes it back. The lock is held only
+/// for the pop/push; the pool warms up to the number of concurrent
+/// callers. Scratch contents never influence results (every buffer is
+/// fully overwritten per call), so reuse order is irrelevant to
+/// determinism.
+struct ScratchPool<T> {
+    free: Mutex<Vec<T>>,
+}
+
+impl<T> ScratchPool<T> {
+    fn new() -> Self {
+        Self { free: Mutex::new(Vec::new()) }
+    }
+
+    fn with<R>(&self, make: impl FnOnce() -> T, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut s = self.free.lock().unwrap().pop().unwrap_or_else(make);
+        let r = f(&mut s);
+        self.free.lock().unwrap().push(s);
+        r
+    }
+}
 
 /// f64 twins of [`super::golden::GOLDEN_MU`] / [`super::golden::GOLDEN_C`]
 /// — the values `aot.py` records into golden tables (a test below pins the
@@ -145,12 +170,24 @@ fn attack_golden() -> AttackGolden {
 // ---------------------------------------------------------------------------
 
 /// Pure-rust compute backend over the built-in profile table.
+///
+/// Owns the [`WorkerPool`] all its bindings chunk their kernels over; the
+/// coordinator picks the same pool up (via [`ModelBackend::pool`]) for the
+/// per-worker oracle fan-out, so one `--threads` knob governs the whole
+/// run. [`NativeBackend::new`] is sequential (`threads = 1`); results are
+/// bit-identical at any thread count either way.
 pub struct NativeBackend {
     manifest: Manifest,
+    pool: Arc<WorkerPool>,
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
+        Self::with_threads(1)
+    }
+
+    /// Backend over a `threads`-lane pool (`0` ⇒ available parallelism).
+    pub fn with_threads(threads: usize) -> Self {
         let mut profiles = BTreeMap::new();
         for &(name, features, hidden1, hidden2, classes, batch) in PROFILES {
             let spec = MlpSpec { features, hidden1, hidden2, classes };
@@ -176,7 +213,15 @@ impl NativeBackend {
             artifacts: BTreeMap::new(),
             golden: Some(attack_golden()),
         });
-        Self { manifest: Manifest { version: 1, profiles, attack } }
+        Self {
+            manifest: Manifest { version: 1, profiles, attack },
+            pool: Arc::new(WorkerPool::new(resolve_threads(threads))),
+        }
+    }
+
+    /// The pool shared by every binding this backend hands out.
+    pub fn worker_pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
     }
 }
 
@@ -211,7 +256,7 @@ impl Backend for NativeBackend {
                 )
             })?
             .clone();
-        Ok(Box::new(NativeModel::new(meta)))
+        Ok(Box::new(NativeModel::with_pool(meta, Arc::clone(&self.pool))))
     }
 
     fn attack(&self) -> Result<Box<dyn AttackBackend>> {
@@ -226,7 +271,7 @@ impl Backend for NativeBackend {
             .get(&meta.clf_profile)
             .map(MlpSpec::from_meta)
             .ok_or_else(|| anyhow!("attack classifier profile {:?} missing", meta.clf_profile))?;
-        Ok(Box::new(NativeAttack::new(meta, clf_spec)))
+        Ok(Box::new(NativeAttack::with_pool(meta, clf_spec, Arc::clone(&self.pool))))
     }
 }
 
@@ -235,22 +280,34 @@ impl Backend for NativeBackend {
 // ---------------------------------------------------------------------------
 
 /// One profile bound to the in-process MLP kernels.
+///
+/// `Sync`: scratch lives in a [`ScratchPool`], so `m` worker threads can
+/// call one binding concurrently; the heavy kernels chunk their batch /
+/// dw-row dimension over the shared [`WorkerPool`].
 pub struct NativeModel {
     meta: ProfileMeta,
     spec: MlpSpec,
-    scratch: RefCell<Scratch>,
+    pool: Arc<WorkerPool>,
+    scratch: ScratchPool<Scratch>,
 }
 
 impl NativeModel {
     pub fn new(meta: ProfileMeta) -> Self {
+        Self::with_pool(meta, Arc::new(WorkerPool::new(1)))
+    }
+
+    pub fn with_pool(meta: ProfileMeta, pool: Arc<WorkerPool>) -> Self {
         let spec = MlpSpec::from_meta(&meta);
-        let scratch = RefCell::new(Scratch::new(&spec, meta.batch));
-        Self { meta, spec, scratch }
+        Self { meta, spec, pool, scratch: ScratchPool::new() }
     }
 
     fn check_xy(&self, x: &[f32], y: &[f32]) {
         debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
         debug_assert_eq!(y.len(), self.meta.batch);
+    }
+
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        self.scratch.with(|| Scratch::new(&self.spec, self.meta.batch), f)
     }
 }
 
@@ -259,19 +316,23 @@ impl ModelBackend for NativeModel {
         &self.meta
     }
 
+    fn pool(&self) -> Option<Arc<WorkerPool>> {
+        Some(Arc::clone(&self.pool))
+    }
+
     fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         self.check_xy(x, y);
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
-        Ok(mlp::loss(&self.spec, params, x, y, self.meta.batch, s))
+        Ok(self.with_scratch(|s| {
+            mlp::loss_pooled(&self.spec, params, x, y, self.meta.batch, s, &self.pool)
+        }))
     }
 
     fn grad(&self, params: &[f32], x: &[f32], y: &[f32], out_grad: &mut [f32]) -> Result<f32> {
         self.check_xy(x, y);
         debug_assert_eq!(out_grad.len(), self.meta.dim);
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
-        Ok(mlp::grad(&self.spec, params, x, y, self.meta.batch, s, out_grad))
+        Ok(self.with_scratch(|s| {
+            mlp::grad_pooled(&self.spec, params, x, y, self.meta.batch, s, out_grad, &self.pool)
+        }))
     }
 
     fn loss_pair(
@@ -284,32 +345,32 @@ impl ModelBackend for NativeModel {
     ) -> Result<(f32, f32)> {
         self.check_xy(x, y);
         debug_assert_eq!(v.len(), self.meta.dim);
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
-        let mut pplus = std::mem::take(&mut s.pplus);
-        mlp::perturb(params, v, mu, &mut pplus);
-        let lp = mlp::loss(&self.spec, &pplus, x, y, self.meta.batch, s);
-        let lb = mlp::loss(&self.spec, params, x, y, self.meta.batch, s);
-        s.pplus = pplus;
-        Ok((lp, lb))
+        Ok(self.with_scratch(|s| {
+            let mut pplus = std::mem::take(&mut s.pplus);
+            mlp::perturb(params, v, mu, &mut pplus);
+            let lp = mlp::loss_pooled(&self.spec, &pplus, x, y, self.meta.batch, s, &self.pool);
+            let lb = mlp::loss_pooled(&self.spec, params, x, y, self.meta.batch, s, &self.pool);
+            s.pplus = pplus;
+            (lp, lb)
+        }))
     }
 
     fn accuracy(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         self.check_xy(x, y);
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
         let b = self.meta.batch;
-        mlp::forward(&self.spec, params, x, b, s);
-        Ok(mlp::accuracy_from_logits(&s.logits[..b * self.meta.classes], y, b, self.meta.classes))
+        Ok(self.with_scratch(|s| {
+            mlp::forward_pooled(&self.spec, params, x, b, s, &self.pool);
+            mlp::accuracy_from_logits(&s.logits[..b * self.meta.classes], y, b, self.meta.classes)
+        }))
     }
 
     fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
         debug_assert_eq!(x.len(), self.meta.batch * self.meta.features);
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
         let b = self.meta.batch;
-        mlp::forward(&self.spec, params, x, b, s);
-        Ok(s.logits[..b * self.meta.classes].to_vec())
+        Ok(self.with_scratch(|s| {
+            mlp::forward_pooled(&self.spec, params, x, b, s, &self.pool);
+            s.logits[..b * self.meta.classes].to_vec()
+        }))
     }
 }
 
@@ -326,23 +387,57 @@ struct AttackScratch {
 }
 
 /// The CW universal-perturbation objective over the in-process classifier.
+///
+/// `Sync` via the same [`ScratchPool`] recipe as [`NativeModel`]. The
+/// attack batches (5 / 10 images) sit far below the kernel chunk gates, so
+/// its own kernels run inline; the pool it exposes drives the *optimizer*
+/// fan-out over the m = 5 attack workers.
 pub struct NativeAttack {
     meta: AttackMeta,
     clf_spec: MlpSpec,
-    scratch: RefCell<AttackScratch>,
+    pool: Arc<WorkerPool>,
+    scratch: ScratchPool<AttackScratch>,
 }
 
 impl NativeAttack {
     pub fn new(meta: AttackMeta, clf_spec: MlpSpec) -> Self {
-        let maxb = meta.batch.max(meta.eval_batch);
-        let scratch = RefCell::new(AttackScratch {
-            z: vec![0.0; maxb * meta.image_dim],
-            dz: vec![0.0; meta.batch * meta.image_dim],
-            d_logits: vec![0.0; meta.batch * clf_spec.classes],
-            xp_plus: vec![0.0; meta.image_dim],
-            clf: Scratch::new(&clf_spec, maxb),
-        });
-        Self { meta, clf_spec, scratch }
+        Self::with_pool(meta, clf_spec, Arc::new(WorkerPool::new(1)))
+    }
+
+    pub fn with_pool(meta: AttackMeta, clf_spec: MlpSpec, pool: Arc<WorkerPool>) -> Self {
+        Self { meta, clf_spec, pool, scratch: ScratchPool::new() }
+    }
+
+    fn make_scratch(&self) -> AttackScratch {
+        let maxb = self.meta.batch.max(self.meta.eval_batch);
+        AttackScratch {
+            z: vec![0.0; maxb * self.meta.image_dim],
+            dz: vec![0.0; self.meta.batch * self.meta.image_dim],
+            d_logits: vec![0.0; self.meta.batch * self.clf_spec.classes],
+            xp_plus: vec![0.0; self.meta.image_dim],
+            clf: Scratch::new(&self.clf_spec, maxb),
+        }
+    }
+
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut AttackScratch) -> R) -> R {
+        self.scratch.with(|| self.make_scratch(), f)
+    }
+
+    /// One CW objective evaluation into caller-held scratch.
+    fn loss_in(
+        &self,
+        s: &mut AttackScratch,
+        xp: &[f32],
+        clf: &[f32],
+        images: &[f32],
+        y: &[f32],
+        c: f32,
+    ) -> f32 {
+        let n = self.meta.batch;
+        let d = self.meta.image_dim;
+        self.transform(xp, images, n, &mut s.z);
+        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
+        self.objective_from_scratch(images, y, c, s)
     }
 
     /// `z_k = 0.5·tanh(atanh(2·a_k) + xp)` — the box-keeping transform.
@@ -395,14 +490,12 @@ impl AttackBackend for NativeAttack {
         &self.meta
     }
 
+    fn pool(&self) -> Option<Arc<WorkerPool>> {
+        Some(Arc::clone(&self.pool))
+    }
+
     fn loss(&self, xp: &[f32], clf: &[f32], images: &[f32], y: &[f32], c: f32) -> Result<f32> {
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
-        let n = self.meta.batch;
-        let d = self.meta.image_dim;
-        self.transform(xp, images, n, &mut s.z);
-        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
-        Ok(self.objective_from_scratch(images, y, c, s))
+        Ok(self.with_scratch(|s| self.loss_in(s, xp, clf, images, y, c)))
     }
 
     fn grad(
@@ -414,41 +507,39 @@ impl AttackBackend for NativeAttack {
         c: f32,
         out_grad: &mut [f32],
     ) -> Result<f32> {
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
         let n = self.meta.batch;
         let d = self.meta.image_dim;
         let classes = self.clf_spec.classes;
         debug_assert_eq!(out_grad.len(), d);
-        self.transform(xp, images, n, &mut s.z);
-        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
-        let loss = self.objective_from_scratch(images, y, c, s);
+        Ok(self.with_scratch(|s| {
+            let loss = self.loss_in(s, xp, clf, images, y, c);
 
-        // d(mean margin term)/d(logits): ±c/n on the active margin rows
-        let inv_n = 1.0f32 / n as f32;
-        s.d_logits.fill(0.0);
-        for k in 0..n {
-            let yi = y[k] as usize;
-            let row = &s.clf.logits[k * classes..(k + 1) * classes];
-            let (margin, jmax) = Self::row_margin(row, yi);
-            if margin > 0.0 {
-                s.d_logits[k * classes + yi] = c * inv_n;
-                s.d_logits[k * classes + jmax] = -c * inv_n;
+            // d(mean margin term)/d(logits): ±c/n on the active margin rows
+            let inv_n = 1.0f32 / n as f32;
+            s.d_logits.fill(0.0);
+            for k in 0..n {
+                let yi = y[k] as usize;
+                let row = &s.clf.logits[k * classes..(k + 1) * classes];
+                let (margin, jmax) = Self::row_margin(row, yi);
+                if margin > 0.0 {
+                    s.d_logits[k * classes + yi] = c * inv_n;
+                    s.d_logits[k * classes + jmax] = -c * inv_n;
+                }
             }
-        }
-        mlp::input_grad(&self.clf_spec, clf, &s.d_logits, n, &mut s.clf, &mut s.dz);
+            mlp::input_grad(&self.clf_spec, clf, &s.d_logits, n, &mut s.clf, &mut s.dz);
 
-        // chain through z = 0.5·tanh(w): dz/dxp = 0.5·(1 − (2z)²); the
-        // distortion term contributes 2/n·(z − a) directly at z.
-        out_grad.fill(0.0);
-        for k in 0..n {
-            for (j, o) in out_grad.iter_mut().enumerate() {
-                let zv = s.z[k * d + j];
-                let dz_total = s.dz[k * d + j] + 2.0 * inv_n * (zv - images[k * d + j]);
-                *o += dz_total * 0.5 * (1.0 - 4.0 * zv * zv);
+            // chain through z = 0.5·tanh(w): dz/dxp = 0.5·(1 − (2z)²); the
+            // distortion term contributes 2/n·(z − a) directly at z.
+            out_grad.fill(0.0);
+            for k in 0..n {
+                for (j, o) in out_grad.iter_mut().enumerate() {
+                    let zv = s.z[k * d + j];
+                    let dz_total = s.dz[k * d + j] + 2.0 * inv_n * (zv - images[k * d + j]);
+                    *o += dz_total * 0.5 * (1.0 - 4.0 * zv * zv);
+                }
             }
-        }
-        Ok(loss)
+            loss
+        }))
     }
 
     fn loss_pair(
@@ -462,38 +553,39 @@ impl AttackBackend for NativeAttack {
         c: f32,
     ) -> Result<(f32, f32)> {
         debug_assert_eq!(v.len(), self.meta.image_dim);
-        // two full evaluations, like the fused attack_pair artifact. The
-        // probe buffer is taken out of the scratch (not borrowed) because
-        // `loss` re-borrows the RefCell.
-        let mut xp_plus = std::mem::take(&mut self.scratch.borrow_mut().xp_plus);
-        xp_plus.resize(self.meta.image_dim, 0.0);
-        mlp::perturb(xp, v, mu, &mut xp_plus);
-        let lp = self.loss(&xp_plus, clf, images, y, c)?;
-        let lb = self.loss(xp, clf, images, y, c)?;
-        self.scratch.borrow_mut().xp_plus = xp_plus;
-        Ok((lp, lb))
+        // two full evaluations, like the fused attack_pair artifact; the
+        // probe point lives in the scratch's xp_plus buffer
+        Ok(self.with_scratch(|s| {
+            let mut xp_plus = std::mem::take(&mut s.xp_plus);
+            xp_plus.resize(self.meta.image_dim, 0.0);
+            mlp::perturb(xp, v, mu, &mut xp_plus);
+            let lp = self.loss_in(s, &xp_plus, clf, images, y, c);
+            let lb = self.loss_in(s, xp, clf, images, y, c);
+            s.xp_plus = xp_plus;
+            (lp, lb)
+        }))
     }
 
     fn eval(&self, xp: &[f32], clf: &[f32], images: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let mut guard = self.scratch.borrow_mut();
-        let s = &mut *guard;
         let n = self.meta.eval_batch;
         let d = self.meta.image_dim;
         let classes = self.clf_spec.classes;
         debug_assert_eq!(images.len(), n * d);
-        self.transform(xp, images, n, &mut s.z);
-        mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
-        let logits = s.clf.logits[..n * classes].to_vec();
-        let mut dist = Vec::with_capacity(n);
-        for k in 0..n {
-            let mut acc = 0.0f64;
-            for j in 0..d {
-                let diff = (s.z[k * d + j] - images[k * d + j]) as f64;
-                acc += diff * diff;
+        Ok(self.with_scratch(|s| {
+            self.transform(xp, images, n, &mut s.z);
+            mlp::forward(&self.clf_spec, clf, &s.z[..n * d], n, &mut s.clf);
+            let logits = s.clf.logits[..n * classes].to_vec();
+            let mut dist = Vec::with_capacity(n);
+            for k in 0..n {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    let diff = (s.z[k * d + j] - images[k * d + j]) as f64;
+                    acc += diff * diff;
+                }
+                dist.push(acc.sqrt() as f32);
             }
-            dist.push(acc.sqrt() as f32);
-        }
-        Ok((logits, dist))
+            (logits, dist)
+        }))
     }
 }
 
@@ -570,6 +662,55 @@ mod tests {
         model.grad(&params, &x, &y, &mut g1).unwrap();
         model.grad(&params, &x, &y, &mut g2).unwrap();
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn threaded_backend_bit_matches_sequential() {
+        // sensorless (B = 64, hidden 128) exercises the chunked forward,
+        // backprop and wgrad paths — results must be bit-identical
+        let seq = NativeBackend::with_threads(1);
+        let par = NativeBackend::with_threads(4);
+        let m1 = seq.model("sensorless").unwrap();
+        let m4 = par.model("sensorless").unwrap();
+        let d = m1.dim();
+        let params = golden_params(d);
+        let (x, y) = crate::backend::golden::golden_batch(m1.batch(), m1.features(), m1.classes());
+        assert_eq!(
+            m1.loss(&params, &x, &y).unwrap().to_bits(),
+            m4.loss(&params, &x, &y).unwrap().to_bits()
+        );
+        let mut g1 = vec![0.0f32; d];
+        let mut g4 = vec![0.0f32; d];
+        let l1 = m1.grad(&params, &x, &y, &mut g1).unwrap();
+        let l4 = m4.grad(&params, &x, &y, &mut g4).unwrap();
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        assert_eq!(g1, g4);
+        let v = crate::backend::golden::golden_direction(d);
+        let p1 = m1.loss_pair(&params, &v, 1e-3, &x, &y).unwrap();
+        let p4 = m4.loss_pair(&params, &v, 1e-3, &x, &y).unwrap();
+        assert_eq!(p1.0.to_bits(), p4.0.to_bits());
+        assert_eq!(p1.1.to_bits(), p4.1.to_bits());
+    }
+
+    #[test]
+    fn model_binding_supports_concurrent_callers() {
+        // the Sync contract: m worker threads share one binding
+        let be = NativeBackend::with_threads(2);
+        let model = be.model("quickstart").unwrap();
+        let params = golden_params(model.dim());
+        let (x, y) =
+            crate::backend::golden::golden_batch(model.batch(), model.features(), model.classes());
+        let expect = model.loss(&params, &x, &y).unwrap().to_bits();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let l = model.loss(&params, &x, &y).unwrap();
+                        assert_eq!(l.to_bits(), expect);
+                    }
+                });
+            }
+        });
     }
 
     #[test]

@@ -173,6 +173,15 @@ pub struct TrainConfig {
     /// heavy-ball coefficient for the HO-SGD+M extension
     pub momentum: f64,
     pub network: NetworkModel,
+    /// worker-pool lanes for the parallel execution engine (0 ⇒ available
+    /// parallelism). Traces are bit-identical at any value — the fan-out
+    /// reduces per-worker results in fixed worker order. NOTE: when the
+    /// model binding brings its own pool ([`crate::backend::ModelBackend::pool`],
+    /// as the native backend does), that pool — sized at backend
+    /// construction — takes precedence; this key sizes the run's pool only
+    /// for pool-less bindings (e.g. pjrt). The CLI passes `--threads` to
+    /// both places, so they cannot diverge there.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -198,6 +207,7 @@ impl Default for TrainConfig {
             qsgd_error_feedback: false,
             momentum: 0.9,
             network: NetworkModel::default(),
+            threads: 0, // auto
         }
     }
 }
@@ -310,6 +320,9 @@ impl TrainConfig {
         if let Some(x) = gn("momentum") {
             cfg.momentum = x;
         }
+        if let Some(x) = gn("threads") {
+            cfg.threads = x as usize;
+        }
         if let Some(n) = v.get("network") {
             if let (Some(lat), Some(bw)) = (
                 n.get("latency_s").and_then(Json::as_f64),
@@ -345,6 +358,7 @@ impl TrainConfig {
             ("qsgd_levels", Json::num(self.qsgd_levels as f64)),
             ("qsgd_error_feedback", Json::Bool(self.qsgd_error_feedback)),
             ("momentum", Json::num(self.momentum)),
+            ("threads", Json::num(self.threads as f64)),
             (
                 "network",
                 Json::obj(vec![
@@ -439,7 +453,12 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let c = TrainConfig { mu: Some(0.01), backend: BackendKind::Pjrt, ..Default::default() };
+        let c = TrainConfig {
+            mu: Some(0.01),
+            backend: BackendKind::Pjrt,
+            threads: 4,
+            ..Default::default()
+        };
         let text = c.to_json().pretty();
         let back = TrainConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.method, c.method);
@@ -448,6 +467,14 @@ mod tests {
         assert_eq!(back.dataset, c.dataset);
         assert_eq!(back.mu, c.mu);
         assert_eq!(back.qsgd_levels, c.qsgd_levels);
+        assert_eq!(back.threads, 4);
+    }
+
+    #[test]
+    fn threads_defaults_to_auto_and_loads_from_json() {
+        assert_eq!(TrainConfig::default().threads, 0);
+        let v = Json::parse(r#"{"threads": 2}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().threads, 2);
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! The leader loop: drives `m` simulated workers through N iterations of a
-//! chosen method over a backend-bound model profile, producing a [`Trace`].
+//! The leader loop: drives `m` workers through N iterations of a chosen
+//! method over a backend-bound model profile, producing a [`Trace`]. The
+//! per-iteration worker fan-out runs on a [`crate::pool::WorkerPool`]
+//! (`threads` in [`TrainConfig`] / `--threads` on the CLI) with a
+//! fixed-order reduction, so traces are bit-identical at any thread count.
 //!
 //! Responsibilities: dataset materialization + sharding, initial-point
 //! broadcast (all methods start from the same Glorot init — §5.2 "all the
@@ -10,6 +13,8 @@
 
 pub mod checkpoint;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::backend::{Backend, ModelBackend};
@@ -18,6 +23,7 @@ use crate::config::TrainConfig;
 use crate::data::{profile, Dataset};
 use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Oracle, TrainOracle, World};
+use crate::pool::{resolve_threads, WorkerPool};
 
 /// Materialized datasets for one run.
 pub struct RunData {
@@ -37,21 +43,40 @@ pub fn make_data(cfg: &TrainConfig) -> Result<RunData> {
     Ok(RunData { train, test })
 }
 
-/// Test-set accuracy of `params`, evaluated in model-batch chunks.
+/// Test-set accuracy of `params` over **all** samples: full model-batch
+/// chunks go through the fused `accuracy` entry point; the tail remainder
+/// (including test sets smaller than one batch) is zero-padded through
+/// `predict` and scored on its real rows only. Rows of a dense forward
+/// are independent, so padding cannot change the real rows' logits.
 pub fn eval_accuracy(model: &dyn ModelBackend, params: &[f32], test: &Dataset) -> Result<f64> {
     let b = model.batch();
     let f = model.features();
-    let chunks = test.len() / b;
-    if chunks == 0 {
+    let classes = model.classes();
+    let n = test.len();
+    if n == 0 {
         return Ok(f64::NAN);
     }
+    let chunks = n / b;
     let mut correct = 0.0f64;
     for c in 0..chunks {
         let x = &test.x[c * b * f..(c + 1) * b * f];
         let y = &test.y[c * b..(c + 1) * b];
         correct += model.accuracy(params, x, y)? as f64;
     }
-    Ok(correct / (chunks * b) as f64)
+    let tail = n - chunks * b;
+    if tail > 0 {
+        let mut xp = vec![0.0f32; b * f];
+        xp[..tail * f].copy_from_slice(&test.x[chunks * b * f..]);
+        let logits = model.predict(params, &xp)?;
+        let y_tail = &test.y[chunks * b..];
+        correct += (0..tail)
+            .filter(|&k| {
+                crate::backend::mlp::argmax(&logits[k * classes..(k + 1) * classes])
+                    == y_tail[k] as usize
+            })
+            .count() as f64;
+    }
+    Ok(correct / n as f64)
 }
 
 /// A finished training run: the trace plus the final (deployable) model.
@@ -86,7 +111,13 @@ pub fn run_train_with(
     let oracle = TrainOracle::new(model, &data.train, cfg.workers, redundancy, cfg.seed);
     let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
     let comm = CommSim::new(cfg.network, cfg.workers);
-    let mut world = World::new(oracle, comm, acfg.clone());
+    // the worker execution engine: reuse the model's kernel pool so one
+    // `--threads` knob governs the whole run; otherwise build one from the
+    // config (traces are bit-identical at any thread count either way)
+    let pool = model
+        .pool()
+        .unwrap_or_else(|| Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
+    let mut world = World::with_pool(oracle, comm, acfg.clone(), pool);
     let mut algo = build(cfg.method, init, &acfg);
 
     let mut rows = Vec::with_capacity((cfg.iters / cfg.record_every.max(1)) as usize + 2);

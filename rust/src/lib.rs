@@ -33,6 +33,9 @@
 //!   QSGD quantizer substrate
 //! - [`optim`] — HO-SGD (the contribution) and the baselines:
 //!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD
+//! - [`pool`] — the parallel worker execution engine (`--threads N`):
+//!   per-worker oracle fan-out + batch-chunked kernels with deterministic
+//!   fixed-order reduction (bit-identical traces at any thread count)
 //! - [`coordinator`] — the leader loop driving `m` workers
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
@@ -47,6 +50,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod optim;
+pub mod pool;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -23,11 +23,14 @@ use hosgd::util::cli::Args;
 const USAGE: &str = "\
 hosgd — Hybrid-Order Distributed SGD (Omidvar et al. 2020) reproduction
 
-USAGE: hosgd [--backend native|pjrt] [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
+USAGE: hosgd [--backend native|pjrt] [--threads N] [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
 
 GLOBAL FLAGS
   --backend B    compute backend: native (default, pure rust) or pjrt
                  (AOT artifacts through PJRT; needs --features pjrt)
+  --threads N    worker-pool lanes for the parallel execution engine
+                 (default 0 = available parallelism; traces are
+                 bit-identical at any value)
   --artifacts D  artifact directory for the pjrt backend (default: artifacts)
   --out D        result directory (default: results)
 
@@ -35,6 +38,7 @@ SUBCOMMANDS
   train          single training run
                  --method M --dataset D --iters N --workers M --tau T
                  --mu F --lr F --seed S --eval-every K --config FILE.json
+                 --canonical FILE.json (timing-free trace for diffing)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
                  --dump-images
@@ -50,9 +54,14 @@ SUBCOMMANDS
   list-artifacts print the backend's profile manifest
 ";
 
-fn open_backend(kind: BackendKind, artifacts: &str) -> Result<Box<dyn Backend>> {
-    let be = backend::load(kind, Path::new(artifacts))?;
-    eprintln!("# backend: {} ({})", be.kind(), be.platform());
+fn open_backend(kind: BackendKind, artifacts: &str, threads: usize) -> Result<Box<dyn Backend>> {
+    let be = backend::load_with_threads(kind, Path::new(artifacts), threads)?;
+    eprintln!(
+        "# backend: {} ({}), {} worker-pool lane(s)",
+        be.kind(),
+        be.platform(),
+        hosgd::pool::resolve_threads(threads)
+    );
     Ok(be)
 }
 
@@ -61,6 +70,7 @@ fn main() -> Result<()> {
     let artifacts = args.get_str("artifacts", "artifacts");
     let out_dir = args.get_str("out", "results");
     let cli_backend: Option<BackendKind> = args.get_opt("backend")?;
+    let threads = args.get::<usize>("threads", 0)?;
     let Some(cmd) = args.subcommand() else {
         eprint!("{USAGE}");
         bail!("missing subcommand");
@@ -70,7 +80,7 @@ fn main() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args, &artifacts, cli_backend, &out_dir)?,
         "fig2" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 400)?;
             let seed = args.get::<u64>("seed", 1)?;
             let datasets: Vec<String> = if args.has("all") {
@@ -84,17 +94,17 @@ fn main() -> Result<()> {
             }
         }
         "fig1" | "attack" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 7)?;
             let clf_iters = args.get::<u64>("clf-iters", 400)?;
             let dump = args.has("dump-images");
             let c = args.get_opt::<f32>("c")?;
             args.finish()?;
-            run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c)?;
+            run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c, threads)?;
         }
         "table1" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 64)?;
             let tau = args.get::<usize>("tau", 8)?;
@@ -115,7 +125,7 @@ fn main() -> Result<()> {
             }
         }
         "ablate-tau" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 240)?;
             let taus: Vec<usize> = args
@@ -127,7 +137,7 @@ fn main() -> Result<()> {
             run_ablate_tau(be.as_ref(), &out_dir, &dataset, iters, &taus)?;
         }
         "e2e" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 1)?;
             args.finish()?;
@@ -159,7 +169,7 @@ fn main() -> Result<()> {
             run_report(&out_dir, &kind, &dataset)?;
         }
         "sweep-workers" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 200)?;
             let workers: Vec<usize> = args
@@ -171,7 +181,7 @@ fn main() -> Result<()> {
             run_sweep_workers(be.as_ref(), &dataset, iters, &workers)?;
         }
         "sweep-mu" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
             let mus: Vec<f64> = args
@@ -183,19 +193,19 @@ fn main() -> Result<()> {
             run_sweep_mu(be.as_ref(), &dataset, iters, &mus)?;
         }
         "ablate-ef" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
             args.finish()?;
             run_ablate_ef(be.as_ref(), &dataset, iters)?;
         }
         "golden-check" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             args.finish()?;
             golden_check(be.as_ref())?;
         }
         "list-artifacts" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             args.finish()?;
             let m = be.manifest();
             for (name, p) in &m.profiles {
@@ -252,8 +262,10 @@ fn cmd_train(
     }
     cfg.seed = args.get("seed", cfg.seed)?;
     cfg.eval_every = args.get("eval-every", cfg.eval_every)?;
+    cfg.threads = args.get("threads", cfg.threads)?;
+    let canonical = args.get_opt::<String>("canonical")?;
     args.finish()?;
-    let be = open_backend(cfg.backend, artifacts)?;
+    let be = open_backend(cfg.backend, artifacts, cfg.threads)?;
     let model = be.model(&cfg.dataset)?;
     let data = make_data(&cfg)?;
     let out = run_train_with(model.as_ref(), &data, &cfg)?;
@@ -261,6 +273,10 @@ fn cmd_train(
     let base = format!("{}/train_{}_{}", out_dir, cfg.dataset, cfg.method.label());
     out.trace.write_csv(format!("{base}.csv"))?;
     out.trace.write_json(format!("{base}.json"))?;
+    if let Some(path) = canonical {
+        out.trace.write_json_canonical(&path)?;
+        println!("wrote canonical trace {path}");
+    }
     println!("wrote {base}.csv");
     Ok(())
 }
@@ -328,6 +344,7 @@ fn run_fig1(
     clf_iters: u64,
     dump_images: bool,
     c: Option<f32>,
+    threads: usize,
 ) -> Result<()> {
     println!("== Fig. 1: universal adversarial perturbation (d=900, m=5, B=5) ==");
     let bind = be.attack()?;
@@ -339,7 +356,7 @@ fn run_fig1(
         "METHOD", "FINAL LOSS", "SUCCESS", "L2 (least)", "L2 (mean)"
     );
     for method in Method::FIGURE_SET {
-        let cfg = AttackConfig { method, iters, seed, c, ..Default::default() };
+        let cfg = AttackConfig { method, iters, seed, c, threads, ..Default::default() };
         let outcome = run_attack(bind.as_ref(), &task, &cfg)?;
         outcome.trace.write_csv(format!("{out_dir}/fig1_{}.csv", method.label()))?;
         println!(

@@ -142,9 +142,59 @@ impl Trace {
             .with_context(|| format!("writing {}", path.display()))?;
         Ok(())
     }
+
+    /// The canonical (timing-free) trace: everything that must be
+    /// bit-reproducible across runs and thread counts — losses, counters,
+    /// comm volume — with the measured wall-clock fields dropped. The CI
+    /// `determinism` job diffs this file between `--threads 1` and
+    /// `--threads 4` runs.
+    pub fn to_json_canonical(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(TraceRow::to_json_canonical).collect()),
+            ),
+        ])
+    }
+
+    pub fn write_json_canonical(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json_canonical().pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
 }
 
 impl TraceRow {
+    /// Deterministic fields only — see [`Trace::to_json_canonical`]. The
+    /// train loss is emitted as raw f64 bits so the diff is exact, not a
+    /// formatting artifact.
+    pub fn to_json_canonical(&self) -> Json {
+        Json::obj(vec![
+            ("iter", Json::num(self.iter as f64)),
+            ("train_loss_bits", Json::str(format!("{:016x}", self.train_loss.to_bits()))),
+            (
+                "test_acc_bits",
+                self.test_acc
+                    .map_or(Json::Null, |a| Json::str(format!("{:016x}", a.to_bits()))),
+            ),
+            ("bytes_per_worker", Json::num(self.bytes_per_worker as f64)),
+            ("scalars_per_worker", Json::num(self.scalars_per_worker as f64)),
+            ("fn_evals", Json::num(self.fn_evals as f64)),
+            ("grad_evals", Json::num(self.grad_evals as f64)),
+        ])
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("iter", Json::num(self.iter as f64)),
@@ -244,6 +294,18 @@ mod tests {
         assert!(s.contains("\"rows\":["));
         // null test_acc for unevaluated rows
         assert!(s.contains("\"test_acc\":null"));
+    }
+
+    #[test]
+    fn canonical_json_has_no_timing_and_exact_loss_bits() {
+        let t = trace();
+        let s = t.to_json_canonical().compact();
+        assert!(!s.contains("compute_s"));
+        assert!(!s.contains("comm_s"));
+        assert!(!s.contains("total_s"));
+        let bits = format!("{:016x}", 2.0f64.to_bits());
+        assert!(s.contains(&bits), "{s}");
+        assert!(s.contains("\"test_acc_bits\":null"));
     }
 
     #[test]

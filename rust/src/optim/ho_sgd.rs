@@ -32,8 +32,11 @@ impl HoSgd {
     }
 }
 
-/// One first-order iteration (eq. (3) + (5)-(6)): m worker gradients,
-/// one d-float all-reduce, shared update. Returns the mean worker loss.
+/// One first-order iteration (eq. (3) + (5)-(6)): the m worker gradients
+/// run in parallel on the pool, then one d-float all-reduce is modelled
+/// and the shared update applied. The reduction walks the per-worker
+/// slots in fixed worker order, so the result is bit-identical to the
+/// sequential schedule. Returns the mean worker loss.
 pub(crate) fn fo_iteration<O: Oracle>(
     params: &mut [f32],
     t: u64,
@@ -41,15 +44,21 @@ pub(crate) fn fo_iteration<O: Oracle>(
     alpha: f32,
 ) -> Result<f64> {
     let m = w.cfg.m;
-    let d = w.oracle.dim();
-    let b = w.oracle.batch_size();
-    w.gsum.fill(0.0);
+    let d = w.dim();
+    let b = w.batch_size();
+    w.fan_out(|i, ctx| {
+        ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
+        Ok(())
+    })?;
     let mut loss_sum = 0.0f64;
-    for i in 0..m {
-        let l = w.oracle.grad(params, t, i as u64, &mut w.g)?;
-        loss_sum += l as f64;
-        axpy_acc(&mut w.gsum, 1.0 / m as f32, &w.g);
-        w.compute.grad_evals += b as u64;
+    {
+        let World { workers, gsum, compute, .. } = w;
+        gsum.fill(0.0);
+        for ctx in workers.iter() {
+            loss_sum += ctx.loss as f64;
+            axpy_acc(gsum, 1.0 / m as f32, &ctx.g);
+            compute.grad_evals += b as u64;
+        }
     }
     // each worker's egress: its d-float gradient vector
     w.comm.allreduce_floats(d as u64);
@@ -58,9 +67,10 @@ pub(crate) fn fo_iteration<O: Oracle>(
 }
 
 /// One zeroth-order iteration (eq. (4) + (5)-(6)): every worker probes its
-/// pre-shared direction, transmits one scalar; every rank regenerates all
-/// directions locally and applies the shared update. Returns the mean
-/// base loss (free — it is one of the two function evaluations).
+/// pre-shared direction in parallel and transmits one scalar; the rank
+/// regenerates directions locally and applies the shared update via the
+/// fixed-order reduction. Returns the mean base loss (free — it is one of
+/// the two function evaluations).
 pub(crate) fn zo_iteration<O: Oracle>(
     params: &mut [f32],
     t: u64,
@@ -68,18 +78,26 @@ pub(crate) fn zo_iteration<O: Oracle>(
     alpha: f32,
 ) -> Result<f64> {
     let m = w.cfg.m;
-    let d = w.oracle.dim();
-    let b = w.oracle.batch_size();
+    let d = w.dim();
+    let b = w.batch_size();
     let mu = w.cfg.mu;
-    w.gsum.fill(0.0);
+    w.fan_out(|i, ctx| {
+        ctx.regen_direction(t, i);
+        let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
+        ctx.loss_plus = lp;
+        ctx.loss = lb;
+        Ok(())
+    })?;
     let mut loss_sum = 0.0f64;
-    for i in 0..m {
-        w.regen_direction(t, i as u64);
-        let (lp, lb) = w.zo_probe(params, mu, t, i as u64)?;
-        let s = zo_scalar(d, mu, lp, lb);
-        loss_sum += lb as f64;
-        axpy_acc(&mut w.gsum, s / m as f32, &w.dir);
-        w.compute.fn_evals += 2 * b as u64;
+    {
+        let World { workers, gsum, compute, .. } = w;
+        gsum.fill(0.0);
+        for ctx in workers.iter() {
+            let s = zo_scalar(d, mu, ctx.loss_plus, ctx.loss);
+            loss_sum += ctx.loss as f64;
+            axpy_acc(gsum, s / m as f32, &ctx.dir);
+            compute.fn_evals += 2 * b as u64;
+        }
     }
     // each worker's egress: ONE f32 scalar (the paper's headline saving)
     w.comm.allgather_scalar();
@@ -93,7 +111,7 @@ impl<O: Oracle> Algorithm<O> for HoSgd {
     }
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
-        let alpha = w.cfg.alpha(t, w.oracle.batch_size());
+        let alpha = w.cfg.alpha(t, w.batch_size());
         if t % w.cfg.tau as u64 == 0 {
             fo_iteration(&mut self.params, t, w, alpha)
         } else {

@@ -36,31 +36,49 @@ impl<O: Oracle> Algorithm<O> for HoSgdM {
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
         let m = w.cfg.m;
-        let d = w.oracle.dim();
-        let b = w.oracle.batch_size();
+        let d = w.dim();
+        let b = w.batch_size();
         let mu = w.cfg.mu;
         let beta = w.cfg.momentum as f32;
         let alpha = w.cfg.alpha(t, b);
 
-        // build Ḡ_t exactly like HO-SGD (same comm/compute accounting)
-        w.gsum.fill(0.0);
+        // build Ḡ_t exactly like HO-SGD (same comm/compute accounting):
+        // the per-worker oracle calls fan out in parallel, the reduction
+        // into gsum walks the slots in fixed worker order
+        let params = &self.params;
         let mut loss_sum = 0.0f64;
         if t % w.cfg.tau as u64 == 0 {
-            for i in 0..m {
-                let l = w.oracle.grad(&self.params, t, i as u64, &mut w.g)?;
-                loss_sum += l as f64;
-                axpy_acc(&mut w.gsum, 1.0 / m as f32, &w.g);
-                w.compute.grad_evals += b as u64;
+            w.fan_out(|i, ctx| {
+                ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
+                Ok(())
+            })?;
+            {
+                let World { workers, gsum, compute, .. } = w;
+                gsum.fill(0.0);
+                for ctx in workers.iter() {
+                    loss_sum += ctx.loss as f64;
+                    axpy_acc(gsum, 1.0 / m as f32, &ctx.g);
+                    compute.grad_evals += b as u64;
+                }
             }
             w.comm.allreduce_floats(d as u64);
         } else {
-            for i in 0..m {
-                w.regen_direction(t, i as u64);
-                let (lp, lb) = w.zo_probe(&self.params, mu, t, i as u64)?;
-                let s = zo_scalar(d, mu, lp, lb);
-                loss_sum += lb as f64;
-                axpy_acc(&mut w.gsum, s / m as f32, &w.dir);
-                w.compute.fn_evals += 2 * b as u64;
+            w.fan_out(|i, ctx| {
+                ctx.regen_direction(t, i);
+                let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
+                ctx.loss_plus = lp;
+                ctx.loss = lb;
+                Ok(())
+            })?;
+            {
+                let World { workers, gsum, compute, .. } = w;
+                gsum.fill(0.0);
+                for ctx in workers.iter() {
+                    let s = zo_scalar(d, mu, ctx.loss_plus, ctx.loss);
+                    loss_sum += ctx.loss as f64;
+                    axpy_acc(gsum, s / m as f32, &ctx.dir);
+                    compute.fn_evals += 2 * b as u64;
+                }
             }
             w.comm.allgather_scalar();
         }

@@ -12,10 +12,15 @@
 //! the same minibatch — which is exactly what ZO-SVRG's control variate
 //! requires.
 //!
-//! All state updates are deterministic given the config seed; workers are
-//! stepped sequentially (single-core simulated testbed), while the
-//! *cost* of the parallel execution is accounted in [`CommSim`] /
-//! [`ComputeCounters`].
+//! All state updates are deterministic given the config seed. Workers
+//! execute **in parallel** on the [`crate::pool::WorkerPool`]: every
+//! algorithm expresses its iteration as a per-worker task
+//! ([`World::fan_out`]) whose results land in per-worker slots
+//! ([`WorkerCtx`]), and the reduction over those slots runs on the main
+//! thread in **fixed worker order** — so traces are bit-identical at any
+//! `--threads` setting. The *modelled* cost of the distributed execution
+//! is still accounted in [`CommSim`] / [`ComputeCounters`] on the main
+//! thread, exactly as in the sequential testbed.
 
 pub mod ho_sgd;
 pub mod ho_sgd_m;
@@ -25,12 +30,15 @@ pub mod sync_sgd;
 pub mod zo_sgd;
 pub mod zo_svrg;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::backend::ProfileMeta;
 use crate::comm::CommSim;
 use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
+use crate::pool::{Shards, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
 
 // ---------------------------------------------------------------------------
@@ -42,7 +50,13 @@ use crate::rng::{SeedRegistry, Xoshiro256};
 /// `(iter, worker)` identify the minibatch ζ via the pre-shared data seeds;
 /// repeated calls with the same pair observe the same sample (needed by
 /// ZO-SVRG's variance-reduced estimator).
-pub trait Oracle {
+///
+/// `Send` is part of the contract: each worker gets its own oracle
+/// [`shard`](Oracle::shard) and drives it from a pool thread. Every result
+/// must be a pure function of `(params, iter, worker)` — private scratch
+/// is fine, hidden cross-call state is not — so that sharded execution is
+/// bit-identical to sequential execution.
+pub trait Oracle: Send {
     /// d — decision-variable dimension.
     fn dim(&self) -> usize;
 
@@ -69,6 +83,13 @@ pub trait Oracle {
 
     /// Initial decision variable.
     fn init_params(&self, seed: u64) -> Vec<f32>;
+
+    /// An independent per-worker shard of this oracle: identical
+    /// deterministic numerics and seed-keyed sampling, its own scratch
+    /// state (so `m` shards can run on `m` threads concurrently).
+    fn shard(&self) -> Self
+    where
+        Self: Sized;
 }
 
 // ---------------------------------------------------------------------------
@@ -115,37 +136,44 @@ impl AlgoConfig {
     }
 }
 
-/// Mutable per-run context shared by all algorithms: the oracle, the comm
-/// simulator, compute counters, pre-shared seeds and reusable scratch.
-pub struct World<O: Oracle> {
+/// One worker's execution context: its own oracle shard, direction /
+/// probe scratch, and the result slots the fixed-order reduction reads
+/// after a [`World::fan_out`] joins.
+pub struct WorkerCtx<O> {
     pub oracle: O,
-    pub comm: CommSim,
-    pub compute: ComputeCounters,
-    pub reg: SeedRegistry,
-    pub cfg: AlgoConfig,
-    // reusable scratch buffers (hot path: no per-iteration allocation)
+    reg: SeedRegistry,
+    /// the worker's regenerated direction v_{t,i}
     pub dir: Vec<f32>,
-    pub scratch64: Vec<f64>,
+    scratch64: Vec<f64>,
+    /// per-worker gradient (or d-vector partial) slot
     pub g: Vec<f32>,
-    pub gsum: Vec<f32>,
     /// perturbed-parameter buffer for the two-point ZO probe (§Perf L2)
-    pub pplus: Vec<f32>,
+    pplus: Vec<f32>,
+    /// base-point loss F(x) on the worker's (iter, worker) minibatch
+    pub loss: f32,
+    /// probe-point loss F(x + μv)
+    pub loss_plus: f32,
+    /// ZO-SVRG: base / probe losses at the epoch snapshot x̃
+    pub snap_loss: f32,
+    pub snap_loss_plus: f32,
+    err: Option<anyhow::Error>,
 }
 
-impl<O: Oracle> World<O> {
-    pub fn new(oracle: O, comm: CommSim, cfg: AlgoConfig) -> Self {
+impl<O: Oracle> WorkerCtx<O> {
+    fn new(oracle: O, reg: SeedRegistry) -> Self {
         let d = oracle.dim();
         Self {
             oracle,
-            comm,
-            compute: ComputeCounters::default(),
-            reg: SeedRegistry::new(cfg.seed),
-            cfg,
+            reg,
             dir: vec![0.0; d],
             scratch64: Vec::with_capacity(d),
             g: vec![0.0; d],
-            gsum: vec![0.0; d],
             pplus: vec![0.0; d],
+            loss: 0.0,
+            loss_plus: 0.0,
+            snap_loss: 0.0,
+            snap_loss_plus: 0.0,
+            err: None,
         }
     }
 
@@ -153,6 +181,13 @@ impl<O: Oracle> World<O> {
     /// (what every rank does locally from the pre-shared seeds).
     pub fn regen_direction(&mut self, iter: u64, worker: u64) {
         let seed = self.reg.direction_seed(iter, worker);
+        crate::rng::unit_sphere_direction_scratch(seed, &mut self.dir, &mut self.scratch64);
+    }
+
+    /// Regenerate the ZO-SVRG snapshot-probe direction for
+    /// `(epoch, worker, probe)` into `self.dir`.
+    pub fn regen_svrg_direction(&mut self, epoch: u64, worker: u64, probe: u64) {
+        let seed = self.reg.svrg_seed(epoch, worker, probe);
         crate::rng::unit_sphere_direction_scratch(seed, &mut self.dir, &mut self.scratch64);
     }
 
@@ -178,6 +213,112 @@ impl<O: Oracle> World<O> {
         let lp = self.oracle.loss(&self.pplus, iter, worker)?;
         let lb = self.oracle.loss(params, iter, worker)?;
         Ok((lp, lb))
+    }
+}
+
+/// Mutable per-run context shared by all algorithms: the per-worker
+/// sharded contexts, the execution pool, the comm simulator, compute
+/// counters, pre-shared seeds and the main-thread reduction buffer.
+pub struct World<O: Oracle> {
+    pub comm: CommSim,
+    pub compute: ComputeCounters,
+    pub reg: SeedRegistry,
+    pub cfg: AlgoConfig,
+    /// the worker execution engine the per-iteration fan-out runs on
+    pub pool: Arc<WorkerPool>,
+    /// per-worker sharded state, indexed by worker id `0..m`
+    pub workers: Vec<WorkerCtx<O>>,
+    /// the reduced update direction Ḡ_t (main thread, fixed worker order)
+    pub gsum: Vec<f32>,
+    dim: usize,
+    batch: usize,
+}
+
+impl<O: Oracle> World<O> {
+    /// Sequential world (a 1-lane pool) — what unit tests and the PJRT
+    /// fallback use.
+    pub fn new(oracle: O, comm: CommSim, cfg: AlgoConfig) -> Self {
+        Self::with_pool(oracle, comm, cfg, Arc::new(WorkerPool::new(1)))
+    }
+
+    /// World whose per-worker fan-out runs on `pool`. The oracle is
+    /// sharded once per worker up front; worker 0 keeps the original.
+    pub fn with_pool(oracle: O, comm: CommSim, cfg: AlgoConfig, pool: Arc<WorkerPool>) -> Self {
+        let d = oracle.dim();
+        let batch = oracle.batch_size();
+        let reg = SeedRegistry::new(cfg.seed);
+        let m = cfg.m;
+        let mut workers = Vec::with_capacity(m);
+        for _ in 1..m {
+            workers.push(WorkerCtx::new(oracle.shard(), reg));
+        }
+        workers.insert(0, WorkerCtx::new(oracle, reg));
+        Self {
+            comm,
+            compute: ComputeCounters::default(),
+            reg,
+            cfg,
+            pool,
+            workers,
+            gsum: vec![0.0; d],
+            dim: d,
+            batch,
+        }
+    }
+
+    /// d — decision-variable dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// B — oracle minibatch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Fan `f(i, ctx_i)` out across all `m` workers on the pool and join.
+    ///
+    /// Each invocation writes only its own [`WorkerCtx`]; the caller then
+    /// reduces the slots in fixed worker order, which is what keeps traces
+    /// bit-identical at any thread count. The first error (by worker
+    /// index) is propagated.
+    pub fn fan_out<F>(&mut self, f: F) -> Result<()>
+    where
+        F: Fn(u64, &mut WorkerCtx<O>) -> Result<()> + Sync,
+    {
+        // zero-sized items: allocation-free, keeps ONE copy of the unsafe
+        // scatter plumbing (in fan_out_with) to maintain
+        let mut units = vec![(); self.cfg.m];
+        self.fan_out_with(&mut units, |i, ctx, _| f(i, ctx))
+    }
+
+    /// Like [`World::fan_out`], with one element of external per-worker
+    /// state zipped in (RI-SGD's local models).
+    pub fn fan_out_with<T, F>(&mut self, items: &mut [T], f: F) -> Result<()>
+    where
+        T: Send,
+        F: Fn(u64, &mut WorkerCtx<O>, &mut T) -> Result<()> + Sync,
+    {
+        let m = self.cfg.m;
+        debug_assert_eq!(self.workers.len(), m);
+        assert_eq!(items.len(), m, "fan_out_with needs exactly one item per worker");
+        {
+            let shards = Shards::new(&mut self.workers[..]);
+            let item_shards = Shards::new(items);
+            self.pool.scatter(m, &|i| {
+                // Safety: i is this job's scatter index (both views)
+                let ctx = unsafe { shards.get(i) };
+                let item = unsafe { item_shards.get(i) };
+                let outcome = f(i as u64, &mut *ctx, item);
+                ctx.err = outcome.err();
+            });
+        }
+        for ctx in &mut self.workers {
+            if let Some(e) = ctx.err.take() {
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -237,10 +378,14 @@ use crate::backend::ModelBackend;
 use crate::data::{BatchSampler, Dataset, Sharding};
 
 /// Stochastic oracle over a backend-bound model profile + dataset shards.
+///
+/// Shards ([`Oracle::shard`]) share the model binding, corpus and pool
+/// assignment (`Arc`), and carry private batch scratch — `m` of them can
+/// run on `m` threads with bit-identical results.
 pub struct TrainOracle<'a> {
     pub model: &'a dyn ModelBackend,
     pub data: &'a Dataset,
-    pub sharding: Sharding,
+    pub sharding: Arc<Sharding>,
     sampler: BatchSampler,
     reg: SeedRegistry,
     // scratch batch buffers
@@ -268,7 +413,7 @@ impl<'a> TrainOracle<'a> {
         Self {
             model,
             data,
-            sharding,
+            sharding: Arc::new(sharding),
             sampler: BatchSampler::new(batch),
             reg: SeedRegistry::new(seed),
             bx: vec![0.0; batch * model.features()],
@@ -317,6 +462,19 @@ impl Oracle for TrainOracle<'_> {
 
     fn init_params(&self, seed: u64) -> Vec<f32> {
         init_mlp_params(self.model.meta(), seed)
+    }
+
+    fn shard(&self) -> Self {
+        Self {
+            model: self.model,
+            data: self.data,
+            sharding: Arc::clone(&self.sharding),
+            sampler: BatchSampler::new(self.sampler.batch),
+            reg: self.reg,
+            bx: vec![0.0; self.bx.len()],
+            by: vec![0.0; self.by.len()],
+            idx: Vec::with_capacity(self.sampler.batch),
+        }
     }
 }
 

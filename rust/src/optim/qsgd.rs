@@ -47,41 +47,53 @@ impl<O: Oracle> Algorithm<O> for Qsgd {
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
         let m = w.cfg.m;
-        let d = w.oracle.dim();
-        let b = w.oracle.batch_size();
+        let d = w.dim();
+        let b = w.batch_size();
         let s = w.cfg.qsgd_levels;
         let alpha = w.cfg.alpha(t, b);
-        w.gsum.fill(0.0);
+        // the heavy part — m minibatch gradients — runs in parallel
+        let params = &self.params;
+        w.fan_out(|i, ctx| {
+            ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
+            Ok(())
+        })?;
+        // quantization, EF memory and the decode-average stay on the main
+        // thread in fixed worker order (they are O(d) against the O(d·B)
+        // gradients, and the seeded quantizer RNG must consume in worker
+        // order to match the sequential trace)
         let mut loss_sum = 0.0f64;
         let mut bytes_total = 0u64;
-        for i in 0..m {
-            let l = w.oracle.grad(&self.params, t, i as u64, &mut w.g)?;
-            loss_sum += l as f64;
-            w.compute.grad_evals += b as u64;
-            if self.error_feedback {
-                // inject the residual memory before quantizing
-                for (g, &r) in w.g.iter_mut().zip(self.residuals[i].iter()) {
-                    *g += r;
+        {
+            let World { workers, gsum, compute, reg, .. } = w;
+            gsum.fill(0.0);
+            for (i, ctx) in workers.iter_mut().enumerate() {
+                loss_sum += ctx.loss as f64;
+                compute.grad_evals += b as u64;
+                if self.error_feedback {
+                    // inject the residual memory before quantizing
+                    for (g, &r) in ctx.g.iter_mut().zip(self.residuals[i].iter()) {
+                        *g += r;
+                    }
                 }
-            }
-            // quantization randomness is part of the algorithm, seeded per
-            // (iter, worker) for reproducibility
-            let mut qrng = Xoshiro256::seeded(hash_u64s(&[w.reg.base(), 0x9_5D, t, i as u64]));
-            let q = quantize(&w.g, s, &mut qrng);
-            bytes_total += encoded_bytes(&q);
-            // contractive scaling for the EF path (1 for plain QSGD)
-            let omega = (d as f32).sqrt() / s as f32;
-            let ef_scale = if self.error_feedback { 1.0 / (1.0 + omega) } else { 1.0 };
-            if self.error_feedback {
-                // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
-                let res = &mut self.residuals[i];
-                res.copy_from_slice(&w.g);
-                let scale = -ef_scale * q.norm / q.s as f32;
-                for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
-                    *r += scale * l as f32;
+                // quantization randomness is part of the algorithm, seeded
+                // per (iter, worker) for reproducibility
+                let mut qrng = Xoshiro256::seeded(hash_u64s(&[reg.base(), 0x9_5D, t, i as u64]));
+                let q = quantize(&ctx.g, s, &mut qrng);
+                bytes_total += encoded_bytes(&q);
+                // contractive scaling for the EF path (1 for plain QSGD)
+                let omega = (d as f32).sqrt() / s as f32;
+                let ef_scale = if self.error_feedback { 1.0 / (1.0 + omega) } else { 1.0 };
+                if self.error_feedback {
+                    // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
+                    let res = &mut self.residuals[i];
+                    res.copy_from_slice(&ctx.g);
+                    let scale = -ef_scale * q.norm / q.s as f32;
+                    for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
+                        *r += scale * l as f32;
+                    }
                 }
+                dequantize_into(&q, ef_scale / m as f32, gsum);
             }
-            dequantize_into(&q, ef_scale / m as f32, &mut w.gsum);
         }
         // per-worker egress: its own encoded gradient (mean across workers)
         w.comm.allgather_bytes(bytes_total / m as u64, d as u64);

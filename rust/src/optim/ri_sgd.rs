@@ -43,13 +43,19 @@ impl<O: Oracle> Algorithm<O> for RiSgd {
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
         let m = w.cfg.m;
-        let b = w.oracle.batch_size();
+        let b = w.batch_size();
         let alpha = w.cfg.alpha(t, b);
+        // every worker steps its own local model in parallel (the local
+        // update is per-worker state evolution — no cross-worker reduction
+        // until the averaging round)
+        w.fan_out_with(&mut self.locals, |i, ctx, local| {
+            ctx.loss = ctx.oracle.grad(local, t, i, &mut ctx.g)?;
+            axpy_update(local, alpha, &ctx.g);
+            Ok(())
+        })?;
         let mut loss_sum = 0.0f64;
-        for (i, local) in self.locals.iter_mut().enumerate() {
-            let l = w.oracle.grad(local, t, i as u64, &mut w.g)?;
-            loss_sum += l as f64;
-            axpy_update(local, alpha, &w.g);
+        for ctx in w.workers.iter() {
+            loss_sum += ctx.loss as f64;
             // Table 1: redundancy inflates per-worker compute by μ·m + 1
             // (the worker's pool — and hence the data it must process per
             // epoch — is (1 + μ_r·m)× larger). We account that factor so
@@ -60,7 +66,7 @@ impl<O: Oracle> Algorithm<O> for RiSgd {
         // model averaging every τ local steps: one d-float all-reduce
         if (t + 1) % w.cfg.tau as u64 == 0 {
             self.average_locals();
-            w.comm.allreduce_floats(w.oracle.dim() as u64);
+            w.comm.allreduce_floats(w.dim() as u64);
         }
         Ok(loss_sum / m as f64)
     }

@@ -28,7 +28,7 @@ impl<O: Oracle> Algorithm<O> for SyncSgd {
     }
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
-        let alpha = w.cfg.alpha(t, w.oracle.batch_size());
+        let alpha = w.cfg.alpha(t, w.batch_size());
         fo_iteration(&mut self.params, t, w, alpha)
     }
 

@@ -19,7 +19,6 @@
 use anyhow::Result;
 
 use crate::config::Method;
-use crate::rng::unit_sphere_direction_scratch;
 
 use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, Oracle, World};
 
@@ -39,22 +38,31 @@ impl ZoSvrgAve {
     fn refresh_snapshot<O: Oracle>(&mut self, t: u64, w: &mut World<O>) -> Result<()> {
         let m = w.cfg.m;
         let probes = w.cfg.svrg_probes;
-        let d = w.oracle.dim();
-        let b = w.oracle.batch_size();
+        let d = w.dim();
+        let b = w.batch_size();
         let mu = w.cfg.mu;
         let epoch = t / w.cfg.svrg_epoch as u64;
         self.snapshot.copy_from_slice(&self.params);
         self.vbar.fill(0.0);
         let weight = 1.0 / (m * probes) as f32;
-        for i in 0..m {
+        // every worker estimates its share of v̄ into its own g slot in
+        // parallel; the cross-worker sum happens below in worker order
+        let snapshot = &self.snapshot;
+        w.fan_out(|i, ctx| {
+            ctx.g.fill(0.0);
             for p in 0..probes {
-                let seed = w.reg.svrg_seed(epoch, i as u64, p as u64);
-                unit_sphere_direction_scratch(seed, &mut w.dir, &mut w.scratch64);
-                let (lp, lb) = w.oracle.pair(&self.snapshot, &w.dir, mu, t, i as u64)?;
+                ctx.regen_svrg_direction(epoch, i, p as u64);
+                let (lp, lb) = ctx.oracle.pair(snapshot, &ctx.dir, mu, t, i)?;
                 let s = zo_scalar(d, mu, lp, lb);
-                axpy_acc(&mut self.vbar, weight * s, &w.dir);
-                w.compute.fn_evals += 2 * b as u64;
+                axpy_acc(&mut ctx.g, weight * s, &ctx.dir);
             }
+            Ok(())
+        })?;
+        for ctx in w.workers.iter() {
+            for (v, &g) in self.vbar.iter_mut().zip(ctx.g.iter()) {
+                *v += g;
+            }
+            w.compute.fn_evals += 2 * probes as u64 * b as u64;
         }
         // each worker transmits `probes` scalars at the epoch boundary
         for _ in 0..probes {
@@ -71,8 +79,8 @@ impl<O: Oracle> Algorithm<O> for ZoSvrgAve {
 
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64> {
         let m = w.cfg.m;
-        let d = w.oracle.dim();
-        let b = w.oracle.batch_size();
+        let d = w.dim();
+        let b = w.batch_size();
         let mu = w.cfg.mu;
         let alpha = w.cfg.alpha(t, b);
 
@@ -80,19 +88,31 @@ impl<O: Oracle> Algorithm<O> for ZoSvrgAve {
             self.refresh_snapshot(t, w)?;
         }
 
-        w.gsum.fill(0.0);
+        // both probes of the control variate run per-worker in parallel:
+        // same direction AND same (iter, worker)-keyed batch at both points
+        let params = &self.params;
+        let snapshot = &self.snapshot;
+        w.fan_out(|i, ctx| {
+            ctx.regen_direction(t, i);
+            let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
+            let (sp, sb) = ctx.zo_probe(snapshot, mu, t, i)?;
+            ctx.loss_plus = lp;
+            ctx.loss = lb;
+            ctx.snap_loss_plus = sp;
+            ctx.snap_loss = sb;
+            Ok(())
+        })?;
         let mut loss_sum = 0.0f64;
-        for i in 0..m {
-            w.regen_direction(t, i as u64);
-            // same direction AND same (iter, worker)-keyed batch at both
-            // points — the SVRG control variate
-            let (lp, lb) = w.zo_probe(&self.params, mu, t, i as u64)?;
-            let (sp, sb) = w.zo_probe(&self.snapshot, mu, t, i as u64)?;
-            let s_cur = zo_scalar(d, mu, lp, lb);
-            let s_snap = zo_scalar(d, mu, sp, sb);
-            loss_sum += lb as f64;
-            axpy_acc(&mut w.gsum, (s_cur - s_snap) / m as f32, &w.dir);
-            w.compute.fn_evals += 4 * b as u64;
+        {
+            let World { workers, gsum, compute, .. } = w;
+            gsum.fill(0.0);
+            for ctx in workers.iter() {
+                let s_cur = zo_scalar(d, mu, ctx.loss_plus, ctx.loss);
+                let s_snap = zo_scalar(d, mu, ctx.snap_loss_plus, ctx.snap_loss);
+                loss_sum += ctx.loss as f64;
+                axpy_acc(gsum, (s_cur - s_snap) / m as f32, &ctx.dir);
+                compute.fn_evals += 4 * b as u64;
+            }
         }
         // add the epoch surrogate v̄
         for (g, &vb) in w.gsum.iter_mut().zip(self.vbar.iter()) {

@@ -1,0 +1,398 @@
+//! The parallel worker execution engine: a persistent [`WorkerPool`] of
+//! std threads that fans per-worker / per-chunk jobs out and joins them
+//! before returning.
+//!
+//! The pool exists to make the *m*-worker fan-out of every optimizer and
+//! the batch-chunked dense kernels of the native backend run concurrently
+//! while keeping traces **bit-identical to the sequential path**. The
+//! contract that makes this possible:
+//!
+//! * [`WorkerPool::scatter`] only schedules — each job index `i` in
+//!   `0..n` runs exactly once, writes only into its own per-index slot
+//!   (see [`Shards`] / [`SliceParts`]), and the caller *reduces the slots
+//!   in fixed index order after the join*. Scheduling therefore never
+//!   reorders any floating-point reduction, so `threads = 1` and
+//!   `threads = N` produce identical bits (asserted by
+//!   `rust/tests/determinism.rs` and the CI `determinism` job).
+//! * The calling thread participates in its own scatter: with
+//!   `threads = 1` no OS threads exist at all and jobs run inline, so the
+//!   sequential path has zero synchronization overhead.
+//! * Nested scatters are safe: a job may itself call `scatter` on the
+//!   same pool (the optimizer fan-out over workers nests the backend's
+//!   batch-chunk scatter). Claiming happens under one lock over a task
+//!   *list*, and every caller can always make progress on its own task,
+//!   so nesting cannot deadlock.
+//!
+//! No external crates: jobs move through a `Mutex<Vec<Task>>` + `Condvar`
+//! (the std-only substitute for a work-stealing deque), and borrowed job
+//! closures are lifetime-erased behind a raw pointer whose validity is
+//! guaranteed by scatter's join-before-return.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Resolve a `--threads` / `threads` config value: `0` means "use the
+/// machine's available parallelism".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Lifetime-erased pointer to a borrowed `Fn(usize)` job closure.
+type TaskFn = *const (dyn Fn(usize) + Sync);
+
+/// One in-flight scatter: `n` job indices, a claim cursor and a completion
+/// count. `f` borrows the caller's stack; it stays valid because the task
+/// is removed (and `scatter` returns) only after `done == n`.
+struct Task {
+    id: u64,
+    f: TaskFn,
+    n: usize,
+    next: usize,
+    done: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+// Safety: `f` points at a `Sync` closure that outlives the task (scatter
+// joins all n jobs before returning), so sharing the pointer across the
+// pool's threads is sound.
+unsafe impl Send for Task {}
+
+struct State {
+    tasks: Vec<Task>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// A persistent pool of `threads - 1` worker threads plus the calling
+/// thread. See the module docs for the determinism contract.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` execution lanes (the caller counts as one, so
+    /// `threads - 1` OS threads are spawned; `threads <= 1` spawns none
+    /// and runs everything inline).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { tasks: Vec::new(), next_id: 0, shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for k in 1..threads {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("hosgd-pool-{k}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning pool worker");
+            handles.push(h);
+        }
+        Self { shared, handles, threads }
+    }
+
+    /// The shared 1-lane pool: every legacy sequential entry point routes
+    /// through this, so there is exactly one code path to keep correct.
+    pub fn sequential() -> &'static WorkerPool {
+        static SEQ: OnceLock<WorkerPool> = OnceLock::new();
+        SEQ.get_or_init(|| WorkerPool::new(1))
+    }
+
+    /// Number of execution lanes (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` once for every `i in 0..n`, potentially in parallel, and
+    /// return only when all `n` invocations completed. Panics in jobs are
+    /// re-raised on the calling thread after the join.
+    ///
+    /// Scheduling order is unspecified; callers own determinism by writing
+    /// per-index results and reducing them in index order afterwards.
+    #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+    pub fn scatter(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.threads == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Erase the borrow lifetime. Sound: this function removes the task
+        // and returns only after all n invocations finished, so no thread
+        // can observe `f` after the borrow ends.
+        let f_erased: TaskFn = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), TaskFn>(f) };
+        let id = {
+            let mut st = self.shared.state.lock().unwrap();
+            let id = st.next_id;
+            st.next_id += 1;
+            st.tasks.push(Task { id, f: f_erased, n, next: 0, done: 0, panic: None });
+            id
+        };
+        self.shared.cv.notify_all();
+
+        // Participate: claim indices of our own task until exhausted, then
+        // wait for jobs in flight on other threads.
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let pos = st.tasks.iter().position(|t| t.id == id).expect("scatter task vanished");
+            if st.tasks[pos].next < n {
+                let i = st.tasks[pos].next;
+                st.tasks[pos].next += 1;
+                drop(st);
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(i)));
+                st = self.shared.state.lock().unwrap();
+                let pos =
+                    st.tasks.iter().position(|t| t.id == id).expect("scatter task vanished");
+                complete_one(&mut st.tasks[pos], outcome);
+                if st.tasks[pos].done == n {
+                    self.shared.cv.notify_all();
+                }
+            } else if st.tasks[pos].done < n {
+                st = self.shared.cv.wait(st).unwrap();
+            } else {
+                let task = st.tasks.remove(pos);
+                drop(st);
+                if let Some(p) = task.panic {
+                    std::panic::resume_unwind(p);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn complete_one(task: &mut Task, outcome: std::thread::Result<()>) {
+    task.done += 1;
+    if let Err(p) = outcome {
+        if task.panic.is_none() {
+            task.panic = Some(p);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        // claim one index from any task that still has unclaimed work
+        if let Some(pos) = st.tasks.iter().position(|t| t.next < t.n) {
+            let id = st.tasks[pos].id;
+            let i = st.tasks[pos].next;
+            st.tasks[pos].next += 1;
+            let f = st.tasks[pos].f;
+            drop(st);
+            // Safety: a task with an outstanding claimed index cannot be
+            // removed (done < n), so `f` is still alive.
+            let outcome = catch_unwind(AssertUnwindSafe(|| unsafe { (&*f)(i) }));
+            st = shared.state.lock().unwrap();
+            let pos = st
+                .tasks
+                .iter()
+                .position(|t| t.id == id)
+                .expect("task removed with outstanding job");
+            complete_one(&mut st.tasks[pos], outcome);
+            if st.tasks[pos].done == st.tasks[pos].n {
+                shared.cv.notify_all();
+            }
+        } else {
+            st = shared.cv.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disjoint-access views for scatter jobs
+// ---------------------------------------------------------------------------
+
+/// Per-index exclusive views over a `&mut [T]` for scatter jobs: job `i`
+/// gets `&mut` access to element `i` and nothing else.
+pub struct Shards<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// Safety: distinct indices alias distinct elements; scatter hands each
+// index to exactly one job.
+unsafe impl<T: Send> Send for Shards<'_, T> {}
+unsafe impl<T: Send> Sync for Shards<'_, T> {}
+
+impl<'a, T> Shards<'a, T> {
+    pub fn new(xs: &'a mut [T]) -> Self {
+        Self { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Each index must be accessed by at most one thread at a time — which
+    /// holds when `i` is the caller's scatter job index.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "shard index {i} out of range {}", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Disjoint mutable subranges of a flat `&mut [T]` for scatter jobs (the
+/// batch-chunked kernel buffers: job `c` owns rows `c·chunk .. (c+1)·chunk`).
+pub struct SliceParts<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// Safety: see `Shards` — callers hand out non-overlapping ranges only.
+unsafe impl<T: Send> Send for SliceParts<'_, T> {}
+unsafe impl<T: Send> Sync for SliceParts<'_, T> {}
+
+impl<'a, T> SliceParts<'a, T> {
+    pub fn new(xs: &'a mut [T]) -> Self {
+        Self { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Ranges handed to concurrently running jobs must not overlap.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "slice part {start}+{len} out of range {}",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn scatter_runs_every_index_exactly_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 100;
+            let mut hits = vec![0u32; n];
+            {
+                let shards = Shards::new(&mut hits[..]);
+                pool.scatter(n, &|i| {
+                    // Safety: i is this job's scatter index
+                    let h = unsafe { shards.get(i) };
+                    *h += 1;
+                });
+            }
+            assert!(hits.iter().all(|&h| h == 1), "threads={threads}: {hits:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_joins_before_returning() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.scatter(64, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn nested_scatter_does_not_deadlock() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        pool.scatter(4, &|_| {
+            pool.scatter(8, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_scatters() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scatter(5, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 250);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool still usable after a panicked task
+        let count = AtomicUsize::new(0);
+        pool.scatter(4, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn slice_parts_hand_out_disjoint_rows() {
+        let pool = WorkerPool::new(4);
+        let mut buf = vec![0.0f32; 40];
+        {
+            let parts = SliceParts::new(&mut buf[..]);
+            pool.scatter(4, &|c| {
+                // Safety: chunks are disjoint by construction
+                let row = unsafe { parts.slice(c * 10, 10) };
+                for v in row.iter_mut() {
+                    *v = c as f32;
+                }
+            });
+        }
+        for c in 0..4 {
+            assert!(buf[c * 10..(c + 1) * 10].iter().all(|&v| v == c as f32));
+        }
+    }
+
+    #[test]
+    fn sequential_pool_is_single_lane() {
+        assert_eq!(WorkerPool::sequential().threads(), 1);
+    }
+}

@@ -17,10 +17,9 @@
 //! `PjRtClient::cpu()` with a clear message. Point the `xla` dependency at
 //! the published crate (see `rust/Cargo.toml`) to execute for real.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -62,14 +61,19 @@ fn first_buffer(mut out: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::PjRtBuffer> {
 // Runtime
 // ---------------------------------------------------------------------------
 
-type Exe = Rc<xla::PjRtLoadedExecutable>;
+type Exe = Arc<xla::PjRtLoadedExecutable>;
 
 /// PJRT client + artifact manifest + compile cache.
+///
+/// The compile cache sits behind a `Mutex` (held only for lookup/insert)
+/// and executables are `Arc`-shared, so the bindings satisfy the `Sync`
+/// contract of [`ModelBackend`] / [`AttackBackend`] that the parallel
+/// worker engine relies on.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Exe>>,
+    cache: Mutex<HashMap<String, Exe>>,
 }
 
 impl Runtime {
@@ -85,7 +89,7 @@ impl Runtime {
             return Err(anyhow!("unsupported manifest version {}", manifest.version));
         }
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn artifact_dir(&self) -> &Path {
@@ -94,7 +98,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) one artifact file.
     pub fn executable(&self, file: &str) -> Result<Exe> {
-        if let Some(e) = self.cache.borrow().get(file) {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
             return Ok(e.clone());
         }
         let path = self.dir.join(file);
@@ -102,8 +106,8 @@ impl Runtime {
             .with_context(|| format!("loading HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe =
-            Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {file}"))?);
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+            Arc::new(self.client.compile(&comp).with_context(|| format!("compiling {file}"))?);
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 

@@ -1,8 +1,14 @@
 //! Minimal benchmarking harness (the offline substitute for `criterion`):
-//! warmup + timed iterations, robust summary statistics, and a fixed-width
-//! table printer. Used by every target in `rust/benches/`.
+//! warmup + timed iterations, robust summary statistics, a fixed-width
+//! table printer, machine-readable `BENCH_*.json` output and a
+//! regression gate against a committed baseline. Used by every target in
+//! `rust/benches/`; CI uploads the JSON as workflow artifacts and fails
+//! the `bench-smoke` job on a > 2× hot-path regression.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Summary statistics of one benchmark case.
 #[derive(Debug, Clone)]
@@ -24,6 +30,81 @@ impl BenchResult {
             f64::INFINITY
         }
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("median_s", Json::num(self.median_s)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("p05_s", Json::num(self.p05_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("stddev_s", Json::num(self.stddev_s)),
+        ])
+    }
+}
+
+/// Serialize a bench run as the `BENCH_*.json` artifact shape — the same
+/// shape the committed baseline files use, so refreshing a baseline is
+/// "copy the artifact over the old file".
+pub fn results_to_json(title: &str, results: &[BenchResult]) -> Json {
+    Json::obj(vec![
+        ("title", Json::str(title)),
+        ("results", Json::Arr(results.iter().map(BenchResult::to_json).collect())),
+    ])
+}
+
+/// Write the `BENCH_*.json` artifact (parent directories are created).
+pub fn write_results_json(
+    path: impl AsRef<Path>,
+    title: &str,
+    results: &[BenchResult],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, results_to_json(title, results).pretty())?;
+    println!("wrote bench results to {}", path.display());
+    Ok(())
+}
+
+/// Gate current results against a committed baseline artifact: any case
+/// whose median exceeds `factor` × the baseline median is a regression,
+/// and a baseline case that disappeared is one too (renames must not
+/// silently escape the gate). New cases absent from the baseline pass.
+/// Returns the list of violations (empty = gate passes).
+pub fn check_against_baseline(
+    results: &[BenchResult],
+    baseline: &Json,
+    factor: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(Json::Arr(cases)) = baseline.get("results") else {
+        return vec!["baseline file has no `results` array".into()];
+    };
+    for case in cases {
+        let Some(name) = case.get("name").and_then(Json::as_str) else {
+            failures.push("baseline case without a name".into());
+            continue;
+        };
+        let Some(base_median) = case.get("median_s").and_then(Json::as_f64) else {
+            failures.push(format!("baseline case {name:?} has no median_s"));
+            continue;
+        };
+        match results.iter().find(|r| r.name == name) {
+            None => failures.push(format!("baseline case {name:?} missing from this run")),
+            Some(r) if r.median_s > factor * base_median => failures.push(format!(
+                "{name:?} regressed: median {} vs baseline {} (> {factor:.1}x)",
+                fmt_time(r.median_s),
+                fmt_time(base_median)
+            )),
+            Some(_) => {}
+        }
+    }
+    failures
 }
 
 /// Time `f` for `iters` iterations after `warmup` untimed runs.
@@ -120,5 +201,39 @@ mod tests {
         assert!(fmt_time(2e-6).ends_with("µs"));
         assert!(fmt_time(2e-3).ends_with("ms"));
         assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    fn result(name: &str, median: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 3,
+            mean_s: median,
+            median_s: median,
+            p05_s: median,
+            p95_s: median,
+            stddev_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn results_json_roundtrips_as_baseline() {
+        let rs = vec![result("a", 0.5), result("b", 1.0)];
+        let doc = results_to_json("t", &rs);
+        let back = Json::parse(&doc.pretty()).unwrap();
+        // identical run against its own baseline: no regressions
+        assert!(check_against_baseline(&rs, &back, 2.0).is_empty());
+    }
+
+    #[test]
+    fn baseline_gate_flags_regressions_and_missing_cases() {
+        let baseline = results_to_json("t", &[result("a", 0.1), result("gone", 0.1)]);
+        let current = vec![result("a", 0.3), result("new", 9.0)];
+        let fails = check_against_baseline(&current, &baseline, 2.0);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("\"a\" regressed")), "{fails:?}");
+        assert!(fails.iter().any(|f| f.contains("missing")), "{fails:?}");
+        // within the factor: passes
+        let ok = check_against_baseline(&[result("a", 0.19), result("gone", 0.1)], &baseline, 2.0);
+        assert!(ok.is_empty(), "{ok:?}");
     }
 }

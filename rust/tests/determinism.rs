@@ -1,0 +1,134 @@
+//! Reduction-determinism suite: the parallel worker execution engine must
+//! produce **byte-identical** traces at any thread count, for every
+//! method. This is the contract that lets `--threads N` default to the
+//! machine's parallelism without perturbing a single recorded number.
+//!
+//! Mechanism under test: per-worker oracle calls fan out to pool threads,
+//! results land in per-worker slots, and the reduction walks the slots in
+//! fixed worker order; the native backend's batch-chunked kernels use
+//! fixed chunk sizes with disjoint writes. Nothing in either path depends
+//! on scheduling, so `threads = 1` and `threads = 4` must agree bit for
+//! bit — which this suite asserts over losses, counters, comm stats and
+//! final parameters.
+
+use hosgd::backend::{Backend, NativeBackend};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with, TrainOutcome};
+use hosgd::metrics::Trace;
+
+const ALL_METHODS: [Method; 7] = [
+    Method::HoSgd,
+    Method::SyncSgd,
+    Method::RiSgd,
+    Method::ZoSgd,
+    Method::ZoSvrgAve,
+    Method::Qsgd,
+    Method::HoSgdM,
+];
+
+fn cfg(method: Method, dataset: &str, iters: u64, threads: usize) -> TrainConfig {
+    TrainConfig {
+        method,
+        dataset: dataset.into(),
+        iters,
+        workers: 4,
+        tau: 4,
+        step: StepSize::Constant { alpha: 0.02 },
+        seed: 11,
+        eval_every: 8, // exercise eval_accuracy under both thread counts
+        record_every: 1,
+        svrg_epoch: 10,
+        threads,
+        ..Default::default()
+    }
+}
+
+fn run(method: Method, dataset: &str, iters: u64, threads: usize) -> TrainOutcome {
+    let be = NativeBackend::with_threads(threads);
+    let cfg = cfg(method, dataset, iters, threads);
+    let model = be.model(dataset).unwrap();
+    let data = make_data(&cfg).unwrap();
+    run_train_with(model.as_ref(), &data, &cfg).unwrap()
+}
+
+/// Bit-exact comparison of everything a trace records except wall-clock.
+fn assert_traces_identical(method: Method, a: &Trace, b: &Trace) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{method}: row counts differ");
+    for (ra, rb) in a.rows.iter().zip(b.rows.iter()) {
+        assert_eq!(ra.iter, rb.iter, "{method}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{method} iter {}: train_loss {} vs {}",
+            ra.iter,
+            ra.train_loss,
+            rb.train_loss
+        );
+        assert_eq!(
+            ra.test_acc.map(f64::to_bits),
+            rb.test_acc.map(f64::to_bits),
+            "{method} iter {}: test_acc",
+            ra.iter
+        );
+        assert_eq!(ra.bytes_per_worker, rb.bytes_per_worker, "{method} iter {}", ra.iter);
+        assert_eq!(ra.scalars_per_worker, rb.scalars_per_worker, "{method} iter {}", ra.iter);
+        assert_eq!(ra.fn_evals, rb.fn_evals, "{method} iter {}", ra.iter);
+        assert_eq!(ra.grad_evals, rb.grad_evals, "{method} iter {}", ra.iter);
+    }
+}
+
+#[test]
+fn every_method_is_bit_identical_across_thread_counts() {
+    for method in ALL_METHODS {
+        let seq = run(method, "quickstart", 24, 1);
+        let par = run(method, "quickstart", 24, 4);
+        assert_traces_identical(method, &seq.trace, &par.trace);
+        assert_eq!(seq.params.len(), par.params.len(), "{method}");
+        for (j, (a, b)) in seq.params.iter().zip(par.params.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method}: param {j} {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn chunked_kernels_keep_traces_identical_on_a_real_profile() {
+    // sensorless (B = 64, hidden 128) drives the batch-chunked forward /
+    // backprop / wgrad kernel paths, unlike the tiny quickstart profile
+    for method in [Method::HoSgd, Method::SyncSgd] {
+        let seq = run(method, "sensorless", 6, 1);
+        let par = run(method, "sensorless", 6, 4);
+        assert_traces_identical(method, &seq.trace, &par.trace);
+        for (a, b) in seq.params.iter().zip(par.params.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method}");
+        }
+    }
+}
+
+#[test]
+fn canonical_trace_json_is_identical_across_thread_counts() {
+    // the exact artifact the CI determinism job diffs
+    let seq = run(Method::HoSgd, "quickstart", 16, 1);
+    let par = run(Method::HoSgd, "quickstart", 16, 4);
+    assert_eq!(
+        seq.trace.to_json_canonical().pretty(),
+        par.trace.to_json_canonical().pretty()
+    );
+}
+
+#[test]
+fn attack_fan_out_is_bit_identical_across_thread_counts() {
+    use hosgd::attack::{build_task, run_attack, AttackConfig};
+    let run_with = |threads: usize| {
+        let be = NativeBackend::with_threads(threads);
+        let bind = be.attack().unwrap();
+        let task = build_task(&be, 7, 60).unwrap();
+        let cfg = AttackConfig { method: Method::HoSgd, iters: 20, threads, ..Default::default() };
+        run_attack(bind.as_ref(), &task, &cfg).unwrap()
+    };
+    let seq = run_with(1);
+    let par = run_with(4);
+    assert_traces_identical(Method::HoSgd, &seq.trace, &par.trace);
+    for (a, b) in seq.perturbation.iter().zip(par.perturbation.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

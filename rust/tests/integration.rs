@@ -188,6 +188,53 @@ fn eval_accuracy_improves_with_training() {
 }
 
 #[test]
+fn eval_accuracy_covers_tail_remainder_and_small_test_sets() {
+    use hosgd::backend::ModelBackend;
+    use hosgd::coordinator::eval_accuracy;
+    use hosgd::data::{profile, Dataset};
+
+    let be = backend();
+    let model = be.model("quickstart").unwrap(); // batch = 8
+    let b = model.batch();
+    let p = profile("quickstart").unwrap();
+    let params = hosgd::optim::init_mlp_params(model.meta(), 3);
+
+    // reference: score each sample alone in a zero-padded batch (rows of a
+    // dense forward are independent, so this is an exact oracle)
+    let reference = |data: &Dataset| -> f64 {
+        let f = model.features();
+        let classes = model.classes();
+        let mut correct = 0usize;
+        for k in 0..data.len() {
+            let mut x = vec![0.0f32; b * f];
+            x[..f].copy_from_slice(&data.x[k * f..(k + 1) * f]);
+            let logits = model.predict(&params, &x).unwrap();
+            if hosgd::backend::mlp::argmax(&logits[..classes]) == data.y[k] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len() as f64
+    };
+
+    // n = 13: one full batch of 8 + a tail of 5 (previously dropped)
+    let with_tail = Dataset::synth(&p, 13, 5, 1);
+    let acc = eval_accuracy(model.as_ref(), &params, &with_tail).unwrap();
+    assert!(acc.is_finite());
+    assert!((acc - reference(&with_tail)).abs() < 1e-12, "tail-chunk accuracy mismatch");
+
+    // n = 5 < batch: previously returned NaN, must now be a real accuracy
+    let tiny = Dataset::synth(&p, 5, 5, 1);
+    let acc_tiny = eval_accuracy(model.as_ref(), &params, &tiny).unwrap();
+    assert!(acc_tiny.is_finite(), "sub-batch test set must not yield NaN");
+    assert!((acc_tiny - reference(&tiny)).abs() < 1e-12);
+
+    // exact multiple of the batch: unchanged semantics
+    let exact = Dataset::synth(&p, 16, 5, 1);
+    let acc_exact = eval_accuracy(model.as_ref(), &params, &exact).unwrap();
+    assert!((acc_exact - reference(&exact)).abs() < 1e-12);
+}
+
+#[test]
 fn mu_sensitivity_zo_still_learns_with_theorem_mu() {
     // Theorem 1's μ = 1/√(dN) should be stable for ZO iterations
     let be = backend();
