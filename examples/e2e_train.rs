@@ -1,9 +1,11 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): exercise the full three-layer
-//! stack on the largest AOT profile — Pallas dense kernels → JAX graphs →
-//! HLO artifacts → rust coordinator — by training the `e2e` model
-//! (d ≈ 85k parameters, scaled from the paper's 1.69M to the CPU-interpret
-//! testbed) for several hundred HO-SGD iterations on a synthetic corpus,
-//! logging the loss curve and test accuracy.
+//! End-to-end driver (EXPERIMENTS.md §E2E) on the largest profile — now
+//! written against the Session API: the run is stepped, observed through
+//! the [`hosgd::coordinator::Observer`] event stream (live eval lines,
+//! sync-round accounting), interrupted halfway, checkpointed to disk in
+//! the v2 run-state format, restored in a fresh session and driven to the
+//! horizon — demonstrating that an interrupted+resumed run is
+//! bit-identical to an uninterrupted one (`rust/tests/resume.rs` asserts
+//! this for every method).
 //!
 //! Run with: cargo run --release --example e2e_train [iters]
 //!
@@ -13,15 +15,30 @@
 
 use std::path::Path;
 
-use anyhow::Result;
-use hosgd::backend::{self, Backend, ModelBackend};
-use hosgd::config::{Method, StepSize, TrainConfig};
-use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::prelude::*;
+
+/// Streams the run: one line per test evaluation, plus a count of the
+/// vector-level synchronization rounds the τ schedule spaces out.
+struct LiveLog {
+    syncs: u64,
+}
+
+impl Observer for LiveLog {
+    fn on_eval(&mut self, ev: &EvalEvent) {
+        println!("  iter {:>5}  test_acc {:.3}", ev.iter, ev.accuracy);
+    }
+    fn on_sync_round(&mut self, ev: &SyncEvent) {
+        self.syncs += 1;
+        if self.syncs <= 3 {
+            println!("  iter {:>5}  sync round: {} bytes/worker", ev.iter, ev.bytes);
+        }
+    }
+}
 
 fn main() -> Result<()> {
     let iters: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    let rt = backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
+    let rt = hosgd::backend::load_from_env("HOSGD_BACKEND", Path::new(artifacts))?;
     let cfg = TrainConfig {
         method: Method::HoSgd,
         dataset: "e2e".into(),
@@ -30,7 +47,7 @@ fn main() -> Result<()> {
         tau: 8,
         step: StepSize::Constant { alpha: 0.002 }, // ZO-stable at d = 85k
         seed: 1,
-        eval_every: (iters / 12).max(1),
+        eval_every: (iters / 6).max(1),
         ..Default::default()
     };
     let model = rt.model(&cfg.dataset)?;
@@ -47,31 +64,38 @@ fn main() -> Result<()> {
     );
 
     let data = make_data(&cfg)?;
-    let out = run_train_with(model.as_ref(), &data, &cfg)?;
 
-    println!("\niter   train_loss   test_acc     compute_s   comm_s(sim)");
-    for row in &out.trace.rows {
-        if row.test_acc.is_some() {
-            println!(
-                "{:>5}  {:>10.4}   {:>8.3}   {:>10.2}   {:>10.4}",
-                row.iter,
-                row.train_loss,
-                row.test_acc.unwrap(),
-                row.compute_s,
-                row.comm_s
-            );
-        }
-    }
+    // segment 1: run halfway, then snapshot to a v2 checkpoint file
+    let half = iters / 2;
+    let ckpt = std::env::temp_dir().join("hosgd_e2e_example.ck2");
+    println!("\nsegment 1 (iterations 0..{half}):");
+    let mut session = Session::new(model.as_ref(), &data, &cfg)?;
+    session.add_observer(LiveLog { syncs: 0 });
+    session.run_until(half)?;
+    session.snapshot().save(&ckpt)?;
+    println!("  checkpointed at iteration {} -> {}", session.iter(), ckpt.display());
+    drop(session);
+
+    // segment 2: restore from the bytes on disk and finish the horizon
+    println!("segment 2 (resumed {half}..{iters}):");
+    let state = RunState::load(&ckpt)?;
+    let mut session = Session::restore(model.as_ref(), &data, &cfg, state)?;
+    session.add_observer(LiveLog { syncs: 0 });
+    session.run_to_end()?;
+
+    let out = session.into_outcome();
+    let first = out.trace.rows.first().unwrap();
     let last = out.trace.rows.last().unwrap();
     println!(
         "\nloss {:.4} -> {:.4}; final acc {:?}; {} scalars/worker (syncSGD: {})",
-        out.trace.rows.first().unwrap().train_loss,
+        first.train_loss,
         last.train_loss,
         out.trace.final_acc(),
         last.scalars_per_worker,
         iters * model.dim() as u64
     );
     out.trace.write_csv("results/e2e_example.csv")?;
+    std::fs::remove_file(&ckpt).ok();
     println!("trace written to results/e2e_example.csv");
     Ok(())
 }

@@ -96,7 +96,7 @@ pub fn build_task(backend: &dyn Backend, seed: u64, clf_iters: u64) -> Result<At
     let model = backend.model(&bind.meta().clf_profile)?;
     let classes = model.classes();
 
-    // 1. train the classifier on the digit corpus
+    // train the classifier on the digit corpus
     let corpus = Dataset::digits(classes, 4096, seed, 0);
     let test = Dataset::digits(classes, 1024, seed, 1);
     let cfg = TrainConfig {
@@ -113,10 +113,45 @@ pub fn build_task(backend: &dyn Backend, seed: u64, clf_iters: u64) -> Result<At
     };
     let data = crate::coordinator::RunData { train: corpus, test };
     let outcome = run_train_with(model.as_ref(), &data, &cfg)?;
-    let clf_params = outcome.params;
-    let clf_test_acc = crate::coordinator::eval_accuracy(model.as_ref(), &clf_params, &data.test)?;
+    assemble_task(bind.as_ref(), model.as_ref(), &data.test, seed, outcome.params)
+}
 
-    // 2. pick eval_batch same-class images the classifier gets right
+/// Assemble the attack task around an already-trained frozen classifier —
+/// e.g. weights read from a checkpoint file (both the v1 `HOSGDCK1`
+/// params-only format and the v2 `HOSGDCK2` run-state format work through
+/// [`crate::coordinator::checkpoint::load_params_any`]).
+pub fn build_task_with_params(
+    backend: &dyn Backend,
+    seed: u64,
+    clf_params: Vec<f32>,
+) -> Result<AttackTask> {
+    let bind = backend.attack()?;
+    let model = backend.model(&bind.meta().clf_profile)?;
+    let test = Dataset::digits(model.classes(), 1024, seed, 1);
+    assemble_task(bind.as_ref(), model.as_ref(), &test, seed, clf_params)
+}
+
+/// Shared tail of [`build_task`] / [`build_task_with_params`]: score the
+/// frozen classifier and pick the attacked image set.
+fn assemble_task(
+    bind: &dyn AttackBackend,
+    model: &dyn ModelBackend,
+    test: &Dataset,
+    seed: u64,
+    clf_params: Vec<f32>,
+) -> Result<AttackTask> {
+    let classes = model.classes();
+    if clf_params.len() != model.dim() {
+        anyhow::bail!(
+            "classifier parameters have {} elements but profile {:?} needs d = {}",
+            clf_params.len(),
+            bind.meta().clf_profile,
+            model.dim()
+        );
+    }
+    let clf_test_acc = crate::coordinator::eval_accuracy(model, &clf_params, test)?;
+
+    // pick eval_batch same-class images the classifier gets right
     let n = bind.eval_batch();
     let dim = bind.dim();
     let pool = Dataset::digits(classes, 512, seed, 2);

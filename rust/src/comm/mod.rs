@@ -71,7 +71,12 @@ impl NetworkModel {
 
 /// Cumulative communication counters (per-worker egress, i.e. the paper's
 /// "communication load ... by each worker node").
-#[derive(Debug, Clone, Copy, Default)]
+///
+/// Snapshottable: all fields are plain accumulators, so a
+/// [`crate::coordinator::session::Session`] persists them verbatim (the
+/// `sim_time_s` f64 is stored as raw bits) and a resumed run continues the
+/// exact byte/scalar/critical-path accounting of the uninterrupted one.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     /// bytes sent by one worker (egress), total
     pub bytes_per_worker: u64,
@@ -123,6 +128,11 @@ impl CommSim {
         self.stats.scalars_per_worker += logical_scalars;
         self.stats.rounds += 1;
         self.stats.sim_time_s += self.net.allgather_time(bytes, self.m);
+    }
+
+    /// Restore the accumulated stats from a snapshot (session resume).
+    pub fn restore_stats(&mut self, stats: CommStats) {
+        self.stats = stats;
     }
 
     /// Numeric helper: element-wise mean of `m` worker vectors into `out`.

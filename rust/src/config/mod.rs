@@ -157,6 +157,10 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// record a trace row every this many iterations
     pub record_every: u64,
+    /// write a v2 run-state checkpoint every this many iterations
+    /// (0 = never). Driver-level: does not affect the trajectory, so it is
+    /// not part of the resume-compatibility fingerprint.
+    pub checkpoint_every: u64,
     pub train_size: usize,
     pub test_size: usize,
     /// RI-SGD redundancy factor μ_r
@@ -198,6 +202,7 @@ impl Default for TrainConfig {
             seed: 1,
             eval_every: 20,
             record_every: 1,
+            checkpoint_every: 0,
             train_size: 0, // 0 ⇒ profile default
             test_size: 0,
             redundancy: 0.25, // paper §5.2
@@ -296,6 +301,9 @@ impl TrainConfig {
         if let Some(x) = gn("record_every") {
             cfg.record_every = x as u64;
         }
+        if let Some(x) = gn("checkpoint_every") {
+            cfg.checkpoint_every = x as u64;
+        }
         if let Some(x) = gn("train_size") {
             cfg.train_size = x as usize;
         }
@@ -350,6 +358,7 @@ impl TrainConfig {
             ("seed", Json::num(self.seed as f64)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("record_every", Json::num(self.record_every as f64)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
             ("train_size", Json::num(self.train_size as f64)),
             ("test_size", Json::num(self.test_size as f64)),
             ("redundancy", Json::num(self.redundancy)),
@@ -484,6 +493,14 @@ mod tests {
         assert_eq!(c.method, Method::ZoSgd);
         assert_eq!(c.iters, 9);
         assert_eq!(c.tau, TrainConfig::default().tau);
+        assert_eq!(c.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn checkpoint_every_roundtrips_through_json() {
+        let c = TrainConfig { checkpoint_every: 25, ..Default::default() };
+        let back = TrainConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.checkpoint_every, 25);
     }
 
     #[test]

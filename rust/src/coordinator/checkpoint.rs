@@ -1,17 +1,33 @@
-//! Checkpointing substrate: persist/restore a flat model state (the `x^t`
-//! of Algorithm 1) with an in-tree binary format.
+//! Checkpointing substrate: two in-tree binary formats.
 //!
-//! Format (little-endian): magic `HOSGDCK1` · u64 dim · u64 seed ·
-//! u64 iter · dim×f32 payload · u64 FNV-1a checksum over everything
-//! before it. Used by the attack driver (frozen classifier weights), the
-//! e2e example (resume), and anything that wants to hand a trained model
-//! to `ModelBackend::predict` on either backend.
+//! **v1 (`HOSGDCK1`)** — a flat model state (the `x^t` of Algorithm 1):
+//! magic · u64 dim · u64 seed · u64 iter · dim×f32 payload · u64 FNV-1a
+//! checksum over everything before it. Kept for the attack driver (frozen
+//! classifier weights) and anything that only needs parameters to feed
+//! `ModelBackend::predict`.
+//!
+//! **v2 (`HOSGDCK2`)** — a full training [`RunState`]: run identity
+//! (method, dataset, dim, workers, τ, seed, N, cadences, resolved μ, a
+//! fingerprint over the remaining trajectory-affecting hyper-parameters),
+//! the iteration cursor, comm/compute accounting, the deployable parameter
+//! view, every hidden optimizer buffer ([`AlgoState`]) and the trace rows
+//! recorded so far. `Session::restore` resumes from it **bit-identically**:
+//! the RNG needs no stored position because every stream is re-derived from
+//! `(seed, iter, worker)`. The v2 loader rejects mismatched runs loudly;
+//! [`load_params_any`] reads either version as params-only.
 
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::BackendKind;
+use crate::comm::CommStats;
+use crate::config::Method;
+use crate::metrics::{ComputeCounters, TraceRow};
+use crate::optim::AlgoState;
+
 const MAGIC: &[u8; 8] = b"HOSGDCK1";
+const MAGIC_V2: &[u8; 8] = b"HOSGDCK2";
 
 /// A saved model state.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +68,13 @@ impl Checkpoint {
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < 8 + 24 + 8 {
             bail!("checkpoint too short ({} bytes)", bytes.len());
+        }
+        if &bytes[0..8] == MAGIC_V2 {
+            bail!(
+                "this is a v2 run-state checkpoint (HOSGDCK2); load it with \
+                 RunState::load / Session::restore, or load_params_any for a \
+                 params-only view"
+            );
         }
         if &bytes[0..8] != MAGIC {
             bail!("bad checkpoint magic");
@@ -96,6 +119,276 @@ impl Checkpoint {
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
         Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
+}
+
+// ---------------------------------------------------------------------------
+// v2: full run state (HOSGDCK2)
+// ---------------------------------------------------------------------------
+
+/// Identity of the run a v2 checkpoint belongs to. `Session::restore`
+/// compares every field against the resuming configuration and refuses a
+/// mismatch with a descriptive error — a resumed trajectory must be the
+/// trajectory that was interrupted, never garbage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    pub method: Method,
+    /// compute backend the run executed on — native and pjrt kernels only
+    /// agree to tolerance, not bit-for-bit, so resuming across backends is
+    /// rejected
+    pub backend: BackendKind,
+    pub dataset: String,
+    pub dim: usize,
+    pub workers: usize,
+    pub tau: usize,
+    pub seed: u64,
+    /// N — step-size schedules and the μ rule depend on the horizon
+    pub iters: u64,
+    /// row cadences: they shape the trace a resumed run must reproduce
+    pub eval_every: u64,
+    pub record_every: u64,
+    /// resolved smoothing parameter μ, as f64 bits
+    pub mu_bits: u64,
+    /// hash over the remaining trajectory-affecting knobs (step rule,
+    /// redundancy, SVRG/QSGD/momentum settings, corpus sizes, network)
+    pub cfg_fingerprint: u64,
+}
+
+/// A complete, resumable snapshot of a training
+/// [`Session`](crate::coordinator::session::Session) — everything needed to
+/// continue the run bit-identically in a fresh process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunState {
+    pub meta: RunMeta,
+    /// next iteration to execute (`iter` iterations are already applied)
+    pub iter: u64,
+    /// training compute seconds consumed so far (timing continuity only —
+    /// excluded from canonical traces)
+    pub compute_s: f64,
+    pub comm: CommStats,
+    pub counters: ComputeCounters,
+    /// the deployable parameter view (`Algorithm::eval_params`) — what
+    /// params-only consumers such as the attack driver read
+    pub params: Vec<f32>,
+    /// every hidden optimizer buffer, per method
+    pub algo: AlgoState,
+    /// trace rows recorded before the snapshot
+    pub rows: Vec<TraceRow>,
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounded little-endian reader over the checkpoint body.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() < self.off + n {
+            bail!("truncated checkpoint (wanted {n} bytes at offset {})", self.off);
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        if n > self.bytes.len() {
+            bail!("checkpoint string length {n} exceeds file size");
+        }
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|_| anyhow!("checkpoint string is not UTF-8"))?;
+        Ok(s.to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(4) > self.bytes.len() {
+            bail!("checkpoint buffer length {n} exceeds file size");
+        }
+        let data = self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(data)
+    }
+}
+
+impl RunState {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let algo_len: usize = self.algo.buffers.iter().map(|(n, b)| n.len() + 4 * b.len()).sum();
+        let cap = 256 + 4 * self.params.len() + algo_len + self.rows.len() * TraceRow::ENCODED_LEN;
+        let mut out = Vec::with_capacity(cap);
+        out.extend_from_slice(MAGIC_V2);
+        put_str(&mut out, self.meta.method.label());
+        put_str(&mut out, self.meta.backend.label());
+        put_str(&mut out, &self.meta.dataset);
+        for v in [
+            self.meta.dim as u64,
+            self.meta.workers as u64,
+            self.meta.tau as u64,
+            self.meta.seed,
+            self.meta.iters,
+            self.meta.eval_every,
+            self.meta.record_every,
+            self.meta.mu_bits,
+            self.meta.cfg_fingerprint,
+            self.iter,
+            self.compute_s.to_bits(),
+            self.comm.bytes_per_worker,
+            self.comm.scalars_per_worker,
+            self.comm.rounds,
+            self.comm.sim_time_s.to_bits(),
+            self.counters.fn_evals,
+            self.counters.grad_evals,
+        ] {
+            put_u64(&mut out, v);
+        }
+        put_f32s(&mut out, &self.params);
+        put_u64(&mut out, self.algo.buffers.len() as u64);
+        for (name, buf) in &self.algo.buffers {
+            put_str(&mut out, name);
+            put_f32s(&mut out, buf);
+        }
+        put_u64(&mut out, self.rows.len() as u64);
+        for row in &self.rows {
+            row.write_le(&mut out);
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 + 8 {
+            bail!("run-state checkpoint too short ({} bytes)", bytes.len());
+        }
+        if &bytes[0..8] == MAGIC {
+            bail!(
+                "this is a v1 params-only checkpoint (HOSGDCK1); it cannot resume \
+                 a run — load it with Checkpoint::load (attack driver) or \
+                 load_params_any"
+            );
+        }
+        if &bytes[0..8] != MAGIC_V2 {
+            bail!("bad run-state checkpoint magic");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into()?);
+        if stored != fnv1a(body) {
+            bail!("run-state checkpoint checksum mismatch (corrupt file)");
+        }
+        let mut c = Cursor { bytes: body, off: 8 };
+        let method: Method = c.str()?.parse()?;
+        let backend: BackendKind = c.str()?.parse()?;
+        let dataset = c.str()?;
+        let meta = RunMeta {
+            method,
+            backend,
+            dataset,
+            dim: c.u64()? as usize,
+            workers: c.u64()? as usize,
+            tau: c.u64()? as usize,
+            seed: c.u64()?,
+            iters: c.u64()?,
+            eval_every: c.u64()?,
+            record_every: c.u64()?,
+            mu_bits: c.u64()?,
+            cfg_fingerprint: c.u64()?,
+        };
+        let iter = c.u64()?;
+        let compute_s = c.f64()?;
+        let comm = CommStats {
+            bytes_per_worker: c.u64()?,
+            scalars_per_worker: c.u64()?,
+            rounds: c.u64()?,
+            sim_time_s: c.f64()?,
+        };
+        let counters = ComputeCounters { fn_evals: c.u64()?, grad_evals: c.u64()? };
+        let params = c.f32s()?;
+        if params.len() != meta.dim {
+            bail!(
+                "run-state checkpoint dim {} does not match its parameter payload ({})",
+                meta.dim,
+                params.len()
+            );
+        }
+        let n_bufs = c.u64()? as usize;
+        let mut algo = AlgoState::new(method);
+        for _ in 0..n_bufs {
+            let name = c.str()?;
+            let buf = c.f32s()?;
+            algo = algo.with(name, buf);
+        }
+        let n_rows = c.u64()? as usize;
+        if n_rows.saturating_mul(TraceRow::ENCODED_LEN) > body.len() {
+            bail!("run-state checkpoint row count {n_rows} exceeds file size");
+        }
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            rows.push(TraceRow::read_le(body, &mut c.off)?);
+        }
+        if c.off != body.len() {
+            bail!("run-state checkpoint has {} trailing bytes", body.len() - c.off);
+        }
+        Ok(Self { meta, iter, compute_s, comm, counters, params, algo, rows })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing run-state checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading run-state checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Read either checkpoint version as a params-only [`Checkpoint`] — the
+/// attack driver's view (it only needs frozen classifier weights). v1 files
+/// load verbatim; v2 files contribute their deployable parameter view.
+pub fn load_params_any(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    if bytes.len() >= 8 && &bytes[0..8] == MAGIC_V2 {
+        let st = RunState::from_bytes(&bytes)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        return Ok(Checkpoint::new(st.params, st.meta.seed, st.iter));
+    }
+    Checkpoint::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
 }
 
 #[cfg(test)]
@@ -151,5 +444,91 @@ mod tests {
         let sum = super::fnv1a(&bytes[..body_len]);
         bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
         assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    fn run_state() -> RunState {
+        RunState {
+            meta: RunMeta {
+                method: Method::HoSgdM,
+                backend: BackendKind::Native,
+                dataset: "quickstart".into(),
+                dim: 3,
+                workers: 4,
+                tau: 8,
+                seed: 11,
+                iters: 100,
+                eval_every: 10,
+                record_every: 1,
+                mu_bits: 0.01f64.to_bits(),
+                cfg_fingerprint: 0xDEAD_BEEF,
+            },
+            iter: 42,
+            compute_s: 1.25,
+            comm: CommStats {
+                bytes_per_worker: 1000,
+                scalars_per_worker: 250,
+                rounds: 42,
+                sim_time_s: 0.123_456_789,
+            },
+            counters: ComputeCounters { fn_evals: 640, grad_evals: 320 },
+            params: vec![1.0, -2.0, 3.5],
+            algo: AlgoState::new(Method::HoSgdM)
+                .with("params", vec![1.0, -2.0, 3.5])
+                .with("velocity", vec![0.1, 0.2, 0.3]),
+            rows: vec![TraceRow {
+                iter: 41,
+                train_loss: 0.5,
+                test_acc: Some(0.875),
+                compute_s: 1.2,
+                comm_s: 0.1,
+                total_s: 1.3,
+                bytes_per_worker: 1000,
+                scalars_per_worker: 250,
+                fn_evals: 640,
+                grad_evals: 320,
+            }],
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_is_exact() {
+        let st = run_state();
+        let back = RunState::from_bytes(&st.to_bytes()).unwrap();
+        assert_eq!(back, st);
+        assert_eq!(back.comm.sim_time_s.to_bits(), st.comm.sim_time_s.to_bits());
+        assert_eq!(back.rows[0].train_loss.to_bits(), st.rows[0].train_loss.to_bits());
+    }
+
+    #[test]
+    fn v2_detects_corruption_and_rejects_v1() {
+        let st = run_state();
+        let mut bytes = st.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(RunState::from_bytes(&bytes).is_err());
+        // a v1 file is refused with a pointed message, not misparsed
+        let err = RunState::from_bytes(&ck().to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("v1"), "{err}");
+        // and vice versa: the v1 loader names the v2 format
+        let err = Checkpoint::from_bytes(&st.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("v2"), "{err}");
+    }
+
+    #[test]
+    fn load_params_any_reads_both_versions() {
+        let dir = std::env::temp_dir().join("hosgd_ckpt_any_test");
+        let v1 = dir.join("v1.ckpt");
+        ck().save(&v1).unwrap();
+        let got = load_params_any(&v1).unwrap();
+        assert_eq!(got.params, ck().params);
+
+        let st = run_state();
+        let v2 = dir.join("v2.ck2");
+        st.save(&v2).unwrap();
+        let got = load_params_any(&v2).unwrap();
+        assert_eq!(got.params, st.params);
+        assert_eq!(got.seed, st.meta.seed);
+        assert_eq!(got.iter, st.iter);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

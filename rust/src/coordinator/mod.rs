@@ -1,8 +1,13 @@
-//! The leader loop: drives `m` workers through N iterations of a chosen
-//! method over a backend-bound model profile, producing a [`Trace`]. The
-//! per-iteration worker fan-out runs on a [`crate::pool::WorkerPool`]
-//! (`threads` in [`TrainConfig`] / `--threads` on the CLI) with a
-//! fixed-order reduction, so traces are bit-identical at any thread count.
+//! The training driver layer: a first-class [`session::Session`] drives
+//! `m` workers through the iteration schedule of a chosen method over a
+//! backend-bound model profile — steppable ([`session::Session::step`]),
+//! observable ([`session::Observer`]) and resumable
+//! ([`session::Session::snapshot`] / [`session::Session::restore`] via the
+//! v2 [`checkpoint::RunState`] format). The per-iteration worker fan-out
+//! runs on a [`crate::pool::WorkerPool`] (`threads` in [`TrainConfig`] /
+//! `--threads` on the CLI) with a fixed-order reduction, so traces are
+//! bit-identical at any thread count — including across an
+//! interrupt/resume boundary.
 //!
 //! Responsibilities: dataset materialization + sharding, initial-point
 //! broadcast (all methods start from the same Glorot init — §5.2 "all the
@@ -10,20 +15,22 @@
 //! periodic test evaluation, wall-clock vs simulated-clock bookkeeping, and
 //! trace recording. The model is an abstract [`ModelBackend`], so the same
 //! loop runs against the native kernels or the PJRT artifacts.
+//!
+//! [`run_train`] / [`run_train_with`] remain as thin batch wrappers over
+//! `Session` for callers that want one call → one finished [`Trace`]
+//! (sweeps, benches, figures); new embedders should prefer `Session`.
 
 pub mod checkpoint;
-
-use std::sync::Arc;
+pub mod session;
 
 use anyhow::Result;
 
 use crate::backend::{Backend, ModelBackend};
-use crate::comm::CommSim;
 use crate::config::TrainConfig;
 use crate::data::{profile, Dataset};
-use crate::metrics::{Stopwatch, Trace, TraceRow};
-use crate::optim::{build, AlgoConfig, Oracle, TrainOracle, World};
-use crate::pool::{resolve_threads, WorkerPool};
+use crate::metrics::Trace;
+
+pub use session::{EvalEvent, Observer, Session, StepEvent, SyncEvent, TraceRecorder};
 
 /// Materialized datasets for one run.
 pub struct RunData {
@@ -48,13 +55,16 @@ pub fn make_data(cfg: &TrainConfig) -> Result<RunData> {
 /// (including test sets smaller than one batch) is zero-padded through
 /// `predict` and scored on its real rows only. Rows of a dense forward
 /// are independent, so padding cannot change the real rows' logits.
+///
+/// An empty test set is an error: accuracy is undefined there, and the
+/// previous `NaN` return silently poisoned traces and CSV output.
 pub fn eval_accuracy(model: &dyn ModelBackend, params: &[f32], test: &Dataset) -> Result<f64> {
     let b = model.batch();
     let f = model.features();
     let classes = model.classes();
     let n = test.len();
     if n == 0 {
-        return Ok(f64::NAN);
+        anyhow::bail!("eval_accuracy: empty test set (accuracy is undefined over 0 samples)");
     }
     let chunks = n / b;
     let mut correct = 0.0f64;
@@ -86,6 +96,9 @@ pub struct TrainOutcome {
 }
 
 /// Run one full training experiment; returns the iteration trace.
+///
+/// Batch wrapper over [`Session`] — prefer `Session` when you need
+/// stepping, streaming observers or checkpoint/resume.
 pub fn run_train(backend: &dyn Backend, cfg: &TrainConfig) -> Result<Trace> {
     cfg.validate()?;
     let model = backend.model(&cfg.dataset)?;
@@ -94,82 +107,14 @@ pub fn run_train(backend: &dyn Backend, cfg: &TrainConfig) -> Result<Trace> {
 }
 
 /// Same, with caller-provided model binding + datasets (lets sweeps share
-/// bound models and corpora across methods).
+/// bound models and corpora across methods). Thin wrapper over
+/// [`Session`]: build, run to the horizon, hand back the outcome.
 pub fn run_train_with(
     model: &dyn ModelBackend,
     data: &RunData,
     cfg: &TrainConfig,
 ) -> Result<TrainOutcome> {
-    cfg.validate()?;
-    let acfg = AlgoConfig::from_train(cfg, model.dim());
-    // RI-SGD samples from redundant pools; everyone else from iid shards
-    let redundancy = if cfg.method == crate::config::Method::RiSgd {
-        cfg.redundancy
-    } else {
-        0.0
-    };
-    let oracle = TrainOracle::new(model, &data.train, cfg.workers, redundancy, cfg.seed);
-    let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
-    let comm = CommSim::new(cfg.network, cfg.workers);
-    // the worker execution engine: reuse the model's kernel pool so one
-    // `--threads` knob governs the whole run; otherwise build one from the
-    // config (traces are bit-identical at any thread count either way)
-    let pool = model
-        .pool()
-        .unwrap_or_else(|| Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
-    let mut world = World::with_pool(oracle, comm, acfg.clone(), pool);
-    let mut algo = build(cfg.method, init, &acfg);
-
-    let mut rows = Vec::with_capacity((cfg.iters / cfg.record_every.max(1)) as usize + 2);
-    let mut eval_buf = Vec::with_capacity(model.dim());
-    let watch = Stopwatch::start();
-    let mut eval_overhead = 0.0f64; // test evals are not training compute
-
-    for t in 0..cfg.iters {
-        let train_loss = algo.step(t, &mut world)?;
-
-        let record = cfg.record_every > 0 && t % cfg.record_every.max(1) == 0;
-        let last = t + 1 == cfg.iters;
-        let do_eval = cfg.eval_every > 0 && (t % cfg.eval_every == 0 || last);
-        if record || last || do_eval {
-            let test_acc = if do_eval {
-                let e0 = watch.elapsed_s();
-                algo.eval_params(&mut eval_buf);
-                let acc = eval_accuracy(model, &eval_buf, &data.test)?;
-                eval_overhead += watch.elapsed_s() - e0;
-                Some(acc)
-            } else {
-                None
-            };
-            let compute_s = (watch.elapsed_s() - eval_overhead).max(0.0);
-            let comm_s = world.comm.stats.sim_time_s;
-            rows.push(TraceRow {
-                iter: t,
-                train_loss,
-                test_acc,
-                compute_s,
-                comm_s,
-                total_s: compute_s + comm_s,
-                bytes_per_worker: world.comm.stats.bytes_per_worker,
-                scalars_per_worker: world.comm.stats.scalars_per_worker,
-                fn_evals: world.compute.fn_evals,
-                grad_evals: world.compute.grad_evals,
-            });
-        }
-    }
-
-    algo.eval_params(&mut eval_buf);
-    Ok(TrainOutcome {
-        trace: Trace {
-            method: cfg.method.label().to_string(),
-            dataset: cfg.dataset.clone(),
-            dim: model.dim(),
-            workers: cfg.workers,
-            batch: model.batch(),
-            tau: cfg.tau,
-            seed: cfg.seed,
-            rows,
-        },
-        params: eval_buf,
-    })
+    let mut session = Session::new(model, data, cfg)?;
+    session.run_to_end()?;
+    Ok(session.into_outcome())
 }

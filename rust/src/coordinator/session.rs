@@ -1,0 +1,478 @@
+//! The session-based training driver: a steppable, observable, resumable
+//! replacement for the monolithic `run_train` loop.
+//!
+//! A [`Session`] owns one training run — model binding, datasets, the
+//! per-worker [`World`], the [`Algorithm`] — and exposes the paper's
+//! iteration schedule one step at a time: [`Session::step`] executes a
+//! single hybrid FO/ZO iteration, [`Session::run_until`] /
+//! [`Session::run_to_end`] drive ranges of them. Everything the old loop
+//! hard-coded (trace recording, periodic test evaluation) is now delivered
+//! through the [`Observer`] trait — the built-in [`TraceRecorder`] is just
+//! the observer that happens to build the [`Trace`] — so embedders can
+//! stream metrics, log sync rounds, or trigger early stopping without
+//! forking the loop.
+//!
+//! Sessions snapshot and restore: [`Session::snapshot`] captures the full
+//! [`RunState`] (optimizer buffers, comm/compute accounting, recorded
+//! rows, iteration cursor) and [`Session::restore`] resumes it
+//! **bit-identically** — the canonical trace of an interrupted+resumed run
+//! is byte-equal to an uninterrupted one, at any thread count. No RNG
+//! position needs saving: every stream (directions, minibatches, QSGD
+//! quantization) is re-derived from `(seed, iter, worker)`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::backend::ModelBackend;
+use crate::comm::CommSim;
+use crate::config::{StepSize, TrainConfig};
+use crate::coordinator::checkpoint::{RunMeta, RunState};
+use crate::coordinator::{eval_accuracy, RunData, TrainOutcome};
+use crate::metrics::{Stopwatch, Trace, TraceRow};
+use crate::optim::{build, AlgoConfig, Algorithm, Oracle, TrainOracle, World};
+use crate::pool::{resolve_threads, WorkerPool};
+use crate::rng::hash_u64s;
+
+// ---------------------------------------------------------------------------
+// Observer: streaming run events
+// ---------------------------------------------------------------------------
+
+/// What one completed iteration looked like. `row` carries the loss,
+/// optional test accuracy and the cumulative comm/compute accounting at
+/// this iteration (the same fields a recorded [`TraceRow`] would hold).
+#[derive(Debug, Clone, Copy)]
+pub struct StepEvent {
+    pub row: TraceRow,
+    /// whether the built-in recorder keeps this row (the `record_every` /
+    /// `eval_every` / final-iteration cadence of [`TrainConfig`])
+    pub recorded: bool,
+    /// whether this iteration exchanged a full vector per worker (FO
+    /// all-reduce, RI-SGD model average, QSGD encoded gradient) rather
+    /// than the ZO scalar
+    pub sync_round: bool,
+    /// `true` on iteration `N-1` — the run is complete after this event
+    pub final_step: bool,
+}
+
+/// A periodic (or on-demand) test-set evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalEvent {
+    pub iter: u64,
+    /// test accuracy in [0, 1]
+    pub accuracy: f64,
+}
+
+/// A vector-level synchronization round (the expensive exchanges the
+/// paper's τ schedule spaces out).
+#[derive(Debug, Clone, Copy)]
+pub struct SyncEvent {
+    pub iter: u64,
+    /// per-worker egress bytes of this round
+    pub bytes: u64,
+    /// per-worker scalars of this round
+    pub scalars: u64,
+}
+
+/// Streaming hooks over a running [`Session`]. All methods default to
+/// no-ops; implement the ones you care about. Within one iteration the
+/// dispatch order is `on_sync_round` → `on_eval` → `on_step`.
+pub trait Observer {
+    fn on_step(&mut self, _ev: &StepEvent) {}
+    fn on_eval(&mut self, _ev: &EvalEvent) {}
+    fn on_sync_round(&mut self, _ev: &SyncEvent) {}
+}
+
+/// The observer that builds the run's [`Trace`]: keeps every row whose
+/// [`StepEvent::recorded`] flag is set. A `Session` carries one internally
+/// (its rows survive snapshot/restore); it is public so embedders driving
+/// a custom loop can reuse the exact recording semantics.
+#[derive(Debug, Default, Clone)]
+pub struct TraceRecorder {
+    pub rows: Vec<TraceRow>,
+}
+
+impl Observer for TraceRecorder {
+    fn on_step(&mut self, ev: &StepEvent) {
+        if ev.recorded {
+            self.rows.push(ev.row);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// One training run as a first-class value: step it, observe it, snapshot
+/// it, resume it. See the module docs for the contract; `run_train_with`
+/// is now a thin wrapper that drives a `Session` to completion.
+pub struct Session<'a> {
+    model: &'a dyn ModelBackend,
+    data: &'a RunData,
+    cfg: TrainConfig,
+    world: World<TrainOracle<'a>>,
+    algo: Box<dyn Algorithm<TrainOracle<'a>>>,
+    recorder: TraceRecorder,
+    observers: Vec<Box<dyn Observer + 'a>>,
+    /// next iteration to execute
+    t: u64,
+    watch: Stopwatch,
+    eval_overhead: f64,
+    /// compute seconds carried over from the run segment(s) before restore
+    compute_base_s: f64,
+    eval_buf: Vec<f32>,
+}
+
+impl<'a> Session<'a> {
+    /// Build a fresh session at iteration 0 (what `run_train_with` always
+    /// did up front: sharding, initial-point broadcast, comm simulator,
+    /// worker pool, algorithm instantiation).
+    pub fn new(model: &'a dyn ModelBackend, data: &'a RunData, cfg: &TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let acfg = AlgoConfig::from_train(cfg, model.dim());
+        // RI-SGD samples from redundant pools; everyone else from iid shards
+        let redundancy = if cfg.method == crate::config::Method::RiSgd {
+            cfg.redundancy
+        } else {
+            0.0
+        };
+        let oracle = TrainOracle::new(model, &data.train, cfg.workers, redundancy, cfg.seed);
+        let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
+        let comm = CommSim::new(cfg.network, cfg.workers);
+        // the worker execution engine: reuse the model's kernel pool so one
+        // `--threads` knob governs the whole run; otherwise build one from
+        // the config (traces are bit-identical at any thread count)
+        let pool = model
+            .pool()
+            .unwrap_or_else(|| Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
+        let world = World::with_pool(oracle, comm, acfg.clone(), pool);
+        let algo = build(cfg.method, init, &acfg);
+        let dim = model.dim();
+        Ok(Self {
+            model,
+            data,
+            cfg: cfg.clone(),
+            world,
+            algo,
+            recorder: TraceRecorder::default(),
+            observers: Vec::new(),
+            t: 0,
+            watch: Stopwatch::start(),
+            eval_overhead: 0.0,
+            compute_base_s: 0.0,
+            eval_buf: Vec::with_capacity(dim),
+        })
+    }
+
+    /// Attach a streaming observer (events fire for every subsequent step).
+    pub fn add_observer(&mut self, obs: impl Observer + 'a) {
+        self.observers.push(Box::new(obs));
+    }
+
+    /// Next iteration to execute (= iterations completed so far).
+    pub fn iter(&self) -> u64 {
+        self.t
+    }
+
+    /// Has the full horizon `N` been executed?
+    pub fn is_finished(&self) -> bool {
+        self.t >= self.cfg.iters
+    }
+
+    /// The run configuration this session was built from.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Rows recorded so far (the in-progress trace).
+    pub fn rows(&self) -> &[TraceRow] {
+        &self.recorder.rows
+    }
+
+    /// Execute one iteration of the method's schedule; fires observer
+    /// events and returns the [`StepEvent`]. Errors once the horizon is
+    /// exhausted.
+    pub fn step(&mut self) -> Result<StepEvent> {
+        let t = self.t;
+        if t >= self.cfg.iters {
+            bail!("session already ran all {} iterations", self.cfg.iters);
+        }
+        let before = self.world.comm.stats;
+        let train_loss = self.algo.step(t, &mut self.world)?;
+        self.t = t + 1;
+
+        let stats = self.world.comm.stats;
+        // a vector-level exchange moves ≥ d scalars per worker; ZO rounds
+        // move O(1) — the gap is the paper's whole point, so the
+        // classification is unambiguous
+        let d = self.world.dim() as u64;
+        let sync_round = stats.scalars_per_worker - before.scalars_per_worker >= d;
+
+        let last = self.t == self.cfg.iters;
+        let record = self.cfg.record_every > 0 && t % self.cfg.record_every == 0;
+        let do_eval = self.cfg.eval_every > 0 && (t % self.cfg.eval_every == 0 || last);
+        let test_acc = if do_eval { Some(self.eval_now()?) } else { None };
+
+        let compute_s =
+            self.compute_base_s + (self.watch.elapsed_s() - self.eval_overhead).max(0.0);
+        let comm_s = stats.sim_time_s;
+        let ev = StepEvent {
+            row: TraceRow {
+                iter: t,
+                train_loss,
+                test_acc,
+                compute_s,
+                comm_s,
+                total_s: compute_s + comm_s,
+                bytes_per_worker: stats.bytes_per_worker,
+                scalars_per_worker: stats.scalars_per_worker,
+                fn_evals: self.world.compute.fn_evals,
+                grad_evals: self.world.compute.grad_evals,
+            },
+            recorded: record || last || do_eval,
+            sync_round,
+            final_step: last,
+        };
+
+        if sync_round {
+            let sev = SyncEvent {
+                iter: t,
+                bytes: stats.bytes_per_worker - before.bytes_per_worker,
+                scalars: stats.scalars_per_worker - before.scalars_per_worker,
+            };
+            for obs in &mut self.observers {
+                obs.on_sync_round(&sev);
+            }
+        }
+        if let Some(accuracy) = test_acc {
+            let eev = EvalEvent { iter: t, accuracy };
+            for obs in &mut self.observers {
+                obs.on_eval(&eev);
+            }
+        }
+        self.recorder.on_step(&ev);
+        for obs in &mut self.observers {
+            obs.on_step(&ev);
+        }
+        Ok(ev)
+    }
+
+    /// Step until iteration `t` (exclusive) or the horizon, whichever is
+    /// first. `run_until(k)` then `run_until(N)` is the interruptible
+    /// spelling of `run_to_end`.
+    pub fn run_until(&mut self, t: u64) -> Result<()> {
+        let stop = t.min(self.cfg.iters);
+        while self.t < stop {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Step through the remaining horizon.
+    pub fn run_to_end(&mut self) -> Result<()> {
+        self.run_until(self.cfg.iters)
+    }
+
+    /// Evaluate test accuracy of the current deployable parameters now
+    /// (outside the `eval_every` cadence; the cost is excluded from the
+    /// trace's compute axis like any other evaluation).
+    pub fn eval_now(&mut self) -> Result<f64> {
+        let e0 = self.watch.elapsed_s();
+        self.algo.eval_params(&mut self.eval_buf);
+        let acc = eval_accuracy(self.model, &self.eval_buf, &self.data.test)?;
+        self.eval_overhead += self.watch.elapsed_s() - e0;
+        Ok(acc)
+    }
+
+    /// Current deployable parameters (`Algorithm::eval_params`).
+    pub fn params(&mut self) -> Vec<f32> {
+        self.algo.eval_params(&mut self.eval_buf);
+        self.eval_buf.clone()
+    }
+
+    /// The trace recorded so far, with run metadata attached.
+    pub fn trace(&self) -> Trace {
+        Trace {
+            method: self.cfg.method.label().to_string(),
+            dataset: self.cfg.dataset.clone(),
+            dim: self.world.dim(),
+            workers: self.cfg.workers,
+            batch: self.model.batch(),
+            tau: self.cfg.tau,
+            seed: self.cfg.seed,
+            rows: self.recorder.rows.clone(),
+        }
+    }
+
+    /// Finish the session into the classic `run_train_with` result.
+    pub fn into_outcome(mut self) -> TrainOutcome {
+        let trace = self.trace();
+        self.algo.eval_params(&mut self.eval_buf);
+        TrainOutcome { trace, params: self.eval_buf }
+    }
+
+    // -- snapshot / restore -------------------------------------------------
+
+    /// Capture the full resumable state (see [`RunState`]). Cheap relative
+    /// to an iteration: a few `O(d)` buffer copies.
+    pub fn snapshot(&mut self) -> RunState {
+        self.algo.eval_params(&mut self.eval_buf);
+        let compute_s =
+            self.compute_base_s + (self.watch.elapsed_s() - self.eval_overhead).max(0.0);
+        RunState {
+            meta: run_meta(&self.cfg, self.world.dim()),
+            iter: self.t,
+            compute_s,
+            comm: self.world.comm.stats,
+            counters: self.world.compute,
+            params: self.eval_buf.clone(),
+            algo: self.algo.state(),
+            rows: self.recorder.rows.clone(),
+        }
+    }
+
+    /// Rebuild a session from a snapshot so that stepping it to the
+    /// horizon is bit-identical to never having stopped. `cfg` must
+    /// describe the same run the snapshot came from; any divergence in a
+    /// trajectory-affecting knob is rejected with a descriptive error.
+    pub fn restore(
+        model: &'a dyn ModelBackend,
+        data: &'a RunData,
+        cfg: &TrainConfig,
+        state: RunState,
+    ) -> Result<Self> {
+        let expect = run_meta(cfg, model.dim());
+        check_meta(&state.meta, &expect)?;
+        if state.iter > cfg.iters {
+            bail!(
+                "checkpoint is at iteration {} but the run horizon is only {}",
+                state.iter,
+                cfg.iters
+            );
+        }
+        let mut s = Self::new(model, data, cfg)?;
+        s.algo.load_state(state.algo)?;
+        s.world.comm.restore_stats(state.comm);
+        s.world.compute = state.counters;
+        s.recorder.rows = state.rows;
+        s.t = state.iter;
+        s.compute_base_s = state.compute_s;
+        Ok(s)
+    }
+}
+
+/// The identity block `Session::snapshot` stamps into a checkpoint.
+fn run_meta(cfg: &TrainConfig, dim: usize) -> RunMeta {
+    RunMeta {
+        method: cfg.method,
+        backend: cfg.backend,
+        dataset: cfg.dataset.clone(),
+        dim,
+        workers: cfg.workers,
+        tau: cfg.tau,
+        seed: cfg.seed,
+        iters: cfg.iters,
+        eval_every: cfg.eval_every,
+        record_every: cfg.record_every,
+        mu_bits: cfg.resolve_mu(dim).to_bits(),
+        cfg_fingerprint: cfg_fingerprint(cfg),
+    }
+}
+
+/// Hash of the trajectory-affecting knobs not named in [`RunMeta`]: the
+/// step-size rule, corpus sizes, RI-SGD redundancy, SVRG epoch geometry,
+/// QSGD levels/EF, momentum and the network model. Two configs with equal
+/// meta and equal fingerprint drive identical trajectories.
+fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
+    let step = match cfg.step {
+        StepSize::Constant { alpha } => [1, alpha.to_bits(), 0],
+        StepSize::InvDecay { alpha0, gamma } => [2, alpha0.to_bits(), gamma.to_bits()],
+        StepSize::Theory { l_guess } => [3, l_guess.to_bits(), 0],
+    };
+    hash_u64s(&[
+        step[0],
+        step[1],
+        step[2],
+        cfg.train_size as u64,
+        cfg.test_size as u64,
+        cfg.redundancy.to_bits(),
+        cfg.svrg_epoch as u64,
+        cfg.svrg_probes as u64,
+        cfg.qsgd_levels as u64,
+        cfg.qsgd_error_feedback as u64,
+        cfg.momentum.to_bits(),
+        cfg.network.latency_s.to_bits(),
+        cfg.network.bandwidth_bps.to_bits(),
+    ])
+}
+
+/// Field-by-field comparison with errors that name the offending knob.
+fn check_meta(saved: &RunMeta, expect: &RunMeta) -> Result<()> {
+    if saved.method != expect.method {
+        bail!(
+            "checkpoint was written by method {:?} but the run is configured for {:?}",
+            saved.method.label(),
+            expect.method.label()
+        );
+    }
+    if saved.backend != expect.backend {
+        bail!(
+            "checkpoint was written under the {:?} backend but the run uses {:?} \
+             (backends agree to tolerance, not bit-for-bit)",
+            saved.backend.label(),
+            expect.backend.label()
+        );
+    }
+    if saved.dataset != expect.dataset {
+        bail!(
+            "checkpoint belongs to dataset {:?}, run is configured for {:?}",
+            saved.dataset,
+            expect.dataset
+        );
+    }
+    if saved.dim != expect.dim {
+        bail!("checkpoint dim {} does not match the model's {}", saved.dim, expect.dim);
+    }
+    if saved.workers != expect.workers {
+        bail!("checkpoint has m = {} workers, run has {}", saved.workers, expect.workers);
+    }
+    if saved.tau != expect.tau {
+        bail!("checkpoint has tau = {}, run has tau = {}", saved.tau, expect.tau);
+    }
+    if saved.seed != expect.seed {
+        bail!("checkpoint seed {} does not match run seed {}", saved.seed, expect.seed);
+    }
+    if saved.iters != expect.iters {
+        bail!(
+            "checkpoint horizon N = {} does not match the run's N = {} \
+             (step-size and mu schedules depend on N)",
+            saved.iters,
+            expect.iters
+        );
+    }
+    if saved.eval_every != expect.eval_every || saved.record_every != expect.record_every {
+        bail!(
+            "checkpoint cadences (eval_every {}, record_every {}) do not match the \
+             run's ({}, {}) — the resumed trace would not line up",
+            saved.eval_every,
+            saved.record_every,
+            expect.eval_every,
+            expect.record_every
+        );
+    }
+    if saved.mu_bits != expect.mu_bits {
+        bail!(
+            "checkpoint smoothing mu = {} does not match the run's {}",
+            f64::from_bits(saved.mu_bits),
+            f64::from_bits(expect.mu_bits)
+        );
+    }
+    if saved.cfg_fingerprint != expect.cfg_fingerprint {
+        bail!(
+            "checkpoint hyper-parameters differ from the run's (step rule, corpus \
+             sizes, redundancy, SVRG/QSGD/momentum or network settings)"
+        );
+    }
+    Ok(())
+}

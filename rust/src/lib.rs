@@ -19,8 +19,30 @@
 //!   artifacts or external libraries; this is what CI exercises.
 //! * **pjrt** (cargo feature `pjrt`): the AOT path — JAX graphs built on
 //!   Pallas kernels are lowered once by `python/compile/aot.py` into
-//!   `artifacts/*.hlo.txt`, which [`runtime`] loads and executes through
+//!   `artifacts/*.hlo.txt`, which `runtime` (feature-gated) loads and executes through
 //!   the PJRT C API (`xla` crate). Python never runs on the training path.
+//!
+//! ## Embedding as a library
+//!
+//! The training surface is the session API (see README §Session API):
+//!
+//! ```no_run
+//! use hosgd::prelude::*;
+//!
+//! fn main() -> Result<()> {
+//!     let backend = NativeBackend::new();
+//!     let cfg = TrainConfig { iters: 100, ..Default::default() };
+//!     let model = backend.model(&cfg.dataset)?;
+//!     let data = make_data(&cfg)?;
+//!     let mut session = Session::new(model.as_ref(), &data, &cfg)?;
+//!     session.run_until(50)?;                 // steppable
+//!     let state = session.snapshot();         // resumable (v2 checkpoint)
+//!     let mut resumed = Session::restore(model.as_ref(), &data, &cfg, state)?;
+//!     resumed.run_to_end()?;                  // bit-identical continuation
+//!     println!("final loss {:?}", resumed.trace().final_loss());
+//!     Ok(())
+//! }
+//! ```
 //!
 //! ## Module map
 //!
@@ -32,15 +54,20 @@
 //! - [`comm`] — simulated collectives, byte accounting, α–β network model,
 //!   QSGD quantizer substrate
 //! - [`optim`] — HO-SGD (the contribution) and the baselines:
-//!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD
+//!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD; the `Algorithm` trait
+//!   with snapshot/restore of every hidden buffer (`AlgoState`)
 //! - [`pool`] — the parallel worker execution engine (`--threads N`):
 //!   per-worker oracle fan-out + batch-chunked kernels with deterministic
 //!   fixed-order reduction (bit-identical traces at any thread count)
-//! - [`coordinator`] — the leader loop driving `m` workers
+//! - [`coordinator`] — the session-based training driver: steppable /
+//!   observable / resumable [`coordinator::Session`], the `Observer`
+//!   event stream, v1+v2 checkpoint formats, and the batch `run_train*`
+//!   wrappers
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
 //! - [`config`] — typed experiment configuration (JSON + CLI overrides)
+//! - [`prelude`] — one-line import of the embedding surface
 
 pub mod attack;
 pub mod backend;
@@ -58,3 +85,19 @@ pub mod theory;
 pub mod util;
 
 pub use anyhow::Result;
+
+/// The documented embedding surface in one import: backends, configuration,
+/// the session driver with its observer events, checkpoint types, and the
+/// trace/metrics output side.
+pub mod prelude {
+    pub use anyhow::Result;
+
+    pub use crate::backend::{Backend, BackendKind, ModelBackend, NativeBackend};
+    pub use crate::config::{Method, StepSize, TrainConfig};
+    pub use crate::coordinator::checkpoint::{load_params_any, Checkpoint, RunState};
+    pub use crate::coordinator::session::{EvalEvent, Observer, StepEvent, SyncEvent};
+    pub use crate::coordinator::session::{Session, TraceRecorder};
+    pub use crate::coordinator::{eval_accuracy, make_data, run_train, run_train_with};
+    pub use crate::coordinator::{RunData, TrainOutcome};
+    pub use crate::metrics::{ComputeCounters, Trace, TraceRow};
+}

@@ -11,10 +11,13 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use hosgd::attack::{build_task, dump_adversarial_pgm, run_attack, AttackConfig};
+use hosgd::attack::{
+    build_task, build_task_with_params, dump_adversarial_pgm, run_attack, AttackConfig,
+};
 use hosgd::backend::{self, golden, Backend, BackendKind, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
-use hosgd::coordinator::{make_data, run_train_with};
+use hosgd::coordinator::checkpoint::{load_params_any, RunState};
+use hosgd::coordinator::{make_data, run_train_with, EvalEvent, Observer, Session};
 use hosgd::data::table4_profiles;
 use hosgd::metrics::Trace;
 use hosgd::theory::{table1, Table1Params};
@@ -35,13 +38,20 @@ GLOBAL FLAGS
   --out D        result directory (default: results)
 
 SUBCOMMANDS
-  train          single training run
+  train          single training run (session driver)
                  --method M --dataset D --iters N --workers M --tau T
                  --mu F --lr F --seed S --eval-every K --config FILE.json
                  --canonical FILE.json (timing-free trace for diffing)
+                 --checkpoint-every N (v2 run-state checkpoint cadence)
+                 --checkpoint PATH (default OUT/train_DATASET_METHOD.ck2)
+                 --resume PATH (continue a checkpointed run bit-identically;
+                 pass the same method/dataset/iters/... flags as the
+                 original run — mismatches are rejected loudly)
+                 --stop-at T (pause after iteration T-1, checkpoint, exit)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
-                 --dump-images
+                 --dump-images --clf-checkpoint PATH (frozen classifier
+                 weights from a v1 or v2 checkpoint instead of retraining)
   table1         Table 1 analytic + measured  --dataset D --iters N --tau T
   table4|datasets  print the dataset profiles (Table 4)
   ablate-tau     Remark 3 ablation --dataset D --iters N --taus 1,2,4,8
@@ -100,8 +110,9 @@ fn main() -> Result<()> {
             let clf_iters = args.get::<u64>("clf-iters", 400)?;
             let dump = args.has("dump-images");
             let c = args.get_opt::<f32>("c")?;
+            let clf_ckpt = args.get_opt::<String>("clf-checkpoint")?;
             args.finish()?;
-            run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c, threads)?;
+            run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c, threads, clf_ckpt)?;
         }
         "table1" => {
             let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
@@ -235,6 +246,15 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// CLI-side streaming observer: live evaluation lines on stderr.
+struct ConsoleObserver;
+
+impl Observer for ConsoleObserver {
+    fn on_eval(&mut self, ev: &EvalEvent) {
+        eprintln!("# iter {:>6}  test_acc {:.4}", ev.iter, ev.accuracy);
+    }
+}
+
 fn cmd_train(
     args: &Args,
     artifacts: &str,
@@ -263,14 +283,54 @@ fn cmd_train(
     cfg.seed = args.get("seed", cfg.seed)?;
     cfg.eval_every = args.get("eval-every", cfg.eval_every)?;
     cfg.threads = args.get("threads", cfg.threads)?;
+    cfg.checkpoint_every = args.get("checkpoint-every", cfg.checkpoint_every)?;
     let canonical = args.get_opt::<String>("canonical")?;
+    let ckpt_flag = args.get_opt::<String>("checkpoint")?;
+    let resume = args.get_opt::<String>("resume")?;
+    let stop_at = args.get_opt::<u64>("stop-at")?;
     args.finish()?;
     let be = open_backend(cfg.backend, artifacts, cfg.threads)?;
     let model = be.model(&cfg.dataset)?;
     let data = make_data(&cfg)?;
-    let out = run_train_with(model.as_ref(), &data, &cfg)?;
-    print_trace_summary(&out.trace);
+
     let base = format!("{}/train_{}_{}", out_dir, cfg.dataset, cfg.method.label());
+    let ckpt_path = ckpt_flag.clone().unwrap_or_else(|| format!("{base}.ck2"));
+    let mut session = match &resume {
+        Some(path) => {
+            let state = RunState::load(path)?;
+            let s = Session::restore(model.as_ref(), &data, &cfg, state)?;
+            eprintln!("# resumed {path} at iteration {}/{}", s.iter(), cfg.iters);
+            s
+        }
+        None => Session::new(model.as_ref(), &data, &cfg)?,
+    };
+    session.add_observer(ConsoleObserver);
+
+    let end = stop_at.map_or(cfg.iters, |s| s.min(cfg.iters));
+    while session.iter() < end {
+        session.step()?;
+        if cfg.checkpoint_every > 0 && session.iter() % cfg.checkpoint_every == 0 {
+            session.snapshot().save(&ckpt_path)?;
+        }
+    }
+
+    if !session.is_finished() {
+        // paused mid-run: persist a resume point, skip the trace outputs
+        // (a partial trace would shadow the complete one)
+        session.snapshot().save(&ckpt_path)?;
+        println!(
+            "paused at iteration {}/{}; run state written to {ckpt_path}",
+            session.iter(),
+            cfg.iters
+        );
+        println!("resume with: hosgd train --resume {ckpt_path} (plus the same run flags)");
+        return Ok(());
+    }
+    if cfg.checkpoint_every > 0 || ckpt_flag.is_some() {
+        session.snapshot().save(&ckpt_path)?;
+    }
+    let out = session.into_outcome();
+    print_trace_summary(&out.trace);
     out.trace.write_csv(format!("{base}.csv"))?;
     out.trace.write_json(format!("{base}.json"))?;
     if let Some(path) = canonical {
@@ -345,10 +405,20 @@ fn run_fig1(
     dump_images: bool,
     c: Option<f32>,
     threads: usize,
+    clf_checkpoint: Option<String>,
 ) -> Result<()> {
     println!("== Fig. 1: universal adversarial perturbation (d=900, m=5, B=5) ==");
     let bind = be.attack()?;
-    let task = build_task(be, seed, clf_iters)?;
+    let task = match &clf_checkpoint {
+        Some(path) => {
+            // frozen classifier from a saved checkpoint (v1 or v2) instead
+            // of retraining it with syncSGD
+            let ck = load_params_any(path)?;
+            println!("# frozen classifier loaded from {path} (iter {})", ck.iter);
+            build_task_with_params(be, seed, ck.params)?
+        }
+        None => build_task(be, seed, clf_iters)?,
+    };
     println!("# frozen classifier test accuracy: {:.3}", task.clf_test_acc);
     println!("# CW constant c = {}", c.unwrap_or(task.c));
     println!(

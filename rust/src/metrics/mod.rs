@@ -20,7 +20,7 @@ use crate::util::json::Json;
 /// function evaluations (ZO probes) and single-sample gradient evaluations
 /// (SFO calls). "Normalized computational load" in Table 1 divides by the
 /// cost of one first-order gradient ≈ d-times one function eval.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ComputeCounters {
     /// single-sample F(x, ζ) evaluations (each ZO probe on a batch of B
     /// counts 2·B)
@@ -39,7 +39,7 @@ impl ComputeCounters {
 }
 
 /// One recorded iteration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceRow {
     pub iter: u64,
     /// mean training loss across workers at this iteration
@@ -209,6 +209,59 @@ impl TraceRow {
             ("grad_evals", Json::num(self.grad_evals as f64)),
         ])
     }
+
+    /// Little-endian binary encoding (f64s as raw bits) — the row format of
+    /// the v2 run-state checkpoint. Exact: a decoded row compares equal bit
+    /// for bit, so resumed traces carry their pre-interruption rows
+    /// unchanged.
+    pub fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.iter.to_le_bytes());
+        out.extend_from_slice(&self.train_loss.to_bits().to_le_bytes());
+        out.push(self.test_acc.is_some() as u8);
+        out.extend_from_slice(&self.test_acc.unwrap_or(0.0).to_bits().to_le_bytes());
+        out.extend_from_slice(&self.compute_s.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.comm_s.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.total_s.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.bytes_per_worker.to_le_bytes());
+        out.extend_from_slice(&self.scalars_per_worker.to_le_bytes());
+        out.extend_from_slice(&self.fn_evals.to_le_bytes());
+        out.extend_from_slice(&self.grad_evals.to_le_bytes());
+    }
+
+    /// Encoded size of one row (see [`TraceRow::write_le`]).
+    pub const ENCODED_LEN: usize = 10 * 8 + 1;
+
+    /// Decode a row written by [`TraceRow::write_le`] starting at `off`;
+    /// advances `off` past it.
+    pub fn read_le(bytes: &[u8], off: &mut usize) -> Result<Self> {
+        if bytes.len() < *off + Self::ENCODED_LEN {
+            anyhow::bail!("truncated trace row at offset {off}");
+        }
+        let u64_at = |o: &mut usize| -> u64 {
+            let v = u64::from_le_bytes(bytes[*o..*o + 8].try_into().unwrap());
+            *o += 8;
+            v
+        };
+        let iter = u64_at(off);
+        let train_loss = f64::from_bits(u64_at(off));
+        let has_acc = bytes[*off] != 0;
+        *off += 1;
+        let acc_bits = u64_at(off);
+        let test_acc = if has_acc { Some(f64::from_bits(acc_bits)) } else { None };
+        let row = Self {
+            iter,
+            train_loss,
+            test_acc,
+            compute_s: f64::from_bits(u64_at(off)),
+            comm_s: f64::from_bits(u64_at(off)),
+            total_s: f64::from_bits(u64_at(off)),
+            bytes_per_worker: u64_at(off),
+            scalars_per_worker: u64_at(off),
+            fn_evals: u64_at(off),
+            grad_evals: u64_at(off),
+        };
+        Ok(row)
+    }
 }
 
 /// Simple monotonic stopwatch for the measured-compute axis.
@@ -306,6 +359,21 @@ mod tests {
         let bits = format!("{:016x}", 2.0f64.to_bits());
         assert!(s.contains(&bits), "{s}");
         assert!(s.contains("\"test_acc_bits\":null"));
+    }
+
+    #[test]
+    fn trace_row_binary_roundtrip_is_exact() {
+        for r in [row(0, 2.0, None), row(7, std::f64::consts::PI, Some(0.123_456_789))] {
+            let mut buf = Vec::new();
+            r.write_le(&mut buf);
+            assert_eq!(buf.len(), TraceRow::ENCODED_LEN);
+            let mut off = 0;
+            let back = TraceRow::read_le(&buf, &mut off).unwrap();
+            assert_eq!(off, buf.len());
+            assert_eq!(back, r);
+            assert_eq!(back.train_loss.to_bits(), r.train_loss.to_bits());
+        }
+        assert!(TraceRow::read_le(&[0u8; 10], &mut 0).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, Oracle, World};
+use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
 pub struct HoSgd {
     params: Vec<f32>,
@@ -122,5 +122,15 @@ impl<O: Oracle> Algorithm<O> for HoSgd {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    fn state(&self) -> AlgoState {
+        AlgoState::new(Method::HoSgd).with("params", self.params.clone())
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::HoSgd)?;
+        self.params = state.take("params", self.params.len())?;
+        state.expect_drained()
     }
 }

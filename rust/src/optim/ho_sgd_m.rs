@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, Oracle, World};
+use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
 pub struct HoSgdM {
     params: Vec<f32>,
@@ -96,5 +96,18 @@ impl<O: Oracle> Algorithm<O> for HoSgdM {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    fn state(&self) -> AlgoState {
+        AlgoState::new(Method::HoSgdM)
+            .with("params", self.params.clone())
+            .with("velocity", self.velocity.clone())
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::HoSgdM)?;
+        self.params = state.take("params", self.params.len())?;
+        self.velocity = state.take("velocity", self.velocity.len())?;
+        state.expect_drained()
     }
 }

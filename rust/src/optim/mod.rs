@@ -344,6 +344,72 @@ pub fn axpy_acc(acc: &mut [f32], w: f32, v: &[f32]) {
 // Algorithm trait + factory
 // ---------------------------------------------------------------------------
 
+/// The serializable hidden state of an [`Algorithm`]: every buffer the
+/// method carries across iterations, as named f32 vectors in a fixed,
+/// method-defined order. This is what a
+/// [`Session`](crate::coordinator::session::Session) snapshot persists so a
+/// resumed run is bit-identical to an uninterrupted one — momentum
+/// velocities, ZO-SVRG anchors, QSGD error-feedback residuals, RI-SGD local
+/// models. (Epoch phase and RNG position need no buffers: both are pure
+/// functions of the iteration index and the pre-shared seed.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoState {
+    pub method: Method,
+    /// named buffers, e.g. `("params", x)`, `("velocity", u)`, `("local_0", ..)`
+    pub buffers: Vec<(String, Vec<f32>)>,
+}
+
+impl AlgoState {
+    pub fn new(method: Method) -> Self {
+        Self { method, buffers: Vec::new() }
+    }
+
+    /// Builder-style buffer append (state is emitted in a fixed order).
+    pub fn with(mut self, name: impl Into<String>, data: Vec<f32>) -> Self {
+        self.buffers.push((name.into(), data));
+        self
+    }
+
+    /// Remove and return the buffer `name`, checking its length — the
+    /// loud-failure primitive every `load_state` is built on.
+    pub fn take(&mut self, name: &str, expect_len: usize) -> Result<Vec<f32>> {
+        let idx = self
+            .buffers
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow::anyhow!("algorithm state has no buffer {name:?}"))?;
+        let (_, data) = self.buffers.swap_remove(idx);
+        if data.len() != expect_len {
+            anyhow::bail!(
+                "algorithm state buffer {name:?} has {} elements, expected {expect_len}",
+                data.len()
+            );
+        }
+        Ok(data)
+    }
+
+    /// Check the state was produced by `expect` and that every buffer has
+    /// been consumed afterwards (call before/after the `take`s).
+    pub fn expect_method(&self, expect: Method) -> Result<()> {
+        if self.method != expect {
+            anyhow::bail!(
+                "algorithm state belongs to method {:?}, cannot load into {:?}",
+                self.method.label(),
+                expect.label()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn expect_drained(&self) -> Result<()> {
+        if !self.buffers.is_empty() {
+            let names: Vec<&str> = self.buffers.iter().map(|(n, _)| n.as_str()).collect();
+            anyhow::bail!("algorithm state has unexpected extra buffers {names:?}");
+        }
+        Ok(())
+    }
+}
+
 /// One distributed-SGD method.
 pub trait Algorithm<O: Oracle> {
     fn method(&self) -> Method;
@@ -355,6 +421,14 @@ pub trait Algorithm<O: Oracle> {
     /// The parameters an external evaluator should use (for model-averaging
     /// methods this is the mean of the local models).
     fn eval_params(&self, out: &mut Vec<f32>);
+
+    /// Snapshot every cross-iteration buffer (see [`AlgoState`]).
+    fn state(&self) -> AlgoState;
+
+    /// Restore a snapshot taken by [`Algorithm::state`] on a freshly built
+    /// instance of the same method/shape. Mismatched method, buffer set or
+    /// buffer lengths fail loudly.
+    fn load_state(&mut self, state: AlgoState) -> Result<()>;
 }
 
 /// Instantiate a method with its initial parameter vector.
@@ -531,6 +605,24 @@ mod tests {
     fn zo_scalar_scales_by_d_over_mu() {
         let s = zo_scalar(100, 0.01, 1.5, 1.0);
         assert!((s - 100.0 / 0.01 * 0.5).abs() < 1e-2);
+    }
+
+    #[test]
+    fn algo_state_take_validates_names_and_lengths() {
+        let st = AlgoState::new(Method::HoSgdM)
+            .with("params", vec![1.0, 2.0])
+            .with("velocity", vec![0.5, 0.5]);
+        assert!(st.expect_method(Method::HoSgd).is_err());
+        st.expect_method(Method::HoSgdM).unwrap();
+        let mut a = st.clone();
+        assert!(a.take("params", 3).is_err()); // wrong length
+        let mut b = st.clone();
+        assert!(b.take("momentum", 2).is_err()); // wrong name
+        let mut c = st;
+        assert_eq!(c.take("params", 2).unwrap(), vec![1.0, 2.0]);
+        assert!(c.expect_drained().is_err()); // velocity still present
+        c.take("velocity", 2).unwrap();
+        c.expect_drained().unwrap();
     }
 
     #[test]

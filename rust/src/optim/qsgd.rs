@@ -23,7 +23,7 @@ use crate::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
 use crate::config::Method;
 use crate::rng::{hash_u64s, Xoshiro256};
 
-use super::{axpy_update, Algorithm, Oracle, World};
+use super::{axpy_update, Algorithm, AlgoState, Oracle, World};
 
 pub struct Qsgd {
     params: Vec<f32>,
@@ -104,5 +104,26 @@ impl<O: Oracle> Algorithm<O> for Qsgd {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    /// With error feedback on, each worker's residual memory `r_i` is part
+    /// of the trajectory and is snapshotted per worker.
+    fn state(&self) -> AlgoState {
+        let mut st = AlgoState::new(Method::Qsgd).with("params", self.params.clone());
+        for (i, r) in self.residuals.iter().enumerate() {
+            st = st.with(format!("residual_{i}"), r.clone());
+        }
+        st
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::Qsgd)?;
+        self.params = state.take("params", self.params.len())?;
+        for (i, r) in self.residuals.iter_mut().enumerate() {
+            // a state with no residual buffers loaded into an EF run (or
+            // vice versa) fails loudly here / in expect_drained below
+            *r = state.take(&format!("residual_{i}"), r.len())?;
+        }
+        state.expect_drained()
     }
 }

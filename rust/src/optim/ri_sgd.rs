@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{axpy_update, Algorithm, Oracle, World};
+use super::{axpy_update, Algorithm, AlgoState, Oracle, World};
 
 pub struct RiSgd {
     locals: Vec<Vec<f32>>,
@@ -82,5 +82,23 @@ impl<O: Oracle> Algorithm<O> for RiSgd {
                 *o += x / m as f32;
             }
         }
+    }
+
+    /// Every worker's local model is independent state between averaging
+    /// rounds, so all `m` of them are snapshotted.
+    fn state(&self) -> AlgoState {
+        let mut st = AlgoState::new(Method::RiSgd);
+        for (i, l) in self.locals.iter().enumerate() {
+            st = st.with(format!("local_{i}"), l.clone());
+        }
+        st
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::RiSgd)?;
+        for (i, l) in self.locals.iter_mut().enumerate() {
+            *l = state.take(&format!("local_{i}"), l.len())?;
+        }
+        state.expect_drained()
     }
 }

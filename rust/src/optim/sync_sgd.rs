@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{ho_sgd::fo_iteration, Algorithm, Oracle, World};
+use super::{ho_sgd::fo_iteration, Algorithm, AlgoState, Oracle, World};
 
 pub struct SyncSgd {
     params: Vec<f32>,
@@ -35,5 +35,15 @@ impl<O: Oracle> Algorithm<O> for SyncSgd {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    fn state(&self) -> AlgoState {
+        AlgoState::new(Method::SyncSgd).with("params", self.params.clone())
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::SyncSgd)?;
+        self.params = state.take("params", self.params.len())?;
+        state.expect_drained()
     }
 }

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{ho_sgd::zo_iteration, Algorithm, Oracle, World};
+use super::{ho_sgd::zo_iteration, Algorithm, AlgoState, Oracle, World};
 
 pub struct ZoSgd {
     params: Vec<f32>,
@@ -36,5 +36,15 @@ impl<O: Oracle> Algorithm<O> for ZoSgd {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    fn state(&self) -> AlgoState {
+        AlgoState::new(Method::ZoSgd).with("params", self.params.clone())
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::ZoSgd)?;
+        self.params = state.take("params", self.params.len())?;
+        state.expect_drained()
     }
 }

@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::config::Method;
 
-use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, Oracle, World};
+use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
 pub struct ZoSvrgAve {
     params: Vec<f32>,
@@ -128,5 +128,23 @@ impl<O: Oracle> Algorithm<O> for ZoSvrgAve {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    /// The anchor `x̃` and surrogate `v̄` are the method's cross-iteration
+    /// state; the epoch phase itself is `t % q`, so it rides on the session
+    /// iteration counter and needs no buffer.
+    fn state(&self) -> AlgoState {
+        AlgoState::new(Method::ZoSvrgAve)
+            .with("params", self.params.clone())
+            .with("snapshot", self.snapshot.clone())
+            .with("vbar", self.vbar.clone())
+    }
+
+    fn load_state(&mut self, mut state: AlgoState) -> Result<()> {
+        state.expect_method(Method::ZoSvrgAve)?;
+        self.params = state.take("params", self.params.len())?;
+        self.snapshot = state.take("snapshot", self.snapshot.len())?;
+        self.vbar = state.take("vbar", self.vbar.len())?;
+        state.expect_drained()
     }
 }

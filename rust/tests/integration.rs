@@ -235,6 +235,22 @@ fn eval_accuracy_covers_tail_remainder_and_small_test_sets() {
 }
 
 #[test]
+fn eval_accuracy_rejects_empty_test_set() {
+    use hosgd::backend::ModelBackend;
+    use hosgd::coordinator::eval_accuracy;
+    use hosgd::data::{profile, Dataset};
+
+    let be = backend();
+    let model = be.model("quickstart").unwrap();
+    let p = profile("quickstart").unwrap();
+    let params = hosgd::optim::init_mlp_params(model.meta(), 3);
+    let empty = Dataset::synth(&p, 0, 5, 1);
+    // previously Ok(NaN), silently poisoning traces and CSV output
+    let err = eval_accuracy(model.as_ref(), &params, &empty).unwrap_err();
+    assert!(err.to_string().contains("empty test set"), "{err}");
+}
+
+#[test]
 fn mu_sensitivity_zo_still_learns_with_theorem_mu() {
     // Theorem 1's μ = 1/√(dN) should be stable for ZO iterations
     let be = backend();

@@ -1,0 +1,209 @@
+//! Resume-equivalence suite: for every method, a run that is snapshotted
+//! at iteration `k`, serialized through the v2 checkpoint bytes, restored
+//! in a fresh process-like context (new backend, new model binding, new
+//! datasets) and driven to the horizon must produce a canonical trace and
+//! final parameters **byte-identical** to the uninterrupted run — at any
+//! thread count, including resuming under a different thread count than
+//! the segment before the interruption.
+//!
+//! This is the contract that makes `hosgd train --checkpoint-every N` /
+//! `--resume` safe for long-horizon experiments: an interruption can never
+//! perturb a recorded number.
+
+use hosgd::backend::{Backend, BackendKind, NativeBackend};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::checkpoint::RunState;
+use hosgd::coordinator::{make_data, Session};
+
+const ALL_METHODS: [Method; 7] = [
+    Method::HoSgd,
+    Method::SyncSgd,
+    Method::RiSgd,
+    Method::ZoSgd,
+    Method::ZoSvrgAve,
+    Method::Qsgd,
+    Method::HoSgdM,
+];
+
+fn cfg(method: Method, threads: usize) -> TrainConfig {
+    TrainConfig {
+        method,
+        dataset: "quickstart".into(),
+        iters: 24,
+        workers: 4,
+        tau: 4,
+        step: StepSize::Constant { alpha: 0.02 },
+        seed: 11,
+        eval_every: 8,
+        record_every: 1,
+        svrg_epoch: 10,
+        // EF on so the QSGD run carries per-worker residual memory — the
+        // hardest hidden state to resume
+        qsgd_error_feedback: method == Method::Qsgd,
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Canonical trace + final deployable params of an uninterrupted run.
+fn run_full(method: Method, threads: usize) -> (String, Vec<f32>) {
+    let be = NativeBackend::with_threads(threads);
+    let cfg = cfg(method, threads);
+    let model = be.model(&cfg.dataset).unwrap();
+    let data = make_data(&cfg).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, &cfg).unwrap();
+    s.run_to_end().unwrap();
+    (s.trace().to_json_canonical().pretty(), s.params())
+}
+
+/// Run to iteration `k` under `threads_a`, snapshot through the checkpoint
+/// byte format, rebuild everything from scratch under `threads_b`, resume
+/// and finish.
+fn run_resumed(method: Method, k: u64, threads_a: usize, threads_b: usize) -> (String, Vec<f32>) {
+    let state_bytes = {
+        let be = NativeBackend::with_threads(threads_a);
+        let cfg = cfg(method, threads_a);
+        let model = be.model(&cfg.dataset).unwrap();
+        let data = make_data(&cfg).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, &cfg).unwrap();
+        s.run_until(k).unwrap();
+        assert_eq!(s.iter(), k);
+        s.snapshot().to_bytes()
+    };
+    // fresh process-like context: nothing survives but the bytes
+    let be = NativeBackend::with_threads(threads_b);
+    let cfg = cfg(method, threads_b);
+    let model = be.model(&cfg.dataset).unwrap();
+    let data = make_data(&cfg).unwrap();
+    let state = RunState::from_bytes(&state_bytes).unwrap();
+    let mut s = Session::restore(model.as_ref(), &data, &cfg, state).unwrap();
+    assert_eq!(s.iter(), k);
+    s.run_to_end().unwrap();
+    (s.trace().to_json_canonical().pretty(), s.params())
+}
+
+fn assert_params_bits_eq(method: Method, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{method}: param lengths differ");
+    for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{method}: param {j} {x} vs {y}");
+    }
+}
+
+#[test]
+fn every_method_resumes_bit_identically() {
+    // k = 11: mid-τ (tau = 4) and mid-SVRG-epoch (q = 10), so every kind
+    // of hidden buffer is live at the snapshot point
+    for method in ALL_METHODS {
+        let (full_trace, full_params) = run_full(method, 1);
+        let (res_trace, res_params) = run_resumed(method, 11, 1, 1);
+        assert_eq!(full_trace, res_trace, "{method}: canonical trace diverged after resume");
+        assert_params_bits_eq(method, &full_params, &res_params);
+    }
+}
+
+#[test]
+fn resume_is_bit_identical_across_thread_counts() {
+    // snapshot under one thread count, resume under another: neither
+    // segment may perturb the trajectory
+    for method in [Method::HoSgd, Method::RiSgd, Method::Qsgd, Method::ZoSvrgAve] {
+        let (full_trace, full_params) = run_full(method, 1);
+        for (ta, tb) in [(4, 1), (1, 4), (4, 4)] {
+            let (res_trace, res_params) = run_resumed(method, 11, ta, tb);
+            assert_eq!(full_trace, res_trace, "{method}: resume {ta}->{tb} threads diverged");
+            assert_params_bits_eq(method, &full_params, &res_params);
+        }
+    }
+}
+
+#[test]
+fn resume_at_schedule_boundaries() {
+    // k = 0 (nothing run), k on a τ boundary, k on an SVRG epoch boundary,
+    // k = N-1 (one iteration left)
+    for method in [Method::HoSgd, Method::ZoSvrgAve] {
+        let (full_trace, full_params) = run_full(method, 1);
+        for k in [0, 4, 10, 23] {
+            let (res_trace, res_params) = run_resumed(method, k, 1, 1);
+            assert_eq!(full_trace, res_trace, "{method}: resume at k = {k} diverged");
+            assert_params_bits_eq(method, &full_params, &res_params);
+        }
+    }
+}
+
+#[test]
+fn restore_rejects_mismatched_runs_loudly() {
+    let be = NativeBackend::with_threads(1);
+    let cfg0 = cfg(Method::HoSgd, 1);
+    let model = be.model(&cfg0.dataset).unwrap();
+    let data = make_data(&cfg0).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
+    s.run_until(6).unwrap();
+    let state = s.snapshot();
+
+    let err_for = |cfg: &TrainConfig| {
+        Session::restore(model.as_ref(), &data, cfg, state.clone())
+            .err()
+            .expect("mismatched restore must fail")
+            .to_string()
+    };
+    let err = err_for(&TrainConfig { method: Method::ZoSgd, ..cfg0.clone() });
+    assert!(err.contains("method"), "{err}");
+    let err = err_for(&TrainConfig { backend: BackendKind::Pjrt, ..cfg0.clone() });
+    assert!(err.contains("backend"), "{err}");
+    let err = err_for(&TrainConfig { tau: 8, ..cfg0.clone() });
+    assert!(err.contains("tau"), "{err}");
+    let err = err_for(&TrainConfig { seed: 5, ..cfg0.clone() });
+    assert!(err.contains("seed"), "{err}");
+    let err = err_for(&TrainConfig { workers: 2, ..cfg0.clone() });
+    assert!(err.contains("workers"), "{err}");
+    let err = err_for(&TrainConfig { iters: 48, ..cfg0.clone() });
+    assert!(err.contains("horizon") || err.contains("N ="), "{err}");
+    let err = err_for(&TrainConfig { eval_every: 3, ..cfg0.clone() });
+    assert!(err.contains("cadence"), "{err}");
+    let err = err_for(&TrainConfig { step: StepSize::Constant { alpha: 0.5 }, ..cfg0.clone() });
+    assert!(err.contains("hyper-parameters"), "{err}");
+
+    // the matching config still restores fine
+    assert!(Session::restore(model.as_ref(), &data, &cfg0, state).is_ok());
+}
+
+#[test]
+fn observer_events_stream_the_run() {
+    use hosgd::coordinator::{EvalEvent, Observer, StepEvent, SyncEvent};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[derive(Default)]
+    struct Counts {
+        steps: u64,
+        evals: Vec<u64>,
+        syncs: Vec<u64>,
+    }
+    struct Probe(Rc<RefCell<Counts>>);
+    impl Observer for Probe {
+        fn on_step(&mut self, _ev: &StepEvent) {
+            self.0.borrow_mut().steps += 1;
+        }
+        fn on_eval(&mut self, ev: &EvalEvent) {
+            self.0.borrow_mut().evals.push(ev.iter);
+        }
+        fn on_sync_round(&mut self, ev: &SyncEvent) {
+            self.0.borrow_mut().syncs.push(ev.iter);
+        }
+    }
+
+    let be = NativeBackend::with_threads(1);
+    let cfg0 = cfg(Method::HoSgd, 1);
+    let model = be.model(&cfg0.dataset).unwrap();
+    let data = make_data(&cfg0).unwrap();
+    let counts = Rc::new(RefCell::new(Counts::default()));
+    let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
+    s.add_observer(Probe(Rc::clone(&counts)));
+    s.run_to_end().unwrap();
+
+    let c = counts.borrow();
+    assert_eq!(c.steps, cfg0.iters);
+    // eval_every = 8 plus the forced final evaluation
+    assert_eq!(c.evals, vec![0, 8, 16, 23]);
+    // HO-SGD with tau = 4: FO all-reduce at every multiple of 4
+    assert_eq!(c.syncs, vec![0, 4, 8, 12, 16, 20]);
+}
