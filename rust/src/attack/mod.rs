@@ -9,19 +9,22 @@
 //! perturbation over n = 10 same-class images with every method (m = 5
 //! workers, B = 5, step 30/d, μ = O(1/√(dN)) — the paper's §5.1 setup).
 //!
-//! The optimization reuses the *same* [`Algorithm`] implementations as the
-//! training experiments through [`AttackOracle`] — only the oracle differs.
+//! The optimization reuses the *same* [`Algorithm`](crate::optim::Algorithm)
+//! implementations AND the same [`Session`] driver as the training
+//! experiments through [`AttackOracle`] — only the oracle differs. The
+//! attack run is a `Session` over the CW-loss oracle: steppable,
+//! observable, with the identical comm/compute and measured-wire
+//! accounting as a training run.
 
 use anyhow::{anyhow, Result};
 
 use crate::backend::mlp::argmax;
 use crate::backend::{AttackBackend, Backend, ModelBackend};
-use crate::comm::CommSim;
 use crate::config::{Method, StepSize, TrainConfig};
-use crate::coordinator::run_train_with;
+use crate::coordinator::{run_train_with, Session};
 use crate::data::Dataset;
-use crate::metrics::{Stopwatch, Trace, TraceRow};
-use crate::optim::{build, AlgoConfig, Algorithm, Oracle, World};
+use crate::metrics::Trace;
+use crate::optim::Oracle;
 use crate::pool::{resolve_threads, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
 use crate::util::json::Json;
@@ -309,6 +312,34 @@ pub struct AttackOutcome {
     pub perturbation: Vec<f32>,
 }
 
+/// The [`TrainConfig`] equivalent of an [`AttackConfig`] — what lets the
+/// attack ride the [`Session`] driver: identical iteration schedule,
+/// record cadence, accounting and observer events, no test evaluator.
+fn session_config(bind: &dyn AttackBackend, cfg: &AttackConfig) -> TrainConfig {
+    let d = bind.dim();
+    let lr = cfg.lr.unwrap_or(30.0 / d as f64); // paper: step 30/d
+    TrainConfig {
+        method: cfg.method,
+        dataset: "attack_mnist_like".into(),
+        iters: cfg.iters,
+        workers: cfg.workers,
+        tau: cfg.tau,
+        mu: cfg.mu, // None ⇒ Theorem 1's 1/√(dN), resolved against d below
+        step: StepSize::Constant { alpha: lr },
+        seed: cfg.seed,
+        eval_every: 0, // no test split: accuracy is scored on the task images
+        record_every: cfg.record_every.max(1),
+        redundancy: cfg.redundancy,
+        svrg_epoch: cfg.svrg_epoch,
+        svrg_probes: cfg.svrg_probes,
+        qsgd_levels: cfg.qsgd_levels,
+        qsgd_error_feedback: false,
+        momentum: 0.9,
+        threads: cfg.threads,
+        ..Default::default()
+    }
+}
+
 /// Run one attack experiment with the given method.
 pub fn run_attack(
     bind: &dyn AttackBackend,
@@ -323,59 +354,17 @@ pub fn run_attack(
     } else {
         task
     };
-    let d = bind.dim();
-    let n_iters = cfg.iters;
-    let mu = cfg.mu.unwrap_or(1.0 / ((d as f64) * (n_iters as f64)).sqrt());
-    let lr = cfg.lr.unwrap_or(30.0 / d as f64); // paper: step 30/d
-    let acfg = AlgoConfig {
-        m: cfg.workers,
-        tau: cfg.tau,
-        step: StepSize::Constant { alpha: lr },
-        iters: n_iters,
-        mu: mu as f32,
-        redundancy: cfg.redundancy,
-        svrg_epoch: cfg.svrg_epoch,
-        svrg_probes: cfg.svrg_probes,
-        qsgd_levels: cfg.qsgd_levels,
-        qsgd_error_feedback: false,
-        momentum: 0.9,
-        seed: cfg.seed,
-    };
+    let scfg = session_config(bind, cfg);
     let oracle = AttackOracle::new(bind, task, cfg.seed);
-    let init = oracle.init_params(cfg.seed);
-    let comm = CommSim::new(Default::default(), cfg.workers);
     // reuse the binding's worker pool so kernels and the m-worker fan-out
     // share one set of threads; fall back to a cfg-sized pool
     let pool = bind
         .pool()
         .unwrap_or_else(|| std::sync::Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
-    let mut world = World::with_pool(oracle, comm, acfg.clone(), pool);
-    let mut algo: Box<dyn Algorithm<AttackOracle>> = build(cfg.method, init, &acfg);
-
-    let watch = Stopwatch::start();
-    let mut rows = Vec::new();
-    for t in 0..n_iters {
-        let loss = algo.step(t, &mut world)?;
-        if t % cfg.record_every.max(1) == 0 || t + 1 == n_iters {
-            let compute_s = watch.elapsed_s();
-            let comm_s = world.comm.stats.sim_time_s;
-            rows.push(TraceRow {
-                iter: t,
-                train_loss: loss,
-                test_acc: None,
-                compute_s,
-                comm_s,
-                total_s: compute_s + comm_s,
-                bytes_per_worker: world.comm.stats.bytes_per_worker,
-                scalars_per_worker: world.comm.stats.scalars_per_worker,
-                fn_evals: world.compute.fn_evals,
-                grad_evals: world.compute.grad_evals,
-            });
-        }
-    }
-
-    let mut xp = Vec::with_capacity(d);
-    algo.eval_params(&mut xp);
+    let mut session = Session::with_oracle(oracle, &scfg, pool)?;
+    session.run_to_end()?;
+    let trace = session.trace();
+    let xp = session.params();
     let (logits, dists) = bind.eval(&xp, &task.clf_params, &task.images)?;
     let n = bind.eval_batch();
     let classes = logits.len() / n;
@@ -403,16 +392,7 @@ pub fn run_attack(
     });
 
     Ok(AttackOutcome {
-        trace: Trace {
-            method: cfg.method.label().to_string(),
-            dataset: "attack_mnist_like".into(),
-            dim: d,
-            workers: cfg.workers,
-            batch: bind.batch(),
-            tau: cfg.tau,
-            seed: cfg.seed,
-            rows,
-        },
+        trace,
         images,
         success_rate,
         least_distortion,

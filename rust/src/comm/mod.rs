@@ -72,20 +72,45 @@ impl NetworkModel {
 /// Cumulative communication counters (per-worker egress, i.e. the paper's
 /// "communication load ... by each worker node").
 ///
+/// Two families of counters live here:
+///
+/// * **modelled** (`bytes_per_worker`, `scalars_per_worker`, `rounds`,
+///   `sim_time_s`) — the paper's idealized collective accounting, priced by
+///   the α–β [`NetworkModel`];
+/// * **measured** (`wire_*`) — real serialized `HOSGDW1` frame bytes as
+///   recorded by the [`crate::transport`] fabric: what actually crosses (or
+///   on the `Loopback` fabric, *would* cross) a socket, worker→coordinator
+///   (`wire_up_bytes`) and coordinator→worker (`wire_down_bytes`, model
+///   broadcasts included). ZO rounds and FO sync rounds now differ by
+///   measured wire size, not by an assumed float count.
+///
 /// Snapshottable: all fields are plain accumulators, so a
 /// [`crate::coordinator::session::Session`] persists them verbatim (the
 /// `sim_time_s` f64 is stored as raw bits) and a resumed run continues the
 /// exact byte/scalar/critical-path accounting of the uninterrupted one.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
-    /// bytes sent by one worker (egress), total
+    /// bytes sent by one worker (egress), total — modelled collective cost
     pub bytes_per_worker: u64,
     /// number of scalar (f32) values sent by one worker
     pub scalars_per_worker: u64,
     /// number of collective rounds
     pub rounds: u64,
-    /// modelled network time in seconds (critical path)
+    /// modelled network time in seconds (critical path, incl. injected
+    /// straggler latency when a fault plan is active)
     pub sim_time_s: f64,
+    /// measured wire bytes workers sent to the coordinator, summed over
+    /// all `m` workers. For scalar/vector rounds every response is
+    /// equal-sized (per-worker = total / m); QSGD's Elias-coded payloads
+    /// vary per worker, so there the total is the only exact figure.
+    pub wire_up_bytes: u64,
+    /// measured wire bytes the coordinator sent to workers (model
+    /// broadcasts + step orders, accounted per logical worker rank)
+    pub wire_down_bytes: u64,
+    /// number of wire frames accounted (both directions)
+    pub wire_frames: u64,
+    /// round-trips retransmitted by the fault-injection retry loop
+    pub wire_retries: u64,
 }
 
 /// The collective-communication simulator: numerics happen in-process, cost
@@ -128,6 +153,28 @@ impl CommSim {
         self.stats.scalars_per_worker += logical_scalars;
         self.stats.rounds += 1;
         self.stats.sim_time_s += self.net.allgather_time(bytes, self.m);
+    }
+
+    /// Account one measured frame of `bytes` sent worker→coordinator.
+    pub fn wire_up(&mut self, bytes: u64) {
+        self.stats.wire_up_bytes += bytes;
+        self.stats.wire_frames += 1;
+    }
+
+    /// Account one measured frame of `bytes` sent coordinator→worker.
+    pub fn wire_down(&mut self, bytes: u64) {
+        self.stats.wire_down_bytes += bytes;
+        self.stats.wire_frames += 1;
+    }
+
+    /// Account one retransmitted round-trip (fault-injection retry).
+    pub fn wire_retry(&mut self) {
+        self.stats.wire_retries += 1;
+    }
+
+    /// Add injected straggler latency to the modelled critical path.
+    pub fn add_latency(&mut self, seconds: f64) {
+        self.stats.sim_time_s += seconds;
     }
 
     /// Restore the accumulated stats from a snapshot (session resume).
@@ -199,6 +246,24 @@ mod tests {
         assert_eq!(c.stats.scalars_per_worker, 10 + 1 + 25);
         assert_eq!(c.stats.rounds, 3);
         assert!(c.stats.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn wire_counters_are_separate_from_modelled_ones() {
+        let mut c = CommSim::new(NetworkModel::default(), 4);
+        c.wire_down(100);
+        c.wire_up(29);
+        c.wire_retry();
+        c.add_latency(0.25);
+        assert_eq!(c.stats.wire_down_bytes, 100);
+        assert_eq!(c.stats.wire_up_bytes, 29);
+        assert_eq!(c.stats.wire_frames, 2);
+        assert_eq!(c.stats.wire_retries, 1);
+        assert_eq!(c.stats.sim_time_s, 0.25);
+        // the modelled collective counters are untouched
+        assert_eq!(c.stats.bytes_per_worker, 0);
+        assert_eq!(c.stats.scalars_per_worker, 0);
+        assert_eq!(c.stats.rounds, 0);
     }
 
     #[test]

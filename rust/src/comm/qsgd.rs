@@ -8,7 +8,14 @@
 //! communication numbers respond to gradient sparsity exactly like QSGD's
 //! analysis says (Θ(s² + s√d) bits in expectation).
 
-use crate::rng::Xoshiro256;
+use anyhow::{bail, Result};
+
+use crate::rng::{hash_u64s, Xoshiro256};
+
+/// Domain tag of the per-`(iter, worker)` quantization RNG (the seeded
+/// stochastic rounding is part of the algorithm, shared between the
+/// coordinator-side EF path and the worker-side wire path).
+const DOM_QSGD: u64 = 0x9_5D;
 
 /// A quantized gradient: norm + per-coordinate signed levels in [-s, s].
 #[derive(Debug, Clone)]
@@ -66,6 +73,89 @@ fn elias_gamma_bits(level: i32) -> u64 {
 pub fn encoded_bytes(q: &Quantized) -> u64 {
     let bits: u64 = 32 + q.levels.iter().map(|&l| elias_gamma_bits(l)).sum::<u64>();
     bits.div_ceil(8)
+}
+
+/// Quantize with the run's per-`(iter, worker)` seeded rounding stream —
+/// identical no matter which process (coordinator or a remote worker
+/// daemon) performs it, which is what lets the wire fabric ship the encoded
+/// payload while traces stay bit-identical to in-process execution.
+pub fn seeded_quantize(base_seed: u64, iter: u64, worker: u64, v: &[f32], s: u32) -> Quantized {
+    let mut rng = Xoshiro256::seeded(hash_u64s(&[base_seed, DOM_QSGD, iter, worker]));
+    quantize(v, s, &mut rng)
+}
+
+/// Byte length of the Elias-γ level bitstream alone (without the norm) —
+/// the payload size of a `HOSGDW1` quantized-gradient frame. Always equals
+/// `encode_levels(levels).len()`.
+pub fn levels_bytes(levels: &[i32]) -> u64 {
+    levels.iter().map(|&l| elias_gamma_bits(l)).sum::<u64>().div_ceil(8)
+}
+
+/// Serialize the signed levels as the actual Elias-γ(+sign) bitstream the
+/// QSGD analysis prices: magnitude+1 in Elias-γ (MSB-first), then one sign
+/// bit for non-zero levels. The final byte is zero-padded.
+pub fn encode_levels(levels: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(levels_bytes(levels) as usize);
+    let mut acc: u8 = 0;
+    let mut used: u32 = 0;
+    let mut push_bit = |out: &mut Vec<u8>, bit: bool| {
+        acc = (acc << 1) | bit as u8;
+        used += 1;
+        if used == 8 {
+            out.push(acc);
+            acc = 0;
+            used = 0;
+        }
+    };
+    for &l in levels {
+        let v = u64::from(l.unsigned_abs() + 1); // shifted alphabet: 0 encodable
+        let n = 64 - v.leading_zeros(); // bits in v
+        for _ in 1..n {
+            push_bit(&mut out, false);
+        }
+        for k in (0..n).rev() {
+            push_bit(&mut out, ((v >> k) & 1) == 1);
+        }
+        if l != 0 {
+            push_bit(&mut out, l < 0);
+        }
+    }
+    if used > 0 {
+        out.push(acc << (8 - used));
+    }
+    out
+}
+
+/// Decode `n` signed levels from an [`encode_levels`] bitstream.
+pub fn decode_levels(bytes: &[u8], n: usize) -> Result<Vec<i32>> {
+    let mut pos: usize = 0; // bit cursor
+    let total = bytes.len() * 8;
+    let mut read_bit = |pos: &mut usize| -> Result<bool> {
+        if *pos >= total {
+            bail!("quantized-level bitstream exhausted at bit {} (want {n} levels)", *pos);
+        }
+        let bit = ((bytes[*pos / 8] >> (7 - *pos % 8)) & 1) == 1;
+        *pos += 1;
+        Ok(bit)
+    };
+    let mut levels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut zeros = 0u32;
+        while !read_bit(&mut pos)? {
+            zeros += 1;
+            if zeros > 63 {
+                bail!("malformed Elias-γ codeword (> 63 leading zeros)");
+            }
+        }
+        let mut v: u64 = 1;
+        for _ in 0..zeros {
+            v = (v << 1) | read_bit(&mut pos)? as u64;
+        }
+        let mag = (v - 1) as i32;
+        let level = if mag != 0 && read_bit(&mut pos)? { -mag } else { mag };
+        levels.push(level);
+    }
+    Ok(levels)
 }
 
 #[cfg(test)]
@@ -150,5 +240,37 @@ mod tests {
     fn elias_bits_monotone() {
         assert_eq!(elias_gamma_bits(0), 1);
         assert!(elias_gamma_bits(1) < elias_gamma_bits(100));
+    }
+
+    #[test]
+    fn level_bitstream_roundtrips_and_matches_length() {
+        let mut r = Xoshiro256::seeded(10);
+        for trial in 0..50 {
+            let n = 1 + r.next_below(300);
+            let s = 1 + r.next_below(16) as i32;
+            let levels: Vec<i32> =
+                (0..n).map(|_| r.next_below(2 * s as usize + 1) as i32 - s).collect();
+            let bytes = encode_levels(&levels);
+            assert_eq!(bytes.len() as u64, levels_bytes(&levels), "trial {trial}");
+            let back = decode_levels(&bytes, n).unwrap();
+            assert_eq!(back, levels, "trial {trial}");
+        }
+        // degenerate cases
+        assert!(encode_levels(&[]).is_empty());
+        assert_eq!(decode_levels(&[], 0).unwrap(), Vec::<i32>::new());
+        assert!(decode_levels(&[], 1).is_err()); // exhausted stream
+    }
+
+    #[test]
+    fn seeded_quantize_is_location_independent() {
+        // coordinator and a remote daemon derive the identical quantization
+        let v = vec_rng(21, 4096);
+        let a = seeded_quantize(7, 13, 2, &v, 4);
+        let b = seeded_quantize(7, 13, 2, &v, 4);
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(a.norm.to_bits(), b.norm.to_bits());
+        // and a different (iter, worker) gives a different rounding stream
+        let c = seeded_quantize(7, 13, 3, &v, 4);
+        assert_ne!(a.levels, c.levels);
     }
 }

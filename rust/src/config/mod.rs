@@ -112,6 +112,45 @@ impl fmt::Display for Method {
     }
 }
 
+/// Deterministic fault injection on the `Loopback` communication fabric:
+/// per-worker straggler latency and seeded drop-with-retry, so failure
+/// scenarios run in CI with bit-reproducible counters. Numerics are never
+/// affected — a retried round-trip recomputes the identical result; only
+/// the measured wire accounting and the modelled critical path change.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// injected per-round-trip latency seconds per worker, cycled over
+    /// ranks (`latency_s[rank % len]`); empty = no injected latency
+    pub latency_s: Vec<f64>,
+    /// probability in [0, 1) that a worker's round-trip is dropped and
+    /// retried (deterministic, seeded per `(iteration, rank, attempt)`)
+    pub drop_prob: f64,
+    /// seed of the drop stream (independent of the run seed so fault
+    /// scenarios can vary without changing the trajectory)
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.drop_prob > 0.0 || self.latency_s.iter().any(|&l| l > 0.0)
+    }
+}
+
+/// Communication-fabric selection: which [`crate::transport::Transport`]
+/// carries the coordinator↔worker rounds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TransportConfig {
+    /// `host:port` addresses of `hosgd worker --listen` daemons; empty ⇒
+    /// the in-process `Loopback` fabric. Logical worker ranks are assigned
+    /// round-robin over the addresses. NOT part of the run identity:
+    /// traces are byte-identical across fabrics, so a checkpointed TCP run
+    /// may resume in-process and vice versa.
+    pub workers_at: Vec<String>,
+    /// fault injection (Loopback only — rejected with `workers_at`)
+    pub fault: FaultPlan,
+}
+
 /// Step-size rule. `Theory` is Theorem 1's α = √(Bm)/(L√N).
 #[derive(Debug, Clone, Copy)]
 pub enum StepSize {
@@ -186,6 +225,8 @@ pub struct TrainConfig {
     /// for pool-less bindings (e.g. pjrt). The CLI passes `--threads` to
     /// both places, so they cannot diverge there.
     pub threads: usize,
+    /// the communication fabric (Loopback vs TCP worker daemons + faults)
+    pub transport: TransportConfig,
 }
 
 impl Default for TrainConfig {
@@ -213,6 +254,7 @@ impl Default for TrainConfig {
             momentum: 0.9,
             network: NetworkModel::default(),
             threads: 0, // auto
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -249,6 +291,17 @@ impl TrainConfig {
         }
         if !(0.0..1.0).contains(&self.momentum) {
             return Err(anyhow!("momentum must be in [0,1)"));
+        }
+        if !(0.0..1.0).contains(&self.transport.fault.drop_prob) {
+            return Err(anyhow!("fault drop_prob must be in [0,1)"));
+        }
+        if self.transport.fault.latency_s.iter().any(|&l| l < 0.0 || !l.is_finite()) {
+            return Err(anyhow!("fault latency_s entries must be finite and >= 0"));
+        }
+        if !self.transport.workers_at.is_empty() && self.transport.fault.is_active() {
+            return Err(anyhow!(
+                "fault injection is Loopback-only; drop the fault plan or --workers-at"
+            ));
         }
         Ok(())
     }
@@ -339,6 +392,21 @@ impl TrainConfig {
                 cfg.network = NetworkModel { latency_s: lat, bandwidth_bps: bw };
             }
         }
+        if let Some(ws) = v.get("workers_at").and_then(Json::as_arr) {
+            cfg.transport.workers_at =
+                ws.iter().filter_map(|a| a.as_str().map(String::from)).collect();
+        }
+        if let Some(fv) = v.get("fault") {
+            if let Some(lat) = fv.get("latency_s").and_then(Json::as_arr) {
+                cfg.transport.fault.latency_s = lat.iter().filter_map(Json::as_f64).collect();
+            }
+            if let Some(p) = fv.get("drop_prob").and_then(Json::as_f64) {
+                cfg.transport.fault.drop_prob = p;
+            }
+            if let Some(s) = fv.get("seed").and_then(Json::as_f64) {
+                cfg.transport.fault.seed = s as u64;
+            }
+        }
         Ok(cfg)
     }
 
@@ -373,6 +441,23 @@ impl TrainConfig {
                 Json::obj(vec![
                     ("latency_s", Json::num(self.network.latency_s)),
                     ("bandwidth_bps", Json::num(self.network.bandwidth_bps)),
+                ]),
+            ),
+            (
+                "workers_at",
+                Json::Arr(self.transport.workers_at.iter().map(Json::str).collect()),
+            ),
+            (
+                "fault",
+                Json::obj(vec![
+                    (
+                        "latency_s",
+                        Json::Arr(
+                            self.transport.fault.latency_s.iter().copied().map(Json::num).collect(),
+                        ),
+                    ),
+                    ("drop_prob", Json::num(self.transport.fault.drop_prob)),
+                    ("seed", Json::num(self.transport.fault.seed as f64)),
                 ]),
             ),
         ])
@@ -501,6 +586,52 @@ mod tests {
         let c = TrainConfig { checkpoint_every: 25, ..Default::default() };
         let back = TrainConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
         assert_eq!(back.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn transport_config_roundtrips_and_validates() {
+        let c = TrainConfig {
+            transport: TransportConfig {
+                workers_at: Vec::new(),
+                fault: FaultPlan { latency_s: vec![0.0, 1e-3], drop_prob: 0.25, seed: 9 },
+            },
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        let back = TrainConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.transport, c.transport);
+        assert!(back.transport.fault.is_active());
+        assert!(!TrainConfig::default().transport.fault.is_active());
+
+        // workers_at list round-trips too
+        let c2 = TrainConfig {
+            transport: TransportConfig {
+                workers_at: vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()],
+                fault: FaultPlan::default(),
+            },
+            ..Default::default()
+        };
+        c2.validate().unwrap();
+        let back2 = TrainConfig::from_json(&Json::parse(&c2.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back2.transport.workers_at, c2.transport.workers_at);
+
+        // fault injection is loopback-only; drop_prob must be a probability
+        let bad = TrainConfig {
+            transport: TransportConfig {
+                workers_at: vec!["h:1".into()],
+                fault: FaultPlan { latency_s: Vec::new(), drop_prob: 0.5, seed: 0 },
+            },
+            ..Default::default()
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("Loopback-only"));
+        let bad2 = TrainConfig {
+            transport: TransportConfig {
+                workers_at: Vec::new(),
+                fault: FaultPlan { latency_s: Vec::new(), drop_prob: 1.5, seed: 0 },
+            },
+            ..Default::default()
+        };
+        assert!(bad2.validate().is_err());
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! the RNG needs no stored position because every stream is re-derived from
 //! `(seed, iter, worker)`. The v2 loader rejects mismatched runs loudly;
 //! [`load_params_any`] reads either version as params-only.
+//!
+//! NOTE: the v2 layout gained the transport fabric's measured wire
+//! counters (`CommStats::wire_*`, plus two per-row fields) when the
+//! communication subsystem landed. These are in-tree formats with no
+//! cross-build compatibility promise; a file from an older build fails the
+//! structural decode loudly rather than resuming with wrong counters.
 
 use std::path::Path;
 
@@ -264,6 +270,10 @@ impl RunState {
             self.comm.scalars_per_worker,
             self.comm.rounds,
             self.comm.sim_time_s.to_bits(),
+            self.comm.wire_up_bytes,
+            self.comm.wire_down_bytes,
+            self.comm.wire_frames,
+            self.comm.wire_retries,
             self.counters.fn_evals,
             self.counters.grad_evals,
         ] {
@@ -328,6 +338,10 @@ impl RunState {
             scalars_per_worker: c.u64()?,
             rounds: c.u64()?,
             sim_time_s: c.f64()?,
+            wire_up_bytes: c.u64()?,
+            wire_down_bytes: c.u64()?,
+            wire_frames: c.u64()?,
+            wire_retries: c.u64()?,
         };
         let counters = ComputeCounters { fn_evals: c.u64()?, grad_evals: c.u64()? };
         let params = c.f32s()?;
@@ -469,6 +483,10 @@ mod tests {
                 scalars_per_worker: 250,
                 rounds: 42,
                 sim_time_s: 0.123_456_789,
+                wire_up_bytes: 1234,
+                wire_down_bytes: 56_789,
+                wire_frames: 126,
+                wire_retries: 3,
             },
             counters: ComputeCounters { fn_evals: 640, grad_evals: 320 },
             params: vec![1.0, -2.0, 3.5],
@@ -484,6 +502,8 @@ mod tests {
                 total_s: 1.3,
                 bytes_per_worker: 1000,
                 scalars_per_worker: 250,
+                wire_up_bytes: 1234,
+                wire_down_bytes: 56_789,
                 fn_evals: 640,
                 grad_evals: 320,
             }],

@@ -30,7 +30,22 @@ use crate::config::TrainConfig;
 use crate::data::{profile, Dataset};
 use crate::metrics::Trace;
 
-pub use session::{EvalEvent, Observer, Session, StepEvent, SyncEvent, TraceRecorder};
+pub use session::{
+    EvalEvent, Observer, PeriodicCheckpoint, Session, StepEvent, SyncEvent, TraceRecorder,
+};
+
+/// The data-redundancy a run's oracle sharding actually uses: RI-SGD
+/// samples from overlapping pools (the μ_r of Haddadpour et al.), every
+/// other method from disjoint iid shards. One function so the coordinator
+/// and a remote `hosgd worker` daemon derive the identical sharding from
+/// the shipped config.
+pub fn effective_redundancy(cfg: &TrainConfig) -> f64 {
+    if cfg.method == crate::config::Method::RiSgd {
+        cfg.redundancy
+    } else {
+        0.0
+    }
+}
 
 /// Materialized datasets for one run.
 pub struct RunData {

@@ -1,25 +1,39 @@
 //! The session-based training driver: a steppable, observable, resumable
 //! replacement for the monolithic `run_train` loop.
 //!
-//! A [`Session`] owns one training run — model binding, datasets, the
-//! per-worker [`World`], the [`Algorithm`] — and exposes the paper's
-//! iteration schedule one step at a time: [`Session::step`] executes a
-//! single hybrid FO/ZO iteration, [`Session::run_until`] /
+//! A [`Session`] owns one run — the per-worker [`World`] (including its
+//! communication fabric), the [`Algorithm`], the observers — and exposes
+//! the paper's iteration schedule one step at a time: [`Session::step`]
+//! executes a single hybrid FO/ZO iteration, [`Session::run_until`] /
 //! [`Session::run_to_end`] drive ranges of them. Everything the old loop
-//! hard-coded (trace recording, periodic test evaluation) is now delivered
-//! through the [`Observer`] trait — the built-in [`TraceRecorder`] is just
-//! the observer that happens to build the [`Trace`] — so embedders can
-//! stream metrics, log sync rounds, or trigger early stopping without
-//! forking the loop.
+//! hard-coded (trace recording, periodic test evaluation, checkpoint
+//! cadence) is delivered through the [`Observer`] trait — the built-in
+//! [`TraceRecorder`] builds the [`Trace`], [`PeriodicCheckpoint`] gives
+//! embedders `--checkpoint-every` semantics, and the streaming sinks in
+//! [`crate::metrics::sinks`] append rows to disk as they happen.
+//!
+//! The session is generic over the [`Oracle`]: [`Session::new`] builds the
+//! Section 5.2 training run (a [`TrainOracle`] over a backend-bound model
+//! + dataset, with test-set evaluation), while [`Session::with_oracle`]
+//! drives any other objective — the Section 5.1 attack loop runs through
+//! it (see [`crate::attack::run_attack`]) with the identical schedule,
+//! events and counters.
+//!
+//! Worker execution crosses the [`Transport`] fabric configured in
+//! [`TrainConfig::transport`]: the in-process `Loopback` by default, or
+//! remote `hosgd worker` daemons via `workers_at` — with canonical traces
+//! byte-identical either way.
 //!
 //! Sessions snapshot and restore: [`Session::snapshot`] captures the full
 //! [`RunState`] (optimizer buffers, comm/compute accounting, recorded
 //! rows, iteration cursor) and [`Session::restore`] resumes it
 //! **bit-identically** — the canonical trace of an interrupted+resumed run
-//! is byte-equal to an uninterrupted one, at any thread count. No RNG
-//! position needs saving: every stream (directions, minibatches, QSGD
-//! quantization) is re-derived from `(seed, iter, worker)`.
+//! is byte-equal to an uninterrupted one, at any thread count and on any
+//! fabric. No RNG position needs saving: every stream (directions,
+//! minibatches, QSGD quantization, fault-injection drops) is re-derived
+//! from `(seed, iter, worker)`.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -33,6 +47,7 @@ use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Algorithm, Oracle, TrainOracle, World};
 use crate::pool::{resolve_threads, WorkerPool};
 use crate::rng::hash_u64s;
+use crate::transport::{Loopback, TcpTransport, Transport};
 
 // ---------------------------------------------------------------------------
 // Observer: streaming run events
@@ -68,7 +83,7 @@ pub struct EvalEvent {
 #[derive(Debug, Clone, Copy)]
 pub struct SyncEvent {
     pub iter: u64,
-    /// per-worker egress bytes of this round
+    /// per-worker egress bytes of this round (modelled collective cost)
     pub bytes: u64,
     /// per-worker scalars of this round
     pub scalars: u64,
@@ -76,11 +91,27 @@ pub struct SyncEvent {
 
 /// Streaming hooks over a running [`Session`]. All methods default to
 /// no-ops; implement the ones you care about. Within one iteration the
-/// dispatch order is `on_sync_round` → `on_eval` → `on_step`.
+/// dispatch order is `on_sync_round` → `on_eval` → `on_step` →
+/// `wants_snapshot`/`on_snapshot`.
 pub trait Observer {
     fn on_step(&mut self, _ev: &StepEvent) {}
     fn on_eval(&mut self, _ev: &EvalEvent) {}
     fn on_sync_round(&mut self, _ev: &SyncEvent) {}
+
+    /// Return `true` to receive a [`RunState`] snapshot for this step via
+    /// [`Observer::on_snapshot`]. The session builds the snapshot at most
+    /// once per step and shares it among all observers that asked, so the
+    /// predicate must be cheap and is queried exactly once per step.
+    fn wants_snapshot(&mut self, _ev: &StepEvent) -> bool {
+        false
+    }
+
+    /// Receive the snapshot requested by [`Observer::wants_snapshot`]. An
+    /// error here aborts [`Session::step`] — checkpoint persistence
+    /// failures should be loud, not silently dropped.
+    fn on_snapshot(&mut self, _state: &RunState) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The observer that builds the run's [`Trace`]: keeps every row whose
@@ -100,21 +131,56 @@ impl Observer for TraceRecorder {
     }
 }
 
+/// The `--checkpoint-every N` semantics as a reusable [`Observer`]: every
+/// `every`-th completed iteration, persist the session's [`RunState`] to
+/// `path` (atomic overwrite of the same file). The CLI train path is built
+/// on this; embedders get identical behavior with one `add_observer`.
+#[derive(Debug, Clone)]
+pub struct PeriodicCheckpoint {
+    every: u64,
+    path: PathBuf,
+}
+
+impl PeriodicCheckpoint {
+    /// Checkpoint to `path` every `every` completed iterations (`0`
+    /// disables — the observer becomes a no-op).
+    pub fn new(every: u64, path: impl Into<PathBuf>) -> Self {
+        Self { every, path: path.into() }
+    }
+}
+
+impl Observer for PeriodicCheckpoint {
+    fn wants_snapshot(&mut self, ev: &StepEvent) -> bool {
+        // ev.row.iter is the just-executed iteration t; t+1 iterations are
+        // now complete — the same cadence the CLI loop used to hand-roll
+        self.every > 0 && (ev.row.iter + 1) % self.every == 0
+    }
+
+    fn on_snapshot(&mut self, state: &RunState) -> Result<()> {
+        state.save(&self.path)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Session
 // ---------------------------------------------------------------------------
 
-/// One training run as a first-class value: step it, observe it, snapshot
-/// it, resume it. See the module docs for the contract; `run_train_with`
-/// is now a thin wrapper that drives a `Session` to completion.
-pub struct Session<'a> {
-    model: &'a dyn ModelBackend,
-    data: &'a RunData,
+/// Test-accuracy evaluator over the deployable parameters (training
+/// sessions bind [`eval_accuracy`] over the model + test split; oracle
+/// sessions may have none).
+type Evaluator<'a> = Box<dyn FnMut(&[f32]) -> Result<f64> + 'a>;
+
+/// One run as a first-class value: step it, observe it, snapshot it,
+/// resume it. Generic over the [`Oracle`] (defaulting to the training
+/// oracle); see the module docs for the contract. `run_train_with` is a
+/// thin wrapper that drives a `Session` to completion.
+pub struct Session<'a, O: Oracle = TrainOracle<'a>> {
     cfg: TrainConfig,
-    world: World<TrainOracle<'a>>,
-    algo: Box<dyn Algorithm<TrainOracle<'a>>>,
+    world: World<O>,
+    algo: Box<dyn Algorithm<O>>,
     recorder: TraceRecorder,
     observers: Vec<Box<dyn Observer + 'a>>,
+    evaluator: Option<Evaluator<'a>>,
     /// next iteration to execute
     t: u64,
     watch: Stopwatch,
@@ -124,39 +190,105 @@ pub struct Session<'a> {
     eval_buf: Vec<f32>,
 }
 
-impl<'a> Session<'a> {
-    /// Build a fresh session at iteration 0 (what `run_train_with` always
-    /// did up front: sharding, initial-point broadcast, comm simulator,
-    /// worker pool, algorithm instantiation).
+impl<'a> Session<'a, TrainOracle<'a>> {
+    /// Build a fresh training session at iteration 0 (sharding,
+    /// initial-point broadcast, comm simulator, worker pool, transport
+    /// fabric, algorithm instantiation).
     pub fn new(model: &'a dyn ModelBackend, data: &'a RunData, cfg: &TrainConfig) -> Result<Self> {
         cfg.validate()?;
-        let acfg = AlgoConfig::from_train(cfg, model.dim());
-        // RI-SGD samples from redundant pools; everyone else from iid shards
-        let redundancy = if cfg.method == crate::config::Method::RiSgd {
-            cfg.redundancy
-        } else {
-            0.0
-        };
-        let oracle = TrainOracle::new(model, &data.train, cfg.workers, redundancy, cfg.seed);
-        let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
-        let comm = CommSim::new(cfg.network, cfg.workers);
+        let oracle = TrainOracle::new(
+            model,
+            &data.train,
+            cfg.workers,
+            crate::coordinator::effective_redundancy(cfg),
+            cfg.seed,
+        );
+        // the communication fabric: in-process loopback (with any
+        // configured fault plan) unless remote daemons are configured
+        let transport: Box<dyn Transport<TrainOracle<'a>>> =
+            if cfg.transport.workers_at.is_empty() {
+                Box::new(Loopback::new(cfg.transport.fault.clone()))
+            } else {
+                Box::new(TcpTransport::connect(&cfg.transport.workers_at, cfg, model.dim())?)
+            };
         // the worker execution engine: reuse the model's kernel pool so one
         // `--threads` knob governs the whole run; otherwise build one from
         // the config (traces are bit-identical at any thread count)
         let pool = model
             .pool()
             .unwrap_or_else(|| Arc::new(WorkerPool::new(resolve_threads(cfg.threads))));
-        let world = World::with_pool(oracle, comm, acfg.clone(), pool);
+        let test = &data.test;
+        let evaluator: Evaluator<'a> =
+            Box::new(move |params: &[f32]| eval_accuracy(model, params, test));
+        Self::from_parts(oracle, cfg, pool, transport, Some(evaluator))
+    }
+
+    /// Rebuild a session from a snapshot so that stepping it to the
+    /// horizon is bit-identical to never having stopped. `cfg` must
+    /// describe the same run the snapshot came from; any divergence in a
+    /// trajectory-affecting knob is rejected with a descriptive error.
+    /// (The transport fabric and thread count are NOT part of the run
+    /// identity — a TCP run may resume in-process and vice versa.)
+    pub fn restore(
+        model: &'a dyn ModelBackend,
+        data: &'a RunData,
+        cfg: &TrainConfig,
+        state: RunState,
+    ) -> Result<Self> {
+        let expect = run_meta(cfg, model.dim());
+        check_meta(&state.meta, &expect)?;
+        if state.iter > cfg.iters {
+            bail!(
+                "checkpoint is at iteration {} but the run horizon is only {}",
+                state.iter,
+                cfg.iters
+            );
+        }
+        let mut s = Self::new(model, data, cfg)?;
+        s.load_state(state)?;
+        Ok(s)
+    }
+}
+
+impl<'a, O: Oracle> Session<'a, O> {
+    /// Build a session over an arbitrary oracle — the embedding point for
+    /// non-training objectives (the Section 5.1 attack drives its CW-loss
+    /// oracle through this). The oracle's own `Loopback` fabric carries
+    /// the rounds (any fault plan in `cfg` applies; `workers_at` is
+    /// ignored — remote daemons rebuild *training* oracles only) and there
+    /// is no test-set evaluator, so `eval_every` must be 0.
+    pub fn with_oracle(oracle: O, cfg: &TrainConfig, pool: Arc<WorkerPool>) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.eval_every > 0 {
+            bail!(
+                "Session::with_oracle has no test-set evaluator; set eval_every = 0 \
+                 (or use Session::new for training runs)"
+            );
+        }
+        let transport: Box<dyn Transport<O>> = Box::new(Loopback::new(cfg.transport.fault.clone()));
+        Self::from_parts(oracle, cfg, pool, transport, None)
+    }
+
+    fn from_parts(
+        oracle: O,
+        cfg: &TrainConfig,
+        pool: Arc<WorkerPool>,
+        transport: Box<dyn Transport<O>>,
+        evaluator: Option<Evaluator<'a>>,
+    ) -> Result<Self> {
+        let acfg = AlgoConfig::from_train(cfg, oracle.dim());
+        let init = oracle.init_params(crate::rng::SeedRegistry::new(cfg.seed).init_seed());
+        let comm = CommSim::new(cfg.network, cfg.workers);
+        let dim = oracle.dim();
+        let world = World::with_transport(oracle, comm, acfg.clone(), pool, transport);
         let algo = build(cfg.method, init, &acfg);
-        let dim = model.dim();
         Ok(Self {
-            model,
-            data,
             cfg: cfg.clone(),
             world,
             algo,
             recorder: TraceRecorder::default(),
             observers: Vec::new(),
+            evaluator,
             t: 0,
             watch: Stopwatch::start(),
             eval_overhead: 0.0,
@@ -183,6 +315,11 @@ impl<'a> Session<'a> {
     /// The run configuration this session was built from.
     pub fn config(&self) -> &TrainConfig {
         &self.cfg
+    }
+
+    /// The active communication fabric (`"loopback"` / `"tcp"`).
+    pub fn transport_label(&self) -> &'static str {
+        self.world.transport_label()
     }
 
     /// Rows recorded so far (the in-progress trace).
@@ -227,6 +364,8 @@ impl<'a> Session<'a> {
                 total_s: compute_s + comm_s,
                 bytes_per_worker: stats.bytes_per_worker,
                 scalars_per_worker: stats.scalars_per_worker,
+                wire_up_bytes: stats.wire_up_bytes,
+                wire_down_bytes: stats.wire_down_bytes,
                 fn_evals: self.world.compute.fn_evals,
                 grad_evals: self.world.compute.grad_evals,
             },
@@ -255,6 +394,23 @@ impl<'a> Session<'a> {
         for obs in &mut self.observers {
             obs.on_step(&ev);
         }
+
+        // snapshot-wanting observers (PeriodicCheckpoint and friends):
+        // build the RunState at most once, share it among all askers. The
+        // observers are taken out so `snapshot()` can borrow the session.
+        let mut obs = std::mem::take(&mut self.observers);
+        let wants: Vec<bool> = obs.iter_mut().map(|o| o.wants_snapshot(&ev)).collect();
+        let outcome = if wants.contains(&true) {
+            let state = self.snapshot();
+            obs.iter_mut()
+                .zip(&wants)
+                .filter(|&(_, &w)| w)
+                .try_for_each(|(o, _)| o.on_snapshot(&state))
+        } else {
+            Ok(())
+        };
+        self.observers = obs;
+        outcome?;
         Ok(ev)
     }
 
@@ -276,11 +432,15 @@ impl<'a> Session<'a> {
 
     /// Evaluate test accuracy of the current deployable parameters now
     /// (outside the `eval_every` cadence; the cost is excluded from the
-    /// trace's compute axis like any other evaluation).
+    /// trace's compute axis like any other evaluation). Errors on sessions
+    /// built without an evaluator ([`Session::with_oracle`]).
     pub fn eval_now(&mut self) -> Result<f64> {
         let e0 = self.watch.elapsed_s();
         self.algo.eval_params(&mut self.eval_buf);
-        let acc = eval_accuracy(self.model, &self.eval_buf, &self.data.test)?;
+        let Some(evaluator) = self.evaluator.as_mut() else {
+            bail!("this session has no test-set evaluator (built with Session::with_oracle)");
+        };
+        let acc = evaluator(&self.eval_buf)?;
         self.eval_overhead += self.watch.elapsed_s() - e0;
         Ok(acc)
     }
@@ -298,7 +458,7 @@ impl<'a> Session<'a> {
             dataset: self.cfg.dataset.clone(),
             dim: self.world.dim(),
             workers: self.cfg.workers,
-            batch: self.model.batch(),
+            batch: self.world.batch_size(),
             tau: self.cfg.tau,
             seed: self.cfg.seed,
             rows: self.recorder.rows.clone(),
@@ -332,33 +492,16 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Rebuild a session from a snapshot so that stepping it to the
-    /// horizon is bit-identical to never having stopped. `cfg` must
-    /// describe the same run the snapshot came from; any divergence in a
-    /// trajectory-affecting knob is rejected with a descriptive error.
-    pub fn restore(
-        model: &'a dyn ModelBackend,
-        data: &'a RunData,
-        cfg: &TrainConfig,
-        state: RunState,
-    ) -> Result<Self> {
-        let expect = run_meta(cfg, model.dim());
-        check_meta(&state.meta, &expect)?;
-        if state.iter > cfg.iters {
-            bail!(
-                "checkpoint is at iteration {} but the run horizon is only {}",
-                state.iter,
-                cfg.iters
-            );
-        }
-        let mut s = Self::new(model, data, cfg)?;
-        s.algo.load_state(state.algo)?;
-        s.world.comm.restore_stats(state.comm);
-        s.world.compute = state.counters;
-        s.recorder.rows = state.rows;
-        s.t = state.iter;
-        s.compute_base_s = state.compute_s;
-        Ok(s)
+    /// Load a snapshot into this freshly built session (the tail of
+    /// [`Session::restore`]; meta validation is the caller's job).
+    fn load_state(&mut self, state: RunState) -> Result<()> {
+        self.algo.load_state(state.algo)?;
+        self.world.comm.restore_stats(state.comm);
+        self.world.compute = state.counters;
+        self.recorder.rows = state.rows;
+        self.t = state.iter;
+        self.compute_base_s = state.compute_s;
+        Ok(())
     }
 }
 
@@ -382,14 +525,21 @@ fn run_meta(cfg: &TrainConfig, dim: usize) -> RunMeta {
 
 /// Hash of the trajectory-affecting knobs not named in [`RunMeta`]: the
 /// step-size rule, corpus sizes, RI-SGD redundancy, SVRG epoch geometry,
-/// QSGD levels/EF, momentum and the network model. Two configs with equal
-/// meta and equal fingerprint drive identical trajectories.
+/// QSGD levels/EF, momentum, the network model and the fault-injection
+/// plan (retries/latency enter the persisted wire counters, so a resumed
+/// run must replay the identical plan). The transport *fabric* is
+/// deliberately absent: loopback and TCP runs are byte-identical, so a
+/// checkpoint moves freely between them. Two configs with equal meta and
+/// equal fingerprint drive identical trajectories and accounting.
 fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
     let step = match cfg.step {
         StepSize::Constant { alpha } => [1, alpha.to_bits(), 0],
         StepSize::InvDecay { alpha0, gamma } => [2, alpha0.to_bits(), gamma.to_bits()],
         StepSize::Theory { l_guess } => [3, l_guess.to_bits(), 0],
     };
+    let fault = &cfg.transport.fault;
+    let mut lat_parts: Vec<u64> = vec![fault.latency_s.len() as u64];
+    lat_parts.extend(fault.latency_s.iter().map(|l| l.to_bits()));
     hash_u64s(&[
         step[0],
         step[1],
@@ -404,6 +554,9 @@ fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
         cfg.momentum.to_bits(),
         cfg.network.latency_s.to_bits(),
         cfg.network.bandwidth_bps.to_bits(),
+        fault.drop_prob.to_bits(),
+        fault.seed,
+        hash_u64s(&lat_parts),
     ])
 }
 
@@ -471,7 +624,7 @@ fn check_meta(saved: &RunMeta, expect: &RunMeta) -> Result<()> {
     if saved.cfg_fingerprint != expect.cfg_fingerprint {
         bail!(
             "checkpoint hyper-parameters differ from the run's (step rule, corpus \
-             sizes, redundancy, SVRG/QSGD/momentum or network settings)"
+             sizes, redundancy, SVRG/QSGD/momentum, network or fault-plan settings)"
         );
     }
     Ok(())

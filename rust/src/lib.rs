@@ -52,17 +52,25 @@
 //! - [`rng`] — deterministic RNG + the paper's pre-shared direction seeds
 //! - [`data`] — Table-4 dataset profiles (synthetic substitutes) + batching
 //! - [`comm`] — simulated collectives, byte accounting, α–β network model,
-//!   QSGD quantizer substrate
+//!   QSGD quantizer substrate (incl. the Elias-γ wire codec)
+//! - [`transport`] — the pluggable communication fabric: the `Transport`
+//!   trait, the versioned `HOSGDW1` wire protocol, the in-process
+//!   `Loopback` fabric (default; deterministic fault injection for
+//!   straggler/drop scenarios) and the TCP fabric (`hosgd worker --listen`
+//!   daemons + `train --workers-at`), with byte-accurate measured wire
+//!   accounting that is identical across fabrics
 //! - [`optim`] — HO-SGD (the contribution) and the baselines:
 //!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD; the `Algorithm` trait
-//!   with snapshot/restore of every hidden buffer (`AlgoState`)
+//!   with snapshot/restore of every hidden buffer (`AlgoState`); every
+//!   oracle round crosses the transport fabric via `World::round`
 //! - [`pool`] — the parallel worker execution engine (`--threads N`):
 //!   per-worker oracle fan-out + batch-chunked kernels with deterministic
 //!   fixed-order reduction (bit-identical traces at any thread count)
 //! - [`coordinator`] — the session-based training driver: steppable /
-//!   observable / resumable [`coordinator::Session`], the `Observer`
-//!   event stream, v1+v2 checkpoint formats, and the batch `run_train*`
-//!   wrappers
+//!   observable / resumable [`coordinator::Session`] (generic over the
+//!   oracle — the attack loop runs through it too), the `Observer`
+//!   event stream incl. `PeriodicCheckpoint` and the streaming CSV/JSONL
+//!   sinks, v1+v2 checkpoint formats, and the batch `run_train*` wrappers
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
@@ -82,6 +90,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod theory;
+pub mod transport;
 pub mod util;
 
 pub use anyhow::Result;
@@ -93,11 +102,13 @@ pub mod prelude {
     pub use anyhow::Result;
 
     pub use crate::backend::{Backend, BackendKind, ModelBackend, NativeBackend};
-    pub use crate::config::{Method, StepSize, TrainConfig};
+    pub use crate::config::{FaultPlan, Method, StepSize, TrainConfig, TransportConfig};
     pub use crate::coordinator::checkpoint::{load_params_any, Checkpoint, RunState};
     pub use crate::coordinator::session::{EvalEvent, Observer, StepEvent, SyncEvent};
-    pub use crate::coordinator::session::{Session, TraceRecorder};
+    pub use crate::coordinator::session::{PeriodicCheckpoint, Session, TraceRecorder};
     pub use crate::coordinator::{eval_accuracy, make_data, run_train, run_train_with};
     pub use crate::coordinator::{RunData, TrainOutcome};
+    pub use crate::metrics::sinks::{CsvSink, JsonlSink};
     pub use crate::metrics::{ComputeCounters, Trace, TraceRow};
+    pub use crate::transport::{Loopback, TcpTransport, Transport};
 }

@@ -17,7 +17,10 @@ use hosgd::attack::{
 use hosgd::backend::{self, golden, Backend, BackendKind, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::checkpoint::{load_params_any, RunState};
-use hosgd::coordinator::{make_data, run_train_with, EvalEvent, Observer, Session};
+use hosgd::coordinator::{
+    make_data, run_train_with, EvalEvent, Observer, PeriodicCheckpoint, Session,
+};
+use hosgd::metrics::sinks::{CsvSink, JsonlSink};
 use hosgd::data::table4_profiles;
 use hosgd::metrics::Trace;
 use hosgd::theory::{table1, Table1Params};
@@ -48,6 +51,17 @@ SUBCOMMANDS
                  pass the same method/dataset/iters/... flags as the
                  original run — mismatches are rejected loudly)
                  --stop-at T (pause after iteration T-1, checkpoint, exit)
+                 --workers-at h1:p1,h2:p2 (drive remote `hosgd worker`
+                 daemons over TCP; ranks assigned round-robin; trace is
+                 byte-identical to the in-process run)
+                 --stream-csv PATH / --stream-jsonl PATH (append recorded
+                 rows to disk as they happen, flushed per eval)
+                 --fault-drop P --fault-latency s1,s2 --fault-seed S
+                 (deterministic loopback fault injection: drop-with-retry
+                 probability, per-worker straggler seconds)
+  worker         TCP worker daemon: serve oracle rounds to a coordinator
+                 --listen ADDR (default 127.0.0.1:7070)
+                 --once (exit after the first coordinator session)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
                  --dump-images --clf-checkpoint PATH (frozen classifier
@@ -89,6 +103,20 @@ fn main() -> Result<()> {
 
     match cmd {
         "train" => cmd_train(&args, &artifacts, cli_backend, &out_dir)?,
+        "worker" => {
+            let listen = args.get_str("listen", "127.0.0.1:7070");
+            let once = args.has("once");
+            args.finish()?;
+            let listener = std::net::TcpListener::bind(&listen)
+                .map_err(|e| anyhow::anyhow!("binding worker daemon to {listen}: {e}"))?;
+            eprintln!("# hosgd worker listening on {listen} (HOSGDW1)");
+            let opts = hosgd::transport::WorkerDaemonOpts {
+                artifacts: std::path::PathBuf::from(&artifacts),
+                threads,
+                once,
+            };
+            hosgd::transport::serve(listener, &opts)?;
+        }
         "fig2" => {
             let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 400)?;
@@ -284,10 +312,27 @@ fn cmd_train(
     cfg.eval_every = args.get("eval-every", cfg.eval_every)?;
     cfg.threads = args.get("threads", cfg.threads)?;
     cfg.checkpoint_every = args.get("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(ws) = args.get_opt::<String>("workers-at")? {
+        cfg.transport.workers_at =
+            ws.split(',').filter(|s| !s.is_empty()).map(String::from).collect();
+    }
+    if let Some(p) = args.get_opt::<f64>("fault-drop")? {
+        cfg.transport.fault.drop_prob = p;
+    }
+    if let Some(lat) = args.get_opt::<String>("fault-latency")? {
+        cfg.transport.fault.latency_s = lat
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>())
+            .collect::<std::result::Result<_, _>>()?;
+    }
+    cfg.transport.fault.seed = args.get("fault-seed", cfg.transport.fault.seed)?;
     let canonical = args.get_opt::<String>("canonical")?;
     let ckpt_flag = args.get_opt::<String>("checkpoint")?;
     let resume = args.get_opt::<String>("resume")?;
     let stop_at = args.get_opt::<u64>("stop-at")?;
+    let stream_csv = args.get_opt::<String>("stream-csv")?;
+    let stream_jsonl = args.get_opt::<String>("stream-jsonl")?;
     args.finish()?;
     let be = open_backend(cfg.backend, artifacts, cfg.threads)?;
     let model = be.model(&cfg.dataset)?;
@@ -304,14 +349,20 @@ fn cmd_train(
         }
         None => Session::new(model.as_ref(), &data, &cfg)?,
     };
+    eprintln!("# transport: {}", session.transport_label());
     session.add_observer(ConsoleObserver);
+    // --checkpoint-every as the reusable observer (same cadence embedders get)
+    session.add_observer(PeriodicCheckpoint::new(cfg.checkpoint_every, &ckpt_path));
+    if let Some(path) = &stream_csv {
+        session.add_observer(CsvSink::create(path)?);
+    }
+    if let Some(path) = &stream_jsonl {
+        session.add_observer(JsonlSink::create(path)?);
+    }
 
     let end = stop_at.map_or(cfg.iters, |s| s.min(cfg.iters));
     while session.iter() < end {
         session.step()?;
-        if cfg.checkpoint_every > 0 && session.iter() % cfg.checkpoint_every == 0 {
-            session.snapshot().save(&ckpt_path)?;
-        }
     }
 
     if !session.is_finished() {
@@ -344,7 +395,7 @@ fn cmd_train(
 fn print_trace_summary(t: &Trace) {
     let last = t.rows.last().expect("empty trace");
     println!(
-        "{:<12} {:<12} iters={:<6} loss {:.4} -> {:.4}  acc={}  compute={:.2}s comm(sim)={:.3}s bytes/worker={}",
+        "{:<12} {:<12} iters={:<6} loss {:.4} -> {:.4}  acc={}  compute={:.2}s comm(sim)={:.3}s bytes/worker={} wire(up/down)={}/{}",
         t.method,
         t.dataset,
         last.iter + 1,
@@ -354,6 +405,8 @@ fn print_trace_summary(t: &Trace) {
         last.compute_s,
         last.comm_s,
         last.bytes_per_worker,
+        last.wire_up_bytes,
+        last.wire_down_bytes,
     );
 }
 
@@ -602,9 +655,18 @@ fn run_report(out_dir: &str, kind: &str, dataset: &str) -> Result<()> {
     let mut loss_time = Vec::new();
     let mut acc_time = Vec::new();
     for path in &pattern {
-        let Ok(rows) = read_trace_csv(path) else {
-            eprintln!("skipping missing {path} (run `hosgd {kind}` first)");
-            continue;
+        let rows = match read_trace_csv(path) {
+            Ok(rows) => rows,
+            Err(e) if !std::path::Path::new(path).exists() => {
+                eprintln!("skipping missing {path} (run `hosgd {kind}` first): {e:#}");
+                continue;
+            }
+            Err(e) => {
+                // exists but does not parse — likely written by an older
+                // build (the trace CSV schema gained the wire columns)
+                eprintln!("skipping unreadable {path}: {e:#} (re-run `hosgd {kind}`?)");
+                continue;
+            }
         };
         let name = std::path::Path::new(path)
             .file_stem()

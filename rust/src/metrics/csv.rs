@@ -25,7 +25,7 @@ pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRow>> {
             .position(|c| *c == name)
             .ok_or_else(|| anyhow!("missing column {name:?}"))
     };
-    let (ci, cl, ca, ccs, cms, cts, cb, csc, cf, cg) = (
+    let (ci, cl, ca, ccs, cms, cts, cb, csc, cwu, cwd, cf, cg) = (
         idx("iter")?,
         idx("train_loss")?,
         idx("test_acc")?,
@@ -34,6 +34,8 @@ pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRow>> {
         idx("total_s")?,
         idx("bytes_per_worker")?,
         idx("scalars_per_worker")?,
+        idx("wire_up_bytes")?,
+        idx("wire_down_bytes")?,
         idx("fn_evals")?,
         idx("grad_evals")?,
     );
@@ -59,6 +61,8 @@ pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRow>> {
             total_s: num(cts)?,
             bytes_per_worker: num(cb)? as u64,
             scalars_per_worker: num(csc)? as u64,
+            wire_up_bytes: num(cwu)? as u64,
+            wire_down_bytes: num(cwd)? as u64,
             fn_evals: num(cf)? as u64,
             grad_evals: num(cg)? as u64,
         });
@@ -90,6 +94,8 @@ mod tests {
                     total_s: 0.11,
                     bytes_per_worker: 40,
                     scalars_per_worker: 10,
+                    wire_up_bytes: 196,
+                    wire_down_bytes: 512,
                     fn_evals: 0,
                     grad_evals: 32,
                 },
@@ -102,6 +108,8 @@ mod tests {
                     total_s: 0.22,
                     bytes_per_worker: 44,
                     scalars_per_worker: 11,
+                    wire_up_bytes: 225,
+                    wire_down_bytes: 1024,
                     fn_evals: 64,
                     grad_evals: 32,
                 },
@@ -122,6 +130,8 @@ mod tests {
         assert_eq!(rows[0].test_acc, None);
         assert_eq!(rows[1].test_acc, Some(0.5));
         assert_eq!(rows[1].bytes_per_worker, 44);
+        assert_eq!(rows[0].wire_up_bytes, 196);
+        assert_eq!(rows[1].wire_down_bytes, 1024);
         std::fs::remove_dir_all(&dir).ok();
     }
 

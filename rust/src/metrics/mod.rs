@@ -8,6 +8,7 @@
 //! CSV — the exact series of the paper's figures.
 
 pub mod csv;
+pub mod sinks;
 
 use std::io::Write;
 use std::path::Path;
@@ -54,6 +55,11 @@ pub struct TraceRow {
     pub total_s: f64,
     pub bytes_per_worker: u64,
     pub scalars_per_worker: u64,
+    /// measured wire bytes workers sent to the coordinator so far (real
+    /// serialized `HOSGDW1` frames, summed over workers)
+    pub wire_up_bytes: u64,
+    /// measured wire bytes the coordinator sent to workers so far
+    pub wire_down_bytes: u64,
     pub fn_evals: u64,
     pub grad_evals: u64,
 }
@@ -94,25 +100,9 @@ impl Trace {
         }
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        writeln!(
-            f,
-            "iter,train_loss,test_acc,compute_s,comm_s,total_s,bytes_per_worker,scalars_per_worker,fn_evals,grad_evals"
-        )?;
+        writeln!(f, "{}", TraceRow::CSV_HEADER)?;
         for r in &self.rows {
-            writeln!(
-                f,
-                "{},{:.6},{},{:.6},{:.6},{:.6},{},{},{},{}",
-                r.iter,
-                r.train_loss,
-                r.test_acc.map_or(String::new(), |a| format!("{a:.5}")),
-                r.compute_s,
-                r.comm_s,
-                r.total_s,
-                r.bytes_per_worker,
-                r.scalars_per_worker,
-                r.fn_evals,
-                r.grad_evals
-            )?;
+            writeln!(f, "{}", r.to_csv_line())?;
         }
         Ok(())
     }
@@ -176,6 +166,30 @@ impl Trace {
 }
 
 impl TraceRow {
+    /// Column set of [`Trace::write_csv`] / the streaming
+    /// [`sinks::CsvSink`] — one place so writers and the reader agree.
+    pub const CSV_HEADER: &str = "iter,train_loss,test_acc,compute_s,comm_s,total_s,\
+         bytes_per_worker,scalars_per_worker,wire_up_bytes,wire_down_bytes,fn_evals,grad_evals";
+
+    /// One CSV line (no trailing newline) in [`TraceRow::CSV_HEADER`] order.
+    pub fn to_csv_line(&self) -> String {
+        format!(
+            "{},{:.6},{},{:.6},{:.6},{:.6},{},{},{},{},{},{}",
+            self.iter,
+            self.train_loss,
+            self.test_acc.map_or(String::new(), |a| format!("{a:.5}")),
+            self.compute_s,
+            self.comm_s,
+            self.total_s,
+            self.bytes_per_worker,
+            self.scalars_per_worker,
+            self.wire_up_bytes,
+            self.wire_down_bytes,
+            self.fn_evals,
+            self.grad_evals
+        )
+    }
+
     /// Deterministic fields only — see [`Trace::to_json_canonical`]. The
     /// train loss is emitted as raw f64 bits so the diff is exact, not a
     /// formatting artifact.
@@ -190,6 +204,8 @@ impl TraceRow {
             ),
             ("bytes_per_worker", Json::num(self.bytes_per_worker as f64)),
             ("scalars_per_worker", Json::num(self.scalars_per_worker as f64)),
+            ("wire_up_bytes", Json::num(self.wire_up_bytes as f64)),
+            ("wire_down_bytes", Json::num(self.wire_down_bytes as f64)),
             ("fn_evals", Json::num(self.fn_evals as f64)),
             ("grad_evals", Json::num(self.grad_evals as f64)),
         ])
@@ -205,6 +221,8 @@ impl TraceRow {
             ("total_s", Json::num(self.total_s)),
             ("bytes_per_worker", Json::num(self.bytes_per_worker as f64)),
             ("scalars_per_worker", Json::num(self.scalars_per_worker as f64)),
+            ("wire_up_bytes", Json::num(self.wire_up_bytes as f64)),
+            ("wire_down_bytes", Json::num(self.wire_down_bytes as f64)),
             ("fn_evals", Json::num(self.fn_evals as f64)),
             ("grad_evals", Json::num(self.grad_evals as f64)),
         ])
@@ -224,12 +242,14 @@ impl TraceRow {
         out.extend_from_slice(&self.total_s.to_bits().to_le_bytes());
         out.extend_from_slice(&self.bytes_per_worker.to_le_bytes());
         out.extend_from_slice(&self.scalars_per_worker.to_le_bytes());
+        out.extend_from_slice(&self.wire_up_bytes.to_le_bytes());
+        out.extend_from_slice(&self.wire_down_bytes.to_le_bytes());
         out.extend_from_slice(&self.fn_evals.to_le_bytes());
         out.extend_from_slice(&self.grad_evals.to_le_bytes());
     }
 
     /// Encoded size of one row (see [`TraceRow::write_le`]).
-    pub const ENCODED_LEN: usize = 10 * 8 + 1;
+    pub const ENCODED_LEN: usize = 12 * 8 + 1;
 
     /// Decode a row written by [`TraceRow::write_le`] starting at `off`;
     /// advances `off` past it.
@@ -257,6 +277,8 @@ impl TraceRow {
             total_s: f64::from_bits(u64_at(off)),
             bytes_per_worker: u64_at(off),
             scalars_per_worker: u64_at(off),
+            wire_up_bytes: u64_at(off),
+            wire_down_bytes: u64_at(off),
             fn_evals: u64_at(off),
             grad_evals: u64_at(off),
         };
@@ -299,6 +321,8 @@ mod tests {
             total_s: 0.15,
             bytes_per_worker: 100,
             scalars_per_worker: 25,
+            wire_up_bytes: 58,
+            wire_down_bytes: 436,
             fn_evals: 10,
             grad_evals: 5,
         }

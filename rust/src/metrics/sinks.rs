@@ -1,0 +1,212 @@
+//! Streaming trace sinks: CSV / JSONL appender [`Observer`]s.
+//!
+//! The built-in [`TraceRecorder`](crate::coordinator::session::TraceRecorder)
+//! buffers every recorded row in memory — right for the batch experiment
+//! drivers, wrong for a long-running service that trains for millions of
+//! iterations. These sinks append each recorded row to a file as it happens
+//! and flush whenever they write an eval-bearing row (and on the final
+//! step), so the on-disk series is durable and tail-able at the
+//! `eval_every` cadence while the run is still going, and the process
+//! never holds the whole trace.
+//!
+//! ```no_run
+//! use hosgd::prelude::*;
+//!
+//! # fn main() -> Result<()> {
+//! let backend = NativeBackend::new();
+//! let cfg = TrainConfig::default();
+//! let model = backend.model(&cfg.dataset)?;
+//! let data = make_data(&cfg)?;
+//! let mut session = Session::new(model.as_ref(), &data, &cfg)?;
+//! session.add_observer(CsvSink::create("results/live_trace.csv")?);
+//! session.add_observer(JsonlSink::create("results/live_trace.jsonl")?);
+//! session.run_to_end()?;
+//! # Ok(()) }
+//! ```
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::session::{Observer, StepEvent};
+
+/// The shared appender state: a buffered file plus a failure latch. A sink
+/// must not abort a training run over a disk hiccup, but it must not be
+/// *silent* about it either — the first I/O failure is reported on stderr
+/// (with the path) and latched, and every subsequent write is skipped.
+struct SinkFile {
+    out: BufWriter<File>,
+    path: PathBuf,
+    failed: bool,
+}
+
+impl SinkFile {
+    fn open(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f =
+            File::create(path).with_context(|| format!("creating trace sink {}", path.display()))?;
+        Ok(Self { out: BufWriter::new(f), path: path.to_path_buf(), failed: false })
+    }
+
+    fn note(&mut self, outcome: std::io::Result<()>) {
+        if let Err(e) = outcome {
+            if !self.failed {
+                self.failed = true;
+                eprintln!(
+                    "# trace sink {}: write failed ({e}); dropping subsequent rows",
+                    self.path.display()
+                );
+            }
+        }
+    }
+
+    fn write_line(&mut self, line: &str) {
+        if !self.failed {
+            let outcome = writeln!(self.out, "{line}");
+            self.note(outcome);
+        }
+    }
+
+    fn flush(&mut self) {
+        if !self.failed {
+            let outcome = self.out.flush();
+            self.note(outcome);
+        }
+    }
+}
+
+/// Append recorded rows to a CSV file ([`TraceRow::CSV_HEADER`] columns,
+/// identical to [`Trace::write_csv`]), flushing after every eval-bearing
+/// row. The first write failure is reported on stderr and the sink goes
+/// quiet (it never aborts the run).
+///
+/// [`TraceRow::CSV_HEADER`]: crate::metrics::TraceRow::CSV_HEADER
+/// [`Trace::write_csv`]: crate::metrics::Trace::write_csv
+pub struct CsvSink {
+    file: SinkFile,
+}
+
+impl CsvSink {
+    /// Create/truncate `path` and write the header row immediately.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let mut file = SinkFile::open(path.as_ref())?;
+        writeln!(file.out, "{}", crate::metrics::TraceRow::CSV_HEADER)?;
+        file.out.flush()?;
+        Ok(Self { file })
+    }
+}
+
+impl Observer for CsvSink {
+    fn on_step(&mut self, ev: &StepEvent) {
+        if ev.recorded {
+            self.file.write_line(&ev.row.to_csv_line());
+        }
+        // flush AFTER writing an eval-bearing row — `on_eval` fires before
+        // `on_step` within an iteration, so flushing there would leave the
+        // evaluation's own row buffered until the next eval
+        if ev.final_step || ev.row.test_acc.is_some() {
+            self.file.flush();
+        }
+    }
+}
+
+/// Append recorded rows as one compact JSON object per line (the
+/// [`TraceRow::to_json`](crate::metrics::TraceRow::to_json) fields),
+/// flushing after every eval-bearing row — the format log shippers ingest
+/// directly. Failure semantics as [`CsvSink`].
+pub struct JsonlSink {
+    file: SinkFile,
+}
+
+impl JsonlSink {
+    /// Create/truncate `path`.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { file: SinkFile::open(path.as_ref())? })
+    }
+}
+
+impl Observer for JsonlSink {
+    fn on_step(&mut self, ev: &StepEvent) {
+        if ev.recorded {
+            self.file.write_line(&ev.row.to_json().compact());
+        }
+        if ev.final_step || ev.row.test_acc.is_some() {
+            self.file.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TraceRow;
+
+    fn step_event(iter: u64, recorded: bool, acc: Option<f64>, final_step: bool) -> StepEvent {
+        StepEvent {
+            row: TraceRow {
+                iter,
+                train_loss: 1.5,
+                test_acc: acc,
+                compute_s: 0.0,
+                comm_s: 0.0,
+                total_s: 0.0,
+                bytes_per_worker: 4,
+                scalars_per_worker: 1,
+                wire_up_bytes: 29,
+                wire_down_bytes: 500,
+                fn_evals: 8,
+                grad_evals: 0,
+            },
+            recorded,
+            sync_round: false,
+            final_step,
+        }
+    }
+
+    #[test]
+    fn csv_sink_streams_recorded_rows_and_flushes_on_eval_rows() {
+        let dir = std::env::temp_dir().join("hosgd_sink_test");
+        let path = dir.join("live.csv");
+        let mut sink = CsvSink::create(&path).unwrap();
+        sink.on_step(&step_event(0, true, None, false)); // buffered for now
+        sink.on_step(&step_event(1, false, None, false)); // unrecorded: skipped
+        sink.on_step(&step_event(2, true, Some(0.5), false)); // eval row: flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[0].starts_with("iter,train_loss"));
+        assert!(lines[1].starts_with("0,"));
+        assert!(lines[2].starts_with("2,"));
+        // the streamed lines parse back through the shared CSV reader, and
+        // the eval row itself made it to disk (not just the rows before it)
+        let rows = crate::metrics::csv::parse_trace_csv(&text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].wire_up_bytes, 29);
+        assert_eq!(rows[1].test_acc, Some(0.5));
+        sink.on_step(&step_event(3, true, None, true)); // final step flushes too
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.trim().lines().count(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_object_per_row() {
+        let dir = std::env::temp_dir().join("hosgd_sink_test_jsonl");
+        let path = dir.join("live.jsonl");
+        let mut sink = JsonlSink::create(&path).unwrap();
+        sink.on_step(&step_event(0, true, None, false));
+        sink.on_step(&step_event(7, true, None, true));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            assert!(v.get("wire_down_bytes").is_some(), "{line}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -15,6 +15,7 @@
 use anyhow::Result;
 
 use crate::config::Method;
+use crate::transport::Round;
 
 use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
@@ -33,10 +34,11 @@ impl HoSgd {
 }
 
 /// One first-order iteration (eq. (3) + (5)-(6)): the m worker gradients
-/// run in parallel on the pool, then one d-float all-reduce is modelled
-/// and the shared update applied. The reduction walks the per-worker
-/// slots in fixed worker order, so the result is bit-identical to the
-/// sequential schedule. Returns the mean worker loss.
+/// cross the transport fabric as dense-vector frames (in-process on
+/// `Loopback`, real sockets on TCP), then one d-float all-reduce is
+/// modelled and the shared update applied. The reduction walks the
+/// per-worker slots in fixed worker order, so the result is bit-identical
+/// to the sequential schedule. Returns the mean worker loss.
 pub(crate) fn fo_iteration<O: Oracle>(
     params: &mut [f32],
     t: u64,
@@ -46,10 +48,7 @@ pub(crate) fn fo_iteration<O: Oracle>(
     let m = w.cfg.m;
     let d = w.dim();
     let b = w.batch_size();
-    w.fan_out(|i, ctx| {
-        ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
-        Ok(())
-    })?;
+    w.round(Round::Grad { params, t })?;
     let mut loss_sum = 0.0f64;
     {
         let World { workers, gsum, compute, .. } = w;
@@ -67,10 +66,11 @@ pub(crate) fn fo_iteration<O: Oracle>(
 }
 
 /// One zeroth-order iteration (eq. (4) + (5)-(6)): every worker probes its
-/// pre-shared direction in parallel and transmits one scalar; the rank
-/// regenerates directions locally and applies the shared update via the
-/// fixed-order reduction. Returns the mean base loss (free — it is one of
-/// the two function evaluations).
+/// pre-shared direction and transmits a scalar batch — a few dozen wire
+/// bytes no matter how large `d` is; the rank regenerates directions
+/// locally and applies the shared update via the fixed-order reduction.
+/// Returns the mean base loss (free — it is one of the two function
+/// evaluations).
 pub(crate) fn zo_iteration<O: Oracle>(
     params: &mut [f32],
     t: u64,
@@ -81,13 +81,7 @@ pub(crate) fn zo_iteration<O: Oracle>(
     let d = w.dim();
     let b = w.batch_size();
     let mu = w.cfg.mu;
-    w.fan_out(|i, ctx| {
-        ctx.regen_direction(t, i);
-        let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
-        ctx.loss_plus = lp;
-        ctx.loss = lb;
-        Ok(())
-    })?;
+    w.round(Round::Zo { params, t })?;
     let mut loss_sum = 0.0f64;
     {
         let World { workers, gsum, compute, .. } = w;

@@ -13,6 +13,7 @@
 use anyhow::Result;
 
 use crate::config::Method;
+use crate::transport::Round;
 
 use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
@@ -43,15 +44,12 @@ impl<O: Oracle> Algorithm<O> for HoSgdM {
         let alpha = w.cfg.alpha(t, b);
 
         // build Ḡ_t exactly like HO-SGD (same comm/compute accounting):
-        // the per-worker oracle calls fan out in parallel, the reduction
-        // into gsum walks the slots in fixed worker order
+        // the per-worker oracle calls cross the transport fabric, the
+        // reduction into gsum walks the slots in fixed worker order
         let params = &self.params;
         let mut loss_sum = 0.0f64;
         if t % w.cfg.tau as u64 == 0 {
-            w.fan_out(|i, ctx| {
-                ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
-                Ok(())
-            })?;
+            w.round(Round::Grad { params, t })?;
             {
                 let World { workers, gsum, compute, .. } = w;
                 gsum.fill(0.0);
@@ -63,13 +61,7 @@ impl<O: Oracle> Algorithm<O> for HoSgdM {
             }
             w.comm.allreduce_floats(d as u64);
         } else {
-            w.fan_out(|i, ctx| {
-                ctx.regen_direction(t, i);
-                let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
-                ctx.loss_plus = lp;
-                ctx.loss = lb;
-                Ok(())
-            })?;
+            w.round(Round::Zo { params, t })?;
             {
                 let World { workers, gsum, compute, .. } = w;
                 gsum.fill(0.0);

@@ -35,11 +35,13 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::backend::ProfileMeta;
+use crate::comm::qsgd::Quantized;
 use crate::comm::CommSim;
 use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
 use crate::pool::{Shards, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
+use crate::transport::{Loopback, Round, Transport};
 
 // ---------------------------------------------------------------------------
 // Oracle: the stochastic first/zeroth-order oracle of the paper
@@ -156,11 +158,16 @@ pub struct WorkerCtx<O> {
     /// ZO-SVRG: base / probe losses at the epoch snapshot x̃
     pub snap_loss: f32,
     pub snap_loss_plus: f32,
+    /// QSGD: the worker's quantized gradient for this round (what a real
+    /// deployment puts on the wire; filled by the transport fabric)
+    pub quant: Option<Quantized>,
     err: Option<anyhow::Error>,
 }
 
 impl<O: Oracle> WorkerCtx<O> {
-    fn new(oracle: O, reg: SeedRegistry) -> Self {
+    /// Build a standalone worker context (what [`World`] does per worker,
+    /// and what a remote `hosgd worker` daemon does per hosted rank).
+    pub(crate) fn new(oracle: O, reg: SeedRegistry) -> Self {
         let d = oracle.dim();
         Self {
             oracle,
@@ -173,6 +180,7 @@ impl<O: Oracle> WorkerCtx<O> {
             loss_plus: 0.0,
             snap_loss: 0.0,
             snap_loss_plus: 0.0,
+            quant: None,
             err: None,
         }
     }
@@ -217,8 +225,9 @@ impl<O: Oracle> WorkerCtx<O> {
 }
 
 /// Mutable per-run context shared by all algorithms: the per-worker
-/// sharded contexts, the execution pool, the comm simulator, compute
-/// counters, pre-shared seeds and the main-thread reduction buffer.
+/// sharded contexts, the execution pool, the communication fabric
+/// ([`Transport`]), the comm simulator, compute counters, pre-shared seeds
+/// and the main-thread reduction buffer.
 pub struct World<O: Oracle> {
     pub comm: CommSim,
     pub compute: ComputeCounters,
@@ -230,6 +239,8 @@ pub struct World<O: Oracle> {
     pub workers: Vec<WorkerCtx<O>>,
     /// the reduced update direction Ḡ_t (main thread, fixed worker order)
     pub gsum: Vec<f32>,
+    /// the coordinator↔worker message fabric every oracle round crosses
+    transport: Box<dyn Transport<O>>,
     dim: usize,
     batch: usize,
 }
@@ -241,9 +252,23 @@ impl<O: Oracle> World<O> {
         Self::with_pool(oracle, comm, cfg, Arc::new(WorkerPool::new(1)))
     }
 
-    /// World whose per-worker fan-out runs on `pool`. The oracle is
-    /// sharded once per worker up front; worker 0 keeps the original.
+    /// World whose per-worker fan-out runs on `pool`, over the default
+    /// in-process [`Loopback`] fabric.
     pub fn with_pool(oracle: O, comm: CommSim, cfg: AlgoConfig, pool: Arc<WorkerPool>) -> Self {
+        Self::with_transport(oracle, comm, cfg, pool, Box::new(Loopback::default()))
+    }
+
+    /// World whose oracle rounds cross `transport`. The oracle is sharded
+    /// once per worker up front; worker 0 keeps the original. (A remote
+    /// transport leaves the shards idle — the coordinator still uses their
+    /// slots and direction scratch for the fixed-order reduction.)
+    pub fn with_transport(
+        oracle: O,
+        comm: CommSim,
+        cfg: AlgoConfig,
+        pool: Arc<WorkerPool>,
+        transport: Box<dyn Transport<O>>,
+    ) -> Self {
         let d = oracle.dim();
         let batch = oracle.batch_size();
         let reg = SeedRegistry::new(cfg.seed);
@@ -261,9 +286,25 @@ impl<O: Oracle> World<O> {
             pool,
             workers,
             gsum: vec![0.0; d],
+            transport,
             dim: d,
             batch,
         }
+    }
+
+    /// Execute one collective oracle round across all `m` workers through
+    /// the transport fabric: results land in the [`WorkerCtx`] slots, and
+    /// the measured wire bytes land in [`CommSim::wire_up`] /
+    /// [`CommSim::wire_down`]. The caller then reduces the slots in fixed
+    /// worker order, exactly as with the in-process fan-out.
+    pub fn round(&mut self, req: Round<'_>) -> Result<()> {
+        let Self { transport, workers, pool, comm, cfg, .. } = self;
+        transport.round(workers, pool, comm, cfg, req)
+    }
+
+    /// The active fabric's label (`"loopback"` / `"tcp"`).
+    pub fn transport_label(&self) -> &'static str {
+        self.transport.label()
     }
 
     /// d — decision-variable dimension.
@@ -282,14 +323,17 @@ impl<O: Oracle> World<O> {
     /// reduces the slots in fixed worker order, which is what keeps traces
     /// bit-identical at any thread count. The first error (by worker
     /// index) is propagated.
+    ///
+    /// NOTE: this is the raw in-process execution primitive. Optimizer
+    /// iterations should go through [`World::round`] instead, so the same
+    /// algorithm code runs over remote workers and the measured wire bytes
+    /// are accounted.
     pub fn fan_out<F>(&mut self, f: F) -> Result<()>
     where
         F: Fn(u64, &mut WorkerCtx<O>) -> Result<()> + Sync,
     {
-        // zero-sized items: allocation-free, keeps ONE copy of the unsafe
-        // scatter plumbing (in fan_out_with) to maintain
-        let mut units = vec![(); self.cfg.m];
-        self.fan_out_with(&mut units, |i, ctx, _| f(i, ctx))
+        debug_assert_eq!(self.workers.len(), self.cfg.m);
+        scatter_workers(&self.pool, &mut self.workers, f)
     }
 
     /// Like [`World::fan_out`], with one element of external per-worker
@@ -299,27 +343,62 @@ impl<O: Oracle> World<O> {
         T: Send,
         F: Fn(u64, &mut WorkerCtx<O>, &mut T) -> Result<()> + Sync,
     {
-        let m = self.cfg.m;
-        debug_assert_eq!(self.workers.len(), m);
-        assert_eq!(items.len(), m, "fan_out_with needs exactly one item per worker");
-        {
-            let shards = Shards::new(&mut self.workers[..]);
-            let item_shards = Shards::new(items);
-            self.pool.scatter(m, &|i| {
-                // Safety: i is this job's scatter index (both views)
-                let ctx = unsafe { shards.get(i) };
-                let item = unsafe { item_shards.get(i) };
-                let outcome = f(i as u64, &mut *ctx, item);
-                ctx.err = outcome.err();
-            });
-        }
-        for ctx in &mut self.workers {
-            if let Some(e) = ctx.err.take() {
-                return Err(e);
-            }
-        }
-        Ok(())
+        debug_assert_eq!(self.workers.len(), self.cfg.m);
+        scatter_workers_with(&self.pool, &mut self.workers, items, f)
     }
+}
+
+/// The in-process per-worker fan-out: run `f(i, ctx_i)` for every worker
+/// context on the pool and join, propagating the first error by worker
+/// index. This is the execution primitive behind [`World::fan_out`] and the
+/// [`Loopback`] fabric's compute path.
+pub(crate) fn scatter_workers<O, F>(
+    pool: &WorkerPool,
+    ctxs: &mut [WorkerCtx<O>],
+    f: F,
+) -> Result<()>
+where
+    O: Oracle,
+    F: Fn(u64, &mut WorkerCtx<O>) -> Result<()> + Sync,
+{
+    // zero-sized items: allocation-free, keeps ONE copy of the unsafe
+    // scatter plumbing (in scatter_workers_with) to maintain
+    let mut units = vec![(); ctxs.len()];
+    scatter_workers_with(pool, ctxs, &mut units, |i, ctx, _| f(i, ctx))
+}
+
+/// [`scatter_workers`] with one element of external per-worker state zipped
+/// in (RI-SGD's local models, the TCP fabric's received scalar batches).
+pub(crate) fn scatter_workers_with<O, T, F>(
+    pool: &WorkerPool,
+    ctxs: &mut [WorkerCtx<O>],
+    items: &mut [T],
+    f: F,
+) -> Result<()>
+where
+    O: Oracle,
+    T: Send,
+    F: Fn(u64, &mut WorkerCtx<O>, &mut T) -> Result<()> + Sync,
+{
+    let m = ctxs.len();
+    assert_eq!(items.len(), m, "worker fan-out needs exactly one item per worker");
+    {
+        let shards = Shards::new(ctxs);
+        let item_shards = Shards::new(items);
+        pool.scatter(m, &|i| {
+            // Safety: i is this job's scatter index (both views)
+            let ctx = unsafe { shards.get(i) };
+            let item = unsafe { item_shards.get(i) };
+            let outcome = f(i as u64, &mut *ctx, item);
+            ctx.err = outcome.err();
+        });
+    }
+    for ctx in ctxs.iter_mut() {
+        if let Some(e) = ctx.err.take() {
+            return Err(e);
+        }
+    }
+    Ok(())
 }
 
 /// `x ← x − α·g` (the update (6) of Algorithm 1).

@@ -19,9 +19,9 @@
 
 use anyhow::Result;
 
-use crate::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use crate::comm::qsgd::{dequantize_into, encoded_bytes, seeded_quantize};
 use crate::config::Method;
-use crate::rng::{hash_u64s, Xoshiro256};
+use crate::transport::Round;
 
 use super::{axpy_update, Algorithm, AlgoState, Oracle, World};
 
@@ -51,48 +51,53 @@ impl<O: Oracle> Algorithm<O> for Qsgd {
         let b = w.batch_size();
         let s = w.cfg.qsgd_levels;
         let alpha = w.cfg.alpha(t, b);
-        // the heavy part — m minibatch gradients — runs in parallel
-        let params = &self.params;
-        w.fan_out(|i, ctx| {
-            ctx.loss = ctx.oracle.grad(params, t, i, &mut ctx.g)?;
-            Ok(())
-        })?;
-        // quantization, EF memory and the decode-average stay on the main
-        // thread in fixed worker order (they are O(d) against the O(d·B)
-        // gradients, and the seeded quantizer RNG must consume in worker
-        // order to match the sequential trace)
         let mut loss_sum = 0.0f64;
         let mut bytes_total = 0u64;
-        {
-            let World { workers, gsum, compute, reg, .. } = w;
+        if self.error_feedback {
+            // EF extension: the residual memory lives with the algorithm
+            // here, so the fabric moves the dense gradient and the seeded
+            // quantization runs on the main thread in fixed worker order
+            // (the quantizer RNG must consume in worker order to match the
+            // sequential trace)
+            w.round(Round::Grad { params: &self.params, t })?;
+            let World { workers, gsum, compute, reg, .. } = &mut *w;
             gsum.fill(0.0);
             for (i, ctx) in workers.iter_mut().enumerate() {
                 loss_sum += ctx.loss as f64;
                 compute.grad_evals += b as u64;
-                if self.error_feedback {
-                    // inject the residual memory before quantizing
-                    for (g, &r) in ctx.g.iter_mut().zip(self.residuals[i].iter()) {
-                        *g += r;
-                    }
+                // inject the residual memory before quantizing
+                for (g, &r) in ctx.g.iter_mut().zip(self.residuals[i].iter()) {
+                    *g += r;
                 }
-                // quantization randomness is part of the algorithm, seeded
-                // per (iter, worker) for reproducibility
-                let mut qrng = Xoshiro256::seeded(hash_u64s(&[reg.base(), 0x9_5D, t, i as u64]));
-                let q = quantize(&ctx.g, s, &mut qrng);
+                let q = seeded_quantize(reg.base(), t, i as u64, &ctx.g, s);
                 bytes_total += encoded_bytes(&q);
-                // contractive scaling for the EF path (1 for plain QSGD)
+                // EF is only stable with a contraction; unbiased QSGD is
+                // expansive, so down-scale by 1/(1 + ω), ω = √d/s
                 let omega = (d as f32).sqrt() / s as f32;
-                let ef_scale = if self.error_feedback { 1.0 / (1.0 + omega) } else { 1.0 };
-                if self.error_feedback {
-                    // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
-                    let res = &mut self.residuals[i];
-                    res.copy_from_slice(&ctx.g);
-                    let scale = -ef_scale * q.norm / q.s as f32;
-                    for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
-                        *r += scale * l as f32;
-                    }
+                let ef_scale = 1.0 / (1.0 + omega);
+                // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
+                let res = &mut self.residuals[i];
+                res.copy_from_slice(&ctx.g);
+                let scale = -ef_scale * q.norm / q.s as f32;
+                for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
+                    *r += scale * l as f32;
                 }
                 dequantize_into(&q, ef_scale / m as f32, gsum);
+            }
+        } else {
+            // the paper's plain QSGD: each worker quantizes its own
+            // gradient with the pre-shared seeded rounding stream and the
+            // fabric ships the Elias-coded payload — the wire bytes ARE
+            // the encoded size; the decode-average stays in worker order
+            w.round(Round::QsgdGrad { params: &self.params, t, s })?;
+            let World { workers, gsum, compute, .. } = &mut *w;
+            gsum.fill(0.0);
+            for ctx in workers.iter_mut() {
+                loss_sum += ctx.loss as f64;
+                compute.grad_evals += b as u64;
+                let q = ctx.quant.take().expect("qsgd round fills ctx.quant");
+                bytes_total += encoded_bytes(&q);
+                dequantize_into(&q, 1.0 / m as f32, gsum);
             }
         }
         // per-worker egress: its own encoded gradient (mean across workers)

@@ -12,8 +12,9 @@
 use anyhow::Result;
 
 use crate::config::Method;
+use crate::transport::Round;
 
-use super::{axpy_update, Algorithm, AlgoState, Oracle, World};
+use super::{Algorithm, AlgoState, Oracle, World};
 
 pub struct RiSgd {
     locals: Vec<Vec<f32>>,
@@ -45,14 +46,11 @@ impl<O: Oracle> Algorithm<O> for RiSgd {
         let m = w.cfg.m;
         let b = w.batch_size();
         let alpha = w.cfg.alpha(t, b);
-        // every worker steps its own local model in parallel (the local
-        // update is per-worker state evolution — no cross-worker reduction
-        // until the averaging round)
-        w.fan_out_with(&mut self.locals, |i, ctx, local| {
-            ctx.loss = ctx.oracle.grad(local, t, i, &mut ctx.g)?;
-            axpy_update(local, alpha, &ctx.g);
-            Ok(())
-        })?;
+        // every worker steps its own local model (the local update is
+        // per-worker state evolution — no cross-worker reduction until the
+        // averaging round); over a remote fabric the local goes down and
+        // the updated local comes back as dense-vector frames
+        w.round(Round::LocalStep { locals: &mut self.locals, t, alpha })?;
         let mut loss_sum = 0.0f64;
         for ctx in w.workers.iter() {
             loss_sum += ctx.loss as f64;

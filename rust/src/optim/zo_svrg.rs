@@ -19,6 +19,7 @@
 use anyhow::Result;
 
 use crate::config::Method;
+use crate::transport::Round;
 
 use super::{axpy_acc, axpy_update, zo_scalar, Algorithm, AlgoState, Oracle, World};
 
@@ -38,26 +39,16 @@ impl ZoSvrgAve {
     fn refresh_snapshot<O: Oracle>(&mut self, t: u64, w: &mut World<O>) -> Result<()> {
         let m = w.cfg.m;
         let probes = w.cfg.svrg_probes;
-        let d = w.dim();
         let b = w.batch_size();
-        let mu = w.cfg.mu;
         let epoch = t / w.cfg.svrg_epoch as u64;
         self.snapshot.copy_from_slice(&self.params);
         self.vbar.fill(0.0);
         let weight = 1.0 / (m * probes) as f32;
-        // every worker estimates its share of v̄ into its own g slot in
-        // parallel; the cross-worker sum happens below in worker order
-        let snapshot = &self.snapshot;
-        w.fan_out(|i, ctx| {
-            ctx.g.fill(0.0);
-            for p in 0..probes {
-                ctx.regen_svrg_direction(epoch, i, p as u64);
-                let (lp, lb) = ctx.oracle.pair(snapshot, &ctx.dir, mu, t, i)?;
-                let s = zo_scalar(d, mu, lp, lb);
-                axpy_acc(&mut ctx.g, weight * s, &ctx.dir);
-            }
-            Ok(())
-        })?;
+        // every worker estimates its share of v̄ into its own g slot (over
+        // a remote fabric only the probe scalar batch crosses the wire —
+        // directions regenerate from the pre-shared seeds on both ends);
+        // the cross-worker sum happens below in worker order
+        w.round(Round::SvrgSurrogate { snapshot: &self.snapshot, t, epoch, probes, weight })?;
         for ctx in w.workers.iter() {
             for (v, &g) in self.vbar.iter_mut().zip(ctx.g.iter()) {
                 *v += g;
@@ -88,20 +79,10 @@ impl<O: Oracle> Algorithm<O> for ZoSvrgAve {
             self.refresh_snapshot(t, w)?;
         }
 
-        // both probes of the control variate run per-worker in parallel:
-        // same direction AND same (iter, worker)-keyed batch at both points
-        let params = &self.params;
-        let snapshot = &self.snapshot;
-        w.fan_out(|i, ctx| {
-            ctx.regen_direction(t, i);
-            let (lp, lb) = ctx.zo_probe(params, mu, t, i)?;
-            let (sp, sb) = ctx.zo_probe(snapshot, mu, t, i)?;
-            ctx.loss_plus = lp;
-            ctx.loss = lb;
-            ctx.snap_loss_plus = sp;
-            ctx.snap_loss = sb;
-            Ok(())
-        })?;
+        // both probes of the control variate run per worker: same direction
+        // AND same (iter, worker)-keyed batch at both points — 4 scalars up
+        // per worker over a remote fabric
+        w.round(Round::ZoPair { params: &self.params, snapshot: &self.snapshot, t })?;
         let mut loss_sum = 0.0f64;
         {
             let World { workers, gsum, compute, .. } = w;

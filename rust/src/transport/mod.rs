@@ -1,0 +1,417 @@
+//! The pluggable communication fabric: how coordinator and workers
+//! actually exchange the paper's payloads.
+//!
+//! Before this module existed the repro "communicated" through in-process
+//! memory and [`crate::comm::CommStats`] counted idealized floats. Now
+//! every oracle round of every optimizer crosses a [`Transport`]:
+//!
+//! * [`Loopback`] — the default: computation still fans out on the
+//!   [`crate::pool::WorkerPool`] (bit-identical to the old path), but every
+//!   round is accounted as the `HOSGDW1` frames ([`wire`]) it would put on
+//!   a socket — model broadcasts down, scalar batches / gradient vectors /
+//!   quantized payloads up. It also hosts deterministic **fault
+//!   injection** ([`crate::config::FaultPlan`]): seeded per-`(t, rank)`
+//!   drop-with-retry and per-worker straggler latency, so failure
+//!   scenarios run in CI with reproducible counters and unchanged
+//!   numerics.
+//! * [`tcp::TcpTransport`] — real distribution: length-prefixed frames
+//!   over `std::net::TcpStream` to `hosgd worker --listen ADDR` daemons,
+//!   each hosting one or more logical worker ranks. Because directions,
+//!   minibatches and quantization randomness all re-derive from the
+//!   pre-shared seeds, a TCP run produces canonical traces **byte
+//!   identical** to the in-process run — including the measured wire
+//!   counters, which both fabrics account frame-for-frame.
+//!
+//! The per-worker math lives in the `perform_*` / `absorb_*` helpers here
+//! — one copy shared by the `Loopback` jobs, the remote daemon and the TCP
+//! coordinator, which is what guarantees fabric-independence of the
+//! trajectory down to the bit.
+
+pub mod tcp;
+pub mod wire;
+
+use anyhow::{bail, Result};
+
+use crate::comm::qsgd::seeded_quantize;
+use crate::comm::CommSim;
+use crate::config::FaultPlan;
+use crate::optim::{
+    axpy_acc, axpy_update, scatter_workers, zo_scalar, AlgoConfig, Oracle, WorkerCtx,
+};
+use crate::pool::WorkerPool;
+use crate::rng::hash_u64s;
+
+pub use tcp::{serve, TcpTransport, WorkerDaemonOpts};
+pub use wire::{Frame, Slot, StepOp};
+
+/// One collective oracle round — what an optimizer iteration asks the
+/// fabric to execute across all `m` workers. Results land in the
+/// [`WorkerCtx`] slots; the caller reduces them in fixed worker order.
+pub enum Round<'a> {
+    /// FO minibatch gradients at `params` → `ctx.g`, `ctx.loss`
+    Grad { params: &'a [f32], t: u64 },
+    /// two-point ZO probes along the pre-shared `(t, i)` directions →
+    /// `ctx.dir`, `ctx.loss_plus`, `ctx.loss`
+    Zo { params: &'a [f32], t: u64 },
+    /// ZO-SVRG inner step: probes at `params` AND `snapshot`, sharing the
+    /// direction and the `(t, i)` minibatch → the four loss slots
+    ZoPair { params: &'a [f32], snapshot: &'a [f32], t: u64 },
+    /// ZO-SVRG epoch surrogate: `probes` pair-probes at `snapshot`,
+    /// accumulated into `ctx.g` with `weight`
+    SvrgSurrogate { snapshot: &'a [f32], t: u64, epoch: u64, probes: usize, weight: f32 },
+    /// RI-SGD: gradient at `locals[i]` + in-place local update → `ctx.loss`
+    LocalStep { locals: &'a mut [Vec<f32>], t: u64, alpha: f32 },
+    /// QSGD: FO gradient quantized worker-side with the seeded rounding
+    /// stream → `ctx.quant`, `ctx.loss`
+    QsgdGrad { params: &'a [f32], t: u64, s: u32 },
+}
+
+impl Round<'_> {
+    /// The iteration this round belongs to (part of the fault-injection
+    /// nonce, so retry patterns survive checkpoint/resume).
+    fn t(&self) -> u64 {
+        match *self {
+            Round::Grad { t, .. }
+            | Round::Zo { t, .. }
+            | Round::ZoPair { t, .. }
+            | Round::SvrgSurrogate { t, .. }
+            | Round::LocalStep { t, .. }
+            | Round::QsgdGrad { t, .. } => t,
+        }
+    }
+
+    /// Sub-round discriminator: ZO-SVRG runs two rounds at an epoch-start
+    /// iteration (surrogate then inner), which must draw distinct drop
+    /// decisions.
+    fn phase(&self) -> u64 {
+        match self {
+            Round::SvrgSurrogate { .. } => 0,
+            _ => 1,
+        }
+    }
+}
+
+/// A coordinator↔worker message fabric. Implementations must (a) leave
+/// results in the [`WorkerCtx`] slots exactly as the in-process fan-out
+/// would, and (b) account every frame a real deployment would move in
+/// [`CommSim::wire_up`] / [`CommSim::wire_down`] — identically across
+/// fabrics, so canonical traces do not depend on where workers run.
+pub trait Transport<O: Oracle> {
+    /// `"loopback"` or `"tcp"` — surfaced by the CLI banner.
+    fn label(&self) -> &'static str;
+
+    /// Execute one round across all `m` worker contexts.
+    fn round(
+        &mut self,
+        workers: &mut [WorkerCtx<O>],
+        pool: &WorkerPool,
+        comm: &mut CommSim,
+        cfg: &AlgoConfig,
+        req: Round<'_>,
+    ) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-worker math (one copy for Loopback jobs, the TCP daemon and
+// the TCP coordinator's absorb path)
+// ---------------------------------------------------------------------------
+
+/// FO gradient at `params` into `ctx.g`; returns the minibatch loss.
+pub(crate) fn perform_grad<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    params: &[f32],
+    t: u64,
+    rank: u64,
+) -> Result<f32> {
+    ctx.oracle.grad(params, t, rank, &mut ctx.g)
+}
+
+/// ZO probe along the regenerated `(t, rank)` direction; returns
+/// `(loss_plus, loss)`.
+pub(crate) fn perform_zo<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    params: &[f32],
+    mu: f32,
+    t: u64,
+    rank: u64,
+) -> Result<(f32, f32)> {
+    ctx.regen_direction(t, rank);
+    ctx.zo_probe(params, mu, t, rank)
+}
+
+/// ZO-SVRG inner probes at the current point and the snapshot (same
+/// direction, same minibatch); returns `(lp, lb, sp, sb)`.
+pub(crate) fn perform_zo_pair<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    params: &[f32],
+    snapshot: &[f32],
+    mu: f32,
+    t: u64,
+    rank: u64,
+) -> Result<(f32, f32, f32, f32)> {
+    ctx.regen_direction(t, rank);
+    let (lp, lb) = ctx.zo_probe(params, mu, t, rank)?;
+    let (sp, sb) = ctx.zo_probe(snapshot, mu, t, rank)?;
+    Ok((lp, lb, sp, sb))
+}
+
+/// The epoch-surrogate probes: evaluate `probes` two-point pairs at the
+/// snapshot. Returns the raw loss pairs — the scalar batch a remote worker
+/// transmits.
+pub(crate) fn perform_surrogate<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    snapshot: &[f32],
+    mu: f32,
+    t: u64,
+    rank: u64,
+    epoch: u64,
+    probes: usize,
+) -> Result<Vec<(f32, f32)>> {
+    let mut pairs = Vec::with_capacity(probes);
+    for p in 0..probes {
+        ctx.regen_svrg_direction(epoch, rank, p as u64);
+        let (lp, lb) = ctx.oracle.pair(snapshot, &ctx.dir, mu, t, rank)?;
+        pairs.push((lp, lb));
+    }
+    Ok(pairs)
+}
+
+/// Rebuild the surrogate contribution `ctx.g = Σ_p weight·s_p·v_p` from the
+/// probe loss pairs — the same regenerate-and-accumulate sequence whether
+/// the pairs were computed in-process or received over the wire.
+pub(crate) fn absorb_surrogate<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    rank: u64,
+    epoch: u64,
+    weight: f32,
+    mu: f32,
+    d: usize,
+    pairs: &[(f32, f32)],
+) {
+    ctx.g.fill(0.0);
+    for (p, &(lp, lb)) in pairs.iter().enumerate() {
+        ctx.regen_svrg_direction(epoch, rank, p as u64);
+        let s = zo_scalar(d, mu, lp, lb);
+        let w = weight * s;
+        let (g, dir) = (&mut ctx.g, &ctx.dir);
+        axpy_acc(g, w, dir);
+    }
+}
+
+/// RI-SGD: gradient at the worker's local model and in-place local update;
+/// returns the minibatch loss.
+pub(crate) fn perform_local_step<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    local: &mut [f32],
+    t: u64,
+    rank: u64,
+    alpha: f32,
+) -> Result<f32> {
+    let loss = ctx.oracle.grad(local, t, rank, &mut ctx.g)?;
+    axpy_update(local, alpha, &ctx.g);
+    Ok(loss)
+}
+
+/// QSGD: FO gradient + worker-side quantization with the run's seeded
+/// per-`(t, rank)` rounding stream into `ctx.quant`; returns the loss.
+pub(crate) fn perform_qsgd<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    params: &[f32],
+    t: u64,
+    rank: u64,
+    s: u32,
+    base_seed: u64,
+) -> Result<f32> {
+    let loss = ctx.oracle.grad(params, t, rank, &mut ctx.g)?;
+    ctx.quant = Some(seeded_quantize(base_seed, t, rank, &ctx.g, s));
+    Ok(loss)
+}
+
+// ---------------------------------------------------------------------------
+// Loopback: in-process execution, wire-accurate accounting, fault injection
+// ---------------------------------------------------------------------------
+
+/// Domain tag of the fault-injection drop stream.
+const DOM_FAULT: u64 = 0xFA_17;
+
+/// Give up after this many consecutive dropped round-trips for one rank.
+const MAX_ATTEMPTS: u64 = 64;
+
+/// The in-process fabric (the default): workers run on the pool exactly as
+/// before, and every round is accounted as the `HOSGDW1` frames it would
+/// put on a socket. Fault injection (deterministic drop-with-retry and
+/// per-worker straggler latency) lives here so CI can run failure
+/// scenarios without real networks; see [`FaultPlan`].
+#[derive(Debug, Default)]
+pub struct Loopback {
+    fault: FaultPlan,
+}
+
+impl Loopback {
+    /// A loopback fabric with the given fault plan (use
+    /// `FaultPlan::default()` for a clean network).
+    pub fn new(fault: FaultPlan) -> Self {
+        Self { fault }
+    }
+
+    /// Deterministic attempt count for rank `r`'s round-trip at `(t,
+    /// phase)`: 1 means delivered first try. A dropped attempt re-sends
+    /// the full round-trip (work orders down, response up) — the worker
+    /// recomputes the identical result, so only the accounting changes.
+    fn attempts(&self, t: u64, phase: u64, rank: u64) -> Result<u64> {
+        if self.fault.drop_prob <= 0.0 {
+            return Ok(1);
+        }
+        let mut attempt = 1u64;
+        loop {
+            let h = hash_u64s(&[self.fault.seed, DOM_FAULT, t, phase, rank, attempt]);
+            let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if u >= self.fault.drop_prob {
+                return Ok(attempt);
+            }
+            attempt += 1;
+            if attempt > MAX_ATTEMPTS {
+                bail!(
+                    "fault injection dropped worker {rank}'s round at iteration {t} \
+                     {MAX_ATTEMPTS} consecutive times (drop_prob = {})",
+                    self.fault.drop_prob
+                );
+            }
+        }
+    }
+
+    /// Injected per-attempt latency of rank `r` (seconds).
+    fn latency(&self, rank: usize) -> f64 {
+        if self.fault.latency_s.is_empty() {
+            0.0
+        } else {
+            self.fault.latency_s[rank % self.fault.latency_s.len()]
+        }
+    }
+
+    /// Account one finished round: per rank, `down` frame sizes and an
+    /// `up_of(rank)` response size, multiplied by the rank's deterministic
+    /// attempt count; the slowest rank's total latency joins the modelled
+    /// critical path.
+    fn account(
+        &self,
+        comm: &mut CommSim,
+        m: usize,
+        t: u64,
+        phase: u64,
+        down: &[u64],
+        up_of: impl Fn(usize) -> u64,
+    ) -> Result<()> {
+        let mut max_lat = 0.0f64;
+        for r in 0..m {
+            let attempts = self.attempts(t, phase, r as u64)?;
+            let up = up_of(r);
+            for _ in 0..attempts {
+                for &b in down {
+                    comm.wire_down(b);
+                }
+                comm.wire_up(up);
+            }
+            for _ in 1..attempts {
+                comm.wire_retry();
+            }
+            let lat = self.latency(r) * attempts as f64;
+            if lat > max_lat {
+                max_lat = lat;
+            }
+        }
+        if max_lat > 0.0 {
+            comm.add_latency(max_lat);
+        }
+        Ok(())
+    }
+}
+
+impl<O: Oracle> Transport<O> for Loopback {
+    fn label(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn round(
+        &mut self,
+        workers: &mut [WorkerCtx<O>],
+        pool: &WorkerPool,
+        comm: &mut CommSim,
+        cfg: &AlgoConfig,
+        req: Round<'_>,
+    ) -> Result<()> {
+        let m = workers.len();
+        let d = workers.first().map_or(0, |c| c.g.len());
+        let phase = req.phase();
+        let mu = cfg.mu;
+        match req {
+            Round::Grad { params, t } => {
+                scatter_workers(pool, workers, |i, ctx| {
+                    ctx.loss = perform_grad(ctx, params, t, i)?;
+                    Ok(())
+                })?;
+                let down = [wire::broadcast_len(d), wire::step_len(StepOp::Grad)];
+                self.account(comm, m, t, phase, &down, |_| wire::vector_len(d))?;
+            }
+            Round::Zo { params, t } => {
+                scatter_workers(pool, workers, |i, ctx| {
+                    let (lp, lb) = perform_zo(ctx, params, mu, t, i)?;
+                    ctx.loss_plus = lp;
+                    ctx.loss = lb;
+                    Ok(())
+                })?;
+                let down = [wire::broadcast_len(d), wire::step_len(StepOp::Zo)];
+                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2))?;
+            }
+            Round::ZoPair { params, snapshot, t } => {
+                scatter_workers(pool, workers, |i, ctx| {
+                    let (lp, lb, sp, sb) = perform_zo_pair(ctx, params, snapshot, mu, t, i)?;
+                    ctx.loss_plus = lp;
+                    ctx.loss = lb;
+                    ctx.snap_loss_plus = sp;
+                    ctx.snap_loss = sb;
+                    Ok(())
+                })?;
+                // the inner step needs both points on the worker: x_t and x̃
+                let down = [
+                    wire::broadcast_len(d),
+                    wire::broadcast_len(d),
+                    wire::step_len(StepOp::ZoPair),
+                ];
+                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(4))?;
+            }
+            Round::SvrgSurrogate { snapshot, t, epoch, probes, weight } => {
+                scatter_workers(pool, workers, |i, ctx| {
+                    let pairs = perform_surrogate(ctx, snapshot, mu, t, i, epoch, probes)?;
+                    absorb_surrogate(ctx, i, epoch, weight, mu, d, &pairs);
+                    Ok(())
+                })?;
+                let op = StepOp::Surrogate { epoch, probes: probes as u32 };
+                let down = [wire::broadcast_len(d), wire::step_len(op)];
+                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2 * probes))?;
+            }
+            Round::LocalStep { locals, t, alpha } => {
+                crate::optim::scatter_workers_with(pool, workers, locals, |i, ctx, local| {
+                    ctx.loss = perform_local_step(ctx, local, t, i, alpha)?;
+                    Ok(())
+                })?;
+                let down = [wire::broadcast_len(d), wire::step_len(StepOp::LocalStep { alpha })];
+                self.account(comm, m, t, phase, &down, |_| wire::vector_len(d))?;
+            }
+            Round::QsgdGrad { params, t, s } => {
+                let seed = cfg.seed;
+                scatter_workers(pool, workers, |i, ctx| {
+                    ctx.loss = perform_qsgd(ctx, params, t, i, s, seed)?;
+                    Ok(())
+                })?;
+                let down = [wire::broadcast_len(d), wire::step_len(StepOp::QsgdGrad { s })];
+                let done: &[WorkerCtx<O>] = workers;
+                self.account(comm, m, t, phase, &down, |r| {
+                    let q = done[r].quant.as_ref().expect("qsgd round fills ctx.quant");
+                    wire::quant_len(crate::comm::qsgd::levels_bytes(&q.levels))
+                })?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,622 @@
+//! TCP fabric: the coordinator side ([`TcpTransport`]) and the
+//! `hosgd worker --listen ADDR` daemon ([`serve`]).
+//!
+//! Topology: one coordinator, `n` daemon processes, `m ≥ n` logical worker
+//! ranks assigned round-robin (`rank % n`). Every rank gets its own frames
+//! — a daemon hosting two ranks receives two model broadcasts — so the
+//! measured wire accounting is a function of the *run*, not of how ranks
+//! happen to be packed onto processes; this is what keeps canonical traces
+//! byte-identical between a 2-daemon run, an m-daemon run and the
+//! in-process `Loopback` run.
+//!
+//! The daemon is an **oracle server**: it receives the full run config
+//! once (`AssignShard`, as the coordinator's `TrainConfig` JSON), rebuilds
+//! the identical dataset/sharding/model from the pre-shared seed, and then
+//! answers per-iteration work orders. It holds no optimizer state — params
+//! arrive by broadcast every round — so coordinator restarts, resumes and
+//! mid-run re-connections need no worker-side recovery protocol.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend;
+use crate::comm::qsgd::{decode_levels, encode_levels, Quantized};
+use crate::comm::CommSim;
+use crate::config::TrainConfig;
+use crate::optim::{
+    scatter_workers, scatter_workers_with, AlgoConfig, Oracle, TrainOracle, WorkerCtx,
+};
+use crate::pool::WorkerPool;
+use crate::rng::SeedRegistry;
+use crate::util::json::Json;
+
+use super::wire::{read_frame, write_broadcast, write_frame, Frame, Slot, StepOp};
+use super::{
+    absorb_surrogate, perform_grad, perform_local_step, perform_qsgd, perform_surrogate,
+    perform_zo, perform_zo_pair, Round, Transport,
+};
+
+/// Coordinator-side per-socket inactivity timeout: a hung daemon turns
+/// into an error instead of a deadlocked run (generous — a round on the
+/// largest profile is far below this). The daemon deliberately has NO
+/// read timeout: inter-round gaps are caller-controlled (the steppable
+/// Session API may pause arbitrarily long between `step()` calls), and a
+/// coordinator that dies closes the socket, which the daemon sees as EOF.
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+struct Conn {
+    w: BufWriter<TcpStream>,
+    r: BufReader<TcpStream>,
+    addr: String,
+}
+
+impl Conn {
+    fn read(&mut self) -> Result<(u64, Frame)> {
+        match read_frame(&mut self.r)
+            .with_context(|| format!("reading from worker {}", self.addr))?
+        {
+            Some(got) => Ok(got),
+            None => bail!("worker {} closed the connection mid-run", self.addr),
+        }
+    }
+}
+
+/// The coordinator end of the fabric: `m` logical ranks multiplexed over
+/// the daemon connections given to [`TcpTransport::connect`].
+pub struct TcpTransport {
+    conns: Vec<Conn>,
+    /// rank -> connection index (round-robin)
+    assignment: Vec<usize>,
+}
+
+impl TcpTransport {
+    /// Connect to the worker daemons, run the `HOSGDW1` handshake and ship
+    /// the run config. `cfg.workers` ranks are spread round-robin over
+    /// `addrs`; every daemon verifies the protocol version and echoes its
+    /// model dimension, which must equal the coordinator's `dim`.
+    pub fn connect(addrs: &[String], cfg: &TrainConfig, dim: usize) -> Result<Self> {
+        if addrs.is_empty() {
+            bail!("TcpTransport needs at least one worker address");
+        }
+        let m = cfg.workers;
+        if m < addrs.len() {
+            bail!(
+                "{} worker daemons for only m = {m} logical workers — drop \
+                 --workers-at entries or raise --workers",
+                addrs.len()
+            );
+        }
+        // what the daemon rebuilds from: the run config minus the transport
+        // section (a daemon must never recursively dial out)
+        let mut shipped = cfg.clone();
+        shipped.transport = Default::default();
+        let cfg_json = shipped.to_json().compact();
+        // JSON carries numbers as f64, so a u64 knob above 2^53 (seed,
+        // iters, corpus sizes) would silently truncate and the daemon
+        // would regenerate a DIFFERENT run. Reject at the source by
+        // parsing the shipped config back and comparing the
+        // precision-sensitive knobs against the coordinator's values.
+        let echo = TrainConfig::from_json(&Json::parse(&cfg_json)?)?;
+        if echo.seed != shipped.seed
+            || echo.iters != shipped.iters
+            || echo.train_size != shipped.train_size
+            || echo.test_size != shipped.test_size
+            || echo.workers != shipped.workers
+            || echo.tau != shipped.tau
+        {
+            bail!(
+                "run config does not survive JSON transport to the worker daemons \
+                 (a u64 knob above 2^53 — e.g. the seed — loses precision); \
+                 pick values below 2^53 for distributed runs"
+            );
+        }
+
+        let assignment: Vec<usize> = (0..m).map(|r| r % addrs.len()).collect();
+        let mut conns = Vec::with_capacity(addrs.len());
+        for (ci, addr) in addrs.iter().enumerate() {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to worker daemon {addr}"))?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            stream.set_write_timeout(Some(IO_TIMEOUT))?;
+            let mut conn = Conn {
+                r: BufReader::new(stream.try_clone()?),
+                w: BufWriter::new(stream),
+                addr: addr.clone(),
+            };
+            write_frame(&mut conn.w, &Frame::Hello)?;
+            conn.w.flush()?;
+            match conn.read()?.1 {
+                Frame::HelloAck => {}
+                other => bail!("worker {addr}: expected HelloAck, got {other:?}"),
+            }
+            let ranks: Vec<u32> =
+                (0..m).filter(|r| r % addrs.len() == ci).map(|r| r as u32).collect();
+            let n_ranks = ranks.len();
+            write_frame(
+                &mut conn.w,
+                &Frame::AssignShard { m: m as u32, ranks, cfg_json: cfg_json.clone() },
+            )?;
+            conn.w.flush()?;
+            match conn.read()?.1 {
+                Frame::ShardReady { dim: got, .. } => {
+                    if got as usize != dim {
+                        bail!(
+                            "worker {addr} built model dimension {got}, coordinator has {dim} \
+                             (artifact/profile mismatch between hosts?)"
+                        );
+                    }
+                }
+                Frame::Error { message, .. } => {
+                    bail!("worker {addr} rejected the shard assignment: {message}")
+                }
+                other => bail!("worker {addr}: expected ShardReady, got {other:?}"),
+            }
+            eprintln!("# transport: worker {addr} ready ({n_ranks} rank(s))");
+            conns.push(conn);
+        }
+        Ok(Self { conns, assignment })
+    }
+
+    /// Append rank `r`'s frames for this round (broadcast(s) + step order)
+    /// to its daemon's outgoing buffer, accounting each frame.
+    fn encode_rank(
+        buf: &mut Vec<u8>,
+        comm: &mut CommSim,
+        rank: usize,
+        req: &Round<'_>,
+    ) -> Result<()> {
+        let t = req.t();
+        let down = |comm: &mut CommSim, n: u64| comm.wire_down(n);
+        match req {
+            Round::Grad { params, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
+                let f = Frame::Step { rank: rank as u32, t, op: StepOp::Grad };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::Zo { params, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
+                let f = Frame::Step { rank: rank as u32, t, op: StepOp::Zo };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::ZoPair { params, snapshot, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
+                down(comm, write_broadcast(buf, rank as u32, Slot::Snapshot, snapshot)?);
+                let f = Frame::Step { rank: rank as u32, t, op: StepOp::ZoPair };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::SvrgSurrogate { snapshot, epoch, probes, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Snapshot, snapshot)?);
+                let op = StepOp::Surrogate { epoch: *epoch, probes: *probes as u32 };
+                let f = Frame::Step { rank: rank as u32, t, op };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::LocalStep { locals, alpha, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, &locals[rank])?);
+                let f =
+                    Frame::Step { rank: rank as u32, t, op: StepOp::LocalStep { alpha: *alpha } };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::QsgdGrad { params, s, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
+                let f = Frame::Step { rank: rank as u32, t, op: StepOp::QsgdGrad { s: *s } };
+                down(comm, write_frame(buf, &f)?);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<O: Oracle> Transport<O> for TcpTransport {
+    fn label(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn round(
+        &mut self,
+        workers: &mut [WorkerCtx<O>],
+        pool: &WorkerPool,
+        comm: &mut CommSim,
+        cfg: &AlgoConfig,
+        req: Round<'_>,
+    ) -> Result<()> {
+        let m = workers.len();
+        let d = workers.first().map_or(0, |c| c.g.len());
+        let t = req.t();
+        let mu = cfg.mu;
+
+        // 1. encode every rank's work order into its daemon's buffer
+        //    (accounting as we go)
+        let n_conns = self.conns.len();
+        let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); n_conns];
+        for rank in 0..m {
+            Self::encode_rank(&mut bufs[self.assignment[rank]], comm, rank, &req)?;
+        }
+
+        // 2. ship the buffers from scoped writer threads while this thread
+        //    drains responses in global rank order. Concurrent write/read
+        //    is what makes the exchange deadlock-free at any frame size:
+        //    neither side ever needs the OS socket buffers to hold a whole
+        //    round. (Each daemon answers its ranks in the order they were
+        //    sent, so per-connection FIFO order and global rank order
+        //    agree.)
+        let mut writers = Vec::with_capacity(n_conns);
+        let mut readers = Vec::with_capacity(n_conns);
+        for c in self.conns.iter_mut() {
+            writers.push(&mut c.w);
+            readers.push((&mut c.r, c.addr.as_str()));
+        }
+        let assignment = &self.assignment;
+        let frames: Vec<(u64, Frame)> = std::thread::scope(|scope| -> Result<_> {
+            let joins: Vec<_> = writers
+                .into_iter()
+                .zip(&bufs)
+                .map(|(w, buf)| {
+                    scope.spawn(move || -> std::io::Result<()> {
+                        w.write_all(buf)?;
+                        w.flush()
+                    })
+                })
+                .collect();
+            let mut frames = Vec::with_capacity(m);
+            for &ci in assignment.iter() {
+                let (r, addr) = &mut readers[ci];
+                match read_frame(r).with_context(|| format!("reading from worker {addr}"))? {
+                    Some(got) => frames.push(got),
+                    None => bail!("worker {addr} closed the connection mid-run"),
+                }
+            }
+            for j in joins {
+                j.join().map_err(|_| anyhow::anyhow!("transport writer thread panicked"))??;
+            }
+            Ok(frames)
+        })?;
+
+        // 3. absorb responses into the worker slots
+        let mut surrogate_pairs: Vec<Vec<(f32, f32)>> = Vec::new();
+        for ((rank, ctx), (nbytes, frame)) in workers.iter_mut().enumerate().zip(frames) {
+            let addr = self.conns[self.assignment[rank]].addr.as_str();
+            comm.wire_up(nbytes);
+            let check = |r: u32, ft: u64| -> Result<()> {
+                if r as usize != rank || ft != t {
+                    bail!(
+                        "worker {addr} answered rank {r} iteration {ft}, expected rank {rank} \
+                         iteration {t} (protocol desync)"
+                    );
+                }
+                Ok(())
+            };
+            match (&req, frame) {
+                (_, Frame::Error { rank: r, message }) => {
+                    bail!("worker {addr} rank {r} failed: {message}")
+                }
+                (Round::Grad { .. }, Frame::Vector { rank: r, t: ft, loss, data }) => {
+                    check(r, ft)?;
+                    if data.len() != d {
+                        bail!("gradient response has {} elements, expected {d}", data.len());
+                    }
+                    ctx.loss = loss;
+                    ctx.g.copy_from_slice(&data);
+                }
+                (Round::Zo { .. }, Frame::Scalars { rank: r, t: ft, values }) => {
+                    check(r, ft)?;
+                    let [lp, lb]: [f32; 2] = values
+                        .as_slice()
+                        .try_into()
+                        .map_err(|_| anyhow::anyhow!("ZO round wants 2 scalars"))?;
+                    ctx.loss_plus = lp;
+                    ctx.loss = lb;
+                }
+                (Round::ZoPair { .. }, Frame::Scalars { rank: r, t: ft, values }) => {
+                    check(r, ft)?;
+                    let [lp, lb, sp, sb]: [f32; 4] = values
+                        .as_slice()
+                        .try_into()
+                        .map_err(|_| anyhow::anyhow!("ZO-pair round wants 4 scalars"))?;
+                    ctx.loss_plus = lp;
+                    ctx.loss = lb;
+                    ctx.snap_loss_plus = sp;
+                    ctx.snap_loss = sb;
+                }
+                (
+                    Round::SvrgSurrogate { probes, .. },
+                    Frame::Scalars { rank: r, t: ft, values },
+                ) => {
+                    check(r, ft)?;
+                    if values.len() != 2 * probes {
+                        bail!("surrogate wants {} scalars, got {}", 2 * probes, values.len());
+                    }
+                    surrogate_pairs.push(values.chunks_exact(2).map(|c| (c[0], c[1])).collect());
+                }
+                (Round::LocalStep { .. }, Frame::Vector { rank: r, t: ft, loss, data }) => {
+                    check(r, ft)?;
+                    if data.len() != d {
+                        bail!("local-step response has {} elements, expected {d}", data.len());
+                    }
+                    ctx.loss = loss;
+                    // stashed into ctx.g; copied into locals[rank] below
+                    // (the Round holds the exclusive borrow of locals)
+                    ctx.g.copy_from_slice(&data);
+                }
+                (
+                    Round::QsgdGrad { s, .. },
+                    Frame::Quant { rank: r, t: ft, loss, norm, s: got_s, n_levels, bits },
+                ) => {
+                    check(r, ft)?;
+                    if got_s != *s {
+                        bail!("quantized response used s = {got_s}, expected {s}");
+                    }
+                    if n_levels as usize != d {
+                        bail!("quantized response has {n_levels} levels, expected {d}");
+                    }
+                    let levels = decode_levels(&bits, d)?;
+                    ctx.loss = loss;
+                    ctx.quant = Some(Quantized { norm, levels, s: got_s });
+                }
+                (_, other) => {
+                    bail!("worker {addr} sent unexpected frame {other:?}")
+                }
+            }
+        }
+
+        // 4. coordinator-side completion: regenerate the pre-shared
+        //    directions (it is a rank too) and rebuild derived buffers —
+        //    the identical math the Loopback workers ran in-process.
+        match req {
+            Round::Zo { t, .. } | Round::ZoPair { t, .. } => {
+                scatter_workers(pool, workers, |i, ctx| {
+                    ctx.regen_direction(t, i);
+                    Ok(())
+                })?;
+            }
+            Round::SvrgSurrogate { epoch, weight, .. } => {
+                scatter_workers_with(pool, workers, &mut surrogate_pairs, |i, ctx, pairs| {
+                    absorb_surrogate(ctx, i, epoch, weight, mu, d, pairs);
+                    Ok(())
+                })?;
+            }
+            Round::LocalStep { locals, .. } => {
+                for (rank, ctx) in workers.iter().enumerate() {
+                    locals[rank].copy_from_slice(&ctx.g);
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for conn in &mut self.conns {
+            let _ = write_frame(&mut conn.w, &Frame::Shutdown);
+            let _ = conn.w.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker daemon
+// ---------------------------------------------------------------------------
+
+/// Daemon-local knobs (its own CLI flags — everything else arrives in the
+/// `AssignShard` config).
+#[derive(Debug, Clone)]
+pub struct WorkerDaemonOpts {
+    /// artifact directory for the pjrt backend (daemon-local path)
+    pub artifacts: PathBuf,
+    /// kernel worker-pool lanes (0 = available parallelism)
+    pub threads: usize,
+    /// exit after the first coordinator session instead of re-accepting
+    pub once: bool,
+}
+
+/// Run the worker daemon accept loop on an already-bound listener.
+/// Sessions are served sequentially; with `opts.once` the daemon exits
+/// after the first one (what the CI smoke job and tests use). Connections
+/// that close before saying `Hello` (port probes, health checks) are
+/// ignored and never count as the "once" session.
+pub fn serve(listener: TcpListener, opts: &WorkerDaemonOpts) -> Result<()> {
+    loop {
+        let (stream, peer) = listener.accept().context("accepting coordinator connection")?;
+        match handle_session(stream, opts) {
+            Ok(true) => eprintln!("# worker: session from {peer} complete"),
+            Ok(false) => {
+                eprintln!("# worker: probe connection from {peer} (ignored)");
+                continue;
+            }
+            Err(e) => eprintln!("# worker: session from {peer} failed: {e:#}"),
+        }
+        if opts.once {
+            return Ok(());
+        }
+    }
+}
+
+/// One hosted rank's state: its oracle shard context and the broadcast
+/// target buffers.
+struct RankState<'a> {
+    ctx: WorkerCtx<TrainOracle<'a>>,
+    params: Vec<f32>,
+    snapshot: Vec<f32>,
+}
+
+/// Serve one coordinator connection. `Ok(false)` means the peer went away
+/// before the handshake (a port probe) — no session happened.
+fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<bool> {
+    stream.set_nodelay(true)?;
+    // no read timeout — see IO_TIMEOUT: the coordinator may legitimately
+    // idle between rounds, and its death surfaces as EOF anyway
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut r = BufReader::new(stream.try_clone()?);
+    let mut w = BufWriter::new(stream);
+
+    match read_frame(&mut r)? {
+        Some((_, Frame::Hello)) => {}
+        Some((_, other)) => bail!("expected Hello, got {other:?}"),
+        None => return Ok(false),
+    }
+    write_frame(&mut w, &Frame::HelloAck)?;
+    w.flush()?;
+
+    let (m, ranks, cfg_json) = match read_frame(&mut r)? {
+        Some((_, Frame::AssignShard { m, ranks, cfg_json })) => (m, ranks, cfg_json),
+        Some((_, other)) => bail!("expected AssignShard, got {other:?}"),
+        None => bail!("coordinator closed before assigning shards"),
+    };
+
+    // rebuild the run identically from the shipped config + pre-shared seed
+    let build = || -> Result<(TrainConfig, Box<dyn backend::Backend>)> {
+        let mut cfg = TrainConfig::from_json(&Json::parse(&cfg_json)?)?;
+        cfg.transport = Default::default(); // a daemon never dials out
+        cfg.validate()?;
+        if cfg.workers != m as usize {
+            bail!("AssignShard m = {m} disagrees with config workers = {}", cfg.workers);
+        }
+        let be = backend::load_with_threads(cfg.backend, &opts.artifacts, opts.threads)?;
+        Ok((cfg, be))
+    };
+    let (cfg, be) = match build() {
+        Ok(v) => v,
+        Err(e) => {
+            // tell the coordinator why instead of just hanging up
+            write_frame(&mut w, &Frame::Error { rank: 0, message: format!("{e:#}") })?;
+            w.flush()?;
+            return Err(e);
+        }
+    };
+    let model = be.model(&cfg.dataset)?;
+    let data = crate::coordinator::make_data(&cfg)?;
+    let oracle = TrainOracle::new(
+        model.as_ref(),
+        &data.train,
+        cfg.workers,
+        crate::coordinator::effective_redundancy(&cfg),
+        cfg.seed,
+    );
+    let acfg = AlgoConfig::from_train(&cfg, model.dim());
+    let reg = SeedRegistry::new(cfg.seed);
+    let d = model.dim();
+    let mut states: Vec<RankState> = ranks
+        .iter()
+        .map(|_| RankState {
+            ctx: WorkerCtx::new(oracle.shard(), reg),
+            params: vec![0.0; d],
+            snapshot: vec![0.0; d],
+        })
+        .collect();
+    let index: HashMap<u32, usize> = ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+    write_frame(&mut w, &Frame::ShardReady { dim: d as u64, batch: model.batch() as u64 })?;
+    w.flush()?;
+    eprintln!("# worker: serving rank(s) {ranks:?} of m = {m} on {:?} (d = {d})", cfg.dataset);
+
+    loop {
+        let frame = match read_frame(&mut r)? {
+            Some((_, f)) => f,
+            None => return Ok(true), // coordinator went away after its run
+        };
+        match frame {
+            Frame::Broadcast { rank, slot, data } => {
+                let st = lookup(&index, &mut states, rank)?;
+                if data.len() != d {
+                    bail!("broadcast for rank {rank} has {} floats, expected {d}", data.len());
+                }
+                match slot {
+                    Slot::Params => st.params.copy_from_slice(&data),
+                    Slot::Snapshot => st.snapshot.copy_from_slice(&data),
+                }
+            }
+            Frame::Step { rank, t, op } => {
+                let st = lookup(&index, &mut states, rank)?;
+                let reply = execute_step(st, rank, t, op, &acfg, cfg.seed);
+                let frame = match reply {
+                    Ok(f) => f,
+                    Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                };
+                write_frame(&mut w, &frame)?;
+                w.flush()?;
+            }
+            Frame::Shutdown => return Ok(true),
+            other => bail!("unexpected frame {other:?} mid-session"),
+        }
+    }
+}
+
+fn lookup<'s, 'a>(
+    index: &HashMap<u32, usize>,
+    states: &'s mut [RankState<'a>],
+    rank: u32,
+) -> Result<&'s mut RankState<'a>> {
+    let &i = index
+        .get(&rank)
+        .ok_or_else(|| anyhow::anyhow!("rank {rank} is not hosted by this daemon"))?;
+    Ok(&mut states[i])
+}
+
+/// Execute one work order on a hosted rank — the same `perform_*` math the
+/// Loopback fabric runs in-process.
+fn execute_step(
+    st: &mut RankState<'_>,
+    rank: u32,
+    t: u64,
+    op: StepOp,
+    acfg: &AlgoConfig,
+    base_seed: u64,
+) -> Result<Frame> {
+    let rank64 = rank as u64;
+    let mu = acfg.mu;
+    match op {
+        StepOp::Grad => {
+            let loss = perform_grad(&mut st.ctx, &st.params, t, rank64)?;
+            Ok(Frame::Vector { rank, t, loss, data: st.ctx.g.clone() })
+        }
+        StepOp::Zo => {
+            let (lp, lb) = perform_zo(&mut st.ctx, &st.params, mu, t, rank64)?;
+            Ok(Frame::Scalars { rank, t, values: vec![lp, lb] })
+        }
+        StepOp::ZoPair => {
+            let (lp, lb, sp, sb) =
+                perform_zo_pair(&mut st.ctx, &st.params, &st.snapshot, mu, t, rank64)?;
+            Ok(Frame::Scalars { rank, t, values: vec![lp, lb, sp, sb] })
+        }
+        StepOp::Surrogate { epoch, probes } => {
+            let pairs = perform_surrogate(
+                &mut st.ctx,
+                &st.snapshot,
+                mu,
+                t,
+                rank64,
+                epoch,
+                probes as usize,
+            )?;
+            let values = pairs.iter().flat_map(|&(lp, lb)| [lp, lb]).collect();
+            Ok(Frame::Scalars { rank, t, values })
+        }
+        StepOp::LocalStep { alpha } => {
+            let loss = perform_local_step(&mut st.ctx, &mut st.params, t, rank64, alpha)?;
+            Ok(Frame::Vector { rank, t, loss, data: st.params.clone() })
+        }
+        StepOp::QsgdGrad { s } => {
+            let loss = perform_qsgd(&mut st.ctx, &st.params, t, rank64, s, base_seed)?;
+            let q = st.ctx.quant.take().expect("perform_qsgd fills ctx.quant");
+            Ok(Frame::Quant {
+                rank,
+                t,
+                loss,
+                norm: q.norm,
+                s: q.s,
+                n_levels: q.levels.len() as u64,
+                bits: encode_levels(&q.levels),
+            })
+        }
+    }
+}

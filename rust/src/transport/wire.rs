@@ -1,0 +1,581 @@
+//! The `HOSGDW1` wire protocol: versioned, length-prefixed frames for
+//! everything a coordinator and a worker daemon exchange.
+//!
+//! Layout of every frame (all integers little-endian):
+//!
+//! ```text
+//! u32 len      — bytes that follow (kind byte + payload)
+//! u8  kind     — frame discriminant
+//! ..  payload  — kind-specific, fixed deterministic layout
+//! ```
+//!
+//! The catalogue mirrors the paper's actual traffic classes:
+//!
+//! * control — [`Frame::Hello`] / [`Frame::HelloAck`] (protocol + version
+//!   check), [`Frame::AssignShard`] (run config + hosted ranks),
+//!   [`Frame::ShardReady`], [`Frame::Shutdown`], [`Frame::Error`];
+//! * coordinator→worker — [`Frame::Broadcast`] (model / SVRG-snapshot
+//!   vectors) and [`Frame::Step`] (one work order per rank per round);
+//! * worker→coordinator — [`Frame::Scalars`] (the ZO rounds: a handful of
+//!   f32s no matter how large `d` is), [`Frame::Vector`] (dense FO
+//!   gradients / RI-SGD local models) and [`Frame::Quant`] (QSGD's
+//!   Elias-γ-coded quantized gradient).
+//!
+//! Every variant has a closed-form encoded size (`*_len` below); the
+//! `Loopback` fabric accounts those sizes without materializing bytes, the
+//! TCP fabric accounts the bytes it actually writes, and the
+//! `wire_frames_have_the_advertised_length` test pins the two to each
+//! other. This is what makes `CommStats` wire accounting identical across
+//! fabrics — the acceptance condition for byte-identical traces.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol magic exchanged in [`Frame::Hello`] / [`Frame::HelloAck`].
+pub const PROTO: &[u8; 8] = b"HOSGDW1\0";
+
+/// Wire protocol version (bumped on any layout change).
+pub const VERSION: u32 = 1;
+
+/// Upper bound on a frame body — a decode guard against garbage length
+/// prefixes, far above any real payload (d ≈ 10⁵ ⇒ ~400 KB frames).
+const MAX_FRAME: u32 = 1 << 30;
+
+/// Which per-rank vector buffer a [`Frame::Broadcast`] fills.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// the current decision variable x_t (or RI-SGD's local model)
+    Params,
+    /// the ZO-SVRG epoch anchor x̃
+    Snapshot,
+}
+
+impl Slot {
+    fn tag(self) -> u8 {
+        match self {
+            Slot::Params => 0,
+            Slot::Snapshot => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        match tag {
+            0 => Ok(Slot::Params),
+            1 => Ok(Slot::Snapshot),
+            other => bail!("unknown broadcast slot {other}"),
+        }
+    }
+}
+
+/// The work order inside a [`Frame::Step`] — one oracle round kind of the
+/// seven optimizers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepOp {
+    /// FO minibatch gradient at the broadcast params
+    Grad,
+    /// two-point ZO probe along the pre-shared `(t, rank)` direction
+    Zo,
+    /// ZO probes at params AND snapshot (ZO-SVRG control variate)
+    ZoPair,
+    /// ZO-SVRG epoch surrogate: `probes` pair-probes at the snapshot
+    Surrogate { epoch: u64, probes: u32 },
+    /// RI-SGD local step: gradient at the broadcast local + local update
+    LocalStep { alpha: f32 },
+    /// FO gradient, quantized worker-side with the seeded QSGD stream
+    QsgdGrad { s: u32 },
+}
+
+impl StepOp {
+    fn tag(self) -> u8 {
+        match self {
+            StepOp::Grad => 0,
+            StepOp::Zo => 1,
+            StepOp::ZoPair => 2,
+            StepOp::Surrogate { .. } => 3,
+            StepOp::LocalStep { .. } => 4,
+            StepOp::QsgdGrad { .. } => 5,
+        }
+    }
+}
+
+/// One `HOSGDW1` frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello,
+    HelloAck,
+    /// run config (JSON, the coordinator's `TrainConfig`) + the logical
+    /// worker ranks this daemon hosts, out of `m` total
+    AssignShard { m: u32, ranks: Vec<u32>, cfg_json: String },
+    /// daemon built its oracle shards; echoes its model dimensions
+    ShardReady { dim: u64, batch: u64 },
+    Broadcast { rank: u32, slot: Slot, data: Vec<f32> },
+    Step { rank: u32, t: u64, op: StepOp },
+    Scalars { rank: u32, t: u64, values: Vec<f32> },
+    Vector { rank: u32, t: u64, loss: f32, data: Vec<f32> },
+    Quant { rank: u32, t: u64, loss: f32, norm: f32, s: u32, n_levels: u64, bits: Vec<u8> },
+    Error { rank: u32, message: String },
+    Shutdown,
+}
+
+// -- closed-form frame sizes (header included) ------------------------------
+
+/// Bytes of the frame header (length prefix + kind byte).
+pub const HEADER_LEN: u64 = 5;
+
+/// Encoded size of a [`Frame::Broadcast`] of `d` floats.
+pub fn broadcast_len(d: usize) -> u64 {
+    HEADER_LEN + 4 + 1 + 8 + 4 * d as u64
+}
+
+/// Encoded size of a [`Frame::Step`] carrying `op`.
+pub fn step_len(op: StepOp) -> u64 {
+    let args = match op {
+        StepOp::Grad | StepOp::Zo | StepOp::ZoPair => 0,
+        StepOp::Surrogate { .. } => 12,
+        StepOp::LocalStep { .. } | StepOp::QsgdGrad { .. } => 4,
+    };
+    HEADER_LEN + 4 + 8 + 1 + args
+}
+
+/// Encoded size of a [`Frame::Scalars`] of `n` values.
+pub fn scalars_len(n: usize) -> u64 {
+    HEADER_LEN + 4 + 8 + 4 + 4 * n as u64
+}
+
+/// Encoded size of a [`Frame::Vector`] of `d` floats.
+pub fn vector_len(d: usize) -> u64 {
+    HEADER_LEN + 4 + 8 + 4 + 8 + 4 * d as u64
+}
+
+/// Encoded size of a [`Frame::Quant`] whose Elias bitstream is `bits_len`
+/// bytes long.
+pub fn quant_len(bits_len: u64) -> u64 {
+    HEADER_LEN + 4 + 8 + 4 + 4 + 4 + 8 + 8 + bits_len
+}
+
+// -- encoding ---------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        put_f32(out, x);
+    }
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello => 1,
+            Frame::HelloAck => 2,
+            Frame::AssignShard { .. } => 3,
+            Frame::ShardReady { .. } => 4,
+            Frame::Broadcast { .. } => 5,
+            Frame::Step { .. } => 6,
+            Frame::Scalars { .. } => 7,
+            Frame::Vector { .. } => 8,
+            Frame::Quant { .. } => 9,
+            Frame::Error { .. } => 10,
+            Frame::Shutdown => 11,
+        }
+    }
+
+    /// Serialize into a fresh buffer (header included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = vec![0u8; 4];
+        out.push(self.kind());
+        match self {
+            Frame::Hello | Frame::HelloAck => {
+                out.extend_from_slice(PROTO);
+                put_u32(&mut out, VERSION);
+            }
+            Frame::AssignShard { m, ranks, cfg_json } => {
+                put_u32(&mut out, *m);
+                put_u32(&mut out, ranks.len() as u32);
+                for &r in ranks {
+                    put_u32(&mut out, r);
+                }
+                put_u64(&mut out, cfg_json.len() as u64);
+                out.extend_from_slice(cfg_json.as_bytes());
+            }
+            Frame::ShardReady { dim, batch } => {
+                put_u64(&mut out, *dim);
+                put_u64(&mut out, *batch);
+            }
+            Frame::Broadcast { rank, slot, data } => {
+                put_u32(&mut out, *rank);
+                out.push(slot.tag());
+                put_u64(&mut out, data.len() as u64);
+                put_f32s(&mut out, data);
+            }
+            Frame::Step { rank, t, op } => {
+                put_u32(&mut out, *rank);
+                put_u64(&mut out, *t);
+                out.push(op.tag());
+                match *op {
+                    StepOp::Grad | StepOp::Zo | StepOp::ZoPair => {}
+                    StepOp::Surrogate { epoch, probes } => {
+                        put_u64(&mut out, epoch);
+                        put_u32(&mut out, probes);
+                    }
+                    StepOp::LocalStep { alpha } => put_f32(&mut out, alpha),
+                    StepOp::QsgdGrad { s } => put_u32(&mut out, s),
+                }
+            }
+            Frame::Scalars { rank, t, values } => {
+                put_u32(&mut out, *rank);
+                put_u64(&mut out, *t);
+                put_u32(&mut out, values.len() as u32);
+                put_f32s(&mut out, values);
+            }
+            Frame::Vector { rank, t, loss, data } => {
+                put_u32(&mut out, *rank);
+                put_u64(&mut out, *t);
+                put_f32(&mut out, *loss);
+                put_u64(&mut out, data.len() as u64);
+                put_f32s(&mut out, data);
+            }
+            Frame::Quant { rank, t, loss, norm, s, n_levels, bits } => {
+                put_u32(&mut out, *rank);
+                put_u64(&mut out, *t);
+                put_f32(&mut out, *loss);
+                put_f32(&mut out, *norm);
+                put_u32(&mut out, *s);
+                put_u64(&mut out, *n_levels);
+                put_u64(&mut out, bits.len() as u64);
+                out.extend_from_slice(bits);
+            }
+            Frame::Error { rank, message } => {
+                put_u32(&mut out, *rank);
+                put_u64(&mut out, message.len() as u64);
+                out.extend_from_slice(message.as_bytes());
+            }
+            Frame::Shutdown => {}
+        }
+        let len = (out.len() - 4) as u32;
+        out[..4].copy_from_slice(&len.to_le_bytes());
+        out
+    }
+
+    /// Parse the body (`kind` byte + payload, i.e. everything after the
+    /// length prefix).
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut c = Reader { bytes: body, off: 0 };
+        let kind = c.u8()?;
+        let frame = match kind {
+            1 | 2 => {
+                let proto = c.take(8)?;
+                if proto != PROTO {
+                    bail!(
+                        "peer is not speaking HOSGDW1 (got magic {:?})",
+                        String::from_utf8_lossy(proto)
+                    );
+                }
+                let version = c.u32()?;
+                if version != VERSION {
+                    bail!("wire protocol version mismatch: peer {version}, ours {VERSION}");
+                }
+                if kind == 1 {
+                    Frame::Hello
+                } else {
+                    Frame::HelloAck
+                }
+            }
+            3 => {
+                let m = c.u32()?;
+                let n = c.u32()? as usize;
+                if n > m as usize {
+                    bail!("assign-shard lists {n} ranks for an m = {m} run");
+                }
+                let mut ranks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ranks.push(c.u32()?);
+                }
+                let cfg_json = c.string()?;
+                Frame::AssignShard { m, ranks, cfg_json }
+            }
+            4 => Frame::ShardReady { dim: c.u64()?, batch: c.u64()? },
+            5 => {
+                let rank = c.u32()?;
+                let slot = Slot::from_tag(c.u8()?)?;
+                let data = c.f32s_u64()?;
+                Frame::Broadcast { rank, slot, data }
+            }
+            6 => {
+                let rank = c.u32()?;
+                let t = c.u64()?;
+                let op = match c.u8()? {
+                    0 => StepOp::Grad,
+                    1 => StepOp::Zo,
+                    2 => StepOp::ZoPair,
+                    3 => StepOp::Surrogate { epoch: c.u64()?, probes: c.u32()? },
+                    4 => StepOp::LocalStep { alpha: c.f32()? },
+                    5 => StepOp::QsgdGrad { s: c.u32()? },
+                    other => bail!("unknown step op {other}"),
+                };
+                Frame::Step { rank, t, op }
+            }
+            7 => {
+                let rank = c.u32()?;
+                let t = c.u64()?;
+                let n = c.u32()? as usize;
+                if n.saturating_mul(4) > body.len() {
+                    bail!("scalar-batch count {n} exceeds frame size");
+                }
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    values.push(c.f32()?);
+                }
+                Frame::Scalars { rank, t, values }
+            }
+            8 => {
+                let rank = c.u32()?;
+                let t = c.u64()?;
+                let loss = c.f32()?;
+                let data = c.f32s_u64()?;
+                Frame::Vector { rank, t, loss, data }
+            }
+            9 => {
+                let rank = c.u32()?;
+                let t = c.u64()?;
+                let loss = c.f32()?;
+                let norm = c.f32()?;
+                let s = c.u32()?;
+                let n_levels = c.u64()?;
+                let blen = c.u64()? as usize;
+                let bits = c.take(blen)?.to_vec();
+                Frame::Quant { rank, t, loss, norm, s, n_levels, bits }
+            }
+            10 => Frame::Error { rank: c.u32()?, message: c.string()? },
+            11 => Frame::Shutdown,
+            other => bail!("unknown frame kind {other}"),
+        };
+        if c.off != body.len() {
+            bail!("frame kind {kind} has {} trailing bytes", body.len() - c.off);
+        }
+        Ok(frame)
+    }
+}
+
+/// Write one frame; returns the total bytes put on the wire (header
+/// included) so the caller can account them.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
+    let buf = frame.encode();
+    w.write_all(&buf).context("writing wire frame")?;
+    Ok(buf.len() as u64)
+}
+
+/// Write a [`Frame::Broadcast`] directly from a borrowed slice — the
+/// per-round hot path, avoiding the owned-`Vec` copy `Frame` would need.
+/// Byte-for-byte identical to encoding the equivalent `Frame::Broadcast`.
+pub fn write_broadcast(w: &mut impl Write, rank: u32, slot: Slot, data: &[f32]) -> Result<u64> {
+    let total = broadcast_len(data.len());
+    let mut head = Vec::with_capacity(18);
+    put_u32(&mut head, (total - 4) as u32); // len prefix: kind byte + payload
+    head.push(5); // kind: Broadcast
+    put_u32(&mut head, rank);
+    head.push(slot.tag());
+    put_u64(&mut head, data.len() as u64);
+    w.write_all(&head).context("writing broadcast header")?;
+    // the payload floats, streamed in 8 KB chunks to bound the temp buffer
+    let mut chunk = Vec::with_capacity(8192);
+    for part in data.chunks(2048) {
+        chunk.clear();
+        put_f32s(&mut chunk, part);
+        w.write_all(&chunk).context("writing broadcast payload")?;
+    }
+    Ok(total)
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
+/// at a frame boundary; errors mean a truncated or malformed stream.
+/// On success also returns the total bytes consumed (header included).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u64, Frame)>> {
+    let mut len_buf = [0u8; 4];
+    // distinguish clean EOF (0 bytes) from mid-prefix truncation
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..]).context("reading frame length")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid frame-length prefix");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME {
+        bail!("implausible frame length {len}");
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).context("reading frame body")?;
+    let frame = Frame::decode(&body)?;
+    Ok(Some((4 + len as u64, frame)))
+}
+
+/// Bounded little-endian reader over a frame body.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() < self.off + n {
+            bail!("truncated frame (wanted {n} bytes at offset {})", self.off);
+        }
+        let s = &self.bytes[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s_u64(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(4) > self.bytes.len() {
+            bail!("frame vector length {n} exceeds frame size");
+        }
+        let data = self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(data)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        if n > self.bytes.len() {
+            bail!("frame string length {n} exceeds frame size");
+        }
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|_| anyhow::anyhow!("frame string is not UTF-8"))?;
+        Ok(s.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_frames_have_the_advertised_length() {
+        let cases: Vec<(Frame, u64)> = vec![
+            (
+                Frame::Broadcast { rank: 3, slot: Slot::Snapshot, data: vec![1.0; 17] },
+                broadcast_len(17),
+            ),
+            (Frame::Step { rank: 0, t: 9, op: StepOp::Grad }, step_len(StepOp::Grad)),
+            (Frame::Step { rank: 0, t: 9, op: StepOp::Zo }, step_len(StepOp::Zo)),
+            (Frame::Step { rank: 0, t: 9, op: StepOp::ZoPair }, step_len(StepOp::ZoPair)),
+            (
+                Frame::Step { rank: 1, t: 2, op: StepOp::Surrogate { epoch: 4, probes: 4 } },
+                step_len(StepOp::Surrogate { epoch: 4, probes: 4 }),
+            ),
+            (
+                Frame::Step { rank: 1, t: 2, op: StepOp::LocalStep { alpha: 0.1 } },
+                step_len(StepOp::LocalStep { alpha: 0.1 }),
+            ),
+            (
+                Frame::Step { rank: 1, t: 2, op: StepOp::QsgdGrad { s: 4 } },
+                step_len(StepOp::QsgdGrad { s: 4 }),
+            ),
+            (Frame::Scalars { rank: 2, t: 7, values: vec![1.0, 2.0] }, scalars_len(2)),
+            (Frame::Vector { rank: 2, t: 7, loss: 0.5, data: vec![0.0; 33] }, vector_len(33)),
+            (
+                Frame::Quant {
+                    rank: 0,
+                    t: 1,
+                    loss: 0.5,
+                    norm: 2.0,
+                    s: 4,
+                    n_levels: 10,
+                    bits: vec![0xAB; 6],
+                },
+                quant_len(6),
+            ),
+        ];
+        for (frame, expect) in cases {
+            assert_eq!(frame.encode().len() as u64, expect, "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn write_broadcast_matches_frame_encoding() {
+        let data: Vec<f32> = (0..4100).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let frame = Frame::Broadcast { rank: 5, slot: Slot::Params, data: data.clone() };
+        let mut streamed = Vec::new();
+        let n = write_broadcast(&mut streamed, 5, Slot::Params, &data).unwrap();
+        assert_eq!(streamed, frame.encode());
+        assert_eq!(n as usize, streamed.len());
+    }
+
+    #[test]
+    fn hello_rejects_wrong_magic_and_version() {
+        let mut bytes = Frame::Hello.encode();
+        bytes[5] = b'X';
+        let err = Frame::decode(&bytes[4..]).unwrap_err();
+        assert!(err.to_string().contains("HOSGDW1"), "{err}");
+
+        let mut bytes = Frame::Hello.encode();
+        let voff = bytes.len() - 4;
+        bytes[voff..].copy_from_slice(&99u32.to_le_bytes());
+        let err = Frame::decode(&bytes[4..]).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn stream_roundtrip_and_clean_eof() {
+        let frames = vec![
+            Frame::Hello,
+            Frame::AssignShard { m: 4, ranks: vec![0, 2], cfg_json: "{\"tau\":8}".into() },
+            Frame::ShardReady { dim: 499, batch: 8 },
+            Frame::Scalars { rank: 1, t: 3, values: vec![1.5, -2.5] },
+            Frame::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            let (_, got) = read_frame(&mut r).unwrap().unwrap();
+            assert_eq!(&got, f);
+        }
+        assert!(read_frame(&mut r).unwrap().is_none()); // clean EOF
+
+        // truncated stream errors instead of hanging or misparsing
+        let mut cut = &buf[..buf.len() - 3];
+        for _ in 0..frames.len() - 1 {
+            read_frame(&mut cut).unwrap().unwrap();
+        }
+        assert!(read_frame(&mut cut).is_err());
+    }
+}

@@ -167,6 +167,82 @@ fn restore_rejects_mismatched_runs_loudly() {
 }
 
 #[test]
+fn periodic_checkpoint_observer_matches_cli_semantics() {
+    use hosgd::coordinator::PeriodicCheckpoint;
+
+    let dir = std::env::temp_dir().join("hosgd_periodic_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.ck2");
+
+    let be = NativeBackend::with_threads(1);
+    let cfg0 = cfg(Method::HoSgd, 1);
+    let model = be.model(&cfg0.dataset).unwrap();
+    let data = make_data(&cfg0).unwrap();
+
+    let (full_trace, full_params) = run_full(Method::HoSgd, 1);
+
+    // run with the observer only (no hand-rolled checkpoint loop)
+    let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
+    s.add_observer(PeriodicCheckpoint::new(10, &path));
+    s.run_until(13).unwrap();
+    drop(s);
+
+    // the file on disk is the iteration-10 snapshot (the last multiple)
+    let state = RunState::load(&path).unwrap();
+    assert_eq!(state.iter, 10);
+
+    // and resuming from it reproduces the uninterrupted run exactly
+    let mut resumed = Session::restore(model.as_ref(), &data, &cfg0, state).unwrap();
+    resumed.run_to_end().unwrap();
+    assert_eq!(resumed.trace().to_json_canonical().pretty(), full_trace);
+    assert_params_bits_eq(Method::HoSgd, &full_params, &resumed.params());
+
+    // every = 0 is a no-op observer
+    let noop = dir.join("never.ck2");
+    let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
+    s.add_observer(PeriodicCheckpoint::new(0, &noop));
+    s.run_to_end().unwrap();
+    assert!(!noop.exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_sinks_mirror_the_recorded_trace() {
+    use hosgd::metrics::csv::read_trace_csv;
+    use hosgd::metrics::sinks::{CsvSink, JsonlSink};
+
+    let dir = std::env::temp_dir().join("hosgd_stream_sink_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("live.csv");
+    let jsonl_path = dir.join("live.jsonl");
+
+    let be = NativeBackend::with_threads(1);
+    let cfg0 = cfg(Method::HoSgd, 1);
+    let model = be.model(&cfg0.dataset).unwrap();
+    let data = make_data(&cfg0).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
+    s.add_observer(CsvSink::create(&csv_path).unwrap());
+    s.add_observer(JsonlSink::create(&jsonl_path).unwrap());
+    s.run_to_end().unwrap();
+    let rows = s.rows().to_vec();
+    drop(s);
+
+    // the streamed CSV parses back to exactly the recorded rows
+    let streamed = read_trace_csv(&csv_path).unwrap();
+    assert_eq!(streamed.len(), rows.len());
+    for (a, b) in streamed.iter().zip(&rows) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.bytes_per_worker, b.bytes_per_worker);
+        assert_eq!(a.wire_up_bytes, b.wire_up_bytes);
+        assert_eq!(a.wire_down_bytes, b.wire_down_bytes);
+    }
+    // the JSONL has one object per recorded row
+    let text = std::fs::read_to_string(&jsonl_path).unwrap();
+    assert_eq!(text.trim().lines().count(), rows.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn observer_events_stream_the_run() {
     use hosgd::coordinator::{EvalEvent, Observer, StepEvent, SyncEvent};
     use std::cell::RefCell;

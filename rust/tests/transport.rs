@@ -1,0 +1,407 @@
+//! Communication-fabric suite: the Loopback fabric must be numerically
+//! bit-identical to the pre-transport fan-out path, the wire codec must
+//! round-trip exactly, a real 2-daemon TCP run must reproduce the
+//! in-process canonical trace byte for byte (measured wire counters
+//! included), and fault injection must be deterministic and
+//! numerics-preserving.
+
+use std::net::TcpListener;
+
+use hosgd::backend::{Backend, NativeBackend};
+use hosgd::comm::CommSim;
+use hosgd::config::{FaultPlan, Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, Session};
+use hosgd::optim::{axpy_acc, axpy_update, zo_scalar, AlgoConfig, TrainOracle, World};
+use hosgd::rng::Xoshiro256;
+use hosgd::transport::wire::{self, Frame, Slot, StepOp};
+use hosgd::transport::{serve, WorkerDaemonOpts};
+
+const ALL_METHODS: [Method; 7] = [
+    Method::HoSgd,
+    Method::SyncSgd,
+    Method::RiSgd,
+    Method::ZoSgd,
+    Method::ZoSvrgAve,
+    Method::Qsgd,
+    Method::HoSgdM,
+];
+
+fn cfg(method: Method) -> TrainConfig {
+    TrainConfig {
+        method,
+        dataset: "quickstart".into(),
+        iters: 12,
+        workers: 4,
+        tau: 4,
+        step: StepSize::Constant { alpha: 0.02 },
+        seed: 11,
+        eval_every: 4,
+        record_every: 1,
+        svrg_epoch: 4, // exercise several surrogate rounds within 12 iters
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Canonical trace + final params of a session run under `cfg`.
+fn run_session(cfg: &TrainConfig) -> (String, Vec<f32>) {
+    let be = NativeBackend::with_threads(cfg.threads);
+    let model = be.model(&cfg.dataset).unwrap();
+    let data = make_data(cfg).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, cfg).unwrap();
+    s.run_to_end().unwrap();
+    (s.trace().to_json_canonical().pretty(), s.params())
+}
+
+// ---------------------------------------------------------------------------
+// Loopback ≡ legacy fan-out
+// ---------------------------------------------------------------------------
+
+/// The pre-transport HO-SGD iteration, hand-rolled over the raw
+/// `World::fan_out` exactly as the optimizer used to do it — the fixture
+/// that pins "Loopback is bit-identical to the old in-process path".
+/// (syncSGD, ZO-SGD and HO-SGD+M reuse these same two round shapes.)
+fn legacy_ho_sgd_step(
+    params: &mut Vec<f32>,
+    t: u64,
+    w: &mut World<TrainOracle<'_>>,
+    alpha: f32,
+) -> f64 {
+    let m = w.cfg.m;
+    let d = w.dim();
+    let mu = w.cfg.mu;
+    let mut loss_sum = 0.0f64;
+    if t % w.cfg.tau as u64 == 0 {
+        let p = &params[..];
+        w.fan_out(|i, ctx| {
+            ctx.loss = ctx.oracle.grad(p, t, i, &mut ctx.g)?;
+            Ok(())
+        })
+        .unwrap();
+        w.gsum.fill(0.0);
+        for ctx in w.workers.iter() {
+            loss_sum += ctx.loss as f64;
+            axpy_acc(&mut w.gsum, 1.0 / m as f32, &ctx.g);
+        }
+    } else {
+        let p = &params[..];
+        w.fan_out(|i, ctx| {
+            ctx.regen_direction(t, i);
+            let (lp, lb) = ctx.zo_probe(p, mu, t, i)?;
+            ctx.loss_plus = lp;
+            ctx.loss = lb;
+            Ok(())
+        })
+        .unwrap();
+        w.gsum.fill(0.0);
+        for ctx in w.workers.iter() {
+            let s = zo_scalar(d, mu, ctx.loss_plus, ctx.loss);
+            loss_sum += ctx.loss as f64;
+            axpy_acc(&mut w.gsum, s / m as f32, &ctx.dir);
+        }
+    }
+    axpy_update(params, alpha, &w.gsum);
+    loss_sum / m as f64
+}
+
+#[test]
+fn loopback_matches_legacy_fan_out_bit_for_bit() {
+    let c = cfg(Method::HoSgd);
+    let be = NativeBackend::with_threads(1);
+    let model = be.model(&c.dataset).unwrap();
+    let data = make_data(&c).unwrap();
+
+    // legacy: raw fan_out + hand reduction (the pre-transport code path)
+    let oracle = TrainOracle::new(model.as_ref(), &data.train, c.workers, 0.0, c.seed);
+    let acfg = AlgoConfig::from_train(&c, model.dim());
+    let init = {
+        use hosgd::optim::Oracle;
+        oracle.init_params(hosgd::rng::SeedRegistry::new(c.seed).init_seed())
+    };
+    let comm = CommSim::new(c.network, c.workers);
+    let mut world = World::new(oracle, comm, acfg.clone());
+    let mut params = init;
+    let mut legacy_losses = Vec::new();
+    for t in 0..c.iters {
+        let alpha = acfg.alpha(t, world.batch_size());
+        legacy_losses.push(legacy_ho_sgd_step(&mut params, t, &mut world, alpha));
+    }
+
+    // transport: the same schedule through Session (Loopback fabric)
+    let mut c2 = c.clone();
+    c2.eval_every = 0; // the legacy fixture has no evaluator
+    let mut s = Session::new(model.as_ref(), &data, &c2).unwrap();
+    s.run_to_end().unwrap();
+    let rows = s.rows().to_vec();
+    let session_params = s.params();
+
+    assert_eq!(rows.len(), legacy_losses.len());
+    for (row, legacy) in rows.iter().zip(&legacy_losses) {
+        assert_eq!(
+            row.train_loss.to_bits(),
+            legacy.to_bits(),
+            "iteration {}: loopback loss {} != legacy {legacy}",
+            row.iter,
+            row.train_loss
+        );
+    }
+    assert_eq!(session_params.len(), params.len());
+    for (j, (a, b)) in session_params.iter().zip(&params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {j}: {a} vs {b}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec fuzz
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_roundtrip_fuzz() {
+    // offline substitute for the proptest crate: seeded random frames
+    // through encode → stream write → stream read → decode
+    let mut rng = Xoshiro256::seeded(0xF00D);
+    let mut frames = Vec::new();
+    for _ in 0..200 {
+        let rank = rng.next_below(64) as u32;
+        let t = rng.next_u64() % 10_000;
+        let frame = match rng.next_below(7) {
+            0 => Frame::Broadcast {
+                rank,
+                slot: if rng.next_below(2) == 0 { Slot::Params } else { Slot::Snapshot },
+                data: (0..rng.next_below(300)).map(|_| rng.next_f32() - 0.5).collect(),
+            },
+            1 => {
+                let op = match rng.next_below(6) {
+                    0 => StepOp::Grad,
+                    1 => StepOp::Zo,
+                    2 => StepOp::ZoPair,
+                    3 => StepOp::Surrogate {
+                        epoch: rng.next_u64() % 100,
+                        probes: 1 + rng.next_below(8) as u32,
+                    },
+                    4 => StepOp::LocalStep { alpha: rng.next_f32() },
+                    _ => StepOp::QsgdGrad { s: 1 + rng.next_below(16) as u32 },
+                };
+                Frame::Step { rank, t, op }
+            }
+            2 => Frame::Scalars {
+                rank,
+                t,
+                values: (0..rng.next_below(20)).map(|_| rng.next_f32() * 10.0 - 5.0).collect(),
+            },
+            3 => Frame::Vector {
+                rank,
+                t,
+                loss: rng.next_f32(),
+                data: (0..rng.next_below(400)).map(|_| rng.next_f32()).collect(),
+            },
+            4 => Frame::Quant {
+                rank,
+                t,
+                loss: rng.next_f32(),
+                norm: rng.next_f32(),
+                s: 1 + rng.next_below(8) as u32,
+                n_levels: rng.next_u64() % 512,
+                bits: (0..rng.next_below(128)).map(|_| (rng.next_u64() & 0xFF) as u8).collect(),
+            },
+            5 => Frame::AssignShard {
+                m: 64, // ranks listed below always fit the m bound
+                ranks: (0..rng.next_below(4) as u32).collect(),
+                cfg_json: "{\"method\":\"ho_sgd\"}".into(),
+            },
+            _ => Frame::Error { rank, message: format!("err {t}") },
+        };
+        frames.push(frame);
+    }
+    let mut stream = Vec::new();
+    for f in &frames {
+        let n = wire::write_frame(&mut stream, f).unwrap();
+        assert_eq!(n as usize, f.encode().len());
+    }
+    let mut r = &stream[..];
+    for want in &frames {
+        let (_, got) = wire::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(&got, want);
+    }
+    assert!(wire::read_frame(&mut r).unwrap().is_none());
+}
+
+// ---------------------------------------------------------------------------
+// TCP ≡ Loopback
+// ---------------------------------------------------------------------------
+
+fn spawn_daemon() -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let opts = WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: true };
+        serve(listener, &opts).unwrap();
+    });
+    (addr, handle)
+}
+
+#[test]
+fn tcp_two_daemons_reproduce_the_in_process_trace() {
+    // every method: 4 logical workers over 2 daemon processes must yield
+    // the byte-identical canonical trace (losses, counters AND measured
+    // wire bytes) as the default in-process run
+    for method in ALL_METHODS {
+        let base = cfg(method);
+        let (loopback_trace, loopback_params) = run_session(&base);
+
+        let (a1, h1) = spawn_daemon();
+        let (a2, h2) = spawn_daemon();
+        let mut tcp_cfg = base.clone();
+        tcp_cfg.transport.workers_at = vec![a1, a2];
+        let (tcp_trace, tcp_params) = run_session(&tcp_cfg);
+        h1.join().unwrap();
+        h2.join().unwrap();
+
+        assert_eq!(
+            loopback_trace, tcp_trace,
+            "{method}: TCP canonical trace diverges from loopback"
+        );
+        assert_eq!(loopback_params.len(), tcp_params.len());
+        for (j, (a, b)) in loopback_params.iter().zip(&tcp_params).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method}: param {j} {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn tcp_single_daemon_hosts_all_ranks() {
+    // m = 4 logical workers multiplexed over ONE daemon process must also
+    // reproduce the loopback trace — rank packing cannot leak into the run
+    let base = cfg(Method::HoSgdM);
+    let (loopback_trace, _) = run_session(&base);
+    let (addr, h) = spawn_daemon();
+    let mut c = base.clone();
+    c.transport.workers_at = vec![addr];
+    {
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&c.dataset).unwrap();
+        let data = make_data(&c).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, &c).unwrap();
+        assert_eq!(s.transport_label(), "tcp");
+        s.run_to_end().unwrap();
+        assert_eq!(s.trace().to_json_canonical().pretty(), loopback_trace);
+    }
+    h.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_injection_is_deterministic_and_numerics_preserving() {
+    let clean = cfg(Method::HoSgd);
+    let (_, clean_params) = run_session(&clean);
+    let clean_stats = {
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&clean.dataset).unwrap();
+        let data = make_data(&clean).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, &clean).unwrap();
+        s.run_to_end().unwrap();
+        s.snapshot().comm
+    };
+    assert_eq!(clean_stats.wire_retries, 0);
+
+    let mut faulty = clean.clone();
+    faulty.transport.fault =
+        FaultPlan { latency_s: vec![0.0, 2e-4, 0.0, 1e-3], drop_prob: 0.3, seed: 9 };
+
+    let run_stats = |c: &TrainConfig| {
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&c.dataset).unwrap();
+        let data = make_data(c).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, c).unwrap();
+        s.run_to_end().unwrap();
+        (s.snapshot().comm, s.params())
+    };
+    let (stats_a, params_a) = run_stats(&faulty);
+    let (stats_b, params_b) = run_stats(&faulty);
+
+    // deterministic: the identical retry/latency/byte accounting twice
+    assert_eq!(stats_a, stats_b);
+    assert!(stats_a.wire_retries > 0, "drop_prob 0.3 over 48 round-trips must retry");
+    assert!(stats_a.wire_up_bytes > clean_stats.wire_up_bytes);
+    assert!(stats_a.wire_down_bytes > clean_stats.wire_down_bytes);
+    // injected straggler latency joins the modelled critical path
+    assert!(stats_a.sim_time_s > clean_stats.sim_time_s);
+    // the trajectory itself is untouched by drops and latency
+    for (j, (a, b)) in params_a.iter().zip(&clean_params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "fault plan changed param {j}");
+    }
+    assert_eq!(params_a, params_b);
+}
+
+#[test]
+fn faulty_runs_resume_bit_identically() {
+    // the drop stream is keyed by (t, rank, attempt), not by rounds since
+    // process start — so an interrupted+resumed faulty run accounts the
+    // identical retries as an uninterrupted one
+    let mut c = cfg(Method::ZoSvrgAve);
+    c.eval_every = 0;
+    c.transport.fault = FaultPlan { latency_s: vec![5e-4], drop_prob: 0.25, seed: 4 };
+    let be = NativeBackend::with_threads(1);
+    let model = be.model(&c.dataset).unwrap();
+    let data = make_data(&c).unwrap();
+
+    let mut full = Session::new(model.as_ref(), &data, &c).unwrap();
+    full.run_to_end().unwrap();
+    let full_trace = full.trace().to_json_canonical().pretty();
+    let full_stats = full.snapshot().comm;
+
+    let mut first = Session::new(model.as_ref(), &data, &c).unwrap();
+    first.run_until(7).unwrap();
+    let state_bytes = first.snapshot().to_bytes();
+    drop(first);
+    let state = hosgd::coordinator::checkpoint::RunState::from_bytes(&state_bytes).unwrap();
+    let mut resumed = Session::restore(model.as_ref(), &data, &c, state).unwrap();
+    resumed.run_to_end().unwrap();
+    assert_eq!(full_trace, resumed.trace().to_json_canonical().pretty());
+    assert_eq!(full_stats, resumed.snapshot().comm);
+}
+
+// ---------------------------------------------------------------------------
+// Measured wire asymmetry (the acceptance criterion)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_bytes_show_the_tau_cadence_scalar_vector_asymmetry() {
+    // HO-SGD with tau = 4: ZO iterations move a handful of bytes per
+    // worker up; every 4th iteration moves the dense d-float gradient —
+    // the paper's whole communication story, now in measured frame bytes
+    let c = cfg(Method::HoSgd);
+    let be = NativeBackend::with_threads(1);
+    let model = be.model(&c.dataset).unwrap();
+    let d = model.dim();
+    let data = make_data(&c).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, &c).unwrap();
+    s.run_to_end().unwrap();
+    let rows = s.rows().to_vec();
+
+    let mut prev_up = 0u64;
+    for row in &rows {
+        let delta = row.wire_up_bytes - prev_up;
+        prev_up = row.wire_up_bytes;
+        if row.iter % c.tau as u64 == 0 {
+            // FO round: one dense vector response per worker
+            assert!(
+                delta >= c.workers as u64 * 4 * d as u64,
+                "iter {}: FO round moved only {delta} bytes up",
+                row.iter
+            );
+        } else {
+            // ZO round: scalar batches only — independent of d
+            assert!(
+                delta < 64 * c.workers as u64,
+                "iter {}: ZO round moved {delta} bytes up (should be O(1), d = {d})",
+                row.iter
+            );
+        }
+    }
+    // downlink carries the model broadcasts every round
+    assert!(rows.last().unwrap().wire_down_bytes > rows.len() as u64 * 4 * d as u64);
+}
