@@ -260,6 +260,37 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// Every key [`TrainConfig::from_json`] reads. Kept next to the
+    /// parser so document validators (the sweep plan parser rejects
+    /// unknown keys loudly; `from_json` itself ignores them) cannot
+    /// silently drift when a knob is added.
+    pub const JSON_KEYS: [&str; 24] = [
+        "method",
+        "backend",
+        "dataset",
+        "iters",
+        "workers",
+        "tau",
+        "mu",
+        "step",
+        "seed",
+        "eval_every",
+        "record_every",
+        "checkpoint_every",
+        "train_size",
+        "test_size",
+        "redundancy",
+        "svrg_epoch",
+        "svrg_probes",
+        "qsgd_levels",
+        "qsgd_error_feedback",
+        "momentum",
+        "threads",
+        "network",
+        "workers_at",
+        "fault",
+    ];
+
     /// Theorem 1's smoothing rule μ = 1/√(dN).
     pub fn resolve_mu(&self, d: usize) -> f64 {
         self.mu.unwrap_or_else(|| 1.0 / ((d as f64) * (self.iters as f64)).sqrt())

@@ -43,7 +43,9 @@ pub struct Checkpoint {
     pub iter: u64,
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a over raw bytes — the one checksum/string-hash primitive shared
+/// by the checkpoint formats, the run fingerprint and the sweep manifest.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

@@ -31,7 +31,8 @@ use crate::data::{profile, Dataset};
 use crate::metrics::Trace;
 
 pub use session::{
-    EvalEvent, Observer, PeriodicCheckpoint, Session, StepEvent, SyncEvent, TraceRecorder,
+    run_fingerprint, EvalEvent, Observer, PeriodicCheckpoint, Session, StepEvent, SyncEvent,
+    TraceRecorder,
 };
 
 /// The data-redundancy a run's oracle sharding actually uses: RI-SGD

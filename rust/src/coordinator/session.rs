@@ -505,6 +505,32 @@ impl<'a, O: Oracle> Session<'a, O> {
     }
 }
 
+/// One u64 naming the exact trajectory + accounting `(cfg, dim)` drives:
+/// a hash over every [`RunMeta`] identity field (the block the v2
+/// checkpoint loader enforces field-by-field) including the embedded
+/// `cfg_fingerprint` over the remaining trajectory-affecting knobs. Two
+/// runs with equal fingerprints produce bit-identical canonical traces;
+/// the sweep manifest keys completed runs by this value, which is why a
+/// resumed sweep may trust a matching row instead of re-running.
+pub fn run_fingerprint(cfg: &TrainConfig, dim: usize) -> u64 {
+    let m = run_meta(cfg, dim);
+    let hash_str = |s: &str| crate::coordinator::checkpoint::fnv1a(s.as_bytes());
+    hash_u64s(&[
+        hash_str(m.method.label()),
+        hash_str(m.backend.label()),
+        hash_str(&m.dataset),
+        m.dim as u64,
+        m.workers as u64,
+        m.tau as u64,
+        m.seed,
+        m.iters,
+        m.eval_every,
+        m.record_every,
+        m.mu_bits,
+        m.cfg_fingerprint,
+    ])
+}
+
 /// The identity block `Session::snapshot` stamps into a checkpoint.
 fn run_meta(cfg: &TrainConfig, dim: usize) -> RunMeta {
     RunMeta {

@@ -71,6 +71,12 @@
 //!   oracle — the attack loop runs through it too), the `Observer`
 //!   event stream incl. `PeriodicCheckpoint` and the streaming CSV/JSONL
 //!   sinks, v1+v2 checkpoint formats, and the batch `run_train*` wrappers
+//! - [`sweep`] — the experiment-plan subsystem: declarative JSON sweep
+//!   plans ([`sweep::ExperimentPlan`]) expanded over (method, dataset, τ,
+//!   m, lr, seed, …) axes, a parallel executor that multiplexes runs over
+//!   the worker-daemon fabric, a resumable fingerprint-keyed results
+//!   manifest, and Pareto tradeoff reports with measured-vs-Table-1
+//!   deltas; the figure/ablation drivers are presets on top of it
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
@@ -89,6 +95,7 @@ pub mod pool;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod sweep;
 pub mod theory;
 pub mod transport;
 pub mod util;
@@ -107,8 +114,10 @@ pub mod prelude {
     pub use crate::coordinator::session::{EvalEvent, Observer, StepEvent, SyncEvent};
     pub use crate::coordinator::session::{PeriodicCheckpoint, Session, TraceRecorder};
     pub use crate::coordinator::{eval_accuracy, make_data, run_train, run_train_with};
-    pub use crate::coordinator::{RunData, TrainOutcome};
+    pub use crate::coordinator::{run_fingerprint, RunData, TrainOutcome};
     pub use crate::metrics::sinks::{CsvSink, JsonlSink};
     pub use crate::metrics::{ComputeCounters, Trace, TraceRow};
+    pub use crate::sweep::{execute, ExecOpts, ExperimentPlan, ManifestRow};
+    pub use crate::sweep::{ParetoReport, RunSpec, SweepOutcome};
     pub use crate::transport::{Loopback, TcpTransport, Transport};
 }

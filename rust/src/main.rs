@@ -2,10 +2,12 @@
 //!
 //! One subcommand per paper artifact: `table1`, `fig1` (+ Table 2/3),
 //! `fig2`, `datasets` (Table 4), `ablate-tau` (Remark 3), plus `train` for
-//! single runs, `e2e` for the end-to-end driver, and `golden-check` for
-//! cross-language numerics. Model compute is served by a pluggable backend
-//! (`--backend native|pjrt`); the default pure-rust `native` backend needs
-//! no artifacts.
+//! single runs, `sweep` for declarative experiment plans (parallel,
+//! resumable, Pareto-reported — the figure/ablation subcommands are thin
+//! presets on the same subsystem), `e2e` for the end-to-end driver, and
+//! `golden-check` for cross-language numerics. Model compute is served by
+//! a pluggable backend (`--backend native|pjrt`); the default pure-rust
+//! `native` backend needs no artifacts.
 
 use std::path::Path;
 
@@ -20,9 +22,10 @@ use hosgd::coordinator::checkpoint::{load_params_any, RunState};
 use hosgd::coordinator::{
     make_data, run_train_with, EvalEvent, Observer, PeriodicCheckpoint, Session,
 };
-use hosgd::metrics::sinks::{CsvSink, JsonlSink};
 use hosgd::data::table4_profiles;
+use hosgd::metrics::sinks::{CsvSink, JsonlSink};
 use hosgd::metrics::Trace;
+use hosgd::sweep::{self, build_report, execute, ExecOpts, ExperimentPlan, ParetoReport, RunSpec};
 use hosgd::theory::{table1, Table1Params};
 use hosgd::util::cli::Args;
 
@@ -62,6 +65,14 @@ SUBCOMMANDS
   worker         TCP worker daemon: serve oracle rounds to a coordinator
                  --listen ADDR (default 127.0.0.1:7070)
                  --once (exit after the first coordinator session)
+  sweep          declarative experiment plan: expand axes, run in
+                 parallel, resume, emit a Pareto tradeoff report
+                 --plan FILE.json (see README \"Sweeps & Pareto reports\")
+                 --resume (skip manifest-verified completed runs)
+                 --parallel N (concurrent runs; 0 = available cores)
+                 --workers-at h1:p1,h2:p2 (multiplex runs over `hosgd
+                 worker` daemons, one daemon per in-flight run)
+                 --manifest PATH (default OUT/sweep_NAME.manifest.jsonl)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
                  --dump-images --clf-checkpoint PATH (frozen classifier
@@ -76,6 +87,10 @@ SUBCOMMANDS
   ablate-ef      QSGD error-feedback extension ablation --dataset D
   golden-check   cross-language numerics vs recorded goldens
   list-artifacts print the backend's profile manifest
+
+The figure/ablation sweeps (fig2, ablate-tau, sweep-workers, sweep-mu,
+ablate-ef, e2e) all run on the sweep subsystem: they accept --parallel,
+--resume and --workers-at too, and record a resumable manifest under OUT.
 ";
 
 fn open_backend(kind: BackendKind, artifacts: &str, threads: usize) -> Result<Box<dyn Backend>> {
@@ -118,7 +133,6 @@ fn main() -> Result<()> {
             hosgd::transport::serve(listener, &opts)?;
         }
         "fig2" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 400)?;
             let seed = args.get::<u64>("seed", 1)?;
             let datasets: Vec<String> = if args.has("all") {
@@ -126,10 +140,15 @@ fn main() -> Result<()> {
             } else {
                 vec![args.get_str("dataset", "sensorless")]
             };
+            let preset = preset_opts(&args, &artifacts, &out_dir, "fig2", threads)?;
             args.finish()?;
-            for ds in datasets {
-                run_fig2(be.as_ref(), &out_dir, &ds, iters, seed)?;
-            }
+            println!(
+                "== Fig. 2 [{}]: training loss / wall-clock / test accuracy ==",
+                datasets.join(",")
+            );
+            let specs = sweep::presets::fig2(&datasets, iters, seed)?;
+            run_preset(specs, cli_backend, "fig2", preset)?;
+            println!("CSV series written to {out_dir}/fig2_<dataset>_<method>.csv");
         }
         "fig1" | "attack" => {
             let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
@@ -164,7 +183,6 @@ fn main() -> Result<()> {
             }
         }
         "ablate-tau" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 240)?;
             let taus: Vec<usize> = args
@@ -172,34 +190,26 @@ fn main() -> Result<()> {
                 .iter()
                 .map(|s| s.parse::<usize>())
                 .collect::<std::result::Result<_, _>>()?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "ablate-tau", threads)?;
             args.finish()?;
-            run_ablate_tau(be.as_ref(), &out_dir, &dataset, iters, &taus)?;
+            println!(
+                "== Remark 3 ablation: final loss vs tau (error should grow O(1) in tau) =="
+            );
+            let specs = sweep::presets::ablate_tau(&dataset, iters, &taus)?;
+            run_preset(specs, cli_backend, "ablate-tau", preset)?;
         }
         "e2e" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 1)?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "e2e", threads)?;
             args.finish()?;
-            let cfg = TrainConfig {
-                method: Method::HoSgd,
-                dataset: "e2e".into(),
-                iters,
-                seed,
-                eval_every: 25,
-                step: StepSize::Constant { alpha: 0.002 }, // ZO-stable at d = 85k
-                ..Default::default()
-            };
-            let model = be.model(&cfg.dataset)?;
+            let specs = sweep::presets::e2e(iters, seed)?;
+            let report = run_preset(specs, cli_backend, "e2e", preset)?;
+            let row = &report.entries[0].row;
             println!(
-                "# e2e: d = {} parameters, m = {}, tau = {}",
-                model.dim(),
-                cfg.workers,
-                cfg.tau
+                "# e2e: d = {} parameters, m = {}, tau = {}; trace in {out_dir}/e2e_ho_sgd.csv",
+                row.dim, row.workers, row.tau
             );
-            let data = make_data(&cfg)?;
-            let out = run_train_with(model.as_ref(), &data, &cfg)?;
-            print_trace_summary(&out.trace);
-            out.trace.write_csv(format!("{out_dir}/e2e_ho_sgd.csv"))?;
         }
         "report" => {
             let kind = args.get_str("kind", "fig2");
@@ -207,8 +217,29 @@ fn main() -> Result<()> {
             args.finish()?;
             run_report(&out_dir, &kind, &dataset)?;
         }
+        "sweep" => {
+            let plan_path = args.get_opt::<String>("plan")?;
+            let manifest_flag = args.get_opt::<String>("manifest")?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "plan", threads)?;
+            args.finish()?;
+            let Some(plan_path) = plan_path else {
+                bail!("sweep needs --plan FILE.json (see README \"Sweeps & Pareto reports\")");
+            };
+            let plan = ExperimentPlan::from_json_file(&plan_path)?;
+            let specs = plan.expand()?;
+            let mut opts = preset;
+            opts.manifest = manifest_flag
+                .unwrap_or_else(|| format!("{out_dir}/sweep_{}.manifest.jsonl", plan.name))
+                .into();
+            println!(
+                "== sweep {}: {} run(s) over {} axis(es) ==",
+                plan.name,
+                specs.len(),
+                plan.axes.len()
+            );
+            run_preset(specs, cli_backend, &plan.name, opts)?;
+        }
         "sweep-workers" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 200)?;
             let workers: Vec<usize> = args
@@ -216,11 +247,17 @@ fn main() -> Result<()> {
                 .iter()
                 .map(|s| s.parse::<usize>())
                 .collect::<std::result::Result<_, _>>()?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "sweep-workers", threads)?;
             args.finish()?;
-            run_sweep_workers(be.as_ref(), &dataset, iters, &workers)?;
+            println!("== worker sweep on {dataset} (HO-SGD, {iters} iters, tau=8) ==");
+            let specs = sweep::presets::sweep_workers(&dataset, iters, &workers)?;
+            run_preset(specs, cli_backend, "sweep-workers", preset)?;
+            println!(
+                "(expected: loss improves with m — the √m averaging gain — at identical \
+                 per-worker comm)"
+            );
         }
         "sweep-mu" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
             let mus: Vec<f64> = args
@@ -228,15 +265,30 @@ fn main() -> Result<()> {
                 .iter()
                 .map(|s| s.parse::<f64>())
                 .collect::<std::result::Result<_, _>>()?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "sweep-mu", threads)?;
             args.finish()?;
-            run_sweep_mu(be.as_ref(), &dataset, iters, &mus)?;
+            println!("== mu sweep on {dataset} (ZO-SGD, {iters} iters) ==");
+            let specs = sweep::presets::sweep_mu(&dataset, iters, &mus)?;
+            let report = run_preset(specs, cli_backend, "sweep-mu", preset)?;
+            let d = report.entries[0].row.dim;
+            println!(
+                "theorem rule mu = 1/sqrt(dN) = {:.2e}",
+                1.0 / ((d as f64 * iters as f64).sqrt())
+            );
         }
         "ablate-ef" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
             let dataset = args.get_str("dataset", "quickstart");
             let iters = args.get::<u64>("iters", 200)?;
+            let preset = preset_opts(&args, &artifacts, &out_dir, "ablate-ef", threads)?;
             args.finish()?;
-            run_ablate_ef(be.as_ref(), &dataset, iters)?;
+            println!("== QSGD error-feedback ablation on {dataset} ({iters} iters) ==");
+            let specs = sweep::presets::ablate_ef(&dataset, iters)?;
+            run_preset(specs, cli_backend, "ablate-ef", preset)?;
+            println!(
+                "(EF trades the unbiased estimator for a contractive one; its payoff shows \
+                 under\n aggressive biased compression — recorded as an extension ablation in \
+                 EXPERIMENTS.md)"
+            );
         }
         "golden-check" => {
             let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
@@ -410,42 +462,69 @@ fn print_trace_summary(t: &Trace) {
     );
 }
 
-fn run_fig2(be: &dyn Backend, out_dir: &str, dataset: &str, iters: u64, seed: u64) -> Result<()> {
-    println!("== Fig. 2 [{dataset}]: training loss / wall-clock / test accuracy ==");
-    let base_cfg = TrainConfig {
-        dataset: dataset.into(),
-        iters,
-        seed,
-        eval_every: (iters / 20).max(1),
-        ..Default::default()
-    };
-    let model = be.model(dataset)?;
-    let data = make_data(&base_cfg)?;
-    for method in Method::FIGURE_SET {
-        let cfg = TrainConfig { method, step: fig2_lr(method), ..base_cfg.clone() };
-        let outc = run_train_with(model.as_ref(), &data, &cfg)?;
-        print_trace_summary(&outc.trace);
-        outc.trace.write_csv(format!("{out_dir}/fig2_{dataset}_{}.csv", method.label()))?;
-    }
-    println!("CSV series written to {out_dir}/fig2_{dataset}_*.csv");
-    Ok(())
+/// Shared executor flags of every sweep-backed subcommand (`--parallel`,
+/// `--resume`, `--workers-at`, and the global `--threads` for the
+/// per-run pools).
+fn preset_opts(
+    args: &Args,
+    artifacts: &str,
+    out_dir: &str,
+    name: &str,
+    threads: usize,
+) -> Result<ExecOpts> {
+    let workers_at: Vec<String> = args
+        .get_opt::<String>("workers-at")?
+        .map(|ws| ws.split(',').filter(|s| !s.is_empty()).map(String::from).collect())
+        .unwrap_or_default();
+    Ok(ExecOpts {
+        artifacts: artifacts.into(),
+        out_dir: out_dir.into(),
+        manifest: format!("{out_dir}/sweep_{name}.manifest.jsonl").into(),
+        parallel: args.get::<usize>("parallel", 0)?,
+        workers_at,
+        threads,
+        resume: args.has("resume"),
+        quiet: false,
+    })
 }
 
-/// Per-method tuned constant step sizes ("we have optimized the learning
-/// rates of all the methods" — §5.2). ZO estimators carry d-scaled variance,
-/// so their stable step is smaller.
-pub fn fig2_lr(method: Method) -> StepSize {
-    let alpha = match method {
-        // ZO estimator noise scales ~sqrt(d); stable steps shrink with it
-        Method::HoSgd => 0.005,
-        Method::SyncSgd => 0.1,
-        Method::RiSgd => 0.1,
-        Method::ZoSgd => 0.005,
-        Method::ZoSvrgAve => 0.002,
-        Method::Qsgd => 0.1,
-        Method::HoSgdM => 0.003, // momentum amplifies by 1/(1-beta)
-    };
-    StepSize::Constant { alpha }
+/// Run an expanded spec list through the sweep executor and print the
+/// standard report block (summary table, Pareto artifacts + charts,
+/// measured-vs-Table-1 deltas).
+fn run_preset(
+    mut specs: Vec<RunSpec>,
+    cli_backend: Option<BackendKind>,
+    name: &str,
+    opts: ExecOpts,
+) -> Result<ParetoReport> {
+    if let Some(kind) = cli_backend {
+        for s in &mut specs {
+            s.cfg.backend = kind;
+        }
+    }
+    let outcome = execute(&specs, &opts)?;
+    let report = build_report(name, &specs, &outcome.rows)?;
+    print!("{}", report.summary_table());
+    let out_dir = opts.out_dir.display();
+    let csv = format!("{out_dir}/sweep_{name}_pareto.csv");
+    let json = format!("{out_dir}/sweep_{name}_pareto.json");
+    report.write_csv(&csv)?;
+    report.write_json(&json)?;
+    if report.entries.len() > 1 {
+        print!("{}", report.frontier_chart());
+        print!("{}", report.compute_chart());
+    }
+    println!("measured vs analytic (theory::table1_row at each run's exact parameters):");
+    print!("{}", report.delta_table());
+    println!(
+        "# sweep {name}: {} executed, {} skipped, {} total; manifest {}",
+        outcome.executed,
+        outcome.skipped,
+        outcome.rows.len(),
+        opts.manifest.display()
+    );
+    println!("wrote {csv} and {json}");
+    Ok(report)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -566,41 +645,6 @@ fn run_table1(be: &dyn Backend, dataset: &str, iters: u64, tau: usize) -> Result
     Ok(())
 }
 
-fn run_ablate_tau(
-    be: &dyn Backend,
-    out_dir: &str,
-    dataset: &str,
-    iters: u64,
-    taus: &[usize],
-) -> Result<()> {
-    println!("== Remark 3 ablation: final loss vs tau (error should grow O(1) in tau) ==");
-    let model = be.model(dataset)?;
-    let base = TrainConfig {
-        dataset: dataset.into(),
-        iters,
-        eval_every: 0,
-        // one ZO-stable rate across all tau so the sweep isolates tau
-        step: fig2_lr(Method::HoSgd),
-        ..Default::default()
-    };
-    let data = make_data(&base)?;
-    println!("{:>6} {:>12} {:>12} {:>16}", "TAU", "FINAL LOSS", "BEST LOSS", "SCALARS/ITER");
-    for &tau in taus {
-        let cfg = TrainConfig { tau, ..base.clone() };
-        let outc = run_train_with(model.as_ref(), &data, &cfg)?;
-        let last = outc.trace.rows.last().unwrap();
-        println!(
-            "{:>6} {:>12.4} {:>12.4} {:>16.2}",
-            tau,
-            outc.trace.final_loss().unwrap_or(f64::NAN),
-            outc.trace.best_loss().unwrap_or(f64::NAN),
-            last.scalars_per_worker as f64 / iters as f64
-        );
-        outc.trace.write_csv(format!("{out_dir}/ablate_tau{tau}_{dataset}.csv"))?;
-    }
-    Ok(())
-}
-
 fn golden_check(be: &dyn Backend) -> Result<()> {
     let tol = 2e-3;
     let mut checked = 0;
@@ -625,185 +669,58 @@ fn golden_check(be: &dyn Backend) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// report / sweeps / extension ablations
+// report
 // ---------------------------------------------------------------------------
 
-/// Render the stored CSV series of a figure as terminal plots.
+/// Render the stored CSV series of a figure as terminal plots (loading
+/// shared with the sweep subsystem — `sweep::report::load_trace_series`).
 fn run_report(out_dir: &str, kind: &str, dataset: &str) -> Result<()> {
-    use hosgd::metrics::csv::read_trace_csv;
-    use hosgd::util::plot::{render, PlotCfg, Series};
+    use hosgd::util::plot::{render, PlotCfg};
 
-    let (pattern, title): (Vec<String>, &str) = match kind {
+    let (sources, title): (Vec<(String, String)>, &str) = match kind {
         "fig2" => (
             Method::FIGURE_SET
                 .iter()
-                .map(|m| format!("{out_dir}/fig2_{dataset}_{}.csv", m.label()))
+                .map(|m| {
+                    (m.label().to_string(), format!("{out_dir}/fig2_{dataset}_{}.csv", m.label()))
+                })
                 .collect(),
             "Fig. 2: training loss vs iterations",
         ),
         "fig1" => (
             Method::FIGURE_SET
                 .iter()
-                .map(|m| format!("{out_dir}/fig1_{}.csv", m.label()))
+                .map(|m| (m.label().to_string(), format!("{out_dir}/fig1_{}.csv", m.label())))
                 .collect(),
             "Fig. 1: attack loss vs iterations",
         ),
         other => bail!("unknown report kind {other:?} (fig1|fig2)"),
     };
 
-    let mut loss_iter = Vec::new();
-    let mut loss_time = Vec::new();
-    let mut acc_time = Vec::new();
-    for path in &pattern {
-        let rows = match read_trace_csv(path) {
-            Ok(rows) => rows,
-            Err(e) if !std::path::Path::new(path).exists() => {
-                eprintln!("skipping missing {path} (run `hosgd {kind}` first): {e:#}");
-                continue;
-            }
-            Err(e) => {
-                // exists but does not parse — likely written by an older
-                // build (the trace CSV schema gained the wire columns)
-                eprintln!("skipping unreadable {path}: {e:#} (re-run `hosgd {kind}`?)");
-                continue;
-            }
-        };
-        let name = std::path::Path::new(path)
-            .file_stem()
-            .unwrap()
-            .to_string_lossy()
-            .replace(&format!("{kind}_"), "")
-            .replace(&format!("{dataset}_"), "");
-        loss_iter.push(Series {
-            name: name.clone(),
-            points: rows.iter().map(|r| (r.iter as f64, r.train_loss)).collect(),
-        });
-        loss_time.push(Series {
-            name: name.clone(),
-            points: rows.iter().map(|r| (r.total_s, r.train_loss)).collect(),
-        });
-        let accs: Vec<(f64, f64)> = rows
-            .iter()
-            .filter_map(|r| r.test_acc.map(|a| (r.total_s, a)))
-            .collect();
-        if !accs.is_empty() {
-            acc_time.push(Series { name, points: accs });
-        }
-    }
-    if loss_iter.is_empty() {
-        bail!("no series found under {out_dir}");
-    }
+    let series = sweep::report::load_trace_series(&sources)
+        .map_err(|e| e.context(format!("no series under {out_dir} (run `hosgd {kind}` first)")))?;
     let cfg = PlotCfg {
         title: title.into(),
         x_label: "iteration".into(),
         y_label: "loss".into(),
         ..Default::default()
     };
-    print!("{}", render(&loss_iter, &cfg));
+    print!("{}", render(&series.loss_iter, &cfg));
     let cfg_t = PlotCfg {
         title: "training loss vs wall-clock (compute + modelled comm)".into(),
         x_label: "seconds".into(),
         y_label: "loss".into(),
         ..Default::default()
     };
-    print!("{}", render(&loss_time, &cfg_t));
-    if !acc_time.is_empty() {
+    print!("{}", render(&series.loss_time, &cfg_t));
+    if !series.acc_time.is_empty() {
         let cfg_a = PlotCfg {
             title: "test accuracy vs wall-clock".into(),
             x_label: "seconds".into(),
             y_label: "accuracy".into(),
             ..Default::default()
         };
-        print!("{}", render(&acc_time, &cfg_a));
+        print!("{}", render(&series.acc_time, &cfg_a));
     }
-    Ok(())
-}
-
-/// Worker-count sweep: Theorem 1 predicts the error scales 1/√m at fixed N.
-fn run_sweep_workers(be: &dyn Backend, dataset: &str, iters: u64, workers: &[usize]) -> Result<()> {
-    println!("== worker sweep on {dataset} (HO-SGD, {iters} iters, tau=8) ==");
-    let model = be.model(dataset)?;
-    println!("{:>8} {:>12} {:>12} {:>14}", "WORKERS", "FINAL LOSS", "BEST LOSS", "SCALARS/WORKER");
-    for &m in workers {
-        let cfg = TrainConfig {
-            dataset: dataset.into(),
-            iters,
-            workers: m,
-            eval_every: 0,
-            step: fig2_lr(Method::HoSgd),
-            ..Default::default()
-        };
-        let data = make_data(&cfg)?;
-        let out = run_train_with(model.as_ref(), &data, &cfg)?;
-        let last = out.trace.rows.last().unwrap();
-        println!(
-            "{:>8} {:>12.4} {:>12.4} {:>14}",
-            m,
-            out.trace.final_loss().unwrap_or(f64::NAN),
-            out.trace.best_loss().unwrap_or(f64::NAN),
-            last.scalars_per_worker
-        );
-    }
-    println!("(expected: loss improves with m — the √m averaging gain — at identical per-worker comm)");
-    Ok(())
-}
-
-/// Smoothing-parameter ablation for the ZO estimator (Theorem 1 requires
-/// μ ≤ 1/√(dN); too large biases the estimator, too small hits f32 noise).
-fn run_sweep_mu(be: &dyn Backend, dataset: &str, iters: u64, mus: &[f64]) -> Result<()> {
-    println!("== mu sweep on {dataset} (ZO-SGD, {iters} iters) ==");
-    let model = be.model(dataset)?;
-    let d = model.dim();
-    println!("theorem rule mu = 1/sqrt(dN) = {:.2e}", 1.0 / ((d as f64 * iters as f64).sqrt()));
-    println!("{:>10} {:>12} {:>12}", "MU", "FINAL LOSS", "BEST LOSS");
-    for &mu in mus {
-        let cfg = TrainConfig {
-            method: Method::ZoSgd,
-            dataset: dataset.into(),
-            iters,
-            mu: Some(mu),
-            eval_every: 0,
-            step: StepSize::Constant { alpha: 0.02 },
-            ..Default::default()
-        };
-        let data = make_data(&cfg)?;
-        let out = run_train_with(model.as_ref(), &data, &cfg)?;
-        println!(
-            "{:>10.1e} {:>12.4} {:>12.4}",
-            mu,
-            out.trace.final_loss().unwrap_or(f64::NAN),
-            out.trace.best_loss().unwrap_or(f64::NAN)
-        );
-    }
-    Ok(())
-}
-
-/// QSGD ± error feedback at aggressive quantization (extension ablation).
-fn run_ablate_ef(be: &dyn Backend, dataset: &str, iters: u64) -> Result<()> {
-    println!("== QSGD error-feedback ablation on {dataset} ({iters} iters, s=1) ==");
-    let model = be.model(dataset)?;
-    println!("{:>6} {:>14} {:>12} {:>12}", "EF", "LEVELS", "FINAL LOSS", "BEST LOSS");
-    for (ef, s) in [(false, 1u32), (true, 1), (false, 4), (true, 4)] {
-        let cfg = TrainConfig {
-            method: Method::Qsgd,
-            dataset: dataset.into(),
-            iters,
-            qsgd_levels: s,
-            qsgd_error_feedback: ef,
-            eval_every: 0,
-            step: StepSize::Constant { alpha: 0.05 },
-            ..Default::default()
-        };
-        let data = make_data(&cfg)?;
-        let out = run_train_with(model.as_ref(), &data, &cfg)?;
-        println!(
-            "{:>6} {:>14} {:>12.4} {:>12.4}",
-            ef,
-            s,
-            out.trace.final_loss().unwrap_or(f64::NAN),
-            out.trace.best_loss().unwrap_or(f64::NAN)
-        );
-    }
-    println!("(EF trades the unbiased estimator for a contractive one; its payoff shows under\n aggressive biased compression — recorded as an extension ablation in EXPERIMENTS.md)");
     Ok(())
 }

@@ -1,0 +1,374 @@
+//! The parallel sweep executor: drive many [`Session`]s concurrently,
+//! append every finished run to the resumable [`Manifest`], and — when
+//! remote daemons are given — multiplex runs across the TCP fabric.
+//!
+//! Concurrency model: a fixed pool of executor lanes pulls specs off a
+//! shared cursor. Each lane runs one spec at a time as a fully private
+//! run (its own backend instance, model binding, dataset and `Session`),
+//! so concurrent runs share no mutable state and every trajectory is
+//! bit-identical to the equivalent standalone `hosgd train` invocation —
+//! `rust/tests/sweep.rs` pins exactly that.
+//!
+//! Daemon multiplexing: `hosgd worker` daemons serve one coordinator
+//! session at a time, so the executor treats `workers_at` as a checkout
+//! pool — each in-flight run borrows one daemon address (which hosts all
+//! `m` logical ranks of that run, the single-daemon topology the
+//! transport suite pins) and returns it when the run finishes. With `k`
+//! daemons, `k` runs are in flight at once.
+//!
+//! Failure model: a failing run never aborts its siblings. Finished runs
+//! are already on disk in the manifest, so re-invoking with `--resume`
+//! retries exactly the failures.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::{self, BackendKind};
+use crate::config::TrainConfig;
+use crate::coordinator::{make_data, run_fingerprint, Session};
+use crate::sweep::manifest::{Manifest, ManifestRow, ManifestWriter};
+use crate::sweep::plan::RunSpec;
+
+/// Executor knobs (everything outside the plan itself).
+#[derive(Debug, Clone)]
+pub struct ExecOpts {
+    /// artifact directory for the pjrt backend
+    pub artifacts: PathBuf,
+    /// result directory for per-run trace CSVs
+    pub out_dir: PathBuf,
+    /// the sweep manifest (JSONL)
+    pub manifest: PathBuf,
+    /// concurrent runs; 0 ⇒ min(jobs, available parallelism). Clamped to
+    /// the daemon count when `workers_at` is non-empty.
+    pub parallel: usize,
+    /// `hosgd worker` daemon addresses to multiplex runs over (each run
+    /// borrows one daemon for all its ranks); empty ⇒ in-process Loopback
+    pub workers_at: Vec<String>,
+    /// per-run worker-pool lanes for specs that leave `threads` at 0
+    /// (the CLI's global `--threads`). 0 ⇒ auto: one lane per run while
+    /// several runs execute concurrently, all cores otherwise.
+    /// Trajectories are thread-count independent either way.
+    pub threads: usize,
+    /// skip runs whose fingerprint already sits (verified) in the manifest
+    pub resume: bool,
+    /// suppress per-run progress lines on stderr
+    pub quiet: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            manifest: PathBuf::from("results/sweep.manifest.jsonl"),
+            parallel: 0,
+            workers_at: Vec::new(),
+            threads: 0,
+            resume: false,
+            quiet: false,
+        }
+    }
+}
+
+/// What a sweep did: one manifest row per spec (spec order), and how many
+/// were freshly executed vs skipped via the resume manifest.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub rows: Vec<ManifestRow>,
+    pub executed: usize,
+    pub skipped: usize,
+}
+
+/// Model dimension per `(backend, dataset)` — needed to fingerprint a
+/// spec without running it.
+fn dim_cache(specs: &[RunSpec], opts: &ExecOpts) -> Result<Vec<usize>> {
+    let mut cache: Vec<(BackendKind, String, usize)> = Vec::new();
+    let mut dims = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let key = (spec.cfg.backend, spec.cfg.dataset.clone());
+        let hit = cache.iter().position(|(b, ds, _)| *b == key.0 && *ds == key.1);
+        let dim = match hit {
+            Some(i) => cache[i].2,
+            None => {
+                let be = backend::load_with_threads(key.0, &opts.artifacts, 1)
+                    .with_context(|| format!("loading backend for {}", spec.label))?;
+                let d = be
+                    .model(&key.1)
+                    .with_context(|| format!("binding model for {}", spec.label))?
+                    .dim();
+                cache.push((key.0, key.1, d));
+                d
+            }
+        };
+        dims.push(dim);
+    }
+    Ok(dims)
+}
+
+/// Why a run failed — the executor quarantines a checked-out daemon only
+/// for failures in the phases that actually talked to it (connecting the
+/// transport, driving rounds), never for local problems (backend/data
+/// construction, writing artifacts), so one unwritable `out_dir` cannot
+/// take a healthy daemon fleet out of rotation.
+enum RunFailure {
+    /// failed while the daemon connection was in use — the daemon may be
+    /// dead; quarantine it
+    Daemon(anyhow::Error),
+    /// failed before or after any daemon involvement — the daemon (if
+    /// any) is fine
+    Local(anyhow::Error),
+}
+
+impl RunFailure {
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            RunFailure::Daemon(e) | RunFailure::Local(e) => e,
+        }
+    }
+}
+
+/// Execute one spec to completion and produce its manifest row.
+fn run_one(
+    spec: &RunSpec,
+    fingerprint: u64,
+    daemon: Option<&str>,
+    opts: &ExecOpts,
+) -> std::result::Result<ManifestRow, RunFailure> {
+    let mut cfg = spec.cfg.clone();
+    if let Some(addr) = daemon {
+        cfg.transport.workers_at = vec![addr.to_string()];
+    }
+    let local = RunFailure::Local;
+    // transport phases blame the daemon only when one is actually in use
+    let fabric = |e: anyhow::Error| {
+        if daemon.is_some() {
+            RunFailure::Daemon(e)
+        } else {
+            RunFailure::Local(e)
+        }
+    };
+    let be = backend::load_with_threads(cfg.backend, &opts.artifacts, cfg.threads)
+        .with_context(|| format!("run {}: loading backend", spec.label))
+        .map_err(local)?;
+    let model = be
+        .model(&cfg.dataset)
+        .with_context(|| format!("run {}: binding model", spec.label))
+        .map_err(local)?;
+    let data = make_data(&cfg)
+        .with_context(|| format!("run {}: materializing data", spec.label))
+        .map_err(local)?;
+    let mut session = Session::new(model.as_ref(), &data, &cfg)
+        .with_context(|| format!("run {}: building session", spec.label))
+        .map_err(fabric)?;
+    session.run_to_end().with_context(|| format!("run {}", spec.label)).map_err(fabric)?;
+    let trace = session.trace();
+    if let Some(name) = &spec.trace_csv {
+        trace
+            .write_csv(opts.out_dir.join(name))
+            .with_context(|| format!("run {}: writing trace CSV", spec.label))
+            .map_err(local)?;
+    }
+    ManifestRow::from_trace(&spec.label, fingerprint, &trace).map_err(local)
+}
+
+/// Run every spec, in parallel, resumably. Returns the rows in spec
+/// order. Trajectories are bit-identical to standalone `train` runs of
+/// the same configs regardless of `parallel` or daemon placement.
+pub fn execute(specs: &[RunSpec], opts: &ExecOpts) -> Result<SweepOutcome> {
+    if specs.is_empty() {
+        bail!("nothing to execute (empty spec list)");
+    }
+    if !opts.workers_at.is_empty() {
+        if let Some(bad) = specs.iter().find(|s| s.cfg.transport.fault.is_active()) {
+            bail!(
+                "run {} has a fault plan, which is Loopback-only — drop --workers-at \
+                 or the fault axes",
+                bad.label
+            );
+        }
+    }
+    let dims = dim_cache(specs, opts)?;
+    let fps: Vec<u64> =
+        specs.iter().zip(&dims).map(|(s, &d)| run_fingerprint(&s.cfg, d)).collect();
+    // two specs must never collide on (fingerprint, label): the manifest
+    // could not tell their rows apart
+    for i in 0..specs.len() {
+        for j in i + 1..specs.len() {
+            if fps[i] == fps[j] && specs[i].label == specs[j].label {
+                bail!(
+                    "specs {:?} and {:?} share fingerprint {:016x} and label — \
+                     deduplicate the plan",
+                    specs[i].label,
+                    specs[j].label,
+                    fps[i]
+                );
+            }
+        }
+    }
+
+    let prior = if opts.resume { Manifest::load(&opts.manifest)? } else { Manifest::default() };
+    // decide up front which specs run and which are satisfied by the
+    // manifest (identity re-verified beyond the fingerprint match)
+    let mut slots: Vec<Option<ManifestRow>> = Vec::with_capacity(specs.len());
+    let mut todo: Vec<usize> = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        match prior.get(fps[i], &spec.label) {
+            Some(row) => {
+                verify_row(row, spec, dims[i])?;
+                slots.push(Some(row.clone()));
+            }
+            None => {
+                slots.push(None);
+                todo.push(i);
+            }
+        }
+    }
+    let skipped = specs.len() - todo.len();
+    if !opts.quiet && skipped > 0 {
+        eprintln!("# sweep: {skipped} run(s) already complete in the manifest, skipping");
+    }
+
+    // append mode under --resume keeps the verified prior rows on disk;
+    // a fresh sweep truncates
+    let writer = Mutex::new(ManifestWriter::open(&opts.manifest, opts.resume)?);
+    let lanes = {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let want = if opts.parallel > 0 { opts.parallel } else { avail };
+        let cap = if opts.workers_at.is_empty() { want } else { want.min(opts.workers_at.len()) };
+        cap.clamp(1, todo.len().max(1))
+    };
+    // per-run pool width for specs that left `threads` unset: the
+    // explicit --threads value if given; otherwise 1 lane per run while
+    // runs themselves are parallel — many concurrent runs each sizing
+    // their pool to "all cores" would oversubscribe the machine.
+    // (Trajectories are thread-count independent, so this is invisible
+    // in the results.)
+    let default_threads = if opts.threads > 0 {
+        opts.threads
+    } else if lanes > 1 {
+        1
+    } else {
+        0
+    };
+
+    let cursor = AtomicUsize::new(0);
+    let daemons = Mutex::new(opts.workers_at.clone());
+    let results = Mutex::new(slots);
+    let errors: Mutex<Vec<(String, anyhow::Error)>> = Mutex::new(Vec::new());
+    let done = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..lanes {
+            scope.spawn(|| loop {
+                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                if k >= todo.len() {
+                    break;
+                }
+                let i = todo[k];
+                let mut spec = specs[i].clone();
+                if spec.cfg.threads == 0 {
+                    spec.cfg.threads = default_threads;
+                }
+                let daemon = daemons.lock().unwrap().pop();
+                if !opts.workers_at.is_empty() && daemon.is_none() {
+                    // earlier failures quarantined every daemon; falling
+                    // back to Loopback would silently change the fabric
+                    // the user asked for, so fail this run instead
+                    errors.lock().unwrap().push((
+                        spec.label.clone(),
+                        anyhow::anyhow!(
+                            "no live worker daemon left (earlier failed runs quarantined \
+                             them); restart the daemons and re-run with --resume"
+                        ),
+                    ));
+                    continue;
+                }
+                let outcome = run_one(&spec, fps[i], daemon.as_deref(), opts);
+                // the daemon returns to the pool unless ITS phase of the
+                // run failed — then it may be dead, and handing it to
+                // every later run would cascade the failure
+                match (&outcome, daemon) {
+                    (Err(RunFailure::Daemon(_)), Some(addr)) => {
+                        if !opts.quiet {
+                            eprintln!(
+                                "# sweep: quarantining daemon {addr} after a transport failure"
+                            );
+                        }
+                    }
+                    (_, Some(addr)) => daemons.lock().unwrap().push(addr),
+                    (_, None) => {}
+                }
+                let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                match outcome {
+                    Ok(row) => {
+                        if !opts.quiet {
+                            eprintln!(
+                                "# sweep[{n}/{}] {}: loss {:.4}{}",
+                                todo.len(),
+                                spec.label,
+                                row.final_loss,
+                                row.final_acc
+                                    .map_or(String::new(), |a| format!(", acc {a:.3}")),
+                            );
+                        }
+                        // manifest first (durable), then the result slot
+                        let appended = writer.lock().unwrap().append(&row);
+                        if let Err(e) = appended {
+                            errors.lock().unwrap().push((spec.label.clone(), e));
+                        } else {
+                            results.lock().unwrap()[i] = Some(row);
+                        }
+                    }
+                    Err(failure) => {
+                        let e = failure.into_error();
+                        if !opts.quiet {
+                            eprintln!("# sweep[{n}/{}] {} FAILED: {e:#}", todo.len(), spec.label);
+                        }
+                        errors.lock().unwrap().push((spec.label.clone(), e));
+                    }
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    if let Some((label, first)) = errors.into_iter().next() {
+        return Err(first.context(format!(
+            "sweep run {label:?} failed (completed runs are in {}; re-run with --resume \
+             to retry only the failures)",
+            opts.manifest.display()
+        )));
+    }
+    let rows: Vec<ManifestRow> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|s| s.expect("all specs ran or were resumed"))
+        .collect();
+    Ok(SweepOutcome { rows, executed: todo.len(), skipped })
+}
+
+/// A fingerprint hit must also agree on the human-readable identity —
+/// catches manifests from a different plan file reused by mistake.
+fn verify_row(row: &ManifestRow, spec: &RunSpec, dim: usize) -> Result<()> {
+    let cfg: &TrainConfig = &spec.cfg;
+    if row.method != cfg.method.label()
+        || row.dataset != cfg.dataset
+        || row.iters != cfg.iters
+        || row.workers != cfg.workers
+        || row.tau != cfg.tau
+        || row.seed != cfg.seed
+        || row.dim != dim
+    {
+        bail!(
+            "manifest row {:?} matches the fingerprint of {:?} but not its identity \
+             (method/dataset/iters/workers/tau/seed/dim) — stale or foreign manifest",
+            row.label,
+            spec.label
+        );
+    }
+    Ok(())
+}

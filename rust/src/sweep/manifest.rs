@@ -1,0 +1,377 @@
+//! The resumable sweep manifest: one JSONL row per completed run, keyed
+//! by the v2-checkpoint [`run_fingerprint`](crate::coordinator::run_fingerprint)
+//! (plus the spec label, so two specs that deliberately share a
+//! trajectory — e.g. a `threads` axis — stay distinct rows).
+//!
+//! Every row carries the run identity, the measured results (final/best
+//! loss as exact f64 bits, accuracy, wire/collective/compute counters)
+//! and an FNV-1a checksum over its canonical encoding. `hosgd sweep
+//! --resume` reloads the manifest, re-verifies each row's checksum and
+//! identity against the expanded plan, and skips fingerprint-matched
+//! completed runs — an interrupted sweep continues where it stopped
+//! instead of re-spending compute.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::checkpoint::fnv1a;
+use crate::metrics::Trace;
+use crate::util::json::Json;
+
+/// One completed run: identity + measured results. Losses round-trip as
+/// raw f64 bits so a resumed sweep reports bit-identical numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestRow {
+    /// the v2 run-state fingerprint (`coordinator::run_fingerprint`)
+    pub fingerprint: u64,
+    pub label: String,
+    pub method: String,
+    pub dataset: String,
+    pub dim: usize,
+    pub batch: usize,
+    pub workers: usize,
+    pub tau: usize,
+    pub seed: u64,
+    pub iters: u64,
+    pub final_loss: f64,
+    pub best_loss: f64,
+    pub final_acc: Option<f64>,
+    pub wire_up_bytes: u64,
+    pub wire_down_bytes: u64,
+    pub bytes_per_worker: u64,
+    pub scalars_per_worker: u64,
+    pub fn_evals: u64,
+    pub grad_evals: u64,
+    /// modelled communication seconds (α–β critical path)
+    pub comm_s: f64,
+    /// measured compute seconds (machine-dependent; excluded from the
+    /// checksum so re-runs on other hardware still verify)
+    pub compute_s: f64,
+}
+
+impl ManifestRow {
+    /// Build a row from a finished run's trace.
+    pub fn from_trace(label: &str, fingerprint: u64, trace: &Trace) -> Result<Self> {
+        let last = trace
+            .rows
+            .last()
+            .ok_or_else(|| anyhow!("run {label:?} recorded no trace rows"))?;
+        Ok(Self {
+            fingerprint,
+            label: label.to_string(),
+            method: trace.method.clone(),
+            dataset: trace.dataset.clone(),
+            dim: trace.dim,
+            batch: trace.batch,
+            workers: trace.workers,
+            tau: trace.tau,
+            seed: trace.seed,
+            iters: last.iter + 1,
+            final_loss: last.train_loss,
+            best_loss: trace.best_loss().unwrap_or(f64::NAN),
+            final_acc: trace.final_acc(),
+            wire_up_bytes: last.wire_up_bytes,
+            wire_down_bytes: last.wire_down_bytes,
+            bytes_per_worker: last.bytes_per_worker,
+            scalars_per_worker: last.scalars_per_worker,
+            fn_evals: last.fn_evals,
+            grad_evals: last.grad_evals,
+            comm_s: last.comm_s,
+            compute_s: last.compute_s,
+        })
+    }
+
+    /// The checksummed fields, in a fixed canonical encoding. Timing is
+    /// excluded: re-running on different hardware must still verify.
+    fn canonical(&self) -> String {
+        format!(
+            "{:016x}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{}|{}|{}|{}|{}|{}|{}",
+            self.fingerprint,
+            self.label,
+            self.method,
+            self.dataset,
+            self.dim,
+            self.batch,
+            self.workers,
+            self.tau,
+            self.seed,
+            self.iters,
+            self.final_loss.to_bits(),
+            self.best_loss.to_bits(),
+            self.final_acc.map_or("-".to_string(), |a| format!("{:016x}", a.to_bits())),
+            self.wire_up_bytes,
+            self.wire_down_bytes,
+            self.bytes_per_worker,
+            self.scalars_per_worker,
+            self.fn_evals,
+            self.grad_evals,
+        )
+    }
+
+    fn checksum(&self) -> u64 {
+        fnv1a(self.canonical().as_bytes())
+    }
+
+    /// One manifest line (compact JSON, checksum included). The exact
+    /// losses travel as hex bits (what the loader reads); the readable
+    /// `final_loss` duplicate is null when non-finite — `Json` would
+    /// otherwise emit a bare `NaN`/`inf` token, which is not JSON, and a
+    /// single diverged run would poison every later `--resume` load.
+    pub fn to_json(&self) -> Json {
+        let fin = |x: f64| if x.is_finite() { Json::num(x) } else { Json::Null };
+        Json::obj(vec![
+            ("fingerprint", Json::str(format!("{:016x}", self.fingerprint))),
+            ("label", Json::str(self.label.clone())),
+            ("method", Json::str(self.method.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("dim", Json::num(self.dim as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            ("final_loss", fin(self.final_loss)),
+            ("final_loss_bits", Json::str(format!("{:016x}", self.final_loss.to_bits()))),
+            ("best_loss_bits", Json::str(format!("{:016x}", self.best_loss.to_bits()))),
+            ("final_acc", self.final_acc.map_or(Json::Null, fin)),
+            ("wire_up_bytes", Json::num(self.wire_up_bytes as f64)),
+            ("wire_down_bytes", Json::num(self.wire_down_bytes as f64)),
+            ("bytes_per_worker", Json::num(self.bytes_per_worker as f64)),
+            ("scalars_per_worker", Json::num(self.scalars_per_worker as f64)),
+            ("fn_evals", Json::num(self.fn_evals as f64)),
+            ("grad_evals", Json::num(self.grad_evals as f64)),
+            ("comm_s", Json::num(self.comm_s)),
+            ("compute_s", Json::num(self.compute_s)),
+            ("checksum", Json::str(format!("{:016x}", self.checksum()))),
+        ])
+    }
+
+    /// Parse one manifest line and verify its checksum.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let hex = |key: &str| -> Result<u64> {
+            let s = v.req(key)?.as_str().ok_or_else(|| anyhow!("{key} must be a hex string"))?;
+            u64::from_str_radix(s, 16).with_context(|| format!("parsing {key} {s:?}"))
+        };
+        let num = |key: &str| -> Result<f64> {
+            v.req(key)?.as_f64().ok_or_else(|| anyhow!("{key} must be a number"))
+        };
+        let st = |key: &str| -> Result<String> {
+            Ok(v.req(key)?.as_str().ok_or_else(|| anyhow!("{key} must be a string"))?.to_string())
+        };
+        let row = Self {
+            fingerprint: hex("fingerprint")?,
+            label: st("label")?,
+            method: st("method")?,
+            dataset: st("dataset")?,
+            dim: num("dim")? as usize,
+            batch: num("batch")? as usize,
+            workers: num("workers")? as usize,
+            tau: num("tau")? as usize,
+            seed: num("seed")? as u64,
+            iters: num("iters")? as u64,
+            final_loss: f64::from_bits(hex("final_loss_bits")?),
+            best_loss: f64::from_bits(hex("best_loss_bits")?),
+            final_acc: match v.req("final_acc")? {
+                Json::Null => None,
+                other => {
+                    Some(other.as_f64().ok_or_else(|| anyhow!("final_acc must be a number"))?)
+                }
+            },
+            wire_up_bytes: num("wire_up_bytes")? as u64,
+            wire_down_bytes: num("wire_down_bytes")? as u64,
+            bytes_per_worker: num("bytes_per_worker")? as u64,
+            scalars_per_worker: num("scalars_per_worker")? as u64,
+            fn_evals: num("fn_evals")? as u64,
+            grad_evals: num("grad_evals")? as u64,
+            comm_s: num("comm_s")?,
+            compute_s: num("compute_s")?,
+        };
+        let stored = hex("checksum")?;
+        if stored != row.checksum() {
+            bail!("manifest row {:?} fails its checksum (corrupt or hand-edited)", row.label);
+        }
+        Ok(row)
+    }
+}
+
+/// A loaded manifest: rows indexed by `(fingerprint, label)`.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    rows: BTreeMap<(u64, String), ManifestRow>,
+}
+
+impl Manifest {
+    /// Load a JSONL manifest; a missing file is an empty manifest. Rows
+    /// that fail to parse or verify abort the load — a resumed sweep must
+    /// never silently trust a damaged manifest.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut m = Self::default();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(m),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        for (k, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .with_context(|| format!("{}:{}: not JSON", path.display(), k + 1))?;
+            let row = ManifestRow::from_json(&v)
+                .with_context(|| format!("{}:{}", path.display(), k + 1))?;
+            m.rows.insert((row.fingerprint, row.label.clone()), row);
+        }
+        Ok(m)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Look up a completed run by its fingerprint + spec label.
+    pub fn get(&self, fingerprint: u64, label: &str) -> Option<&ManifestRow> {
+        self.rows.get(&(fingerprint, label.to_string()))
+    }
+}
+
+/// Append-only manifest writer (one JSONL line per completed run, flushed
+/// immediately so an interrupted sweep keeps everything it finished).
+pub struct ManifestWriter {
+    out: BufWriter<File>,
+}
+
+impl ManifestWriter {
+    /// Open for appending (`resume`) or truncate and start fresh.
+    pub fn open(path: impl AsRef<Path>, resume: bool) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(resume)
+            .write(true)
+            .truncate(!resume)
+            .open(path)
+            .with_context(|| format!("opening manifest {}", path.display()))?;
+        Ok(Self { out: BufWriter::new(file) })
+    }
+
+    pub fn append(&mut self, row: &ManifestRow) -> Result<()> {
+        writeln!(self.out, "{}", row.to_json().compact()).context("appending manifest row")?;
+        self.out.flush().context("flushing manifest")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TraceRow;
+
+    fn trace() -> Trace {
+        Trace {
+            method: "ho_sgd".into(),
+            dataset: "quickstart".into(),
+            dim: 499,
+            workers: 4,
+            batch: 8,
+            tau: 4,
+            seed: 7,
+            rows: vec![
+                TraceRow {
+                    iter: 0,
+                    train_loss: 2.0,
+                    test_acc: None,
+                    compute_s: 0.1,
+                    comm_s: 0.01,
+                    total_s: 0.11,
+                    bytes_per_worker: 100,
+                    scalars_per_worker: 30,
+                    wire_up_bytes: 58,
+                    wire_down_bytes: 400,
+                    fn_evals: 16,
+                    grad_evals: 0,
+                },
+                TraceRow {
+                    iter: 7,
+                    train_loss: 1.25,
+                    test_acc: Some(0.75),
+                    compute_s: 0.4,
+                    comm_s: 0.04,
+                    total_s: 0.44,
+                    bytes_per_worker: 900,
+                    scalars_per_worker: 260,
+                    wire_up_bytes: 2221,
+                    wire_down_bytes: 3200,
+                    fn_evals: 112,
+                    grad_evals: 64,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn row_roundtrips_exactly_through_jsonl() {
+        let row = ManifestRow::from_trace("method=ho_sgd,tau=4", 0xDEAD_BEEF, &trace()).unwrap();
+        assert_eq!(row.iters, 8);
+        assert_eq!(row.best_loss.to_bits(), 1.25f64.to_bits());
+        let back = ManifestRow::from_json(&Json::parse(&row.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(back, row);
+        assert_eq!(back.final_loss.to_bits(), row.final_loss.to_bits());
+    }
+
+    #[test]
+    fn checksum_catches_tampering() {
+        let row = ManifestRow::from_trace("l", 1, &trace()).unwrap();
+        let line = row.to_json().compact();
+        let tampered = line.replace("\"wire_up_bytes\":2221", "\"wire_up_bytes\":2222");
+        assert_ne!(line, tampered);
+        let err = ManifestRow::from_json(&Json::parse(&tampered).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn writer_then_loader_roundtrip_and_resume_append() {
+        let dir = std::env::temp_dir().join("hosgd_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.jsonl");
+        let a = ManifestRow::from_trace("a", 1, &trace()).unwrap();
+        let b = ManifestRow::from_trace("b", 2, &trace()).unwrap();
+        {
+            let mut w = ManifestWriter::open(&path, false).unwrap();
+            w.append(&a).unwrap();
+        }
+        {
+            // resume = append, not truncate
+            let mut w = ManifestWriter::open(&path, true).unwrap();
+            w.append(&b).unwrap();
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(1, "a").unwrap(), &a);
+        assert_eq!(m.get(2, "b").unwrap(), &b);
+        assert!(m.get(1, "b").is_none());
+        // fresh open truncates
+        {
+            let mut w = ManifestWriter::open(&path, false).unwrap();
+            w.append(&b).unwrap();
+        }
+        assert_eq!(Manifest::load(&path).unwrap().len(), 1);
+        // missing file is empty, damaged file is loud
+        assert!(Manifest::load(dir.join("absent.jsonl")).unwrap().is_empty());
+        std::fs::write(&path, "{ not json\n").unwrap();
+        assert!(Manifest::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

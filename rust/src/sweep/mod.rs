@@ -1,0 +1,43 @@
+//! The experiment-plan subsystem: declarative sweeps over the paper's
+//! whole (method, dataset, τ, m, lr, seed, …) tradeoff space, executed in
+//! parallel, resumable, and analyzed into Pareto tradeoff reports.
+//!
+//! The paper's headline claim is a three-way *balance* — communication
+//! overhead vs computational complexity vs convergence rate. This module
+//! turns that claim into a measurable surface:
+//!
+//! * [`plan`] — [`ExperimentPlan`]: a JSON document (or builder) naming a
+//!   base [`crate::config::TrainConfig`] plus axes, filters and
+//!   conditional overrides, expanded cartesianly into [`RunSpec`]s;
+//! * [`exec`] — the parallel executor: each spec runs as a fully private
+//!   [`crate::coordinator::Session`] (bit-identical to the standalone
+//!   `hosgd train` invocation), many in flight at once; with
+//!   `--workers-at`, runs are multiplexed across `hosgd worker` TCP
+//!   daemons (one daemon per in-flight run, hosting all its ranks);
+//! * [`manifest`] — the resumable on-disk results manifest: JSONL keyed
+//!   by the v2-checkpoint [`crate::coordinator::run_fingerprint`], each
+//!   row checksummed; `--resume` skips verified completed runs;
+//! * [`pareto`] — the analysis layer: Pareto frontier over measured
+//!   (wire bytes, normalized compute, final loss), CSV/JSON artifacts,
+//!   ASCII frontier charts, and measured-vs-analytic deltas against
+//!   [`crate::theory::table1_row`];
+//! * [`presets`] — `fig2`, `sweep-workers`, `sweep-mu`, `ablate-tau`,
+//!   `ablate-ef` and `e2e` as thin plan presets, so figure reproduction
+//!   goes through this one code path;
+//! * [`report`] — shared trace-CSV → plot-series loading for the
+//!   terminal figure reports.
+//!
+//! CLI entry point: `hosgd sweep --plan FILE [--resume] [--parallel N]
+//! [--workers-at h:p,...]`; gated end-to-end by `rust/tests/sweep.rs`.
+
+pub mod exec;
+pub mod manifest;
+pub mod pareto;
+pub mod plan;
+pub mod presets;
+pub mod report;
+
+pub use exec::{execute, ExecOpts, SweepOutcome};
+pub use manifest::{Manifest, ManifestRow};
+pub use pareto::{build_report, pareto_frontier, Objectives, ParetoReport, TheoryDelta};
+pub use plan::{ExperimentPlan, RunSpec};

@@ -1,0 +1,461 @@
+//! The tradeoff analysis layer: Pareto frontiers over the measured
+//! (communication, computation, convergence) axes — the paper's
+//! three-way balance as data — plus measured-vs-analytic deltas against
+//! the closed-form Table 1 rows in [`crate::theory`].
+//!
+//! Objectives are all minimized: total measured wire bytes (up + down,
+//! real `HOSGDW1` frame sizes), normalized computational load per
+//! iteration per worker (SFO-equivalents: `grad + fn/d`, divided by
+//! `N·m·B`), and the final training loss. A run is on the frontier iff no
+//! other run is at least as good on every axis and strictly better on
+//! one.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::metrics::ComputeCounters;
+use crate::sweep::manifest::ManifestRow;
+use crate::sweep::plan::RunSpec;
+use crate::theory::{table1_row, Table1Params};
+use crate::util::json::Json;
+use crate::util::plot::{render, PlotCfg, Series};
+
+/// The three minimized axes of one run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// measured wire bytes, up + down, over the whole run
+    pub wire_bytes: u64,
+    /// per-iteration per-worker normalized computational load
+    /// (Table 1 units: one minibatch FO gradient = 1.0)
+    pub norm_compute: f64,
+    /// final training loss
+    pub loss: f64,
+}
+
+/// Extract the objective triple from a manifest row. The SFO-equivalence
+/// conversion is [`ComputeCounters::normalized_load`] — one definition of
+/// the Table 1 unit shared with the metrics/theory layer.
+pub fn objectives(row: &ManifestRow) -> Objectives {
+    let iters = (row.iters as f64).max(1.0);
+    let m = row.workers as f64;
+    let b = row.batch as f64;
+    let counters = ComputeCounters { fn_evals: row.fn_evals, grad_evals: row.grad_evals };
+    Objectives {
+        wire_bytes: row.wire_up_bytes + row.wire_down_bytes,
+        norm_compute: counters.normalized_load(row.dim) / (iters * m * b),
+        loss: row.final_loss,
+    }
+}
+
+/// `a` dominates `b`: at least as good everywhere, strictly better
+/// somewhere. A NaN loss never dominates (every comparison is false).
+fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let le = a.wire_bytes <= b.wire_bytes && a.norm_compute <= b.norm_compute && a.loss <= b.loss;
+    let lt = a.wire_bytes < b.wire_bytes || a.norm_compute < b.norm_compute || a.loss < b.loss;
+    le && lt
+}
+
+/// Pareto mask: `true` at index `i` iff point `i` has a finite loss and
+/// no other point dominates it (minimizing all three objectives). A run
+/// whose loss diverged to NaN/inf is never on the frontier — NaN
+/// compares false against everything, so without the finiteness gate a
+/// diverged run would be undominatable and always "optimal".
+pub fn pareto_frontier(points: &[Objectives]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|p| p.loss.is_finite() && !points.iter().any(|q| dominates(q, p)))
+        .collect()
+}
+
+/// Measured-vs-analytic comparison against the Table 1 row of the run's
+/// method at its exact `(d, m, N, τ, μ_r, s)` parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TheoryDelta {
+    /// Table 1 col. 3: scalars per worker per iteration, analytic
+    pub analytic_scalars_per_iter: f64,
+    pub measured_scalars_per_iter: f64,
+    /// Table 1 col. 4: normalized computational load, analytic
+    pub analytic_norm_compute: f64,
+    pub measured_norm_compute: f64,
+}
+
+impl TheoryDelta {
+    /// measured / analytic communication (1.0 = the implementation moves
+    /// exactly what the table prices)
+    pub fn comm_ratio(&self) -> f64 {
+        self.measured_scalars_per_iter / self.analytic_scalars_per_iter
+    }
+
+    /// measured / analytic compute
+    pub fn compute_ratio(&self) -> f64 {
+        self.measured_norm_compute / self.analytic_norm_compute
+    }
+}
+
+/// Compute the analytic row for `cfg` at the measured dimensions and
+/// compare.
+pub fn theory_delta(cfg: &TrainConfig, row: &ManifestRow) -> TheoryDelta {
+    let p = Table1Params {
+        d: row.dim,
+        m: row.workers,
+        n: row.iters,
+        tau: row.tau,
+        redundancy: cfg.redundancy,
+        s: cfg.qsgd_levels,
+    };
+    let analytic = table1_row(cfg.method, p);
+    let obj = objectives(row);
+    TheoryDelta {
+        analytic_scalars_per_iter: analytic.comm_scalars_per_iter,
+        measured_scalars_per_iter: row.scalars_per_worker as f64 / (row.iters as f64).max(1.0),
+        analytic_norm_compute: analytic.normalized_compute,
+        measured_norm_compute: obj.norm_compute,
+    }
+}
+
+/// One run in the report: its manifest row joined with the objectives,
+/// frontier membership and theory deltas.
+#[derive(Debug, Clone)]
+pub struct ReportEntry {
+    pub row: ManifestRow,
+    pub obj: Objectives,
+    pub on_frontier: bool,
+    pub delta: TheoryDelta,
+}
+
+/// The full Pareto tradeoff report over a finished (or resumed) sweep.
+#[derive(Debug, Clone)]
+pub struct ParetoReport {
+    pub name: String,
+    pub entries: Vec<ReportEntry>,
+}
+
+/// Join specs with their manifest rows (same order/length) into a report.
+pub fn build_report(name: &str, specs: &[RunSpec], rows: &[ManifestRow]) -> Result<ParetoReport> {
+    if specs.len() != rows.len() {
+        return Err(anyhow!(
+            "report wants one row per spec ({} specs, {} rows)",
+            specs.len(),
+            rows.len()
+        ));
+    }
+    let objs: Vec<Objectives> = rows.iter().map(objectives).collect();
+    let mask = pareto_frontier(&objs);
+    let entries = specs
+        .iter()
+        .zip(rows)
+        .zip(objs.into_iter().zip(mask))
+        .map(|((spec, row), (obj, on_frontier))| ReportEntry {
+            row: row.clone(),
+            obj,
+            on_frontier,
+            delta: theory_delta(&spec.cfg, row),
+        })
+        .collect();
+    Ok(ParetoReport { name: name.to_string(), entries })
+}
+
+impl ParetoReport {
+    /// The runs on the frontier, in report order.
+    pub fn frontier(&self) -> Vec<&ReportEntry> {
+        self.entries.iter().filter(|e| e.on_frontier).collect()
+    }
+
+    const CSV_HEADER: &str = "label,method,dataset,tau,workers,seed,iters,dim,\
+         final_loss,best_loss,final_acc,wire_up_bytes,wire_down_bytes,wire_bytes,\
+         scalars_per_worker,bytes_per_worker,fn_evals,grad_evals,norm_compute,on_frontier,\
+         analytic_scalars_per_iter,measured_scalars_per_iter,comm_ratio,\
+         analytic_norm_compute,measured_norm_compute,compute_ratio";
+
+    /// CSV artifact: one row per run, objectives + frontier membership +
+    /// theory deltas.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(Self::CSV_HEADER);
+        out.push('\n');
+        for e in &self.entries {
+            let r = &e.row;
+            // labels carry commas (`method=ho_sgd,tau=2`) — CSV-quote them
+            let label = format!("\"{}\"", r.label.replace('"', "\"\""));
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{:.6},{:.6},{},{},{},{},{},{},{},{},{:.6e},{},\
+                 {:.6},{:.6},{:.4},{:.6e},{:.6e},{:.4}\n",
+                label,
+                r.method,
+                r.dataset,
+                r.tau,
+                r.workers,
+                r.seed,
+                r.iters,
+                r.dim,
+                r.final_loss,
+                r.best_loss,
+                r.final_acc.map_or(String::new(), |a| format!("{a:.5}")),
+                r.wire_up_bytes,
+                r.wire_down_bytes,
+                e.obj.wire_bytes,
+                r.scalars_per_worker,
+                r.bytes_per_worker,
+                r.fn_evals,
+                r.grad_evals,
+                e.obj.norm_compute,
+                e.on_frontier,
+                e.delta.analytic_scalars_per_iter,
+                e.delta.measured_scalars_per_iter,
+                e.delta.comm_ratio(),
+                e.delta.analytic_norm_compute,
+                e.delta.measured_norm_compute,
+                e.delta.compute_ratio(),
+            ));
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("run", e.row.to_json()),
+                    (
+                        "objectives",
+                        Json::obj(vec![
+                            ("wire_bytes", Json::num(e.obj.wire_bytes as f64)),
+                            ("norm_compute", Json::num(e.obj.norm_compute)),
+                            // a diverged loss must not emit a bare NaN
+                            // token (invalid JSON); exact bits live in
+                            // the run row
+                            (
+                                "final_loss",
+                                if e.obj.loss.is_finite() {
+                                    Json::num(e.obj.loss)
+                                } else {
+                                    Json::Null
+                                },
+                            ),
+                        ]),
+                    ),
+                    ("on_frontier", Json::Bool(e.on_frontier)),
+                    (
+                        "theory_delta",
+                        Json::obj(vec![
+                            (
+                                "analytic_scalars_per_iter",
+                                Json::num(e.delta.analytic_scalars_per_iter),
+                            ),
+                            (
+                                "measured_scalars_per_iter",
+                                Json::num(e.delta.measured_scalars_per_iter),
+                            ),
+                            ("comm_ratio", Json::num(e.delta.comm_ratio())),
+                            ("analytic_norm_compute", Json::num(e.delta.analytic_norm_compute)),
+                            ("measured_norm_compute", Json::num(e.delta.measured_norm_compute)),
+                            ("compute_ratio", Json::num(e.delta.compute_ratio())),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("plan", Json::str(self.name.clone())),
+            (
+                "frontier",
+                Json::Arr(self.frontier().iter().map(|e| Json::str(e.row.label.clone())).collect()),
+            ),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// ASCII scatter of the communication/convergence plane: x =
+    /// log10(wire bytes), y = final loss. Frontier points are plotted as
+    /// their own (first, so overlap-visible) series.
+    pub fn frontier_chart(&self) -> String {
+        self.scatter_chart(
+            "Pareto tradeoff: measured wire bytes vs final loss",
+            "log10(wire bytes)",
+            |e| (e.obj.wire_bytes as f64).max(1.0).log10(),
+        )
+    }
+
+    /// ASCII scatter of the computation/convergence plane: x =
+    /// log10(normalized compute), y = final loss.
+    pub fn compute_chart(&self) -> String {
+        self.scatter_chart(
+            "Pareto tradeoff: normalized compute vs final loss",
+            "log10(norm compute)",
+            |e| e.obj.norm_compute.max(1e-12).log10(),
+        )
+    }
+
+    fn scatter_chart(&self, title: &str, x_label: &str, x: impl Fn(&ReportEntry) -> f64) -> String {
+        let split = |on: bool| -> Vec<(f64, f64)> {
+            self.entries
+                .iter()
+                .filter(|e| e.on_frontier == on)
+                .map(|e| (x(e), e.obj.loss))
+                .collect()
+        };
+        let mut series =
+            vec![Series { name: "pareto frontier".into(), points: split(true) }];
+        let dominated = split(false);
+        if !dominated.is_empty() {
+            series.push(Series { name: "dominated".into(), points: dominated });
+        }
+        let cfg = PlotCfg {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: "final loss".into(),
+            ..Default::default()
+        };
+        render(&series, &cfg)
+    }
+
+    /// Formatted measured-vs-analytic Table 1 delta table.
+    pub fn delta_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<34} {:>14} {:>14} {:>7}  {:>13} {:>13} {:>7}\n",
+            "RUN", "SCALARS/IT", "(analytic)", "ratio", "NORM.COMPUTE", "(analytic)", "ratio"
+        ));
+        for e in &self.entries {
+            let d = &e.delta;
+            out.push_str(&format!(
+                "{:<34} {:>14.3} {:>14.3} {:>7.3}  {:>13.5} {:>13.5} {:>7.3}\n",
+                truncate(&e.row.label, 34),
+                d.measured_scalars_per_iter,
+                d.analytic_scalars_per_iter,
+                d.comm_ratio(),
+                d.measured_norm_compute,
+                d.analytic_norm_compute,
+                d.compute_ratio(),
+            ));
+        }
+        out
+    }
+
+    /// Per-run summary table (what the ported preset subcommands print).
+    pub fn summary_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<34} {:>11} {:>11} {:>7} {:>13} {:>12} {:>8}\n",
+            "RUN", "FINAL LOSS", "BEST LOSS", "ACC", "WIRE UP/DOWN", "SCALARS/IT", "PARETO"
+        ));
+        for e in &self.entries {
+            let r = &e.row;
+            out.push_str(&format!(
+                "{:<34} {:>11.4} {:>11.4} {:>7} {:>13} {:>12.2} {:>8}\n",
+                truncate(&r.label, 34),
+                r.final_loss,
+                r.best_loss,
+                r.final_acc.map_or("n/a".into(), |a| format!("{a:.3}")),
+                format!("{}/{}", human_bytes(r.wire_up_bytes), human_bytes(r.wire_down_bytes)),
+                e.delta.measured_scalars_per_iter,
+                if e.on_frontier { "*" } else { "" },
+            ));
+        }
+        out
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(n.saturating_sub(1)).collect();
+        format!("{cut}…")
+    }
+}
+
+fn human_bytes(b: u64) -> String {
+    if b >= 10_000_000 {
+        format!("{:.1}M", b as f64 / 1e6)
+    } else if b >= 10_000 {
+        format!("{:.1}K", b as f64 / 1e3)
+    } else {
+        b.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(w: u64, c: f64, l: f64) -> Objectives {
+        Objectives { wire_bytes: w, norm_compute: c, loss: l }
+    }
+
+    #[test]
+    fn frontier_on_synthetic_points() {
+        // a: cheap comm, high loss — frontier
+        // b: expensive comm, low loss — frontier
+        // c: dominated by a on every axis
+        // d: middle ground, not dominated — frontier
+        let pts = [
+            obj(100, 0.1, 2.0),
+            obj(10_000, 1.0, 0.5),
+            obj(200, 0.2, 2.5),
+            obj(1_000, 0.05, 1.0),
+        ];
+        let mask = pareto_frontier(&pts);
+        assert_eq!(mask, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn equal_points_are_both_on_the_frontier() {
+        // neither strictly improves on the other, so neither dominates
+        let pts = [obj(5, 1.0, 1.0), obj(5, 1.0, 1.0)];
+        assert_eq!(pareto_frontier(&pts), vec![true, true]);
+    }
+
+    #[test]
+    fn single_point_is_the_frontier() {
+        assert_eq!(pareto_frontier(&[obj(1, 1.0, 1.0)]), vec![true]);
+    }
+
+    #[test]
+    fn diverged_runs_never_reach_the_frontier() {
+        // NaN compares false against everything, so without the explicit
+        // finiteness gate a diverged run would be undominatable
+        let pts = [obj(1, 0.1, f64::NAN), obj(100, 1.0, 2.0), obj(50, 0.5, f64::INFINITY)];
+        assert_eq!(pareto_frontier(&pts), vec![false, true, false]);
+        // even alone, a NaN run is not "optimal"
+        assert_eq!(pareto_frontier(&[obj(1, 1.0, f64::NAN)]), vec![false]);
+    }
+
+    #[test]
+    fn domination_needs_strict_improvement_somewhere() {
+        let a = obj(10, 1.0, 1.0);
+        let b = obj(10, 1.0, 2.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a));
+    }
+
+    #[test]
+    fn truncate_is_utf8_safe() {
+        assert_eq!(truncate("short", 10), "short");
+        let t = truncate("a-very-long-label-indeed", 10);
+        assert!(t.chars().count() <= 10);
+        assert!(t.ends_with('…'));
+    }
+}

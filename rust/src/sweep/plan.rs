@@ -1,0 +1,486 @@
+//! Declarative experiment plans: a JSON document naming a base
+//! [`TrainConfig`] plus *axes* to sweep, expanded cartesianly into
+//! concrete [`RunSpec`]s with per-combination filters and overrides.
+//!
+//! ```json
+//! {
+//!   "name": "tau-vs-method",
+//!   "base": { "dataset": "quickstart", "iters": 60, "eval_every": 0 },
+//!   "axes": [
+//!     { "key": "method", "values": ["ho_sgd", "sync_sgd", "zo_sgd"] },
+//!     { "key": "tau",    "values": [2, 8] }
+//!   ],
+//!   "filters":   [ { "method": "sync_sgd", "tau": 8 } ],
+//!   "overrides": [ { "when": { "method": "zo_sgd" }, "set": { "lr": 0.005 } } ],
+//!   "write_traces": false
+//! }
+//! ```
+//!
+//! Expansion is deterministic: axes vary in declared order with the last
+//! axis fastest, a combination matching any `filters` entry is dropped,
+//! and every matching `overrides` entry is applied (in declared order)
+//! after the axis values. Axis/override keys are the *scalar*
+//! [`TrainConfig`] JSON keys plus the CLI shorthands (`lr`, `fault_drop`,
+//! `fault_latency`, `fault_seed`); the structured `network`/`fault`/
+//! `workers_at` blocks are base-only (fault scenarios sweep through the
+//! `fault_*` shorthands). Unknown keys are rejected loudly so plan typos
+//! cannot silently sweep nothing.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{StepSize, TrainConfig};
+use crate::util::json::Json;
+
+/// One sweep dimension: a knob name and the values it takes.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<Json>,
+}
+
+/// A conjunctive predicate over axis assignments: every `(key, value)`
+/// pair must equal the combination's assigned value.
+pub type Match = Vec<(String, Json)>;
+
+/// Conditional knob overrides applied to matching combinations.
+#[derive(Debug, Clone)]
+pub struct Override {
+    pub when: Match,
+    pub set: Vec<(String, Json)>,
+}
+
+/// One concrete run the executor will drive: the expanded configuration,
+/// the axis assignment it came from, and an optional trace-CSV name
+/// (relative to the result directory).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// human/manifest label, e.g. `method=ho_sgd,tau=2`
+    pub label: String,
+    /// axis key → assigned value, in declared axis order
+    pub assignment: Vec<(String, Json)>,
+    pub cfg: TrainConfig,
+    /// write the run's trace CSV to this file under the result directory
+    pub trace_csv: Option<String>,
+}
+
+/// A declarative sweep: base config + axes + filters + overrides.
+#[derive(Debug, Clone)]
+pub struct ExperimentPlan {
+    pub name: String,
+    pub base: TrainConfig,
+    pub axes: Vec<Axis>,
+    pub filters: Vec<Match>,
+    pub overrides: Vec<Override>,
+    /// emit a per-run trace CSV named `{name}_{label}.csv` (presets
+    /// override the name per spec after expansion)
+    pub write_traces: bool,
+}
+
+/// The plan/axis keys `apply_knob` understands beyond the raw
+/// `TrainConfig::from_json` schema.
+const SHORTHAND_KEYS: [&str; 4] = ["lr", "fault_drop", "fault_latency", "fault_seed"];
+
+/// May `key` appear in a plan `base` object? The `TrainConfig` JSON
+/// schema ([`TrainConfig::JSON_KEYS`], kept next to `from_json`) plus
+/// the shorthands.
+fn is_base_key(key: &str) -> bool {
+    TrainConfig::JSON_KEYS.contains(&key) || SHORTHAND_KEYS.contains(&key)
+}
+
+/// Apply one swept knob to a config. Axis values arrive as plan JSON;
+/// numeric knobs accept JSON numbers, `method`/`dataset` strings, and the
+/// shorthands map onto their structured fields (`lr` → constant step,
+/// `fault_*` → the loopback fault plan).
+pub fn apply_knob(cfg: &mut TrainConfig, key: &str, v: &Json) -> Result<()> {
+    let num = |v: &Json| {
+        v.as_f64().ok_or_else(|| anyhow!("axis {key:?}: expected a number, got {}", v.compact()))
+    };
+    let st = |v: &Json| {
+        v.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("axis {key:?}: expected a string, got {}", v.compact()))
+    };
+    match key {
+        "method" => cfg.method = st(v)?.parse()?,
+        "backend" => cfg.backend = st(v)?.parse()?,
+        "dataset" => cfg.dataset = st(v)?,
+        "iters" => cfg.iters = num(v)? as u64,
+        "workers" => cfg.workers = num(v)? as usize,
+        "tau" => cfg.tau = num(v)? as usize,
+        "mu" => cfg.mu = Some(num(v)?),
+        "lr" => cfg.step = StepSize::Constant { alpha: num(v)? },
+        "step" => cfg.step = StepSize::from_json(v)?,
+        "seed" => cfg.seed = num(v)? as u64,
+        "eval_every" => cfg.eval_every = num(v)? as u64,
+        "record_every" => cfg.record_every = num(v)? as u64,
+        "checkpoint_every" => cfg.checkpoint_every = num(v)? as u64,
+        "train_size" => cfg.train_size = num(v)? as usize,
+        "test_size" => cfg.test_size = num(v)? as usize,
+        "redundancy" => cfg.redundancy = num(v)?,
+        "svrg_epoch" => cfg.svrg_epoch = num(v)? as usize,
+        "svrg_probes" => cfg.svrg_probes = num(v)? as usize,
+        "qsgd_levels" => cfg.qsgd_levels = num(v)? as u32,
+        "qsgd_error_feedback" => {
+            cfg.qsgd_error_feedback = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("axis {key:?}: expected a bool, got {}", v.compact()))?
+        }
+        "momentum" => cfg.momentum = num(v)?,
+        "threads" => cfg.threads = num(v)? as usize,
+        "fault_drop" => cfg.transport.fault.drop_prob = num(v)?,
+        "fault_seed" => cfg.transport.fault.seed = num(v)? as u64,
+        "fault_latency" => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("axis {key:?}: expected an array of seconds"))?;
+            cfg.transport.fault.latency_s = arr
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow!("fault_latency entries must be numbers")))
+                .collect::<Result<_>>()?;
+        }
+        other => bail!(
+            "unknown plan knob {other:?} (the scalar TrainConfig JSON keys plus \
+             {SHORTHAND_KEYS:?} are sweepable; network/fault/workers_at are base-only)"
+        ),
+    }
+    Ok(())
+}
+
+/// Render an axis value for labels/file names (`ho_sgd`, `8`, `0.005`).
+pub fn format_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.compact(),
+    }
+}
+
+fn parse_match(v: &Json, axes: &[Axis], what: &str) -> Result<Match> {
+    let obj = v.as_obj().ok_or_else(|| anyhow!("{what} entries must be objects"))?;
+    let mut m = Vec::new();
+    for (k, val) in obj {
+        if !axes.iter().any(|a| &a.key == k) {
+            bail!("{what} references {k:?}, which is not a declared axis");
+        }
+        m.push((k.clone(), val.clone()));
+    }
+    Ok(m)
+}
+
+fn matches(m: &Match, assignment: &[(String, Json)]) -> bool {
+    m.iter().all(|(k, v)| assignment.iter().any(|(ak, av)| ak == k && av == v))
+}
+
+impl ExperimentPlan {
+    /// A plan with no axes (expands to the single `base` run).
+    pub fn new(name: impl Into<String>, base: TrainConfig) -> Self {
+        Self {
+            name: name.into(),
+            base,
+            axes: Vec::new(),
+            filters: Vec::new(),
+            overrides: Vec::new(),
+            write_traces: false,
+        }
+    }
+
+    /// Builder: append one sweep axis.
+    pub fn with_axis(mut self, key: impl Into<String>, values: Vec<Json>) -> Self {
+        self.axes.push(Axis { key: key.into(), values });
+        self
+    }
+
+    /// Builder: append one conditional override.
+    pub fn with_override(mut self, when: Match, set: Vec<(String, Json)>) -> Self {
+        self.overrides.push(Override { when, set });
+        self
+    }
+
+    /// Parse a plan document (see the module docs for the schema).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("plan \"name\" must be a string"))?
+            .to_string();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || "-_".contains(c)) {
+            bail!("plan name {name:?} must be non-empty [A-Za-z0-9_-] (it names artifacts)");
+        }
+        let base_json = v.get("base").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        let base_obj =
+            base_json.as_obj().ok_or_else(|| anyhow!("plan \"base\" must be an object"))?;
+        for key in base_obj.keys() {
+            if !is_base_key(key) {
+                bail!("unknown key {key:?} in plan base");
+            }
+        }
+        let mut base = TrainConfig::from_json(&base_json).context("parsing plan base")?;
+        // shorthands TrainConfig::from_json does not know
+        for key in SHORTHAND_KEYS {
+            if let Some(val) = base_json.get(key) {
+                apply_knob(&mut base, key, val).context("applying plan base shorthand")?;
+            }
+        }
+
+        let mut axes = Vec::new();
+        if let Some(list) = v.get("axes") {
+            let list = list.as_arr().ok_or_else(|| anyhow!("plan \"axes\" must be an array"))?;
+            for a in list {
+                let key = a
+                    .req("key")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("axis \"key\" must be a string"))?
+                    .to_string();
+                let values = a
+                    .req("values")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("axis {key:?} \"values\" must be an array"))?
+                    .to_vec();
+                if values.is_empty() {
+                    bail!("axis {key:?} has no values");
+                }
+                if axes.iter().any(|x: &Axis| x.key == key) {
+                    bail!("axis {key:?} is declared twice");
+                }
+                // validate the key early against a throwaway config
+                let mut probe = base.clone();
+                apply_knob(&mut probe, &key, &values[0])
+                    .with_context(|| format!("validating axis {key:?}"))?;
+                axes.push(Axis { key, values });
+            }
+        }
+
+        let mut filters = Vec::new();
+        if let Some(list) = v.get("filters") {
+            let list = list.as_arr().ok_or_else(|| anyhow!("plan \"filters\" must be an array"))?;
+            for f in list {
+                filters.push(parse_match(f, &axes, "filter")?);
+            }
+        }
+        let mut overrides = Vec::new();
+        if let Some(list) = v.get("overrides") {
+            let list =
+                list.as_arr().ok_or_else(|| anyhow!("plan \"overrides\" must be an array"))?;
+            for o in list {
+                let when = parse_match(o.req("when")?, &axes, "override \"when\"")?;
+                let set_obj = o
+                    .req("set")?
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("override \"set\" must be an object"))?;
+                let set: Vec<(String, Json)> =
+                    set_obj.iter().map(|(k, val)| (k.clone(), val.clone())).collect();
+                overrides.push(Override { when, set });
+            }
+        }
+        let write_traces = v.get("write_traces").and_then(Json::as_bool).unwrap_or(false);
+        Ok(Self { name, base, axes, filters, overrides, write_traces })
+    }
+
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing plan {}", path.display()))?;
+        Self::from_json(&v).with_context(|| format!("in plan {}", path.display()))
+    }
+
+    /// Expand into concrete runs: the cartesian product of the axes in
+    /// declared order (last axis fastest), minus filtered combinations,
+    /// with matching overrides applied. Every produced config is
+    /// validated; an empty axis (reachable through the builder, e.g. an
+    /// empty CLI list) and an empty expansion (everything filtered) are
+    /// errors.
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        if let Some(empty) = self.axes.iter().find(|a| a.values.is_empty()) {
+            bail!("axis {:?} has no values", empty.key);
+        }
+        let mut specs = Vec::new();
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            let assignment: Vec<(String, Json)> = self
+                .axes
+                .iter()
+                .zip(&idx)
+                .map(|(a, &i)| (a.key.clone(), a.values[i].clone()))
+                .collect();
+            if !self.filters.iter().any(|f| matches(f, &assignment)) {
+                let label = if assignment.is_empty() {
+                    self.name.clone()
+                } else {
+                    assignment
+                        .iter()
+                        .map(|(k, v)| format!("{k}={}", format_value(v)))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                };
+                let mut cfg = self.base.clone();
+                for (k, v) in &assignment {
+                    apply_knob(&mut cfg, k, v).with_context(|| format!("expanding {label}"))?;
+                }
+                for ov in &self.overrides {
+                    if matches(&ov.when, &assignment) {
+                        for (k, v) in &ov.set {
+                            apply_knob(&mut cfg, k, v)
+                                .with_context(|| format!("override on {label}"))?;
+                        }
+                    }
+                }
+                cfg.validate().with_context(|| format!("expanded run {label} is invalid"))?;
+                let trace_csv = self.write_traces.then(|| {
+                    let keep = |c: char| c.is_ascii_alphanumeric() || "-_.".contains(c);
+                    let safe: String =
+                        label.chars().map(|c| if keep(c) { c } else { '_' }).collect();
+                    format!("{}_{safe}.csv", self.name)
+                });
+                specs.push(RunSpec { label, assignment, cfg, trace_csv });
+            }
+            // odometer increment, last axis fastest
+            let mut k = self.axes.len();
+            loop {
+                if k == 0 {
+                    if specs.is_empty() {
+                        bail!(
+                            "plan {:?} expands to zero runs (all combinations filtered)",
+                            self.name
+                        );
+                    }
+                    return Ok(specs);
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < self.axes[k].values.len() {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn plan_json(text: &str) -> ExperimentPlan {
+        ExperimentPlan::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn expands_cartesian_in_declared_order() {
+        let p = plan_json(
+            r#"{
+              "name": "demo",
+              "base": { "dataset": "quickstart", "iters": 8, "eval_every": 0 },
+              "axes": [
+                { "key": "method", "values": ["ho_sgd", "sync_sgd"] },
+                { "key": "tau", "values": [2, 4] }
+              ]
+            }"#,
+        );
+        let specs = p.expand().unwrap();
+        assert_eq!(specs.len(), 4);
+        // last axis fastest
+        assert_eq!(specs[0].label, "method=ho_sgd,tau=2");
+        assert_eq!(specs[1].label, "method=ho_sgd,tau=4");
+        assert_eq!(specs[2].label, "method=sync_sgd,tau=2");
+        assert_eq!(specs[0].cfg.tau, 2);
+        assert_eq!(specs[3].cfg.method, Method::SyncSgd);
+        assert_eq!(specs[3].cfg.tau, 4);
+        // base applied everywhere
+        assert!(specs.iter().all(|s| s.cfg.iters == 8 && s.cfg.dataset == "quickstart"));
+        assert!(specs.iter().all(|s| s.trace_csv.is_none()));
+    }
+
+    #[test]
+    fn filters_drop_and_overrides_apply() {
+        let p = plan_json(
+            r#"{
+              "name": "demo",
+              "base": { "dataset": "quickstart", "iters": 8, "eval_every": 0 },
+              "axes": [
+                { "key": "method", "values": ["ho_sgd", "zo_sgd"] },
+                { "key": "tau", "values": [2, 4] }
+              ],
+              "filters": [ { "method": "zo_sgd", "tau": 4 } ],
+              "overrides": [ { "when": { "method": "zo_sgd" }, "set": { "lr": 0.005 } } ]
+            }"#,
+        );
+        let specs = p.expand().unwrap();
+        assert_eq!(specs.len(), 3); // one combination filtered
+        assert!(!specs.iter().any(|s| s.cfg.method == Method::ZoSgd && s.cfg.tau == 4));
+        let zo = specs.iter().find(|s| s.cfg.method == Method::ZoSgd).unwrap();
+        match zo.cfg.step {
+            StepSize::Constant { alpha } => assert!((alpha - 0.005).abs() < 1e-12),
+            ref other => panic!("override did not set the step: {other:?}"),
+        }
+        // the non-matching runs keep the default step
+        let ho = specs.iter().find(|s| s.cfg.method == Method::HoSgd).unwrap();
+        match ho.cfg.step {
+            StepSize::Constant { alpha } => assert!((alpha - 0.05).abs() < 1e-12),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_keys_everywhere() {
+        // unknown base key
+        let v = Json::parse(r#"{"name":"p","base":{"itres":9}}"#).unwrap();
+        assert!(ExperimentPlan::from_json(&v).unwrap_err().to_string().contains("itres"));
+        // unknown axis key
+        let v = Json::parse(r#"{"name":"p","axes":[{"key":"nope","values":[1]}]}"#).unwrap();
+        assert!(ExperimentPlan::from_json(&v).is_err());
+        // filter referencing a non-axis
+        let v = Json::parse(
+            r#"{"name":"p","axes":[{"key":"tau","values":[1]}],"filters":[{"seed":3}]}"#,
+        )
+        .unwrap();
+        assert!(ExperimentPlan::from_json(&v).unwrap_err().to_string().contains("seed"));
+        // bad plan name
+        let v = Json::parse(r#"{"name":"a b"}"#).unwrap();
+        assert!(ExperimentPlan::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn empty_axes_expand_to_single_base_run() {
+        let p = plan_json(r#"{"name":"one","base":{"dataset":"quickstart","iters":4}}"#);
+        let specs = p.expand().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].label, "one");
+    }
+
+    #[test]
+    fn all_filtered_is_an_error() {
+        let p = plan_json(
+            r#"{"name":"p","axes":[{"key":"tau","values":[2]}],"filters":[{"tau":2}]}"#,
+        );
+        assert!(p.expand().unwrap_err().to_string().contains("zero runs"));
+    }
+
+    #[test]
+    fn write_traces_names_are_sanitized() {
+        let p = plan_json(
+            r#"{
+              "name": "t",
+              "base": { "dataset": "quickstart", "iters": 4 },
+              "axes": [ { "key": "lr", "values": [0.5] } ],
+              "write_traces": true
+            }"#,
+        );
+        let specs = p.expand().unwrap();
+        assert_eq!(specs[0].trace_csv.as_deref(), Some("t_lr_0.5.csv"));
+    }
+
+    #[test]
+    fn base_shorthand_lr_and_fault_apply() {
+        let p = plan_json(
+            r#"{"name":"p","base":{"dataset":"quickstart","iters":4,"lr":0.25,"fault_drop":0.1}}"#,
+        );
+        match p.base.step {
+            StepSize::Constant { alpha } => assert!((alpha - 0.25).abs() < 1e-12),
+            ref other => panic!("{other:?}"),
+        }
+        assert!((p.base.transport.fault.drop_prob - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,214 @@
+//! The paper's figure/ablation drivers as declarative plan presets — the
+//! one code path figure reproduction goes through. Each preset returns an
+//! [`ExperimentPlan`] (plus per-run trace-CSV names where a figure's
+//! `report` step expects them), executed by [`crate::sweep::exec`].
+
+use anyhow::Result;
+
+use crate::config::{Method, StepSize, TrainConfig};
+use crate::data::table4_profiles;
+use crate::sweep::plan::{ExperimentPlan, RunSpec};
+use crate::util::json::Json;
+
+/// Per-method tuned constant step sizes ("we have optimized the learning
+/// rates of all the methods" — §5.2). ZO estimators carry d-scaled
+/// variance, so their stable step is smaller.
+pub fn fig2_lr(method: Method) -> StepSize {
+    let alpha = match method {
+        // ZO estimator noise scales ~sqrt(d); stable steps shrink with it
+        Method::HoSgd => 0.005,
+        Method::SyncSgd => 0.1,
+        Method::RiSgd => 0.1,
+        Method::ZoSgd => 0.005,
+        Method::ZoSvrgAve => 0.002,
+        Method::Qsgd => 0.1,
+        Method::HoSgdM => 0.003, // momentum amplifies by 1/(1-beta)
+    };
+    StepSize::Constant { alpha }
+}
+
+fn method_axis(methods: &[Method]) -> Vec<Json> {
+    methods.iter().map(|m| Json::str(m.label())).collect()
+}
+
+/// Attach the per-method §5.2 learning rates as overrides.
+fn with_fig2_lrs(mut plan: ExperimentPlan, methods: &[Method]) -> ExperimentPlan {
+    for &m in methods {
+        let alpha = match fig2_lr(m) {
+            StepSize::Constant { alpha } => alpha,
+            _ => unreachable!("fig2 rates are constant"),
+        };
+        plan = plan.with_override(
+            vec![("method".into(), Json::str(m.label()))],
+            vec![("lr".into(), Json::num(alpha))],
+        );
+    }
+    plan
+}
+
+/// Fig. 2: the five figure methods on one or all Table-4 datasets.
+/// Trace CSVs are named `fig2_{dataset}_{method}.csv` — what
+/// `hosgd report --kind fig2` renders.
+pub fn fig2(datasets: &[String], iters: u64, seed: u64) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        iters,
+        seed,
+        eval_every: (iters / 20).max(1),
+        ..Default::default()
+    };
+    let ds_axis: Vec<Json> = datasets.iter().map(Json::str).collect();
+    let plan = ExperimentPlan::new("fig2", base)
+        .with_axis("dataset", ds_axis)
+        .with_axis("method", method_axis(&Method::FIGURE_SET));
+    let plan = with_fig2_lrs(plan, &Method::FIGURE_SET);
+    let mut specs = plan.expand()?;
+    for s in &mut specs {
+        s.trace_csv = Some(format!("fig2_{}_{}.csv", s.cfg.dataset, s.cfg.method.label()));
+    }
+    Ok(specs)
+}
+
+/// All Table-4 dataset names (the `fig2 --all` set).
+pub fn all_datasets() -> Vec<String> {
+    table4_profiles().iter().map(|p| p.name.to_string()).collect()
+}
+
+/// Worker-count sweep: Theorem 1 predicts the error scales 1/√m at fixed
+/// N (HO-SGD, tau = 8, the §5.2 step size).
+pub fn sweep_workers(dataset: &str, iters: u64, workers: &[usize]) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        eval_every: 0,
+        step: fig2_lr(Method::HoSgd),
+        ..Default::default()
+    };
+    ExperimentPlan::new("sweep-workers", base)
+        .with_axis("workers", workers.iter().map(|&m| Json::num(m as f64)).collect())
+        .expand()
+}
+
+/// Smoothing-parameter ablation for the ZO estimator (Theorem 1 requires
+/// μ ≤ 1/√(dN); too large biases the estimator, too small hits f32
+/// noise).
+pub fn sweep_mu(dataset: &str, iters: u64, mus: &[f64]) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        method: Method::ZoSgd,
+        dataset: dataset.into(),
+        iters,
+        eval_every: 0,
+        step: StepSize::Constant { alpha: 0.02 },
+        ..Default::default()
+    };
+    ExperimentPlan::new("sweep-mu", base)
+        .with_axis("mu", mus.iter().copied().map(Json::num).collect())
+        .expand()
+}
+
+/// Remark 3 ablation: final loss vs τ at one ZO-stable rate so the sweep
+/// isolates τ. Trace CSVs keep the historical
+/// `ablate_tau{tau}_{dataset}.csv` names.
+pub fn ablate_tau(dataset: &str, iters: u64, taus: &[usize]) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        dataset: dataset.into(),
+        iters,
+        eval_every: 0,
+        step: fig2_lr(Method::HoSgd),
+        ..Default::default()
+    };
+    let mut specs = ExperimentPlan::new("ablate-tau", base)
+        .with_axis("tau", taus.iter().map(|&t| Json::num(t as f64)).collect())
+        .expand()?;
+    for s in &mut specs {
+        s.trace_csv = Some(format!("ablate_tau{}_{}.csv", s.cfg.tau, s.cfg.dataset));
+    }
+    Ok(specs)
+}
+
+/// QSGD ± error feedback at aggressive quantization (extension ablation).
+pub fn ablate_ef(dataset: &str, iters: u64) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        method: Method::Qsgd,
+        dataset: dataset.into(),
+        iters,
+        eval_every: 0,
+        step: StepSize::Constant { alpha: 0.05 },
+        ..Default::default()
+    };
+    ExperimentPlan::new("ablate-ef", base)
+        .with_axis("qsgd_levels", vec![Json::num(1.0), Json::num(4.0)])
+        .with_axis("qsgd_error_feedback", vec![Json::Bool(false), Json::Bool(true)])
+        .expand()
+}
+
+/// The end-to-end driver on the largest profile: a single-run plan, so
+/// figure reproduction and one-off drivers share the executor/manifest
+/// path.
+pub fn e2e(iters: u64, seed: u64) -> Result<Vec<RunSpec>> {
+    let base = TrainConfig {
+        method: Method::HoSgd,
+        dataset: "e2e".into(),
+        iters,
+        seed,
+        eval_every: 25,
+        step: StepSize::Constant { alpha: 0.002 }, // ZO-stable at d = 85k
+        ..Default::default()
+    };
+    let mut specs = ExperimentPlan::new("e2e", base).expand()?;
+    specs[0].trace_csv = Some("e2e_ho_sgd.csv".into());
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_preset_matches_the_paper_setup() {
+        let specs = fig2(&["sensorless".into()], 400, 1).unwrap();
+        assert_eq!(specs.len(), Method::FIGURE_SET.len());
+        for s in &specs {
+            assert_eq!(s.cfg.iters, 400);
+            assert_eq!(s.cfg.eval_every, 20);
+            // each method got its tuned §5.2 rate
+            let want = match fig2_lr(s.cfg.method) {
+                StepSize::Constant { alpha } => alpha,
+                _ => unreachable!(),
+            };
+            match s.cfg.step {
+                StepSize::Constant { alpha } => assert_eq!(alpha, want, "{}", s.label),
+                ref other => panic!("{other:?}"),
+            }
+            assert_eq!(
+                s.trace_csv.as_deref(),
+                Some(format!("fig2_sensorless_{}.csv", s.cfg.method.label()).as_str())
+            );
+        }
+    }
+
+    #[test]
+    fn ablation_presets_expand_their_axes() {
+        let taus = ablate_tau("quickstart", 40, &[1, 2, 4]).unwrap();
+        assert_eq!(taus.len(), 3);
+        assert_eq!(taus[1].cfg.tau, 2);
+        assert_eq!(taus[1].trace_csv.as_deref(), Some("ablate_tau2_quickstart.csv"));
+
+        let mus = sweep_mu("quickstart", 40, &[1e-4, 1e-3]).unwrap();
+        assert_eq!(mus.len(), 2);
+        assert_eq!(mus[0].cfg.mu, Some(1e-4));
+        assert_eq!(mus[0].cfg.method, Method::ZoSgd);
+
+        let ws = sweep_workers("quickstart", 40, &[1, 2, 4]).unwrap();
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[2].cfg.workers, 4);
+
+        let ef = ablate_ef("quickstart", 40).unwrap();
+        assert_eq!(ef.len(), 4);
+        assert!(ef.iter().any(|s| s.cfg.qsgd_levels == 1 && s.cfg.qsgd_error_feedback));
+
+        let one = e2e(30, 1).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].cfg.dataset, "e2e");
+        assert_eq!(one[0].trace_csv.as_deref(), Some("e2e_ho_sgd.csv"));
+    }
+}

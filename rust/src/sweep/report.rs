@@ -1,0 +1,130 @@
+//! Shared trace-CSV loading for terminal reports: one code path turning
+//! stored result CSVs into [`crate::util::plot`] series, used by
+//! `hosgd report` (Fig. 1/2 rendering) and available to any sweep
+//! consumer that wants loss/accuracy curves next to the Pareto artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::csv::read_trace_csv;
+use crate::util::plot::Series;
+
+/// The three standard views over a set of trace CSVs.
+#[derive(Debug, Default)]
+pub struct TraceSeries {
+    /// training loss vs iteration
+    pub loss_iter: Vec<Series>,
+    /// training loss vs wall-clock (compute + modelled comm)
+    pub loss_time: Vec<Series>,
+    /// test accuracy vs wall-clock (series with no evaluations are
+    /// omitted)
+    pub acc_time: Vec<Series>,
+}
+
+/// Load `(name, path)` trace CSVs into plottable series. Missing or
+/// unreadable files are skipped with a note on stderr (a figure report
+/// should render whatever series exist); zero loadable series is an
+/// error.
+pub fn load_trace_series(sources: &[(String, String)]) -> Result<TraceSeries> {
+    let mut out = TraceSeries::default();
+    for (name, path) in sources {
+        let rows = match read_trace_csv(path) {
+            Ok(rows) => rows,
+            Err(e) if !std::path::Path::new(path).exists() => {
+                eprintln!("skipping missing {path}: {e:#}");
+                continue;
+            }
+            Err(e) => {
+                // exists but does not parse — likely written by an older
+                // build with a different trace CSV schema
+                eprintln!("skipping unreadable {path}: {e:#} (regenerate it?)");
+                continue;
+            }
+        };
+        out.loss_iter.push(Series {
+            name: name.clone(),
+            points: rows.iter().map(|r| (r.iter as f64, r.train_loss)).collect(),
+        });
+        out.loss_time.push(Series {
+            name: name.clone(),
+            points: rows.iter().map(|r| (r.total_s, r.train_loss)).collect(),
+        });
+        let accs: Vec<(f64, f64)> =
+            rows.iter().filter_map(|r| r.test_acc.map(|a| (r.total_s, a))).collect();
+        if !accs.is_empty() {
+            out.acc_time.push(Series { name: name.clone(), points: accs });
+        }
+    }
+    if out.loss_iter.is_empty() {
+        bail!("no loadable trace CSVs among {} source(s)", sources.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Trace, TraceRow};
+
+    fn write_trace(path: &std::path::Path) {
+        let t = Trace {
+            method: "ho_sgd".into(),
+            dataset: "quickstart".into(),
+            dim: 4,
+            workers: 2,
+            batch: 8,
+            tau: 2,
+            seed: 0,
+            rows: vec![
+                TraceRow {
+                    iter: 0,
+                    train_loss: 2.0,
+                    test_acc: Some(0.5),
+                    compute_s: 0.1,
+                    comm_s: 0.0,
+                    total_s: 0.1,
+                    bytes_per_worker: 1,
+                    scalars_per_worker: 1,
+                    wire_up_bytes: 1,
+                    wire_down_bytes: 1,
+                    fn_evals: 1,
+                    grad_evals: 0,
+                },
+                TraceRow {
+                    iter: 1,
+                    train_loss: 1.0,
+                    test_acc: None,
+                    compute_s: 0.2,
+                    comm_s: 0.0,
+                    total_s: 0.2,
+                    bytes_per_worker: 2,
+                    scalars_per_worker: 2,
+                    wire_up_bytes: 2,
+                    wire_down_bytes: 2,
+                    fn_evals: 2,
+                    grad_evals: 0,
+                },
+            ],
+        };
+        t.write_csv(path).unwrap();
+    }
+
+    #[test]
+    fn loads_existing_and_skips_missing() {
+        let dir = std::env::temp_dir().join("hosgd_report_series_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.csv");
+        write_trace(&good);
+        let sources = vec![
+            ("good".to_string(), good.to_string_lossy().into_owned()),
+            ("gone".to_string(), dir.join("gone.csv").to_string_lossy().into_owned()),
+        ];
+        let s = load_trace_series(&sources).unwrap();
+        assert_eq!(s.loss_iter.len(), 1);
+        assert_eq!(s.loss_iter[0].points.len(), 2);
+        assert_eq!(s.acc_time.len(), 1); // one eval'd row
+        // nothing loadable is loud
+        let none = vec![("x".to_string(), dir.join("nope.csv").to_string_lossy().into_owned())];
+        assert!(load_trace_series(&none).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -137,6 +137,9 @@ impl TcpTransport {
             conn.w.flush()?;
             match conn.read()?.1 {
                 Frame::HelloAck => {}
+                Frame::Error { message, .. } => {
+                    bail!("worker {addr} rejected the handshake: {message}")
+                }
                 other => bail!("worker {addr}: expected HelloAck, got {other:?}"),
             }
             let ranks: Vec<u32> =
@@ -420,19 +423,43 @@ pub struct WorkerDaemonOpts {
     pub once: bool,
 }
 
+/// How one accepted connection ended (see [`serve`]).
+enum SessionEnd {
+    /// a real coordinator session ran (to completion or clean EOF)
+    Served,
+    /// the peer went away before saying `Hello` — a port probe/health
+    /// check; never counts as the `--once` session
+    Probe,
+    /// the peer failed the `HOSGDW1` handshake (protocol-version mismatch
+    /// or a malformed/unexpected hello). The peer has already been sent a
+    /// structured [`Frame::Error`] naming the reason; the daemon must
+    /// exit nonzero with it — a version-skewed fleet should fail loudly,
+    /// not sit half-connected.
+    BadHandshake(String),
+}
+
 /// Run the worker daemon accept loop on an already-bound listener.
 /// Sessions are served sequentially; with `opts.once` the daemon exits
 /// after the first one (what the CI smoke job and tests use). Connections
 /// that close before saying `Hello` (port probes, health checks) are
-/// ignored and never count as the "once" session.
+/// ignored and never count as the "once" session. A connection that
+/// *fails the handshake* — wrong protocol magic/version or a malformed
+/// hello — is answered with a structured error frame and aborts the
+/// daemon with a nonzero exit and a clear message.
 pub fn serve(listener: TcpListener, opts: &WorkerDaemonOpts) -> Result<()> {
     loop {
         let (stream, peer) = listener.accept().context("accepting coordinator connection")?;
         match handle_session(stream, opts) {
-            Ok(true) => eprintln!("# worker: session from {peer} complete"),
-            Ok(false) => {
+            Ok(SessionEnd::Served) => eprintln!("# worker: session from {peer} complete"),
+            Ok(SessionEnd::Probe) => {
                 eprintln!("# worker: probe connection from {peer} (ignored)");
                 continue;
+            }
+            Ok(SessionEnd::BadHandshake(msg)) => {
+                bail!(
+                    "worker daemon: HOSGDW1 handshake with {peer} failed: {msg} \
+                     (coordinator and worker builds must speak the same protocol version)"
+                );
             }
             Err(e) => eprintln!("# worker: session from {peer} failed: {e:#}"),
         }
@@ -450,9 +477,8 @@ struct RankState<'a> {
     snapshot: Vec<f32>,
 }
 
-/// Serve one coordinator connection. `Ok(false)` means the peer went away
-/// before the handshake (a port probe) — no session happened.
-fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<bool> {
+/// Serve one coordinator connection; see [`SessionEnd`] for the outcomes.
+fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionEnd> {
     stream.set_nodelay(true)?;
     // no read timeout — see IO_TIMEOUT: the coordinator may legitimately
     // idle between rounds, and its death surfaces as EOF anyway
@@ -460,10 +486,37 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<bool> {
     let mut r = BufReader::new(stream.try_clone()?);
     let mut w = BufWriter::new(stream);
 
-    match read_frame(&mut r)? {
-        Some((_, Frame::Hello)) => {}
-        Some((_, other)) => bail!("expected Hello, got {other:?}"),
-        None => return Ok(false),
+    // handshake phase. Protocol skew — wrong magic, mismatched VERSION, a
+    // garbage length prefix or a non-Hello first frame — gets a
+    // structured error frame back (so the peer can print *why*) and ends
+    // the daemon via `SessionEnd::BadHandshake`. Connection-level noise
+    // (a reset or a connection cut mid-read: port scanners, health
+    // checks) is NOT protocol skew; it is logged like any failed session
+    // and the daemon keeps serving.
+    let refuse = |w: &mut BufWriter<TcpStream>, msg: String| -> Result<SessionEnd> {
+        let _ = write_frame(w, &Frame::Error { rank: 0, message: msg.clone() });
+        let _ = w.flush();
+        Ok(SessionEnd::BadHandshake(msg))
+    };
+    let body = match super::wire::read_frame_body(&mut r) {
+        Ok(Some(body)) => body,
+        Ok(None) => return Ok(SessionEnd::Probe),
+        Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+            // implausible length prefix — the peer is not speaking HOSGDW1
+            return refuse(&mut w, format!("malformed hello: {e}"));
+        }
+        Err(e) => {
+            // reset / cut mid-read before a Hello ever arrived — treat
+            // like a probe (logged, never consumes --once)
+            eprintln!("# worker: connection lost during handshake: {e} (ignored)");
+            return Ok(SessionEnd::Probe);
+        }
+    };
+    match Frame::decode(&body) {
+        Ok(Frame::Hello) => {}
+        Ok(other) => return refuse(&mut w, format!("expected Hello, got {other:?}")),
+        // wrong magic or mismatched VERSION — `Frame::decode` names it
+        Err(e) => return refuse(&mut w, format!("{e:#}")),
     }
     write_frame(&mut w, &Frame::HelloAck)?;
     w.flush()?;
@@ -522,7 +575,7 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<bool> {
     loop {
         let frame = match read_frame(&mut r)? {
             Some((_, f)) => f,
-            None => return Ok(true), // coordinator went away after its run
+            None => return Ok(SessionEnd::Served), // coordinator went away after its run
         };
         match frame {
             Frame::Broadcast { rank, slot, data } => {
@@ -545,7 +598,7 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<bool> {
                 write_frame(&mut w, &frame)?;
                 w.flush()?;
             }
-            Frame::Shutdown => return Ok(true),
+            Frame::Shutdown => return Ok(SessionEnd::Served),
             other => bail!("unexpected frame {other:?} mid-session"),
         }
     }

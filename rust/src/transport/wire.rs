@@ -398,31 +398,51 @@ pub fn write_broadcast(w: &mut impl Write, rank: u32, slot: Slot, data: &[f32]) 
     Ok(total)
 }
 
-/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
-/// at a frame boundary; errors mean a truncated or malformed stream.
-/// On success also returns the total bytes consumed (header included).
-pub fn read_frame(r: &mut impl Read) -> Result<Option<(u64, Frame)>> {
+/// Read one frame's raw body (the bytes after the length prefix) without
+/// decoding it. `Ok(None)` means the peer closed cleanly at a frame
+/// boundary. Failures are `std::io::Error`s so callers can classify them:
+/// `InvalidData` marks a garbage length prefix (the peer is not speaking
+/// `HOSGDW1` at all), every other kind is a connection-level failure
+/// (reset, mid-read truncation) — the daemon treats the latter as noise,
+/// not as a fatal protocol skew.
+pub(crate) fn read_frame_body(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     // distinguish clean EOF (0 bytes) from mid-prefix truncation
     let mut got = 0;
     while got < 4 {
-        let n = r.read(&mut len_buf[got..]).context("reading frame length")?;
+        let n = r.read(&mut len_buf[got..])?;
         if n == 0 {
             if got == 0 {
                 return Ok(None);
             }
-            bail!("connection closed mid frame-length prefix");
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid frame-length prefix",
+            ));
         }
         got += n;
     }
     let len = u32::from_le_bytes(len_buf);
     if len == 0 || len > MAX_FRAME {
-        bail!("implausible frame length {len}");
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible frame length {len}"),
+        ));
     }
     let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body).context("reading frame body")?;
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection cleanly
+/// at a frame boundary; errors mean a truncated or malformed stream.
+/// On success also returns the total bytes consumed (header included).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u64, Frame)>> {
+    let Some(body) = read_frame_body(r).context("reading wire frame")? else {
+        return Ok(None);
+    };
     let frame = Frame::decode(&body)?;
-    Ok(Some((4 + len as u64, frame)))
+    Ok(Some((4 + body.len() as u64, frame)))
 }
 
 /// Bounded little-endian reader over a frame body.

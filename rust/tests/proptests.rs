@@ -8,7 +8,9 @@
 //! case seed on assertion failure (rerun with that seed to reproduce).
 
 use hosgd::backend::{Backend, ModelBackend, NativeBackend};
-use hosgd::comm::qsgd::{dequantize_into, encoded_bytes, quantize};
+use hosgd::comm::qsgd::{
+    decode_levels, dequantize_into, encode_levels, encoded_bytes, levels_bytes, quantize,
+};
 use hosgd::comm::{CommSim, NetworkModel};
 use hosgd::config::StepSize;
 use hosgd::data::{BatchSampler, Dataset, Sharding};
@@ -171,6 +173,100 @@ fn prop_qsgd_encoded_size_sane() {
         // never worse than ~2 bits-per-level overhead vs raw f32
         assert!(bytes <= 4 + 4 * d as u64, "seed {seed}: {bytes} > raw");
     });
+}
+
+// ---------------------------------------------------------------------------
+// Elias-γ QSGD bitstream codec edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qsgd_codec_zero_norm_vectors() {
+    // a zero vector quantizes to norm 0 with all-zero levels, and the
+    // all-zero bitstream is the minimal one: exactly one bit per level
+    cases(25, |seed, rng| {
+        let d = 1 + rng.next_below(3000);
+        let s = 1 + rng.next_below(16) as u32;
+        let v = vec![0.0f32; d];
+        let q = quantize(&v, s, &mut Xoshiro256::seeded(seed ^ 3));
+        assert_eq!(q.norm, 0.0, "seed {seed}");
+        assert!(q.levels.iter().all(|&l| l == 0));
+        let bytes = encode_levels(&q.levels);
+        assert_eq!(bytes.len() as u64, levels_bytes(&q.levels));
+        assert_eq!(bytes.len() as u64, (d as u64).div_ceil(8), "1 bit per zero level");
+        assert_eq!(decode_levels(&bytes, d).unwrap(), q.levels, "seed {seed}");
+        // encoded_bytes = 32-bit norm + the level bits
+        assert_eq!(encoded_bytes(&q), (32 + d as u64).div_ceil(8));
+        // dequantizing a zero-norm payload adds exactly nothing
+        let mut out = vec![1.0f32; d];
+        dequantize_into(&q, 1.0, &mut out);
+        assert!(out.iter().all(|&x| x == 1.0));
+    });
+}
+
+#[test]
+fn prop_qsgd_codec_single_element_vectors() {
+    // |v_i|/‖v‖ = 1 for a one-element vector, so the level is exactly ±s
+    // (no stochastic rounding: p = 0) and dequantization is exact
+    cases(40, |seed, rng| {
+        let s = 1 + rng.next_below(64) as u32;
+        let x = match rng.next_below(4) {
+            0 => (rng.next_normal() * 1e3) as f32,
+            1 => (rng.next_normal() * 1e-6) as f32,
+            2 => f32::MAX / 2.0,
+            _ => -(rng.next_normal().abs() as f32 + 1e-3),
+        };
+        if x == 0.0 {
+            return; // covered by the zero-norm property
+        }
+        let q = quantize(&[x], s, &mut Xoshiro256::seeded(seed ^ 4));
+        assert_eq!(q.levels.len(), 1);
+        assert_eq!(q.levels[0].unsigned_abs(), s, "seed {seed}: x {x}");
+        assert_eq!(q.levels[0] < 0, x < 0.0);
+        let bytes = encode_levels(&q.levels);
+        assert_eq!(bytes.len() as u64, levels_bytes(&q.levels), "seed {seed}");
+        assert_eq!(decode_levels(&bytes, 1).unwrap(), q.levels);
+        // reconstruction: norm · sgn(x) · s/s = ±norm = x up to the f32
+        // norm computation
+        let mut out = vec![0.0f32; 1];
+        dequantize_into(&q, 1.0, &mut out);
+        let rel = ((out[0] - x) / x).abs();
+        assert!(rel < 1e-5, "seed {seed}: {} vs {x}", out[0]);
+    });
+}
+
+#[test]
+fn prop_qsgd_codec_max_magnitude_components() {
+    // components pinned at the maximum level ±s (and far beyond any
+    // realistic s, up to i32::MAX) round-trip through the bitstream with
+    // the advertised length
+    cases(30, |seed, rng| {
+        let n = 1 + rng.next_below(200);
+        let s = 1 + rng.next_below(1 << 16) as i32;
+        let mut levels: Vec<i32> = (0..n)
+            .map(|_| match rng.next_below(4) {
+                0 => s,
+                1 => -s,
+                2 => 0,
+                _ => rng.next_below(s as usize + 1) as i32 - s / 2,
+            })
+            .collect();
+        // force at least one max-magnitude component of each sign
+        levels[0] = s;
+        if n > 1 {
+            levels[1] = -s;
+        }
+        let bytes = encode_levels(&levels);
+        assert_eq!(bytes.len() as u64, levels_bytes(&levels), "seed {seed}");
+        assert_eq!(decode_levels(&bytes, n).unwrap(), levels, "seed {seed}");
+        // decoding must not read past the advertised level count
+        assert!(decode_levels(&bytes, n + 8).is_err(), "seed {seed}");
+    });
+    // the absolute extreme: i32::MAX magnitudes survive the shifted
+    // alphabet (mag + 1) without overflow, both signs
+    let extremes = vec![i32::MAX, -i32::MAX, 0, 1, -1];
+    let bytes = encode_levels(&extremes);
+    assert_eq!(bytes.len() as u64, levels_bytes(&extremes));
+    assert_eq!(decode_levels(&bytes, extremes.len()).unwrap(), extremes);
 }
 
 // ---------------------------------------------------------------------------

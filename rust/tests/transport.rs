@@ -290,6 +290,120 @@ fn tcp_single_daemon_hosts_all_ranks() {
 }
 
 // ---------------------------------------------------------------------------
+// Handshake failures: structured error frames + nonzero daemon exit
+// ---------------------------------------------------------------------------
+
+/// Drive one raw client connection against a `serve` daemon and return
+/// (the daemon's exit result, the first frame the daemon sent back).
+fn handshake_probe(first_bytes: &[u8]) -> (anyhow::Result<()>, Option<Frame>) {
+    use std::io::{BufReader, Write};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let daemon = std::thread::spawn(move || {
+        let opts = WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: true };
+        serve(listener, &opts)
+    });
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.write_all(first_bytes).unwrap();
+    stream.flush().unwrap();
+    let mut r = BufReader::new(stream);
+    let reply = wire::read_frame(&mut r).ok().flatten().map(|(_, f)| f);
+    (daemon.join().unwrap(), reply)
+}
+
+#[test]
+fn worker_rejects_protocol_version_mismatch_with_error_frame_and_dies() {
+    // a Hello from a future protocol version: same magic, version 99
+    let mut hello = Frame::Hello.encode();
+    let voff = hello.len() - 4;
+    hello[voff..].copy_from_slice(&99u32.to_le_bytes());
+
+    let (exit, reply) = handshake_probe(&hello);
+    // the peer got a structured Error frame naming the version mismatch
+    match reply {
+        Some(Frame::Error { message, .. }) => {
+            assert!(message.contains("version"), "unhelpful error: {message}");
+        }
+        other => panic!("expected a structured Error frame, got {other:?}"),
+    }
+    // and the daemon exited nonzero with a clear message
+    let err = exit.expect_err("daemon must exit nonzero on a version mismatch");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("handshake"), "{msg}");
+    assert!(msg.contains("version"), "{msg}");
+}
+
+#[test]
+fn worker_rejects_malformed_hello_with_error_frame_and_dies() {
+    // a syntactically valid frame that is not a Hello at all
+    let bogus = Frame::Scalars { rank: 0, t: 0, values: vec![1.0] }.encode();
+    let (exit, reply) = handshake_probe(&bogus);
+    match reply {
+        Some(Frame::Error { message, .. }) => {
+            assert!(message.contains("expected Hello"), "{message}");
+        }
+        other => panic!("expected a structured Error frame, got {other:?}"),
+    }
+    let err = exit.expect_err("daemon must exit nonzero on a malformed hello");
+    assert!(format!("{err:#}").contains("handshake"), "{err:#}");
+
+    // garbage that is not even a decodable frame (wrong magic inside a
+    // plausible length prefix)
+    let mut garbage = Frame::Hello.encode();
+    garbage[5] = b'X'; // corrupt the HOSGDW1 magic
+    let (exit, reply) = handshake_probe(&garbage);
+    match reply {
+        Some(Frame::Error { message, .. }) => {
+            assert!(message.contains("HOSGDW1"), "{message}");
+        }
+        other => panic!("expected a structured Error frame, got {other:?}"),
+    }
+    assert!(exit.is_err());
+}
+
+#[test]
+fn worker_ignores_port_probes_and_serves_the_next_session() {
+    // neither a connection that closes without a byte nor one cut mid
+    // length-prefix may kill the daemon (or consume --once) — that is
+    // connection noise, not protocol skew; the real session afterwards
+    // still works
+    use std::io::Write;
+
+    let c = cfg(Method::HoSgd);
+    let (loopback_trace, _) = run_session(&c);
+    let (addr, h) = spawn_daemon();
+    {
+        let probe = std::net::TcpStream::connect(&addr).unwrap();
+        drop(probe); // clean close before Hello
+    }
+    {
+        let mut cut = std::net::TcpStream::connect(&addr).unwrap();
+        cut.write_all(&[0x01, 0x02]).unwrap(); // partial length prefix
+        drop(cut);
+    }
+    let mut tcp_cfg = c.clone();
+    tcp_cfg.transport.workers_at = vec![addr];
+    let (tcp_trace, _) = run_session(&tcp_cfg);
+    h.join().unwrap();
+    assert_eq!(loopback_trace, tcp_trace);
+}
+
+#[test]
+fn worker_refuses_garbage_length_prefix_as_malformed_hello() {
+    // a zero length prefix can never start an HOSGDW1 frame — that IS a
+    // malformed hello: structured error frame + nonzero daemon exit
+    let (exit, reply) = handshake_probe(&[0, 0, 0, 0]);
+    match reply {
+        Some(Frame::Error { message, .. }) => {
+            assert!(message.contains("malformed hello"), "{message}");
+        }
+        other => panic!("expected a structured Error frame, got {other:?}"),
+    }
+    assert!(exit.is_err());
+}
+
+// ---------------------------------------------------------------------------
 // Fault injection
 // ---------------------------------------------------------------------------
 
