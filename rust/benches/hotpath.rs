@@ -15,6 +15,11 @@
 //! Backend dispatch cases run on the native backend by default; set
 //! `HOSGD_BACKEND=pjrt` (artifacts + real xla crate required) to measure
 //! the PJRT executables instead.
+//!
+//! The shipped CLI carries the same harness as `hosgd bench` (with
+//! samples/s and scalars/s throughput columns); its per-PR baselines are
+//! the committed trajectory in `rust/benches/trajectory/`. See
+//! `docs/PERFORMANCE.md` for the performance model and refresh procedure.
 
 use std::path::Path;
 

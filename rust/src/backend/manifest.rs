@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
+/// Everything a backend declares about the model profiles it serves.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub version: u32,
@@ -23,6 +24,7 @@ pub struct Manifest {
     pub attack: Option<AttackMeta>,
 }
 
+/// Shapes and artifacts of one training profile (one Table-4 dataset).
 #[derive(Debug, Clone, Default)]
 pub struct ProfileMeta {
     pub features: usize,
@@ -36,6 +38,10 @@ pub struct ProfileMeta {
     pub golden: Option<ProfileGolden>,
 }
 
+/// Reference values recorded from the python graphs on the deterministic
+/// inputs of [`super::golden`]. `hosgd golden-check` compares backend
+/// outputs against these at 2e-3 relative (5e-3 under `--compute f32`,
+/// the only place tolerances widen — see `docs/PERFORMANCE.md`).
 #[derive(Debug, Clone, Default)]
 pub struct ProfileGolden {
     pub mu: f64,
@@ -48,6 +54,7 @@ pub struct ProfileGolden {
     pub accuracy: f64,
 }
 
+/// Shapes and artifacts of the Section-5.1 attack objective.
 #[derive(Debug, Clone)]
 pub struct AttackMeta {
     pub clf_profile: String,
@@ -58,6 +65,8 @@ pub struct AttackMeta {
     pub golden: Option<AttackGolden>,
 }
 
+/// Golden values for the attack objective, same contract as
+/// [`ProfileGolden`].
 #[derive(Debug, Clone, Default)]
 pub struct AttackGolden {
     pub mu: f64,

@@ -8,9 +8,39 @@
 //! between backends. Forward/backward are hand-written (`softmax - onehot`
 //! backprop, relu masks from the stored activations, `(out > 0)` matching
 //! `jax`'s relu VJP convention); reductions that feed reported scalars
-//! accumulate in f64.
+//! accumulate in f64 under the default [`ComputeMode::F64`].
+//!
+//! # Determinism contract (read before touching a kernel)
+//!
+//! Every kernel in this file promises **bit-identical results at any
+//! `--threads` value** — the property the golden, determinism and resume
+//! suites assert byte-for-byte. Three rules make that hold, and any
+//! future kernel change must preserve all of them:
+//!
+//! 1. **Fixed reduction order.** Per output element, floating-point adds
+//!    happen in one canonical order: increasing feature index `f` in
+//!    [`dense`], increasing class index `j` in the backprop dot products,
+//!    increasing batch index `b` in the weight-gradient reduction. The
+//!    cache-blocked kernel bodies below restructure *memory traffic*
+//!    (compacting skipped zeros, then retiring four accumulation steps
+//!    per pass over an output row) but never the per-element add
+//!    sequence — f32 addition is not associative, so any reorder changes
+//!    bits.
+//! 2. **Fixed chunk sizes.** The `*_pooled` wrappers split work at
+//!    compile-time constants (`ROW_CHUNK`, `WGRAD_CHUNK`, and the
+//!    block width `NZ_BLOCK` inside the kernels) that never depend on
+//!    the thread count; every chunk writes a disjoint output slice and
+//!    no chunk boundary crosses a floating-point reduction.
+//! 3. **No FMA contraction.** `acc += x * w` must stay a rounded multiply
+//!    followed by a rounded add (rustc never fuses the two without an
+//!    explicit `mul_add`); do not "optimize" with [`f32::mul_add`] — it
+//!    changes rounding and breaks every golden trace.
+//!
+//! Scalar reductions that feed *reported* numbers (the loss) accumulate
+//! in f64 by default; the opt-in [`ComputeMode::F32`] keeps them in f32
+//! for speed at a documented tolerance cost (see `docs/PERFORMANCE.md`).
 
-use crate::backend::ProfileMeta;
+use crate::backend::{ComputeMode, ProfileMeta};
 use crate::pool::{SliceParts, WorkerPool};
 
 /// Shape of one MLP profile (mirrors `model.py::MLPSpec`).
@@ -143,8 +173,23 @@ const MIN_PAR_ROWS: usize = 2 * ROW_CHUNK;
 const WGRAD_CHUNK: usize = 32;
 /// Below this many dw rows the wgrad reduction runs inline.
 const MIN_PAR_WGRAD_ROWS: usize = 2 * WGRAD_CHUNK;
+/// Nonzero-compaction block width of the cache-blocked kernel bodies
+/// (fixed; a stack buffer, never a function of shapes or thread count).
+const NZ_BLOCK: usize = 64;
 
 /// `out[b, j] = act(bias[j] + Σ_f x[b, f] · w[f, j])`, row-major.
+///
+/// # Accumulation order
+/// Per output element `(b, j)` the adds run over nonzero `x[b, f]` in
+/// increasing `f` — the same order as the naive skip-zero loop. The body
+/// is cache-blocked for speed: nonzero `(f, x)` pairs are compacted into
+/// `NZ_BLOCK`-wide stack buffers and retired four at a time with
+/// *chained* adds per `j` lane, which quarters the load/store traffic on
+/// the output row without touching the per-element rounding sequence.
+/// Exact zeros (either sign) are skipped, exactly like the naive loop —
+/// sound because `acc + x·w` with `x == ±0.0` can only differ from `acc`
+/// in the sign of a zero, and relu then canonicalizes `-0.0` the same
+/// way on both paths (and `jnp`'s reference does the same skip).
 #[allow(clippy::too_many_arguments)]
 pub fn dense(
     x: &[f32],
@@ -160,17 +205,53 @@ pub fn dense(
     debug_assert_eq!(w.len(), f_in * h_out);
     debug_assert_eq!(bias.len(), h_out);
     debug_assert_eq!(out.len(), batch * h_out);
+    let mut idx = [0usize; NZ_BLOCK];
+    let mut val = [0.0f32; NZ_BLOCK];
     for b in 0..batch {
         let row = &mut out[b * h_out..(b + 1) * h_out];
         row.copy_from_slice(bias);
         let xrow = &x[b * f_in..(b + 1) * f_in];
-        for (f, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
+        let mut f = 0;
+        while f < f_in {
+            // compact the next ≤ NZ_BLOCK nonzero features, in f order
+            let mut n = 0;
+            while f < f_in && n < NZ_BLOCK {
+                let xv = xrow[f];
+                if xv != 0.0 {
+                    idx[n] = f;
+                    val[n] = xv;
+                    n += 1;
+                }
+                f += 1;
             }
-            let wrow = &w[f * h_out..(f + 1) * h_out];
-            for (o, &wv) in row.iter_mut().zip(wrow.iter()) {
-                *o += xv * wv;
+            // quads: one pass over the output row per four features; the
+            // chained adds keep the exact per-element rounding order
+            let mut k = 0;
+            while k + 4 <= n {
+                let (x0, x1, x2, x3) = (val[k], val[k + 1], val[k + 2], val[k + 3]);
+                let w0 = &w[idx[k] * h_out..idx[k] * h_out + h_out];
+                let w1 = &w[idx[k + 1] * h_out..idx[k + 1] * h_out + h_out];
+                let w2 = &w[idx[k + 2] * h_out..idx[k + 2] * h_out + h_out];
+                let w3 = &w[idx[k + 3] * h_out..idx[k + 3] * h_out + h_out];
+                for ((((o, &a0), &a1), &a2), &a3) in
+                    row.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+                {
+                    let mut acc = *o;
+                    acc += x0 * a0;
+                    acc += x1 * a1;
+                    acc += x2 * a2;
+                    acc += x3 * a3;
+                    *o = acc;
+                }
+                k += 4;
+            }
+            while k < n {
+                let xv = val[k];
+                let wrow = &w[idx[k] * h_out..(idx[k] + 1) * h_out];
+                for (o, &wv) in row.iter_mut().zip(wrow.iter()) {
+                    *o += xv * wv;
+                }
+                k += 1;
             }
         }
         if relu {
@@ -184,19 +265,83 @@ pub fn dense(
 }
 
 /// `dw[i, j] += Σ_b a[b, i] · g[b, j]` (i.e. `dw += aᵀ g`).
+///
+/// # Accumulation order
+/// Per `(i, j)` the adds run over nonzero `a[b, i]` in increasing `b` —
+/// identical to the naive batch-outer loop. See [`accumulate_wgrad_rows`]
+/// for the blocked body.
 fn accumulate_wgrad(a: &[f32], batch: usize, rows: usize, g: &[f32], cols: usize, dw: &mut [f32]) {
     debug_assert_eq!(a.len(), batch * rows);
     debug_assert_eq!(g.len(), batch * cols);
     debug_assert_eq!(dw.len(), rows * cols);
-    for b in 0..batch {
-        let grow = &g[b * cols..(b + 1) * cols];
-        for (i, &av) in a[b * rows..(b + 1) * rows].iter().enumerate() {
-            if av == 0.0 {
-                continue;
+    accumulate_wgrad_rows(a, batch, rows, 0, rows, g, cols, dw);
+}
+
+/// Blocked body of the weight-gradient reduction, restricted to dw rows
+/// `i0..i1` (`dw` holds exactly those rows). Shared between the
+/// sequential kernel (full range) and each `accumulate_wgrad_pooled`
+/// chunk, so there is exactly one reduction body to keep bit-correct.
+///
+/// For each dw row `i` the nonzero activations of column `a[:, i]` are
+/// compacted (in increasing `b`) into `NZ_BLOCK`-wide stack buffers and
+/// retired four at a time with chained adds per `j` lane — the same
+/// per-element add order as the naive loop, with the dw-row load/store
+/// traffic quartered.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_wgrad_rows(
+    a: &[f32],
+    batch: usize,
+    rows: usize,
+    i0: usize,
+    i1: usize,
+    g: &[f32],
+    cols: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(dw.len(), (i1 - i0) * cols);
+    let mut idx = [0usize; NZ_BLOCK];
+    let mut val = [0.0f32; NZ_BLOCK];
+    for i in i0..i1 {
+        let drow = &mut dw[(i - i0) * cols..(i - i0 + 1) * cols];
+        let mut b = 0;
+        while b < batch {
+            // compact the next ≤ NZ_BLOCK nonzero batch entries, in b order
+            let mut n = 0;
+            while b < batch && n < NZ_BLOCK {
+                let av = a[b * rows + i];
+                if av != 0.0 {
+                    idx[n] = b;
+                    val[n] = av;
+                    n += 1;
+                }
+                b += 1;
             }
-            let drow = &mut dw[i * cols..(i + 1) * cols];
-            for (d, &gv) in drow.iter_mut().zip(grow.iter()) {
-                *d += av * gv;
+            let mut k = 0;
+            while k + 4 <= n {
+                let (a0, a1, a2, a3) = (val[k], val[k + 1], val[k + 2], val[k + 3]);
+                let g0 = &g[idx[k] * cols..idx[k] * cols + cols];
+                let g1 = &g[idx[k + 1] * cols..idx[k + 1] * cols + cols];
+                let g2 = &g[idx[k + 2] * cols..idx[k + 2] * cols + cols];
+                let g3 = &g[idx[k + 3] * cols..idx[k + 3] * cols + cols];
+                for ((((d, &v0), &v1), &v2), &v3) in
+                    drow.iter_mut().zip(g0).zip(g1).zip(g2).zip(g3)
+                {
+                    let mut acc = *d;
+                    acc += a0 * v0;
+                    acc += a1 * v1;
+                    acc += a2 * v2;
+                    acc += a3 * v3;
+                    *d = acc;
+                }
+                k += 4;
+            }
+            while k < n {
+                let av = val[k];
+                let grow = &g[idx[k] * cols..(idx[k] + 1) * cols];
+                for (d, &gv) in drow.iter_mut().zip(grow.iter()) {
+                    *d += av * gv;
+                }
+                k += 1;
             }
         }
     }
@@ -217,6 +362,15 @@ fn accumulate_bgrad(g: &[f32], batch: usize, cols: usize, db: &mut [f32]) {
 /// dense layer to its input, applying the mask of the *input* activation
 /// (`act > 0`, jax's relu VJP convention). Pass `act = &[]` to skip the
 /// mask (input layer of the attack objective).
+///
+/// # Accumulation order
+/// Each `dx[b, i]` is an independent dot product accumulated over `j` in
+/// increasing order. The blocked body compacts the unmasked `i` of each
+/// row into `NZ_BLOCK`-wide stack buffers and computes four dots per pass
+/// over `g[b, :]` — four *independent* f32 chains (so the FMA-latency
+/// chain is broken four ways and `g` is loaded once per quad), each chain
+/// summing over `j` in exactly the naive order. Masked entries are
+/// written `0.0` during compaction, as before.
 fn backprop_dense(
     g: &[f32],
     batch: usize,
@@ -230,21 +384,55 @@ fn backprop_dense(
     debug_assert_eq!(w.len(), rows * cols);
     debug_assert_eq!(dx.len(), batch * rows);
     debug_assert!(act.is_empty() || act.len() == batch * rows);
+    let mut idx = [0usize; NZ_BLOCK];
     for b in 0..batch {
         let grow = &g[b * cols..(b + 1) * cols];
         let drow = &mut dx[b * rows..(b + 1) * rows];
-        for (i, d) in drow.iter_mut().enumerate() {
-            let masked = !act.is_empty() && act[b * rows + i] <= 0.0;
-            if masked {
-                *d = 0.0;
-                continue;
+        let arow = if act.is_empty() { &[][..] } else { &act[b * rows..(b + 1) * rows] };
+        let mut i = 0;
+        while i < rows {
+            // compact the next ≤ NZ_BLOCK unmasked outputs, in i order;
+            // masked entries are zeroed here
+            let mut n = 0;
+            while i < rows && n < NZ_BLOCK {
+                if !arow.is_empty() && arow[i] <= 0.0 {
+                    drow[i] = 0.0;
+                } else {
+                    idx[n] = i;
+                    n += 1;
+                }
+                i += 1;
             }
-            let wrow = &w[i * cols..(i + 1) * cols];
-            let mut acc = 0.0f32;
-            for (&gv, &wv) in grow.iter().zip(wrow.iter()) {
-                acc += gv * wv;
+            let mut k = 0;
+            while k + 4 <= n {
+                let w0 = &w[idx[k] * cols..idx[k] * cols + cols];
+                let w1 = &w[idx[k + 1] * cols..idx[k + 1] * cols + cols];
+                let w2 = &w[idx[k + 2] * cols..idx[k + 2] * cols + cols];
+                let w3 = &w[idx[k + 3] * cols..idx[k + 3] * cols + cols];
+                let (mut acc0, mut acc1, mut acc2, mut acc3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for ((((&gv, &v0), &v1), &v2), &v3) in
+                    grow.iter().zip(w0).zip(w1).zip(w2).zip(w3)
+                {
+                    acc0 += gv * v0;
+                    acc1 += gv * v1;
+                    acc2 += gv * v2;
+                    acc3 += gv * v3;
+                }
+                drow[idx[k]] = acc0;
+                drow[idx[k + 1]] = acc1;
+                drow[idx[k + 2]] = acc2;
+                drow[idx[k + 3]] = acc3;
+                k += 4;
             }
-            *d = acc;
+            while k < n {
+                let wrow = &w[idx[k] * cols..(idx[k] + 1) * cols];
+                let mut acc = 0.0f32;
+                for (&gv, &wv) in grow.iter().zip(wrow.iter()) {
+                    acc += gv * wv;
+                }
+                drow[idx[k]] = acc;
+                k += 1;
+            }
         }
     }
 }
@@ -306,9 +494,11 @@ fn backprop_dense_pooled(
     });
 }
 
-/// dw-row-chunked [`accumulate_wgrad`]: the batch reduction per (i, j)
-/// stays in increasing-b order inside every chunk, so the sums are
-/// bit-identical to the sequential kernel at any thread count.
+/// dw-row-chunked [`accumulate_wgrad`]: each chunk runs the shared
+/// blocked body [`accumulate_wgrad_rows`] on a disjoint dw row range, so
+/// the batch reduction per (i, j) stays in increasing-b order inside
+/// every chunk and the sums are bit-identical to the sequential kernel
+/// at any thread count.
 fn accumulate_wgrad_pooled(
     a: &[f32],
     batch: usize,
@@ -329,18 +519,7 @@ fn accumulate_wgrad_pooled(
         let i1 = (i0 + WGRAD_CHUNK).min(rows);
         // Safety: dw row ranges are disjoint by construction
         let dw_c = unsafe { parts.slice(i0 * cols, (i1 - i0) * cols) };
-        for b in 0..batch {
-            let grow = &g[b * cols..(b + 1) * cols];
-            for (i, &av) in a[b * rows + i0..b * rows + i1].iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let drow = &mut dw_c[i * cols..(i + 1) * cols];
-                for (d, &gv) in drow.iter_mut().zip(grow.iter()) {
-                    *d += av * gv;
-                }
-            }
-        }
+        accumulate_wgrad_rows(a, batch, rows, i0, i1, g, cols, dw_c);
     });
 }
 
@@ -354,6 +533,15 @@ pub fn forward(spec: &MlpSpec, params: &[f32], x: &[f32], batch: usize, s: &mut 
 }
 
 /// [`forward`] with the batch dimension chunked across `pool`.
+///
+/// # Chunking invariants
+/// Each of the three layer GEMMs splits the batch into fixed
+/// `ROW_CHUNK`-row jobs writing disjoint output rows, with a full join
+/// between layers (layer `k+1` reads every row layer `k` wrote). Batch
+/// rows never share a reduction, so scheduling cannot reorder any
+/// floating-point sum and the result is bit-identical at any thread
+/// count — including `threads == 1`, where the kernels run inline with
+/// zero synchronization.
 pub fn forward_pooled(
     spec: &MlpSpec,
     params: &[f32],
@@ -399,6 +587,10 @@ pub fn forward_pooled(
 }
 
 /// Mean softmax cross-entropy over logits rows; `y` holds f32 class ids.
+///
+/// This is the [`ComputeMode::F64`] reduction: per-row log-sum-exp and
+/// the batch total accumulate in f64 (sequentially, in row order), which
+/// is what every golden value and canonical trace records.
 pub fn loss_from_logits(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> f32 {
     debug_assert_eq!(logits.len(), batch * classes);
     debug_assert_eq!(y.len(), batch);
@@ -416,6 +608,43 @@ pub fn loss_from_logits(logits: &[f32], y: &[f32], batch: usize, classes: usize)
     (total / batch as f64) as f32
 }
 
+/// [`loss_from_logits`] with the whole reduction kept in f32 — the
+/// [`ComputeMode::F32`] path. Same row order, same max-shift, but the
+/// exp/ln and both accumulators stay single-precision: roughly 2x less
+/// reduction arithmetic at ~1e-6 relative error on the profiles shipped
+/// here, which is why golden tolerances widen only under this knob.
+pub fn loss_from_logits_f32(logits: &[f32], y: &[f32], batch: usize, classes: usize) -> f32 {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(y.len(), batch);
+    let mut total = 0.0f32;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - m).exp();
+        }
+        let lse = m + sum.ln();
+        total += lse - row[y[b] as usize];
+    }
+    total / batch as f32
+}
+
+/// Dispatch between the f64 (default, golden-exact) and f32 (opt-in,
+/// fast) scalar reductions.
+pub fn loss_from_logits_mode(
+    logits: &[f32],
+    y: &[f32],
+    batch: usize,
+    classes: usize,
+    mode: ComputeMode,
+) -> f32 {
+    match mode {
+        ComputeMode::F64 => loss_from_logits(logits, y, batch, classes),
+        ComputeMode::F32 => loss_from_logits_f32(logits, y, batch, classes),
+    }
+}
+
 /// `F(params; batch)` — one loss evaluation.
 pub fn loss(
     spec: &MlpSpec,
@@ -429,7 +658,7 @@ pub fn loss(
 }
 
 /// [`loss`] with the forward pass chunked across `pool`. The scalar
-/// reduction over logits rows stays sequential (cheap, and its f64
+/// reduction over logits rows stays sequential (cheap, and its
 /// accumulation order must not depend on scheduling).
 pub fn loss_pooled(
     spec: &MlpSpec,
@@ -440,8 +669,25 @@ pub fn loss_pooled(
     s: &mut Scratch,
     pool: &WorkerPool,
 ) -> f32 {
+    loss_pooled_mode(spec, params, x, y, batch, s, pool, ComputeMode::F64)
+}
+
+/// [`loss_pooled`] with an explicit scalar-reduction [`ComputeMode`].
+/// The forward GEMMs are identical under either mode (they are f32
+/// everywhere); only the loss reduction changes.
+#[allow(clippy::too_many_arguments)]
+pub fn loss_pooled_mode(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    pool: &WorkerPool,
+    mode: ComputeMode,
+) -> f32 {
     forward_pooled(spec, params, x, batch, s, pool);
-    loss_from_logits(&s.logits[..batch * spec.classes], y, batch, spec.classes)
+    loss_from_logits_mode(&s.logits[..batch * spec.classes], y, batch, spec.classes, mode)
 }
 
 /// `∇F(params; batch)` into `out_grad` (overwritten); returns the loss.
@@ -471,9 +717,28 @@ pub fn grad_pooled(
     out_grad: &mut [f32],
     pool: &WorkerPool,
 ) -> f32 {
+    grad_pooled_mode(spec, params, x, y, batch, s, out_grad, pool, ComputeMode::F64)
+}
+
+/// [`grad_pooled`] with an explicit scalar-reduction [`ComputeMode`].
+/// The gradient arithmetic itself (softmax residual, backprop, weight
+/// gradients) is f32 under either mode; the mode only selects how the
+/// *returned loss scalar* is reduced.
+#[allow(clippy::too_many_arguments)]
+pub fn grad_pooled_mode(
+    spec: &MlpSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    s: &mut Scratch,
+    out_grad: &mut [f32],
+    pool: &WorkerPool,
+    mode: ComputeMode,
+) -> f32 {
     forward_pooled(spec, params, x, batch, s, pool);
     let c = spec.classes;
-    let loss = loss_from_logits(&s.logits[..batch * c], y, batch, c);
+    let loss = loss_from_logits_mode(&s.logits[..batch * c], y, batch, c, mode);
     // dL/dlogits = (softmax - onehot) / B — O(B·C), stays sequential
     let inv_b = 1.0f32 / batch as f32;
     for b in 0..batch {
@@ -766,6 +1031,156 @@ mod tests {
         for (a, b) in g1.iter().zip(g2.iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// Naive skip-zero dense kernel — the pre-blocking reference body the
+    /// blocked [`dense`] must match bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    fn dense_naive(
+        x: &[f32],
+        batch: usize,
+        f_in: usize,
+        w: &[f32],
+        bias: &[f32],
+        h_out: usize,
+        relu: bool,
+        out: &mut [f32],
+    ) {
+        for b in 0..batch {
+            let row = &mut out[b * h_out..(b + 1) * h_out];
+            row.copy_from_slice(bias);
+            for (f, &xv) in x[b * f_in..(b + 1) * f_in].iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                for (o, &wv) in row.iter_mut().zip(w[f * h_out..(f + 1) * h_out].iter()) {
+                    *o += xv * wv;
+                }
+            }
+            if relu {
+                for o in row.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Sparse-ish inputs (zeros injected like post-relu activations) so
+    /// the compaction paths, quad bodies and remainders all run.
+    fn sparse_vec(rng: &mut Xoshiro256, n: usize, zero_frac: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| if rng.next_f64() < zero_frac { 0.0 } else { rng.next_normal() as f32 })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_dense_bit_matches_naive_reference() {
+        let mut rng = Xoshiro256::seeded(31);
+        // shapes straddling NZ_BLOCK and the quad remainder: dense rows,
+        // half-sparse rows, and an all-zero row
+        for (batch, f_in, h_out) in [(3, 5, 7), (4, 64, 16), (2, 130, 33), (5, 257, 11)] {
+            let mut x = sparse_vec(&mut rng, batch * f_in, 0.5);
+            for v in x[..f_in.min(x.len())].iter_mut() {
+                *v = 0.0; // row 0 entirely zero: out must equal relu(bias)
+            }
+            let w = rand_vec(&mut rng, f_in * h_out, 0.5);
+            let bias = rand_vec(&mut rng, h_out, 0.5);
+            for relu in [false, true] {
+                let mut got = vec![0.0f32; batch * h_out];
+                let mut want = vec![0.0f32; batch * h_out];
+                dense(&x, batch, f_in, &w, &bias, h_out, relu, &mut got);
+                dense_naive(&x, batch, f_in, &w, &bias, h_out, relu, &mut want);
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{batch}x{f_in}->{h_out} relu={relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_wgrad_bit_matches_naive_reference() {
+        let mut rng = Xoshiro256::seeded(32);
+        for (batch, rows, cols) in [(4, 6, 5), (48, 70, 33), (130, 9, 16)] {
+            let a = sparse_vec(&mut rng, batch * rows, 0.5);
+            let g = rand_vec(&mut rng, batch * cols, 0.5);
+            let mut got = rand_vec(&mut rng, rows * cols, 0.1); // += semantics
+            let mut want = got.clone();
+            accumulate_wgrad(&a, batch, rows, &g, cols, &mut got);
+            // naive b-outer reference
+            for b in 0..batch {
+                let grow = &g[b * cols..(b + 1) * cols];
+                for (i, &av) in a[b * rows..(b + 1) * rows].iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (d, &gv) in
+                        want[i * cols..(i + 1) * cols].iter_mut().zip(grow.iter())
+                    {
+                        *d += av * gv;
+                    }
+                }
+            }
+            for (x, y) in got.iter().zip(want.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{batch}x{rows}x{cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_backprop_bit_matches_naive_reference() {
+        let mut rng = Xoshiro256::seeded(33);
+        for (batch, rows, cols) in [(3, 7, 5), (4, 70, 33), (2, 130, 9)] {
+            let g = rand_vec(&mut rng, batch * cols, 0.5);
+            let w = rand_vec(&mut rng, rows * cols, 0.5);
+            let act = sparse_vec(&mut rng, batch * rows, 0.5);
+            for masked in [false, true] {
+                let a = if masked { &act[..] } else { &[][..] };
+                let mut got = vec![7.0f32; batch * rows]; // overwritten, incl. masked
+                let mut want = vec![7.0f32; batch * rows];
+                backprop_dense(&g, batch, cols, &w, rows, a, &mut got);
+                for b in 0..batch {
+                    let grow = &g[b * cols..(b + 1) * cols];
+                    for i in 0..rows {
+                        if masked && act[b * rows + i] <= 0.0 {
+                            want[b * rows + i] = 0.0;
+                            continue;
+                        }
+                        let mut acc = 0.0f32;
+                        for (&gv, &wv) in grow.iter().zip(w[i * cols..(i + 1) * cols].iter()) {
+                            acc += gv * wv;
+                        }
+                        want[b * rows + i] = acc;
+                    }
+                }
+                for (x, y) in got.iter().zip(want.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{batch}x{rows}x{cols} mask={masked}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_loss_reduction_close_to_f64_but_distinct_path() {
+        let mut rng = Xoshiro256::seeded(34);
+        let (batch, classes) = (64, 11);
+        let logits = rand_vec(&mut rng, batch * classes, 2.0);
+        let y: Vec<f32> = (0..batch).map(|b| (b % classes) as f32).collect();
+        let l64 = loss_from_logits(&logits, &y, batch, classes);
+        let l32 = loss_from_logits_f32(&logits, &y, batch, classes);
+        assert!(
+            (l64 - l32).abs() <= 1e-4 * l64.abs().max(1.0),
+            "f32 reduction drifted: {l64} vs {l32}"
+        );
+        assert_eq!(
+            loss_from_logits_mode(&logits, &y, batch, classes, ComputeMode::F64).to_bits(),
+            l64.to_bits()
+        );
+        assert_eq!(
+            loss_from_logits_mode(&logits, &y, batch, classes, ComputeMode::F32).to_bits(),
+            l32.to_bits()
+        );
     }
 
     #[test]

@@ -206,6 +206,57 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+/// Precision of the native backend's *scalar reductions* (CLI
+/// `--compute`, config key `"compute"`).
+///
+/// The dense GEMMs, backprop and weight gradients are f32 under either
+/// mode (that is the model's parameter precision); this knob only selects
+/// how the per-batch loss reduction accumulates:
+///
+/// * [`ComputeMode::F64`] (default) — log-sum-exp and batch totals in
+///   f64. Every golden value, canonical trace and checkpoint was recorded
+///   under this mode; it is the bit-exactness baseline.
+/// * [`ComputeMode::F32`] — the whole reduction stays f32: faster, and
+///   within ~1e-6 relative of the f64 result on the shipped profiles, but
+///   **not** bit-identical — golden tolerances widen only under this knob
+///   (`hosgd golden-check --compute f32`), and traces recorded under
+///   different modes must not be diffed. See `docs/PERFORMANCE.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ComputeMode {
+    /// f64 scalar reductions (golden-exact default).
+    #[default]
+    F64,
+    /// f32 scalar reductions (fast, tolerance-checked only).
+    F32,
+}
+
+impl ComputeMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ComputeMode::F64 => "f64",
+            ComputeMode::F32 => "f32",
+        }
+    }
+}
+
+impl FromStr for ComputeMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Ok(ComputeMode::F64),
+            "f32" | "single" | "float" => Ok(ComputeMode::F32),
+            other => Err(anyhow!("unknown compute mode {other:?} (f64|f32)")),
+        }
+    }
+}
+
+impl std::fmt::Display for ComputeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 /// Construct a backend selected by environment variables (the examples and
 /// benches use `HOSGD_BACKEND`): unset ⇒ native, invalid ⇒ error. The
 /// thread count comes from `HOSGD_THREADS` (unset/0 ⇒ available
@@ -236,9 +287,26 @@ pub fn load_with_threads(
     artifact_dir: &Path,
     threads: usize,
 ) -> Result<Box<dyn Backend>> {
+    load_with_options(kind, artifact_dir, threads, ComputeMode::F64)
+}
+
+/// [`load_with_threads`] with an explicit scalar-reduction
+/// [`ComputeMode`]. The f32 mode is native-only: the PJRT artifacts bake
+/// their reduction precision into the lowered HLO, so requesting it there
+/// fails loudly instead of silently running f64.
+pub fn load_with_options(
+    kind: BackendKind,
+    artifact_dir: &Path,
+    threads: usize,
+    compute: ComputeMode,
+) -> Result<Box<dyn Backend>> {
     let _ = artifact_dir; // unused by the native backend
     match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::with_threads(threads))),
+        BackendKind::Native => Ok(Box::new(NativeBackend::with_options(threads, compute))),
+        BackendKind::Pjrt if compute == ComputeMode::F32 => Err(anyhow!(
+            "--compute f32 is a native-backend knob; the pjrt artifacts fix \
+             their reduction precision at lowering time"
+        )),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Box::new(crate::runtime::Runtime::load(artifact_dir)?)),
         #[cfg(not(feature = "pjrt"))]
@@ -282,5 +350,22 @@ mod tests {
     fn load_from_env_defaults_to_native_when_unset() {
         let be = load_from_env("HOSGD_TEST_UNSET_BACKEND_VAR", Path::new("x")).unwrap();
         assert_eq!(be.kind(), BackendKind::Native);
+    }
+
+    #[test]
+    fn compute_mode_parses_and_displays() {
+        assert_eq!("f64".parse::<ComputeMode>().unwrap(), ComputeMode::F64);
+        assert_eq!("F32".parse::<ComputeMode>().unwrap(), ComputeMode::F32);
+        assert_eq!("single".parse::<ComputeMode>().unwrap(), ComputeMode::F32);
+        assert!("f16".parse::<ComputeMode>().is_err());
+        assert_eq!(ComputeMode::default(), ComputeMode::F64);
+        assert_eq!(ComputeMode::F32.to_string(), "f32");
+    }
+
+    #[test]
+    fn f32_compute_is_rejected_on_pjrt() {
+        let err =
+            load_with_options(BackendKind::Pjrt, Path::new("x"), 1, ComputeMode::F32).unwrap_err();
+        assert!(err.to_string().contains("f32"), "{err}");
     }
 }

@@ -19,8 +19,8 @@ use anyhow::{anyhow, Result};
 
 use super::mlp::{self, MlpSpec, Scratch};
 use super::{
-    AttackBackend, AttackGolden, AttackMeta, Backend, BackendKind, Manifest, ModelBackend,
-    ProfileGolden, ProfileMeta,
+    AttackBackend, AttackGolden, AttackMeta, Backend, BackendKind, ComputeMode, Manifest,
+    ModelBackend, ProfileGolden, ProfileMeta,
 };
 use crate::pool::{resolve_threads, WorkerPool};
 
@@ -179,6 +179,7 @@ fn attack_golden() -> AttackGolden {
 pub struct NativeBackend {
     manifest: Manifest,
     pool: Arc<WorkerPool>,
+    compute: ComputeMode,
 }
 
 impl NativeBackend {
@@ -186,8 +187,21 @@ impl NativeBackend {
         Self::with_threads(1)
     }
 
-    /// Backend over a `threads`-lane pool (`0` ⇒ available parallelism).
+    /// Backend over a `threads`-lane pool (`0` ⇒ available parallelism),
+    /// golden-exact [`ComputeMode::F64`] loss reductions.
     pub fn with_threads(threads: usize) -> Self {
+        Self::with_options(threads, ComputeMode::F64)
+    }
+
+    /// Backend over a `threads`-lane pool with an explicit loss-reduction
+    /// precision. [`ComputeMode::F64`] reproduces the golden traces
+    /// bit-for-bit; [`ComputeMode::F32`] trades ~1e-6 relative loss error
+    /// for an all-f32 reduction (see the [`ComputeMode`] docs and
+    /// `docs/PERFORMANCE.md`). The knob reaches every [`ModelBackend`]
+    /// this backend hands out; the CW attack objective keeps its f64
+    /// distortion accumulator under either mode (its batches are tiny, so
+    /// the reduction is not a hot path).
+    pub fn with_options(threads: usize, compute: ComputeMode) -> Self {
         let mut profiles = BTreeMap::new();
         for &(name, features, hidden1, hidden2, classes, batch) in PROFILES {
             let spec = MlpSpec { features, hidden1, hidden2, classes };
@@ -216,12 +230,18 @@ impl NativeBackend {
         Self {
             manifest: Manifest { version: 1, profiles, attack },
             pool: Arc::new(WorkerPool::new(resolve_threads(threads))),
+            compute,
         }
     }
 
     /// The pool shared by every binding this backend hands out.
     pub fn worker_pool(&self) -> Arc<WorkerPool> {
         Arc::clone(&self.pool)
+    }
+
+    /// The loss-reduction precision every model binding inherits.
+    pub fn compute(&self) -> ComputeMode {
+        self.compute
     }
 }
 
@@ -256,7 +276,7 @@ impl Backend for NativeBackend {
                 )
             })?
             .clone();
-        Ok(Box::new(NativeModel::with_pool(meta, Arc::clone(&self.pool))))
+        Ok(Box::new(NativeModel::with_pool_mode(meta, Arc::clone(&self.pool), self.compute)))
     }
 
     fn attack(&self) -> Result<Box<dyn AttackBackend>> {
@@ -289,6 +309,7 @@ pub struct NativeModel {
     spec: MlpSpec,
     pool: Arc<WorkerPool>,
     scratch: ScratchPool<Scratch>,
+    compute: ComputeMode,
 }
 
 impl NativeModel {
@@ -296,9 +317,19 @@ impl NativeModel {
         Self::with_pool(meta, Arc::new(WorkerPool::new(1)))
     }
 
+    /// Binding with golden-exact [`ComputeMode::F64`] loss reductions.
     pub fn with_pool(meta: ProfileMeta, pool: Arc<WorkerPool>) -> Self {
+        Self::with_pool_mode(meta, pool, ComputeMode::F64)
+    }
+
+    /// Binding with an explicit loss-reduction precision (see
+    /// [`ComputeMode`]): the mode reaches [`ModelBackend::loss`],
+    /// [`ModelBackend::grad`]'s returned loss, and both halves of
+    /// [`ModelBackend::loss_pair`]. Logits, gradients, accuracy and
+    /// predictions are f32 tensor math under either mode.
+    pub fn with_pool_mode(meta: ProfileMeta, pool: Arc<WorkerPool>, compute: ComputeMode) -> Self {
         let spec = MlpSpec::from_meta(&meta);
-        Self { meta, spec, pool, scratch: ScratchPool::new() }
+        Self { meta, spec, pool, scratch: ScratchPool::new(), compute }
     }
 
     fn check_xy(&self, x: &[f32], y: &[f32]) {
@@ -323,7 +354,8 @@ impl ModelBackend for NativeModel {
     fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
         self.check_xy(x, y);
         Ok(self.with_scratch(|s| {
-            mlp::loss_pooled(&self.spec, params, x, y, self.meta.batch, s, &self.pool)
+            let b = self.meta.batch;
+            mlp::loss_pooled_mode(&self.spec, params, x, y, b, s, &self.pool, self.compute)
         }))
     }
 
@@ -331,7 +363,17 @@ impl ModelBackend for NativeModel {
         self.check_xy(x, y);
         debug_assert_eq!(out_grad.len(), self.meta.dim);
         Ok(self.with_scratch(|s| {
-            mlp::grad_pooled(&self.spec, params, x, y, self.meta.batch, s, out_grad, &self.pool)
+            mlp::grad_pooled_mode(
+                &self.spec,
+                params,
+                x,
+                y,
+                self.meta.batch,
+                s,
+                out_grad,
+                &self.pool,
+                self.compute,
+            )
         }))
     }
 
@@ -348,8 +390,11 @@ impl ModelBackend for NativeModel {
         Ok(self.with_scratch(|s| {
             let mut pplus = std::mem::take(&mut s.pplus);
             mlp::perturb(params, v, mu, &mut pplus);
-            let lp = mlp::loss_pooled(&self.spec, &pplus, x, y, self.meta.batch, s, &self.pool);
-            let lb = mlp::loss_pooled(&self.spec, params, x, y, self.meta.batch, s, &self.pool);
+            let b = self.meta.batch;
+            let lp =
+                mlp::loss_pooled_mode(&self.spec, &pplus, x, y, b, s, &self.pool, self.compute);
+            let lb =
+                mlp::loss_pooled_mode(&self.spec, params, x, y, b, s, &self.pool, self.compute);
             s.pplus = pplus;
             (lp, lb)
         }))
@@ -740,6 +785,63 @@ mod tests {
                 "coord {j}: fd {fd} vs analytic {}",
                 g[j]
             );
+        }
+    }
+
+    #[test]
+    fn f64_mode_via_with_options_is_the_default_path() {
+        // `with_options(t, F64)` must be indistinguishable from
+        // `with_threads(t)` — bit-for-bit, not approximately.
+        let a = NativeBackend::with_threads(1);
+        let b = NativeBackend::with_options(1, ComputeMode::F64);
+        let (ma, mb) = (a.model("sensorless").unwrap(), b.model("sensorless").unwrap());
+        let params = golden_params(ma.dim());
+        let (x, y) = crate::backend::golden::golden_batch(ma.batch(), ma.features(), ma.classes());
+        assert_eq!(
+            ma.loss(&params, &x, &y).unwrap().to_bits(),
+            mb.loss(&params, &x, &y).unwrap().to_bits()
+        );
+        let mut ga = vec![0.0f32; ma.dim()];
+        let mut gb = vec![0.0f32; ma.dim()];
+        let la = ma.grad(&params, &x, &y, &mut ga).unwrap();
+        let lb = mb.grad(&params, &x, &y, &mut gb).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits());
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn f32_mode_tracks_golden_within_widened_tolerance() {
+        // The f32 reduction is NOT bit-identical to the golden recordings
+        // (those pin the f64 path), but it must stay within the widened
+        // tolerance the `--compute f32` knob promises, and within ~1e-4
+        // relative of the f64-mode value on every profile.
+        let f64_be = NativeBackend::with_threads(1);
+        let f32_be = NativeBackend::with_options(1, ComputeMode::F32);
+        for &(name, ..) in PROFILES {
+            let m64 = f64_be.model(name).unwrap();
+            let m32 = f32_be.model(name).unwrap();
+            let params = golden_params(m64.dim());
+            let (x, y) =
+                crate::backend::golden::golden_batch(m64.batch(), m64.features(), m64.classes());
+            let l64 = m64.loss(&params, &x, &y).unwrap();
+            let l32 = m32.loss(&params, &x, &y).unwrap();
+            let rel = (l64 - l32).abs() / l64.abs().max(1.0);
+            assert!(rel <= 1e-4, "{name}: f32 loss {l32} vs f64 {l64} (rel {rel})");
+            let golden = f64_be.manifest().profiles[name].golden.as_ref().unwrap();
+            let widened = 5e-3 * golden.loss.abs().max(1.0);
+            assert!(
+                ((l32 as f64) - golden.loss).abs() <= widened,
+                "{name}: f32 loss {l32} vs golden {} beyond widened tol",
+                golden.loss
+            );
+            // grad's returned loss and both halves of loss_pair take the
+            // same reduction; spot-check they agree with loss() exactly
+            let mut g = vec![0.0f32; m32.dim()];
+            let gl = m32.grad(&params, &x, &y, &mut g).unwrap();
+            assert_eq!(gl.to_bits(), l32.to_bits(), "{name}");
+            let v = crate::backend::golden::golden_direction(m32.dim());
+            let (_, pb) = m32.loss_pair(&params, &v, 1e-3, &x, &y).unwrap();
+            assert_eq!(pb.to_bits(), l32.to_bits(), "{name}");
         }
     }
 

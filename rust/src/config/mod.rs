@@ -13,7 +13,7 @@ use std::str::FromStr;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, ComputeMode};
 use crate::comm::NetworkModel;
 use crate::util::json::Json;
 
@@ -225,6 +225,11 @@ pub struct TrainConfig {
     /// for pool-less bindings (e.g. pjrt). The CLI passes `--threads` to
     /// both places, so they cannot diverge there.
     pub threads: usize,
+    /// loss-reduction precision of the native backend (`f64` = golden-exact
+    /// default; `f32` = fast mode with widened golden tolerances — see
+    /// [`ComputeMode`]). Part of the run identity: f32 traces differ from
+    /// f64 traces, so the resume fingerprint hashes this knob.
+    pub compute: ComputeMode,
     /// the communication fabric (Loopback vs TCP worker daemons + faults)
     pub transport: TransportConfig,
 }
@@ -254,6 +259,7 @@ impl Default for TrainConfig {
             momentum: 0.9,
             network: NetworkModel::default(),
             threads: 0, // auto
+            compute: ComputeMode::F64,
             transport: TransportConfig::default(),
         }
     }
@@ -264,7 +270,7 @@ impl TrainConfig {
     /// parser so document validators (the sweep plan parser rejects
     /// unknown keys loudly; `from_json` itself ignores them) cannot
     /// silently drift when a knob is added.
-    pub const JSON_KEYS: [&str; 24] = [
+    pub const JSON_KEYS: [&str; 25] = [
         "method",
         "backend",
         "dataset",
@@ -286,6 +292,7 @@ impl TrainConfig {
         "qsgd_error_feedback",
         "momentum",
         "threads",
+        "compute",
         "network",
         "workers_at",
         "fault",
@@ -415,6 +422,9 @@ impl TrainConfig {
         if let Some(x) = gn("threads") {
             cfg.threads = x as usize;
         }
+        if let Some(s) = gs("compute") {
+            cfg.compute = s.parse()?;
+        }
         if let Some(n) = v.get("network") {
             if let (Some(lat), Some(bw)) = (
                 n.get("latency_s").and_then(Json::as_f64),
@@ -467,6 +477,7 @@ impl TrainConfig {
             ("qsgd_error_feedback", Json::Bool(self.qsgd_error_feedback)),
             ("momentum", Json::num(self.momentum)),
             ("threads", Json::num(self.threads as f64)),
+            ("compute", Json::str(self.compute.label())),
             (
                 "network",
                 Json::obj(vec![
@@ -582,6 +593,7 @@ mod tests {
             mu: Some(0.01),
             backend: BackendKind::Pjrt,
             threads: 4,
+            compute: ComputeMode::F32,
             ..Default::default()
         };
         let text = c.to_json().pretty();
@@ -593,6 +605,10 @@ mod tests {
         assert_eq!(back.mu, c.mu);
         assert_eq!(back.qsgd_levels, c.qsgd_levels);
         assert_eq!(back.threads, 4);
+        assert_eq!(back.compute, ComputeMode::F32);
+        // absent key keeps the golden-exact default
+        let v = Json::parse(r#"{"method": "zo_sgd"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&v).unwrap().compute, ComputeMode::F64);
     }
 
     #[test]

@@ -551,9 +551,12 @@ fn run_meta(cfg: &TrainConfig, dim: usize) -> RunMeta {
 
 /// Hash of the trajectory-affecting knobs not named in [`RunMeta`]: the
 /// step-size rule, corpus sizes, RI-SGD redundancy, SVRG epoch geometry,
-/// QSGD levels/EF, momentum, the network model and the fault-injection
+/// QSGD levels/EF, momentum, the network model, the fault-injection
 /// plan (retries/latency enter the persisted wire counters, so a resumed
-/// run must replay the identical plan). The transport *fabric* is
+/// run must replay the identical plan), and the loss-reduction
+/// [`ComputeMode`](crate::backend::ComputeMode) (f32-mode losses differ
+/// from f64-mode losses in the last bits, so their trajectories diverge
+/// and must never share a checkpoint). The transport *fabric* is
 /// deliberately absent: loopback and TCP runs are byte-identical, so a
 /// checkpoint moves freely between them. Two configs with equal meta and
 /// equal fingerprint drive identical trajectories and accounting.
@@ -583,6 +586,7 @@ fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
         fault.drop_prob.to_bits(),
         fault.seed,
         hash_u64s(&lat_parts),
+        cfg.compute as u64,
     ])
 }
 

@@ -82,6 +82,19 @@
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
 //! - [`config`] — typed experiment configuration (JSON + CLI overrides)
 //! - [`prelude`] — one-line import of the embedding surface
+//!
+//! ## Performance
+//!
+//! The native hot paths ([`backend::mlp`], [`rng`], [`pool`]) are
+//! cache-blocked and fused under a strict bit-identity contract — fixed
+//! chunk sizes, fixed reduction order, no FMA contraction — so making
+//! them faster never changes a recorded trace. `hosgd bench` measures
+//! the per-kernel costs (plus samples/s and scalars/s) and CI gates them
+//! against the committed trajectory in `rust/benches/trajectory/`; the
+//! full performance model, including the paper's Table-1 compute claims
+//! next to measured numbers, the `--compute f32` knob and the
+//! determinism rules for kernel changes, is documented in
+//! `docs/PERFORMANCE.md` and README §Performance & benchmarks.
 
 pub mod attack;
 pub mod backend;

@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 use hosgd::attack::{
     build_task, build_task_with_params, dump_adversarial_pgm, run_attack, AttackConfig,
 };
-use hosgd::backend::{self, golden, Backend, BackendKind, ModelBackend};
+use hosgd::backend::{self, golden, Backend, BackendKind, ComputeMode, ModelBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::checkpoint::{load_params_any, RunState};
 use hosgd::coordinator::{
@@ -25,14 +25,20 @@ use hosgd::coordinator::{
 use hosgd::data::table4_profiles;
 use hosgd::metrics::sinks::{CsvSink, JsonlSink};
 use hosgd::metrics::Trace;
+use hosgd::optim::axpy_update;
+use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry};
 use hosgd::sweep::{self, build_report, execute, ExecOpts, ExperimentPlan, ParetoReport, RunSpec};
 use hosgd::theory::{table1, Table1Params};
+use hosgd::util::bench::{
+    bench, check_against_baseline, fmt_time, print_table, write_results_json, BenchResult,
+};
 use hosgd::util::cli::Args;
+use hosgd::util::json::Json;
 
 const USAGE: &str = "\
 hosgd — Hybrid-Order Distributed SGD (Omidvar et al. 2020) reproduction
 
-USAGE: hosgd [--backend native|pjrt] [--threads N] [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
+USAGE: hosgd [--backend native|pjrt] [--threads N] [--compute f64|f32] [--artifacts DIR] [--out DIR] <SUBCOMMAND> [flags]
 
 GLOBAL FLAGS
   --backend B    compute backend: native (default, pure rust) or pjrt
@@ -40,6 +46,10 @@ GLOBAL FLAGS
   --threads N    worker-pool lanes for the parallel execution engine
                  (default 0 = available parallelism; traces are
                  bit-identical at any value)
+  --compute M    loss-reduction precision of the native backend: f64
+                 (default, golden-exact) or f32 (fast; traces differ in
+                 the last bits, golden tolerances widen — see
+                 docs/PERFORMANCE.md)
   --artifacts D  artifact directory for the pjrt backend (default: artifacts)
   --out D        result directory (default: results)
 
@@ -85,6 +95,11 @@ SUBCOMMANDS
   sweep-workers  linear-speedup sweep --dataset D --workers 1,2,4,8
   sweep-mu       smoothing-parameter ablation --dataset D --mus a,b,c
   ablate-ef      QSGD error-feedback extension ablation --dataset D
+  bench          hot-path throughput harness (samples/s, scalars/s,
+                 per-kernel time) --dataset D --smoke
+                 --json PATH (default OUT/BENCH_cli.json)
+                 --check BASELINE.json (exit non-zero on >2x regression;
+                 trajectory lives in rust/benches/trajectory/)
   golden-check   cross-language numerics vs recorded goldens
   list-artifacts print the backend's profile manifest
 
@@ -93,10 +108,15 @@ ablate-ef, e2e) all run on the sweep subsystem: they accept --parallel,
 --resume and --workers-at too, and record a resumable manifest under OUT.
 ";
 
-fn open_backend(kind: BackendKind, artifacts: &str, threads: usize) -> Result<Box<dyn Backend>> {
-    let be = backend::load_with_threads(kind, Path::new(artifacts), threads)?;
+fn open_backend(
+    kind: BackendKind,
+    artifacts: &str,
+    threads: usize,
+    compute: ComputeMode,
+) -> Result<Box<dyn Backend>> {
+    let be = backend::load_with_options(kind, Path::new(artifacts), threads, compute)?;
     eprintln!(
-        "# backend: {} ({}), {} worker-pool lane(s)",
+        "# backend: {} ({}), {} worker-pool lane(s), compute {compute}",
         be.kind(),
         be.platform(),
         hosgd::pool::resolve_threads(threads)
@@ -109,6 +129,8 @@ fn main() -> Result<()> {
     let artifacts = args.get_str("artifacts", "artifacts");
     let out_dir = args.get_str("out", "results");
     let cli_backend: Option<BackendKind> = args.get_opt("backend")?;
+    let cli_compute: Option<ComputeMode> = args.get_opt("compute")?;
+    let compute = cli_compute.unwrap_or_default();
     let threads = args.get::<usize>("threads", 0)?;
     let Some(cmd) = args.subcommand() else {
         eprint!("{USAGE}");
@@ -117,7 +139,8 @@ fn main() -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
 
     match cmd {
-        "train" => cmd_train(&args, &artifacts, cli_backend, &out_dir)?,
+        "train" => cmd_train(&args, &artifacts, cli_backend, cli_compute, &out_dir)?,
+        "bench" => cmd_bench(&args, &artifacts, cli_backend, &out_dir, threads, compute)?,
         "worker" => {
             let listen = args.get_str("listen", "127.0.0.1:7070");
             let once = args.has("once");
@@ -147,11 +170,11 @@ fn main() -> Result<()> {
                 datasets.join(",")
             );
             let specs = sweep::presets::fig2(&datasets, iters, seed)?;
-            run_preset(specs, cli_backend, "fig2", preset)?;
+            run_preset(specs, cli_backend, cli_compute, "fig2", preset)?;
             println!("CSV series written to {out_dir}/fig2_<dataset>_<method>.csv");
         }
         "fig1" | "attack" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads, compute)?;
             let iters = args.get::<u64>("iters", 300)?;
             let seed = args.get::<u64>("seed", 7)?;
             let clf_iters = args.get::<u64>("clf-iters", 400)?;
@@ -162,7 +185,7 @@ fn main() -> Result<()> {
             run_fig1(be.as_ref(), &out_dir, iters, seed, clf_iters, dump, c, threads, clf_ckpt)?;
         }
         "table1" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads, compute)?;
             let dataset = args.get_str("dataset", "sensorless");
             let iters = args.get::<u64>("iters", 64)?;
             let tau = args.get::<usize>("tau", 8)?;
@@ -196,7 +219,7 @@ fn main() -> Result<()> {
                 "== Remark 3 ablation: final loss vs tau (error should grow O(1) in tau) =="
             );
             let specs = sweep::presets::ablate_tau(&dataset, iters, &taus)?;
-            run_preset(specs, cli_backend, "ablate-tau", preset)?;
+            run_preset(specs, cli_backend, cli_compute, "ablate-tau", preset)?;
         }
         "e2e" => {
             let iters = args.get::<u64>("iters", 300)?;
@@ -204,7 +227,7 @@ fn main() -> Result<()> {
             let preset = preset_opts(&args, &artifacts, &out_dir, "e2e", threads)?;
             args.finish()?;
             let specs = sweep::presets::e2e(iters, seed)?;
-            let report = run_preset(specs, cli_backend, "e2e", preset)?;
+            let report = run_preset(specs, cli_backend, cli_compute, "e2e", preset)?;
             let row = &report.entries[0].row;
             println!(
                 "# e2e: d = {} parameters, m = {}, tau = {}; trace in {out_dir}/e2e_ho_sgd.csv",
@@ -237,7 +260,7 @@ fn main() -> Result<()> {
                 specs.len(),
                 plan.axes.len()
             );
-            run_preset(specs, cli_backend, &plan.name, opts)?;
+            run_preset(specs, cli_backend, cli_compute, &plan.name, opts)?;
         }
         "sweep-workers" => {
             let dataset = args.get_str("dataset", "sensorless");
@@ -251,7 +274,7 @@ fn main() -> Result<()> {
             args.finish()?;
             println!("== worker sweep on {dataset} (HO-SGD, {iters} iters, tau=8) ==");
             let specs = sweep::presets::sweep_workers(&dataset, iters, &workers)?;
-            run_preset(specs, cli_backend, "sweep-workers", preset)?;
+            run_preset(specs, cli_backend, cli_compute, "sweep-workers", preset)?;
             println!(
                 "(expected: loss improves with m — the √m averaging gain — at identical \
                  per-worker comm)"
@@ -269,7 +292,7 @@ fn main() -> Result<()> {
             args.finish()?;
             println!("== mu sweep on {dataset} (ZO-SGD, {iters} iters) ==");
             let specs = sweep::presets::sweep_mu(&dataset, iters, &mus)?;
-            let report = run_preset(specs, cli_backend, "sweep-mu", preset)?;
+            let report = run_preset(specs, cli_backend, cli_compute, "sweep-mu", preset)?;
             let d = report.entries[0].row.dim;
             println!(
                 "theorem rule mu = 1/sqrt(dN) = {:.2e}",
@@ -283,7 +306,7 @@ fn main() -> Result<()> {
             args.finish()?;
             println!("== QSGD error-feedback ablation on {dataset} ({iters} iters) ==");
             let specs = sweep::presets::ablate_ef(&dataset, iters)?;
-            run_preset(specs, cli_backend, "ablate-ef", preset)?;
+            run_preset(specs, cli_backend, cli_compute, "ablate-ef", preset)?;
             println!(
                 "(EF trades the unbiased estimator for a contractive one; its payoff shows \
                  under\n aggressive biased compression — recorded as an extension ablation in \
@@ -291,12 +314,12 @@ fn main() -> Result<()> {
             );
         }
         "golden-check" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads, compute)?;
             args.finish()?;
-            golden_check(be.as_ref())?;
+            golden_check(be.as_ref(), compute)?;
         }
         "list-artifacts" => {
-            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads)?;
+            let be = open_backend(cli_backend.unwrap_or_default(), &artifacts, threads, compute)?;
             args.finish()?;
             let m = be.manifest();
             for (name, p) in &m.profiles {
@@ -339,6 +362,7 @@ fn cmd_train(
     args: &Args,
     artifacts: &str,
     cli_backend: Option<BackendKind>,
+    cli_compute: Option<ComputeMode>,
     out_dir: &str,
 ) -> Result<()> {
     let mut cfg = match args.get_opt::<String>("config")? {
@@ -348,6 +372,9 @@ fn cmd_train(
     // CLI wins over the config file; the config file wins over the default
     if let Some(kind) = cli_backend {
         cfg.backend = kind;
+    }
+    if let Some(mode) = cli_compute {
+        cfg.compute = mode;
     }
     cfg.method = args.get_str("method", cfg.method.label()).parse()?;
     cfg.dataset = args.get_str("dataset", &cfg.dataset);
@@ -386,7 +413,7 @@ fn cmd_train(
     let stream_csv = args.get_opt::<String>("stream-csv")?;
     let stream_jsonl = args.get_opt::<String>("stream-jsonl")?;
     args.finish()?;
-    let be = open_backend(cfg.backend, artifacts, cfg.threads)?;
+    let be = open_backend(cfg.backend, artifacts, cfg.threads, cfg.compute)?;
     let model = be.model(&cfg.dataset)?;
     let data = make_data(&cfg)?;
 
@@ -462,6 +489,147 @@ fn print_trace_summary(t: &Trace) {
     );
 }
 
+/// `hosgd bench` — the committed-trajectory throughput harness (see
+/// docs/PERFORMANCE.md). Each case reports per-kernel wall time plus two
+/// derived throughputs: samples/s (minibatch samples consumed per call)
+/// and scalars/s (parameter scalars streamed per call — d per forward
+/// pass, counted once per pass). Results are written as a `BENCH_*.json`
+/// artifact; `--check` gates medians at 2x against a committed baseline
+/// (the per-PR history lives in `rust/benches/trajectory/`).
+fn cmd_bench(
+    args: &Args,
+    artifacts: &str,
+    cli_backend: Option<BackendKind>,
+    out_dir: &str,
+    threads: usize,
+    compute: ComputeMode,
+) -> Result<()> {
+    let smoke = args.has("smoke");
+    let dataset = args.get_str("dataset", "sensorless");
+    let default_json = format!("{out_dir}/BENCH_cli.json");
+    let json_path = args.get_str("json", &default_json);
+    let check = args.get_opt::<String>("check")?;
+    args.finish()?;
+    let reps = |full: usize| if smoke { 5 } else { full };
+    let warm = |full: usize| if smoke { 1 } else { full };
+
+    let kind = cli_backend.unwrap_or_default();
+    let be = open_backend(kind, artifacts, threads, compute)?;
+    let model = be.model(&dataset)?;
+    let d = model.dim();
+    let b = model.batch();
+    let p = golden::golden_params(d);
+    let (x, y) = golden::golden_batch(b, model.features(), model.classes());
+    let v = golden::golden_direction(d);
+    let mut g = vec![0.0f32; d];
+
+    // (result, samples per call, parameter scalars streamed per call)
+    let mut rows: Vec<(BenchResult, f64, f64)> = Vec::new();
+
+    // the dense-GEMM hot path: one blocked forward + f64/f32 reduction
+    rows.push((
+        bench(&format!("dense_fwd loss ({dataset} B={b})"), warm(3), reps(40), || {
+            std::hint::black_box(model.loss(&p, &x, &y).unwrap());
+        }),
+        b as f64,
+        d as f64,
+    ));
+    // the ZO two-point hot path: fused +mu / base probes, one minibatch
+    rows.push((
+        bench(&format!("zo_pair loss_pair ({dataset} B={b})"), warm(3), reps(40), || {
+            std::hint::black_box(model.loss_pair(&p, &v, 1e-3, &x, &y).unwrap());
+        }),
+        2.0 * b as f64,
+        2.0 * d as f64,
+    ));
+    // the FO oracle: forward + backprop + blocked wgrad (~3 passes over w)
+    rows.push((
+        bench(&format!("fo_grad grad ({dataset} B={b})"), warm(3), reps(40), || {
+            std::hint::black_box(model.grad(&p, &x, &y, &mut g).unwrap());
+        }),
+        b as f64,
+        3.0 * d as f64,
+    ));
+
+    // direction regeneration — per (ZO iter, worker) on every rank
+    let reg = SeedRegistry::new(1);
+    let mut dir = vec![0.0f32; d];
+    let mut scratch = Vec::new();
+    let mut t = 0u64;
+    rows.push((
+        bench(&format!("regen_direction d={d}"), warm(3), reps(60), || {
+            t += 1;
+            unit_sphere_direction_scratch(reg.direction_seed(t, 0), &mut dir, &mut scratch);
+            std::hint::black_box(&dir);
+        }),
+        0.0,
+        d as f64,
+    ));
+    let mut upd = vec![0.1f32; d];
+    rows.push((
+        bench(&format!("axpy_update d={d}"), warm(3), reps(200), || {
+            axpy_update(&mut upd, 1e-4, &dir);
+            std::hint::black_box(&upd);
+        }),
+        0.0,
+        d as f64,
+    ));
+
+    // the f32 knob, measured side by side (native-only; see ComputeMode)
+    if kind == BackendKind::Native {
+        let be32 =
+            backend::load_with_options(kind, Path::new(artifacts), threads, ComputeMode::F32)?;
+        let m32 = be32.model(&dataset)?;
+        rows.push((
+            bench(&format!("dense_fwd loss f32 ({dataset} B={b})"), warm(3), reps(40), || {
+                std::hint::black_box(m32.loss(&p, &x, &y).unwrap());
+            }),
+            b as f64,
+            d as f64,
+        ));
+    }
+
+    let results: Vec<BenchResult> = rows.iter().map(|(r, ..)| r.clone()).collect();
+    print_table("hosgd bench — hot-path kernels", &results);
+    println!("\n{:<40} {:>10} {:>14} {:>14}", "case", "median", "samples/s", "scalars/s");
+    for (r, samples, scalars) in &rows {
+        let per = |units: f64| {
+            if units > 0.0 && r.median_s > 0.0 {
+                format!("{:.3e}", units / r.median_s)
+            } else {
+                "-".into()
+            }
+        };
+        println!(
+            "{:<40} {:>10} {:>14} {:>14}",
+            r.name,
+            fmt_time(r.median_s),
+            per(*samples),
+            per(*scalars)
+        );
+    }
+
+    write_results_json(&json_path, "hosgd bench", &results)?;
+    if let Some(baseline_path) = check {
+        let text = std::fs::read_to_string(&baseline_path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline = Json::parse(&text)?;
+        let failures = check_against_baseline(&results, &baseline, 2.0);
+        if failures.is_empty() {
+            println!("baseline check OK ({baseline_path}, factor 2.0)");
+        } else {
+            for f in &failures {
+                eprintln!("  - {f}");
+            }
+            bail!(
+                "bench baseline check failed against {baseline_path} ({} case(s))",
+                failures.len()
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Shared executor flags of every sweep-backed subcommand (`--parallel`,
 /// `--resume`, `--workers-at`, and the global `--threads` for the
 /// per-run pools).
@@ -494,12 +662,18 @@ fn preset_opts(
 fn run_preset(
     mut specs: Vec<RunSpec>,
     cli_backend: Option<BackendKind>,
+    cli_compute: Option<ComputeMode>,
     name: &str,
     opts: ExecOpts,
 ) -> Result<ParetoReport> {
     if let Some(kind) = cli_backend {
         for s in &mut specs {
             s.cfg.backend = kind;
+        }
+    }
+    if let Some(mode) = cli_compute {
+        for s in &mut specs {
+            s.cfg.compute = mode;
         }
     }
     let outcome = execute(&specs, &opts)?;
@@ -645,8 +819,14 @@ fn run_table1(be: &dyn Backend, dataset: &str, iters: u64, tau: usize) -> Result
     Ok(())
 }
 
-fn golden_check(be: &dyn Backend) -> Result<()> {
-    let tol = 2e-3;
+fn golden_check(be: &dyn Backend, compute: ComputeMode) -> Result<()> {
+    // the f32 reduction is allowed a wider band than the golden-exact f64
+    // path — this is the ONLY place tolerances widen, and only under the
+    // explicit --compute f32 knob (docs/PERFORMANCE.md §f32 mode)
+    let tol = match compute {
+        ComputeMode::F64 => 2e-3,
+        ComputeMode::F32 => 5e-3,
+    };
     let mut checked = 0;
     for (name, prof) in &be.manifest().profiles {
         let Some(g) = &prof.golden else { continue };

@@ -161,6 +161,10 @@ pub struct WorkerCtx<O> {
     /// QSGD: the worker's quantized gradient for this round (what a real
     /// deployment puts on the wire; filled by the transport fabric)
     pub quant: Option<Quantized>,
+    /// escape hatch: `HOSGD_ZO_UNFUSED=1` routes [`WorkerCtx::zo_probe`]
+    /// through two plain losses instead of the fused [`Oracle::pair`]
+    /// (read once at construction; both paths are bit-identical)
+    unfused: bool,
     err: Option<anyhow::Error>,
 }
 
@@ -181,6 +185,7 @@ impl<O: Oracle> WorkerCtx<O> {
             snap_loss: 0.0,
             snap_loss_plus: 0.0,
             quant: None,
+            unfused: std::env::var("HOSGD_ZO_UNFUSED").map(|v| v == "1").unwrap_or(false),
             err: None,
         }
     }
@@ -202,13 +207,17 @@ impl<O: Oracle> WorkerCtx<O> {
     /// Two-point ZO probe along `self.dir`: `(F(params + mu·v), F(params))`
     /// on the `(iter, worker)` minibatch.
     ///
-    /// §Perf L2: measured on the CPU PJRT backend, two plain `loss`
-    /// dispatches with a rust-side perturbation are ~15% faster than the
-    /// fused `loss_pair` executable (the fused graph re-runs the perturb
-    /// kernel + two forwards inside one program with no cross-point fusion
-    /// to exploit). The fused entry point remains available via
-    /// [`Oracle::pair`] and is compared in `benches/hotpath.rs`. Both paths
-    /// evaluate identical math on the identical seed-keyed batch.
+    /// §Perf: routes through the fused [`Oracle::pair`], which samples and
+    /// gathers the `(iter, worker)` minibatch **once** and checks one
+    /// scratch buffer out for both forward passes — the unfused path pays
+    /// both costs twice. (The fused default was measured slower only on
+    /// the PJRT backend, whose fused executable re-runs the perturb kernel
+    /// inside the graph; the native backend has no such penalty.) Both
+    /// paths perturb as `p + mu·v` with identical rounding and evaluate
+    /// identical math on the identical seed-keyed batch, so they are
+    /// bit-identical — asserted for every ZO-family method by
+    /// `rust/tests/perf_contracts.rs`, and escapable at runtime via
+    /// `HOSGD_ZO_UNFUSED=1`.
     pub fn zo_probe(
         &mut self,
         params: &[f32],
@@ -216,11 +225,14 @@ impl<O: Oracle> WorkerCtx<O> {
         iter: u64,
         worker: u64,
     ) -> Result<(f32, f32)> {
-        self.pplus.copy_from_slice(params);
-        axpy_acc(&mut self.pplus, mu, &self.dir);
-        let lp = self.oracle.loss(&self.pplus, iter, worker)?;
-        let lb = self.oracle.loss(params, iter, worker)?;
-        Ok((lp, lb))
+        if self.unfused {
+            self.pplus.copy_from_slice(params);
+            axpy_acc(&mut self.pplus, mu, &self.dir);
+            let lp = self.oracle.loss(&self.pplus, iter, worker)?;
+            let lb = self.oracle.loss(params, iter, worker)?;
+            return Ok((lp, lb));
+        }
+        self.oracle.pair(params, &self.dir, mu, iter, worker)
     }
 }
 

@@ -27,6 +27,13 @@
 //! (the std-only substitute for a work-stealing deque), and borrowed job
 //! closures are lifetime-erased behind a raw pointer whose validity is
 //! guaranteed by scatter's join-before-return.
+//!
+//! Chunking invariant shared with the kernels in [`crate::backend::mlp`]:
+//! callers split work on **fixed chunk-size boundaries** (constants, never
+//! derived from the lane count), so the set of chunks — and therefore the
+//! per-chunk partial results the caller reduces in fixed order — is
+//! identical at every `--threads` value. See `docs/PERFORMANCE.md` for
+//! the full determinism rules.
 
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -246,10 +253,13 @@ unsafe impl<T: Send> Send for Shards<'_, T> {}
 unsafe impl<T: Send> Sync for Shards<'_, T> {}
 
 impl<'a, T> Shards<'a, T> {
+    /// Wrap a slice so scatter jobs can each mutate their own element.
     pub fn new(xs: &'a mut [T]) -> Self {
         Self { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: PhantomData }
     }
 
+    /// Exclusive access to element `i`.
+    ///
     /// # Safety
     /// Each index must be accessed by at most one thread at a time — which
     /// holds when `i` is the caller's scatter job index.
@@ -273,10 +283,13 @@ unsafe impl<T: Send> Send for SliceParts<'_, T> {}
 unsafe impl<T: Send> Sync for SliceParts<'_, T> {}
 
 impl<'a, T> SliceParts<'a, T> {
+    /// Wrap a flat buffer so scatter jobs can each mutate a disjoint range.
     pub fn new(xs: &'a mut [T]) -> Self {
         Self { ptr: xs.as_mut_ptr(), len: xs.len(), _marker: PhantomData }
     }
 
+    /// Exclusive access to `start..start + len`.
+    ///
     /// # Safety
     /// Ranges handed to concurrently running jobs must not overlap.
     #[allow(clippy::mut_from_ref)]

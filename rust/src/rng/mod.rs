@@ -235,7 +235,15 @@ impl Xoshiro256 {
     /// one compare, one multiply).
     #[inline]
     pub fn next_normal_zig(&mut self) -> f64 {
-        let t = zig_tables();
+        self.next_normal_zig_with(zig_tables())
+    }
+
+    /// [`Self::next_normal_zig`] against a pre-fetched table reference —
+    /// the bulk-fill path of [`unit_sphere_direction_scratch`] pays the
+    /// `OnceLock` atomic load once per direction instead of once per
+    /// sample. Identical draw sequence, identical bits.
+    #[inline]
+    fn next_normal_zig_with(&mut self, t: &ZigTables) -> f64 {
         loop {
             let bits = self.next_u64();
             let layer = (bits & 0x7F) as usize;
@@ -278,19 +286,23 @@ pub fn unit_sphere_direction(seed: u64, out: &mut [f32]) {
 /// Direction generation without the f64 scratch allocation — used on the
 /// hot path with a caller-provided scratch buffer (§Perf).
 ///
-/// Generates normals in Box–Muller pairs (2× fewer transcendentals than
-/// the one-at-a-time path) — see EXPERIMENTS.md §Perf for the before/after.
-/// NOTE: uses a different RNG consumption pattern than
-/// [`unit_sphere_direction`] would with single draws, so both paths share
-/// this pair-wise implementation to stay bit-identical.
+/// Draws normals with the ZIGNOR ziggurat (one u64 draw + one compare +
+/// one multiply in the common case) with the layer tables fetched once
+/// per direction, and skips the scratch memset entirely. NOTE: the RNG
+/// consumption pattern is part of the determinism contract — every rank
+/// regenerates directions through this exact routine, so any change to
+/// the draw sequence changes every ZO trace.
 pub fn unit_sphere_direction_scratch(seed: u64, out: &mut [f32], scratch: &mut Vec<f64>) {
     let mut rng = Xoshiro256::seeded(seed);
     let d = out.len();
-    scratch.clear();
+    // resize WITHOUT the old `clear()`: every slot is overwritten by the
+    // fill below, so zeroing d·8 bytes per regenerated direction was pure
+    // memset waste on the ZO hot path (d = 24k on sensorless)
     scratch.resize(d, 0.0);
+    let t = zig_tables(); // one OnceLock load per direction, not per sample
     let mut norm2 = 0.0f64;
     for zi in scratch.iter_mut() {
-        let z = rng.next_normal_zig();
+        let z = rng.next_normal_zig_with(t);
         *zi = z;
         norm2 += z * z;
     }

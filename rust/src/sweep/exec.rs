@@ -150,7 +150,7 @@ fn run_one(
             RunFailure::Local(e)
         }
     };
-    let be = backend::load_with_threads(cfg.backend, &opts.artifacts, cfg.threads)
+    let be = backend::load_with_options(cfg.backend, &opts.artifacts, cfg.threads, cfg.compute)
         .with_context(|| format!("run {}: loading backend", spec.label))
         .map_err(local)?;
     let model = be

@@ -535,7 +535,10 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
         if cfg.workers != m as usize {
             bail!("AssignShard m = {m} disagrees with config workers = {}", cfg.workers);
         }
-        let be = backend::load_with_threads(cfg.backend, &opts.artifacts, opts.threads)?;
+        // the shipped config carries "compute": an f32-mode coordinator
+        // gets f32-mode daemons, keeping the joint trace self-consistent
+        let be =
+            backend::load_with_options(cfg.backend, &opts.artifacts, opts.threads, cfg.compute)?;
         Ok((cfg, be))
     };
     let (cfg, be) = match build() {

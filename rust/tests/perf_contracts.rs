@@ -1,0 +1,130 @@
+//! Perf-rework contracts: the kernel/oracle optimizations shipped for
+//! speed must be *invisible* in the numbers.
+//!
+//! * The fused ZO two-point path ([`hosgd::optim::WorkerCtx::zo_probe`]
+//!   routes through `Oracle::pair`, sharing one minibatch gather and one
+//!   scratch checkout between the +mu and base probes) must produce
+//!   byte-identical traces to the unfused two-plain-losses path, for
+//!   every ZO-family method. The `HOSGD_ZO_UNFUSED=1` escape hatch exists
+//!   exactly so this suite can drive both paths from the same binary.
+//! * The `--compute f32` knob is the ONE sanctioned divergence: its loss
+//!   reductions are close to (but deliberately not bit-equal with) the
+//!   f64-mode trajectory, and the widened tolerance is bounded here.
+//!
+//! Env-var note: this file is its own test binary and serializes both
+//! env-sensitive tests into single #[test] bodies, so the process-global
+//! `HOSGD_ZO_UNFUSED` flips cannot race a parallel test thread.
+
+use hosgd::backend::{Backend, ComputeMode, NativeBackend};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, run_train_with, TrainOutcome};
+use hosgd::metrics::Trace;
+
+/// The methods whose workers take the ZO two-point path every iteration
+/// (HO-SGD families probe ZO between FO exchanges; pure-ZO ones always).
+const ZO_FAMILY: [Method; 4] = [Method::HoSgd, Method::ZoSgd, Method::ZoSvrgAve, Method::HoSgdM];
+
+fn cfg(method: Method, dataset: &str, iters: u64, compute: ComputeMode) -> TrainConfig {
+    TrainConfig {
+        method,
+        dataset: dataset.into(),
+        iters,
+        workers: 4,
+        tau: 4,
+        step: StepSize::Constant { alpha: 0.02 },
+        seed: 11,
+        eval_every: 8,
+        record_every: 1,
+        svrg_epoch: 10,
+        threads: 1,
+        compute,
+        ..Default::default()
+    }
+}
+
+fn run(method: Method, dataset: &str, iters: u64, compute: ComputeMode) -> TrainOutcome {
+    let be = NativeBackend::with_options(1, compute);
+    let cfg = cfg(method, dataset, iters, compute);
+    let model = be.model(dataset).unwrap();
+    let data = make_data(&cfg).unwrap();
+    run_train_with(model.as_ref(), &data, &cfg).unwrap()
+}
+
+/// Bit-exact comparison of everything a trace records except wall-clock.
+fn assert_traces_identical(method: Method, a: &Trace, b: &Trace) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{method}: row counts differ");
+    for (ra, rb) in a.rows.iter().zip(b.rows.iter()) {
+        assert_eq!(ra.iter, rb.iter, "{method}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{method} iter {}: train_loss {} vs {}",
+            ra.iter,
+            ra.train_loss,
+            rb.train_loss
+        );
+        assert_eq!(
+            ra.test_acc.map(f64::to_bits),
+            rb.test_acc.map(f64::to_bits),
+            "{method} iter {}: test_acc",
+            ra.iter
+        );
+        assert_eq!(ra.bytes_per_worker, rb.bytes_per_worker, "{method} iter {}", ra.iter);
+        assert_eq!(ra.scalars_per_worker, rb.scalars_per_worker, "{method} iter {}", ra.iter);
+        assert_eq!(ra.fn_evals, rb.fn_evals, "{method} iter {}", ra.iter);
+        assert_eq!(ra.grad_evals, rb.grad_evals, "{method} iter {}", ra.iter);
+    }
+}
+
+#[test]
+fn fused_zo_two_point_is_bit_identical_to_unfused_probes() {
+    // one test body, not one per method: both halves flip a process-wide
+    // env var, so they must run strictly in sequence
+    for method in ZO_FAMILY {
+        std::env::remove_var("HOSGD_ZO_UNFUSED");
+        let fused = run(method, "quickstart", 24, ComputeMode::F64);
+        std::env::set_var("HOSGD_ZO_UNFUSED", "1");
+        let unfused = run(method, "quickstart", 24, ComputeMode::F64);
+        std::env::remove_var("HOSGD_ZO_UNFUSED");
+        assert_traces_identical(method, &fused.trace, &unfused.trace);
+        assert_eq!(fused.params.len(), unfused.params.len(), "{method}");
+        for (j, (a, b)) in fused.params.iter().zip(unfused.params.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method}: param {j} {a} vs {b}");
+        }
+    }
+    // and on a real profile, where the blocked kernels actually chunk
+    let fused = run(Method::HoSgd, "sensorless", 6, ComputeMode::F64);
+    std::env::set_var("HOSGD_ZO_UNFUSED", "1");
+    let unfused = run(Method::HoSgd, "sensorless", 6, ComputeMode::F64);
+    std::env::remove_var("HOSGD_ZO_UNFUSED");
+    assert_traces_identical(Method::HoSgd, &fused.trace, &unfused.trace);
+    for (a, b) in fused.params.iter().zip(unfused.params.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn f32_compute_mode_stays_within_widened_tolerance_of_f64() {
+    // the knob's contract: same trajectory shape, losses within 5e-3 of
+    // the f64-mode run at every recorded iteration — close, not equal
+    for method in [Method::HoSgd, Method::ZoSgd] {
+        let a = run(method, "quickstart", 24, ComputeMode::F64);
+        let b = run(method, "quickstart", 24, ComputeMode::F32);
+        assert_eq!(a.trace.rows.len(), b.trace.rows.len(), "{method}");
+        for (ra, rb) in a.trace.rows.iter().zip(b.trace.rows.iter()) {
+            let tol = 5e-3 * ra.train_loss.abs().max(1.0);
+            assert!(
+                (ra.train_loss - rb.train_loss).abs() <= tol,
+                "{method} iter {}: f64 {} vs f32 {}",
+                ra.iter,
+                ra.train_loss,
+                rb.train_loss
+            );
+        }
+        // comm accounting is precision-independent
+        let (la, lb) = (a.trace.rows.last().unwrap(), b.trace.rows.last().unwrap());
+        assert_eq!(la.bytes_per_worker, lb.bytes_per_worker, "{method}");
+        assert_eq!(la.scalars_per_worker, lb.scalars_per_worker, "{method}");
+        assert_eq!(la.fn_evals, lb.fn_evals, "{method}");
+    }
+}
