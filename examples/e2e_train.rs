@@ -72,7 +72,7 @@ fn main() -> Result<()> {
     let mut session = Session::new(model.as_ref(), &data, &cfg)?;
     session.add_observer(LiveLog { syncs: 0 });
     session.run_until(half)?;
-    session.snapshot().save(&ckpt)?;
+    session.snapshot()?.save(&ckpt)?;
     println!("  checkpointed at iteration {} -> {}", session.iter(), ckpt.display());
     drop(session);
 
@@ -83,7 +83,7 @@ fn main() -> Result<()> {
     session.add_observer(LiveLog { syncs: 0 });
     session.run_to_end()?;
 
-    let out = session.into_outcome();
+    let out = session.into_outcome()?;
     let first = out.trace.rows.first().unwrap();
     let last = out.trace.rows.last().unwrap();
     println!(

@@ -364,7 +364,7 @@ pub fn run_attack(
     let mut session = Session::with_oracle(oracle, &scfg, pool)?;
     session.run_to_end()?;
     let trace = session.trace();
-    let xp = session.params();
+    let xp = session.params()?;
     let (logits, dists) = bind.eval(&xp, &task.clf_params, &task.images)?;
     let n = bind.eval_batch();
     let classes = logits.len() / n;

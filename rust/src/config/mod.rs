@@ -149,6 +149,15 @@ pub struct TransportConfig {
     pub workers_at: Vec<String>,
     /// fault injection (Loopback only — rejected with `workers_at`)
     pub fault: FaultPlan,
+    /// bounded-staleness run-ahead window W for pipelineable rounds
+    /// (RI-SGD local steps between averaging points): the coordinator may
+    /// have up to W rounds in flight before blocking on the oldest. W = 0
+    /// (default) is the fully synchronous exchange and reproduces the
+    /// canonical traces bit-for-bit; W > 0 keeps the trajectory and byte
+    /// counters identical but shifts when latency/bytes are charged (rows
+    /// account in-flight rounds when they complete). Part of the run
+    /// identity (fingerprinted).
+    pub staleness_window: usize,
 }
 
 /// Step-size rule. `Theory` is Theorem 1's α = √(Bm)/(L√N).
@@ -270,7 +279,7 @@ impl TrainConfig {
     /// parser so document validators (the sweep plan parser rejects
     /// unknown keys loudly; `from_json` itself ignores them) cannot
     /// silently drift when a knob is added.
-    pub const JSON_KEYS: [&str; 25] = [
+    pub const JSON_KEYS: [&str; 26] = [
         "method",
         "backend",
         "dataset",
@@ -296,6 +305,7 @@ impl TrainConfig {
         "network",
         "workers_at",
         "fault",
+        "staleness_window",
     ];
 
     /// Theorem 1's smoothing rule μ = 1/√(dN).
@@ -437,6 +447,9 @@ impl TrainConfig {
             cfg.transport.workers_at =
                 ws.iter().filter_map(|a| a.as_str().map(String::from)).collect();
         }
+        if let Some(x) = gn("staleness_window") {
+            cfg.transport.staleness_window = x as usize;
+        }
         if let Some(fv) = v.get("fault") {
             if let Some(lat) = fv.get("latency_s").and_then(Json::as_arr) {
                 cfg.transport.fault.latency_s = lat.iter().filter_map(Json::as_f64).collect();
@@ -489,6 +502,7 @@ impl TrainConfig {
                 "workers_at",
                 Json::Arr(self.transport.workers_at.iter().map(Json::str).collect()),
             ),
+            ("staleness_window", Json::num(self.transport.staleness_window as f64)),
             (
                 "fault",
                 Json::obj(vec![
@@ -641,12 +655,14 @@ mod tests {
             transport: TransportConfig {
                 workers_at: Vec::new(),
                 fault: FaultPlan { latency_s: vec![0.0, 1e-3], drop_prob: 0.25, seed: 9 },
+                staleness_window: 3,
             },
             ..Default::default()
         };
         c.validate().unwrap();
         let back = TrainConfig::from_json(&Json::parse(&c.to_json().pretty()).unwrap()).unwrap();
         assert_eq!(back.transport, c.transport);
+        assert_eq!(back.transport.staleness_window, 3);
         assert!(back.transport.fault.is_active());
         assert!(!TrainConfig::default().transport.fault.is_active());
 
@@ -655,6 +671,7 @@ mod tests {
             transport: TransportConfig {
                 workers_at: vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()],
                 fault: FaultPlan::default(),
+                staleness_window: 0,
             },
             ..Default::default()
         };
@@ -667,6 +684,7 @@ mod tests {
             transport: TransportConfig {
                 workers_at: vec!["h:1".into()],
                 fault: FaultPlan { latency_s: Vec::new(), drop_prob: 0.5, seed: 0 },
+                staleness_window: 0,
             },
             ..Default::default()
         };
@@ -675,6 +693,7 @@ mod tests {
             transport: TransportConfig {
                 workers_at: Vec::new(),
                 fault: FaultPlan { latency_s: Vec::new(), drop_prob: 1.5, seed: 0 },
+                staleness_window: 0,
             },
             ..Default::default()
         };

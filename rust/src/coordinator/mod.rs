@@ -132,5 +132,5 @@ pub fn run_train_with(
 ) -> Result<TrainOutcome> {
     let mut session = Session::new(model, data, cfg)?;
     session.run_to_end()?;
-    Ok(session.into_outcome())
+    session.into_outcome()
 }

@@ -33,6 +33,7 @@
 //! minibatches, QSGD quantization, fault-injection drops) is re-derived
 //! from `(seed, iter, worker)`.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -170,6 +171,25 @@ impl Observer for PeriodicCheckpoint {
 /// sessions may have none).
 type Evaluator<'a> = Box<dyn FnMut(&[f32]) -> Result<f64> + 'a>;
 
+/// One executed-but-not-yet-emitted iteration: everything `step()` learned
+/// at issue time. `loss` is `NaN` while the round is still in flight on
+/// the fabric (bounded-staleness pipelining); the fabric's completion
+/// patches it in, and the step is emitted once it reaches the queue front.
+#[derive(Debug, Clone, Copy)]
+struct PendingStep {
+    t: u64,
+    /// mean train loss; `NaN` until the round completes
+    loss: f64,
+    recorded: bool,
+    sync_round: bool,
+    /// per-worker byte delta of this iteration (for [`SyncEvent`])
+    sync_bytes: u64,
+    /// per-worker scalar delta of this iteration (for [`SyncEvent`])
+    sync_scalars: u64,
+    do_eval: bool,
+    final_step: bool,
+}
+
 /// One run as a first-class value: step it, observe it, snapshot it,
 /// resume it. Generic over the [`Oracle`] (defaulting to the training
 /// oracle); see the module docs for the contract. `run_train_with` is a
@@ -183,6 +203,9 @@ pub struct Session<'a, O: Oracle = TrainOracle<'a>> {
     evaluator: Option<Evaluator<'a>>,
     /// next iteration to execute
     t: u64,
+    /// executed iterations whose rounds may still be in flight on the
+    /// fabric (FIFO; non-empty only at `staleness_window > 0`)
+    pending: VecDeque<PendingStep>,
     watch: Stopwatch,
     eval_overhead: f64,
     /// compute seconds carried over from the run segment(s) before restore
@@ -204,10 +227,14 @@ impl<'a> Session<'a, TrainOracle<'a>> {
             cfg.seed,
         );
         // the communication fabric: in-process loopback (with any
-        // configured fault plan) unless remote daemons are configured
+        // configured fault plan and staleness window) unless remote
+        // daemons are configured
         let transport: Box<dyn Transport<TrainOracle<'a>>> =
             if cfg.transport.workers_at.is_empty() {
-                Box::new(Loopback::new(cfg.transport.fault.clone()))
+                Box::new(Loopback::with_window(
+                    cfg.transport.fault.clone(),
+                    cfg.transport.staleness_window,
+                ))
             } else {
                 Box::new(TcpTransport::connect(&cfg.transport.workers_at, cfg, model.dim())?)
             };
@@ -265,7 +292,10 @@ impl<'a, O: Oracle> Session<'a, O> {
                  (or use Session::new for training runs)"
             );
         }
-        let transport: Box<dyn Transport<O>> = Box::new(Loopback::new(cfg.transport.fault.clone()));
+        let transport: Box<dyn Transport<O>> = Box::new(Loopback::with_window(
+            cfg.transport.fault.clone(),
+            cfg.transport.staleness_window,
+        ));
         Self::from_parts(oracle, cfg, pool, transport, None)
     }
 
@@ -290,6 +320,7 @@ impl<'a, O: Oracle> Session<'a, O> {
             observers: Vec::new(),
             evaluator,
             t: 0,
+            pending: VecDeque::new(),
             watch: Stopwatch::start(),
             eval_overhead: 0.0,
             compute_base_s: 0.0,
@@ -327,10 +358,25 @@ impl<'a, O: Oracle> Session<'a, O> {
         &self.recorder.rows
     }
 
-    /// Execute one iteration of the method's schedule; fires observer
-    /// events and returns the [`StepEvent`]. Errors once the horizon is
+    /// Execute one iteration of the method's schedule and return the
+    /// [`StepEvent`]s it *completed*. Errors once the horizon is
     /// exhausted.
-    pub fn step(&mut self) -> Result<StepEvent> {
+    ///
+    /// At staleness window `W = 0` (the default) every round completes
+    /// synchronously: the returned vector holds exactly the one event for
+    /// this iteration and observers fire inside this call — the classic
+    /// contract, byte-identical traces included. At `W > 0` a pipelineable
+    /// round (RI-SGD's local step between averaging points) may still be
+    /// in flight when this returns: its event is emitted — in iteration
+    /// order, with the documented observer dispatch order preserved — by
+    /// whichever later call completes it (`step()`, the eval cadence, a
+    /// snapshot, or the end of the run), so the vector may be empty or
+    /// carry several events. A [`TraceRow`] is built when its round
+    /// *completes*, so at `W > 0` its cumulative counters can include the
+    /// issue-side cost of later in-flight rounds — honest accounting for
+    /// an asynchronous schedule (and exactly the classic numbers at
+    /// `W = 0`).
+    pub fn step(&mut self) -> Result<Vec<StepEvent>> {
         let t = self.t;
         if t >= self.cfg.iters {
             bail!("session already ran all {} iterations", self.cfg.iters);
@@ -344,20 +390,95 @@ impl<'a, O: Oracle> Session<'a, O> {
         // move O(1) — the gap is the paper's whole point, so the
         // classification is unambiguous
         let d = self.world.dim() as u64;
-        let sync_round = stats.scalars_per_worker - before.scalars_per_worker >= d;
-
         let last = self.t == self.cfg.iters;
         let record = self.cfg.record_every > 0 && t % self.cfg.record_every == 0;
         let do_eval = self.cfg.eval_every > 0 && (t % self.cfg.eval_every == 0 || last);
-        let test_acc = if do_eval { Some(self.eval_now()?) } else { None };
+        self.pending.push_back(PendingStep {
+            t,
+            loss: train_loss,
+            recorded: record || last || do_eval,
+            sync_round: stats.scalars_per_worker - before.scalars_per_worker >= d,
+            sync_bytes: stats.bytes_per_worker - before.bytes_per_worker,
+            sync_scalars: stats.scalars_per_worker - before.scalars_per_worker,
+            do_eval,
+            final_step: last,
+        });
+        if do_eval || last {
+            // evaluation (and run finish) reads post-step state: complete
+            // everything still in flight first
+            self.world.barrier()?;
+        }
+        let mut events = self.emit_ready()?;
 
+        // snapshot-wanting observers (PeriodicCheckpoint and friends):
+        // query each completed event in order; the RunState is built at
+        // most once per event and shared among all askers. Building a
+        // snapshot forces the pipeline dry — any rows completed by that
+        // flush join this call's events and get their own query below.
+        let mut i = 0;
+        while i < events.len() {
+            let ev = events[i];
+            i += 1;
+            let wants: Vec<bool> =
+                self.observers.iter_mut().map(|o| o.wants_snapshot(&ev)).collect();
+            if !wants.contains(&true) {
+                continue;
+            }
+            events.extend(self.flush_pending()?);
+            let state = self.build_run_state()?;
+            // taken out so `on_snapshot` borrows no part of the session
+            let mut obs = std::mem::take(&mut self.observers);
+            let outcome = obs
+                .iter_mut()
+                .zip(&wants)
+                .filter(|&(_, &w)| w)
+                .try_for_each(|(o, _)| o.on_snapshot(&state));
+            self.observers = obs;
+            outcome?;
+        }
+        Ok(events)
+    }
+
+    /// Patch in losses the fabric has delivered since the last call, then
+    /// emit every completed front-of-queue step. Rounds are FIFO per
+    /// fabric, so completions drain the queue front-to-back and events
+    /// fire in iteration order.
+    fn emit_ready(&mut self) -> Result<Vec<StepEvent>> {
+        for (ct, loss) in self.world.take_completions() {
+            if let Some(p) = self.pending.iter_mut().find(|p| p.t == ct) {
+                p.loss = loss;
+            }
+        }
+        let mut events = Vec::new();
+        while self.pending.front().is_some_and(|p| !p.loss.is_nan()) {
+            let p = self.pending.pop_front().expect("front just checked");
+            events.push(self.emit_one(p)?);
+        }
+        Ok(events)
+    }
+
+    /// Complete everything in flight and emit the whole pending queue.
+    fn flush_pending(&mut self) -> Result<Vec<StepEvent>> {
+        self.world.barrier()?;
+        self.emit_ready()
+    }
+
+    /// Emit one completed step: evaluate if it is on the eval cadence,
+    /// build its [`TraceRow`] from the now-current cumulative counters and
+    /// fire the observer events in the documented order
+    /// (`on_sync_round` → `on_eval` → `on_step`).
+    fn emit_one(&mut self, p: PendingStep) -> Result<StepEvent> {
+        // eval-cadence steps barrier inside their own `step()` call, so
+        // the state read here is exactly the post-step state
+        let test_acc = if p.do_eval { Some(self.eval_drained()?) } else { None };
+        let stats = self.world.comm.stats;
         let compute_s =
             self.compute_base_s + (self.watch.elapsed_s() - self.eval_overhead).max(0.0);
         let comm_s = stats.sim_time_s;
         let ev = StepEvent {
             row: TraceRow {
-                iter: t,
-                train_loss,
+                iter: p.t,
+                train_loss: p.loss,
                 test_acc,
                 compute_s,
                 comm_s,
@@ -369,23 +490,18 @@ impl<'a, O: Oracle> Session<'a, O> {
                 fn_evals: self.world.compute.fn_evals,
                 grad_evals: self.world.compute.grad_evals,
             },
-            recorded: record || last || do_eval,
-            sync_round,
-            final_step: last,
+            recorded: p.recorded,
+            sync_round: p.sync_round,
+            final_step: p.final_step,
         };
-
-        if sync_round {
-            let sev = SyncEvent {
-                iter: t,
-                bytes: stats.bytes_per_worker - before.bytes_per_worker,
-                scalars: stats.scalars_per_worker - before.scalars_per_worker,
-            };
+        if p.sync_round {
+            let sev = SyncEvent { iter: p.t, bytes: p.sync_bytes, scalars: p.sync_scalars };
             for obs in &mut self.observers {
                 obs.on_sync_round(&sev);
             }
         }
         if let Some(accuracy) = test_acc {
-            let eev = EvalEvent { iter: t, accuracy };
+            let eev = EvalEvent { iter: p.t, accuracy };
             for obs in &mut self.observers {
                 obs.on_eval(&eev);
             }
@@ -394,24 +510,24 @@ impl<'a, O: Oracle> Session<'a, O> {
         for obs in &mut self.observers {
             obs.on_step(&ev);
         }
-
-        // snapshot-wanting observers (PeriodicCheckpoint and friends):
-        // build the RunState at most once, share it among all askers. The
-        // observers are taken out so `snapshot()` can borrow the session.
-        let mut obs = std::mem::take(&mut self.observers);
-        let wants: Vec<bool> = obs.iter_mut().map(|o| o.wants_snapshot(&ev)).collect();
-        let outcome = if wants.contains(&true) {
-            let state = self.snapshot();
-            obs.iter_mut()
-                .zip(&wants)
-                .filter(|&(_, &w)| w)
-                .try_for_each(|(o, _)| o.on_snapshot(&state))
-        } else {
-            Ok(())
-        };
-        self.observers = obs;
-        outcome?;
         Ok(ev)
+    }
+
+    /// Evaluate test accuracy with the pipeline already drained: pull any
+    /// worker-resident optimizer state home
+    /// ([`Algorithm::sync_state`]), then run the evaluator over the
+    /// deployable parameters. Evaluation cost is excluded from the
+    /// trace's compute axis.
+    fn eval_drained(&mut self) -> Result<f64> {
+        self.algo.sync_state(&mut self.world)?;
+        let e0 = self.watch.elapsed_s();
+        self.algo.eval_params(&mut self.eval_buf);
+        let Some(evaluator) = self.evaluator.as_mut() else {
+            bail!("this session has no test-set evaluator (built with Session::with_oracle)");
+        };
+        let acc = evaluator(&self.eval_buf)?;
+        self.eval_overhead += self.watch.elapsed_s() - e0;
+        Ok(acc)
     }
 
     /// Step until iteration `t` (exclusive) or the horizon, whichever is
@@ -432,23 +548,23 @@ impl<'a, O: Oracle> Session<'a, O> {
 
     /// Evaluate test accuracy of the current deployable parameters now
     /// (outside the `eval_every` cadence; the cost is excluded from the
-    /// trace's compute axis like any other evaluation). Errors on sessions
-    /// built without an evaluator ([`Session::with_oracle`]).
+    /// trace's compute axis like any other evaluation). A flush point:
+    /// in-flight rounds complete (and their events fire) before the
+    /// evaluation. Errors on sessions built without an evaluator
+    /// ([`Session::with_oracle`]).
     pub fn eval_now(&mut self) -> Result<f64> {
-        let e0 = self.watch.elapsed_s();
-        self.algo.eval_params(&mut self.eval_buf);
-        let Some(evaluator) = self.evaluator.as_mut() else {
-            bail!("this session has no test-set evaluator (built with Session::with_oracle)");
-        };
-        let acc = evaluator(&self.eval_buf)?;
-        self.eval_overhead += self.watch.elapsed_s() - e0;
-        Ok(acc)
+        let _ = self.flush_pending()?;
+        self.eval_drained()
     }
 
-    /// Current deployable parameters (`Algorithm::eval_params`).
-    pub fn params(&mut self) -> Vec<f32> {
+    /// Current deployable parameters (`Algorithm::eval_params`). A flush
+    /// point: in-flight rounds complete and worker-resident optimizer
+    /// state is pulled home first.
+    pub fn params(&mut self) -> Result<Vec<f32>> {
+        let _ = self.flush_pending()?;
+        self.algo.sync_state(&mut self.world)?;
         self.algo.eval_params(&mut self.eval_buf);
-        self.eval_buf.clone()
+        Ok(self.eval_buf.clone())
     }
 
     /// The trace recorded so far, with run metadata attached.
@@ -465,22 +581,35 @@ impl<'a, O: Oracle> Session<'a, O> {
         }
     }
 
-    /// Finish the session into the classic `run_train_with` result.
-    pub fn into_outcome(mut self) -> TrainOutcome {
+    /// Finish the session into the classic `run_train_with` result. A
+    /// flush point (see [`Session::snapshot`]).
+    pub fn into_outcome(mut self) -> Result<TrainOutcome> {
+        let _ = self.flush_pending()?;
+        self.algo.sync_state(&mut self.world)?;
         let trace = self.trace();
         self.algo.eval_params(&mut self.eval_buf);
-        TrainOutcome { trace, params: self.eval_buf }
+        Ok(TrainOutcome { trace, params: self.eval_buf })
     }
 
     // -- snapshot / restore -------------------------------------------------
 
-    /// Capture the full resumable state (see [`RunState`]). Cheap relative
-    /// to an iteration: a few `O(d)` buffer copies.
-    pub fn snapshot(&mut self) -> RunState {
+    /// Capture the full resumable state (see [`RunState`]). A flush point:
+    /// in-flight rounds complete first (their rows land in the trace and
+    /// their events fire) and worker-resident optimizer state is pulled
+    /// home, so the state is a consistent post-iteration cut. At `W = 0`
+    /// this is cheap relative to an iteration: a few `O(d)` buffer copies.
+    pub fn snapshot(&mut self) -> Result<RunState> {
+        let _ = self.flush_pending()?;
+        self.build_run_state()
+    }
+
+    /// Build the [`RunState`] with the pipeline already drained.
+    fn build_run_state(&mut self) -> Result<RunState> {
+        self.algo.sync_state(&mut self.world)?;
         self.algo.eval_params(&mut self.eval_buf);
         let compute_s =
             self.compute_base_s + (self.watch.elapsed_s() - self.eval_overhead).max(0.0);
-        RunState {
+        Ok(RunState {
             meta: run_meta(&self.cfg, self.world.dim()),
             iter: self.t,
             compute_s,
@@ -489,7 +618,7 @@ impl<'a, O: Oracle> Session<'a, O> {
             params: self.eval_buf.clone(),
             algo: self.algo.state(),
             rows: self.recorder.rows.clone(),
-        }
+        })
     }
 
     /// Load a snapshot into this freshly built session (the tail of
@@ -553,13 +682,17 @@ fn run_meta(cfg: &TrainConfig, dim: usize) -> RunMeta {
 /// step-size rule, corpus sizes, RI-SGD redundancy, SVRG epoch geometry,
 /// QSGD levels/EF, momentum, the network model, the fault-injection
 /// plan (retries/latency enter the persisted wire counters, so a resumed
-/// run must replay the identical plan), and the loss-reduction
+/// run must replay the identical plan), the loss-reduction
 /// [`ComputeMode`](crate::backend::ComputeMode) (f32-mode losses differ
 /// from f64-mode losses in the last bits, so their trajectories diverge
-/// and must never share a checkpoint). The transport *fabric* is
-/// deliberately absent: loopback and TCP runs are byte-identical, so a
-/// checkpoint moves freely between them. Two configs with equal meta and
-/// equal fingerprint drive identical trajectories and accounting.
+/// and must never share a checkpoint), and the staleness window (`W > 0`
+/// changes *when* trace rows snapshot the cumulative counters — and, on
+/// loopback, the simulated-time pipeline — so two windows do not share
+/// accounting even though the parameter trajectory is unchanged). The
+/// transport *fabric* is deliberately absent: at any fixed window,
+/// loopback and TCP runs are byte-identical, so a checkpoint moves
+/// freely between them. Two configs with equal meta and equal
+/// fingerprint drive identical trajectories and accounting.
 fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
     let step = match cfg.step {
         StepSize::Constant { alpha } => [1, alpha.to_bits(), 0],
@@ -587,6 +720,7 @@ fn cfg_fingerprint(cfg: &TrainConfig) -> u64 {
         fault.seed,
         hash_u64s(&lat_parts),
         cfg.compute as u64,
+        cfg.transport.staleness_window as u64,
     ])
 }
 

@@ -36,7 +36,7 @@
 //!     let data = make_data(&cfg)?;
 //!     let mut session = Session::new(model.as_ref(), &data, &cfg)?;
 //!     session.run_until(50)?;                 // steppable
-//!     let state = session.snapshot();         // resumable (v2 checkpoint)
+//!     let state = session.snapshot()?;        // resumable (v2 checkpoint)
 //!     let mut resumed = Session::restore(model.as_ref(), &data, &cfg, state)?;
 //!     resumed.run_to_end()?;                  // bit-identical continuation
 //!     println!("final loss {:?}", resumed.trace().final_loss());
@@ -58,7 +58,12 @@
 //!   `Loopback` fabric (default; deterministic fault injection for
 //!   straggler/drop scenarios) and the TCP fabric (`hosgd worker --listen`
 //!   daemons + `train --workers-at`), with byte-accurate measured wire
-//!   accounting that is identical across fabrics
+//!   accounting that is identical across fabrics, worker-resident
+//!   optimizer state, and bounded-staleness run-ahead
+//!   (`--staleness-window W`; W = 0 keeps the classic synchronous
+//!   byte-identical traces) — wire grammar, daemon lifecycle and the
+//!   pipelined exchange are specified in `docs/DISTRIBUTED.md`, and the
+//!   layer-by-layer invariant map lives in `docs/ARCHITECTURE.md`
 //! - [`optim`] — HO-SGD (the contribution) and the baselines:
 //!   syncSGD, RI-SGD, ZO-SGD, ZO-SVRG-Ave, QSGD; the `Algorithm` trait
 //!   with snapshot/restore of every hidden buffer (`AlgoState`); every

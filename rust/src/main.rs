@@ -67,6 +67,10 @@ SUBCOMMANDS
                  --workers-at h1:p1,h2:p2 (drive remote `hosgd worker`
                  daemons over TCP; ranks assigned round-robin; trace is
                  byte-identical to the in-process run)
+                 --staleness-window W (bounded-staleness run-ahead: up to
+                 W pipelineable rounds stay in flight; 0 = fully
+                 synchronous, the classic byte-identical traces — see
+                 docs/DISTRIBUTED.md)
                  --stream-csv PATH / --stream-jsonl PATH (append recorded
                  rows to disk as they happen, flushed per eval)
                  --fault-drop P --fault-latency s1,s2 --fault-seed S
@@ -75,6 +79,9 @@ SUBCOMMANDS
   worker         TCP worker daemon: serve oracle rounds to a coordinator
                  --listen ADDR (default 127.0.0.1:7070)
                  --once (exit after the first coordinator session)
+                 --no-pipeline (execute a round's hosted ranks one at a
+                 time instead of scattering the batch across the pool;
+                 replies stay rank-FIFO either way)
   sweep          declarative experiment plan: expand axes, run in
                  parallel, resume, emit a Pareto tradeoff report
                  --plan FILE.json (see README \"Sweeps & Pareto reports\")
@@ -144,6 +151,7 @@ fn main() -> Result<()> {
         "worker" => {
             let listen = args.get_str("listen", "127.0.0.1:7070");
             let once = args.has("once");
+            let no_pipeline = args.has("no-pipeline");
             args.finish()?;
             let listener = std::net::TcpListener::bind(&listen)
                 .map_err(|e| anyhow::anyhow!("binding worker daemon to {listen}: {e}"))?;
@@ -152,6 +160,7 @@ fn main() -> Result<()> {
                 artifacts: std::path::PathBuf::from(&artifacts),
                 threads,
                 once,
+                pipeline: !no_pipeline,
             };
             hosgd::transport::serve(listener, &opts)?;
         }
@@ -395,6 +404,8 @@ fn cmd_train(
         cfg.transport.workers_at =
             ws.split(',').filter(|s| !s.is_empty()).map(String::from).collect();
     }
+    cfg.transport.staleness_window =
+        args.get("staleness-window", cfg.transport.staleness_window)?;
     if let Some(p) = args.get_opt::<f64>("fault-drop")? {
         cfg.transport.fault.drop_prob = p;
     }
@@ -447,7 +458,7 @@ fn cmd_train(
     if !session.is_finished() {
         // paused mid-run: persist a resume point, skip the trace outputs
         // (a partial trace would shadow the complete one)
-        session.snapshot().save(&ckpt_path)?;
+        session.snapshot()?.save(&ckpt_path)?;
         println!(
             "paused at iteration {}/{}; run state written to {ckpt_path}",
             session.iter(),
@@ -457,9 +468,9 @@ fn cmd_train(
         return Ok(());
     }
     if cfg.checkpoint_every > 0 || ckpt_flag.is_some() {
-        session.snapshot().save(&ckpt_path)?;
+        session.snapshot()?.save(&ckpt_path)?;
     }
-    let out = session.into_outcome();
+    let out = session.into_outcome()?;
     print_trace_summary(&out.trace);
     out.trace.write_csv(format!("{base}.csv"))?;
     out.trace.write_json(format!("{base}.json"))?;
@@ -587,6 +598,60 @@ fn cmd_bench(
             b as f64,
             d as f64,
         ));
+    }
+
+    // the distributed round exchange: one in-process `hosgd worker` daemon
+    // hosting all m ranks, driven over real TCP. Sequential mode executes
+    // a round's hosted ranks one at a time; pipelined (default) batches
+    // the round and scatters it across the daemon's pool lanes — the k>=2
+    // hosted-ranks speedup documented in docs/DISTRIBUTED.md. The
+    // workload is ZO-SGD, whose rounds reply a single scalar per rank, so
+    // the case measures exchange machinery, not oracle compute. Units per
+    // call are training rounds: the samples/s column reads as rounds/s.
+    if kind == BackendKind::Native {
+        let daemon_iters: u64 = if smoke { 8 } else { 64 };
+        for pipeline in [false, true] {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let opts = hosgd::transport::WorkerDaemonOpts {
+                artifacts: artifacts.into(),
+                threads,
+                once: false,
+                pipeline,
+            };
+            // detached: blocks in accept() until the process exits
+            std::thread::spawn(move || {
+                let _ = hosgd::transport::serve(listener, &opts);
+            });
+            let mut cfg = TrainConfig {
+                dataset: dataset.to_string(),
+                method: Method::ZoSgd,
+                iters: daemon_iters,
+                workers: 4,
+                eval_every: 0,
+                record_every: 1,
+                threads,
+                compute,
+                ..Default::default()
+            };
+            cfg.transport.workers_at = vec![addr];
+            let data = make_data(&cfg)?;
+            let label = if pipeline { "pipelined" } else { "sequential" };
+            rows.push((
+                bench(
+                    &format!("daemon_rounds {label} ({dataset} m=4 N={daemon_iters})"),
+                    warm(1),
+                    reps(5),
+                    || {
+                        let mut s = Session::new(model.as_ref(), &data, &cfg).unwrap();
+                        s.run_to_end().unwrap();
+                        std::hint::black_box(s.iter());
+                    },
+                ),
+                daemon_iters as f64,
+                0.0,
+            ));
+        }
     }
 
     let results: Vec<BenchResult> = rows.iter().map(|(r, ..)| r.clone()).collect();

@@ -41,7 +41,7 @@ use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
 use crate::pool::{Shards, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
-use crate::transport::{Loopback, Round, Transport};
+use crate::transport::{Loopback, Round, RoundStatus, Transport};
 
 // ---------------------------------------------------------------------------
 // Oracle: the stochastic first/zeroth-order oracle of the paper
@@ -309,9 +309,27 @@ impl<O: Oracle> World<O> {
     /// the measured wire bytes land in [`CommSim::wire_up`] /
     /// [`CommSim::wire_down`]. The caller then reduces the slots in fixed
     /// worker order, exactly as with the in-process fan-out.
-    pub fn round(&mut self, req: Round<'_>) -> Result<()> {
+    ///
+    /// Under a staleness window the fabric may answer a pipelineable round
+    /// with [`RoundStatus::Deferred`] — the reply (and its wire
+    /// accounting) arrives later; see [`Transport::round`]. Synchronous
+    /// callers can ignore the status: every non-pipelineable round and
+    /// [`World::barrier`] forces completion first.
+    pub fn round(&mut self, req: Round<'_>) -> Result<RoundStatus> {
         let Self { transport, workers, pool, comm, cfg, .. } = self;
         transport.round(workers, pool, comm, cfg, req)
+    }
+
+    /// Complete every in-flight (deferred) round on the fabric; see
+    /// [`Transport::barrier`].
+    pub fn barrier(&mut self) -> Result<()> {
+        self.transport.barrier(&mut self.comm)
+    }
+
+    /// Drain `(t, mean_loss)` completions of previously deferred rounds;
+    /// see [`Transport::take_completions`].
+    pub fn take_completions(&mut self) -> Vec<(u64, f64)> {
+        self.transport.take_completions()
     }
 
     /// The active fabric's label (`"loopback"` / `"tcp"`).
@@ -506,8 +524,21 @@ pub trait Algorithm<O: Oracle> {
     fn method(&self) -> Method;
 
     /// Perform iteration `t`; returns the mean training loss observed by
-    /// the workers at this iteration.
+    /// the workers at this iteration. Under a staleness window a method
+    /// whose round was [`RoundStatus::Deferred`] returns `f64::NAN` as a
+    /// placeholder — the session patches the real loss in from
+    /// [`World::take_completions`] when the round completes.
     fn step(&mut self, t: u64, w: &mut World<O>) -> Result<f64>;
+
+    /// Pull any worker-resident buffers (RI-SGD locals, QSGD EF
+    /// residuals) back into the algorithm's own copies, so
+    /// [`Algorithm::eval_params`] / [`Algorithm::state`] see current
+    /// values. Called by the session after a barrier, before eval /
+    /// snapshot / final-params reads. Default: nothing is
+    /// worker-resident.
+    fn sync_state(&mut self, _w: &mut World<O>) -> Result<()> {
+        Ok(())
+    }
 
     /// The parameters an external evaluator should use (for model-averaging
     /// methods this is the mean of the local models).

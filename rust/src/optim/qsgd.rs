@@ -19,9 +19,9 @@
 
 use anyhow::Result;
 
-use crate::comm::qsgd::{dequantize_into, encoded_bytes, seeded_quantize};
+use crate::comm::qsgd::{dequantize_into, encoded_bytes};
 use crate::config::Method;
-use crate::transport::Round;
+use crate::transport::{Round, Slot};
 
 use super::{axpy_update, Algorithm, AlgoState, Oracle, World};
 
@@ -54,34 +54,30 @@ impl<O: Oracle> Algorithm<O> for Qsgd {
         let mut loss_sum = 0.0f64;
         let mut bytes_total = 0u64;
         if self.error_feedback {
-            // EF extension: the residual memory lives with the algorithm
-            // here, so the fabric moves the dense gradient and the seeded
-            // quantization runs on the main thread in fixed worker order
-            // (the quantizer RNG must consume in worker order to match the
-            // sequential trace)
-            w.round(Round::Grad { params: &self.params, t })?;
-            let World { workers, gsum, compute, reg, .. } = &mut *w;
+            // EF extension: each worker injects its *worker-resident*
+            // residual memory, quantizes g + r with the pre-shared seeded
+            // rounding stream and updates the residual in place
+            // (transport::perform_qsgd_ef — one copy for Loopback jobs
+            // and the remote daemon); the fabric ships the Elias-coded
+            // payload, not the dense gradient. The decode-average stays
+            // in worker order on the main thread.
+            w.round(Round::QsgdEf {
+                params: &self.params,
+                t,
+                s,
+                residuals: &mut self.residuals,
+            })?;
+            let World { workers, gsum, compute, .. } = &mut *w;
             gsum.fill(0.0);
-            for (i, ctx) in workers.iter_mut().enumerate() {
+            // EF is only stable with a contraction; unbiased QSGD is
+            // expansive, so down-scale by 1/(1 + ω), ω = √d/s
+            let omega = (d as f32).sqrt() / s as f32;
+            let ef_scale = 1.0 / (1.0 + omega);
+            for ctx in workers.iter_mut() {
                 loss_sum += ctx.loss as f64;
                 compute.grad_evals += b as u64;
-                // inject the residual memory before quantizing
-                for (g, &r) in ctx.g.iter_mut().zip(self.residuals[i].iter()) {
-                    *g += r;
-                }
-                let q = seeded_quantize(reg.base(), t, i as u64, &ctx.g, s);
+                let q = ctx.quant.take().expect("qsgd round fills ctx.quant");
                 bytes_total += encoded_bytes(&q);
-                // EF is only stable with a contraction; unbiased QSGD is
-                // expansive, so down-scale by 1/(1 + ω), ω = √d/s
-                let omega = (d as f32).sqrt() / s as f32;
-                let ef_scale = 1.0 / (1.0 + omega);
-                // r_i ← (g_i + r_i) − ef_scale · Q(g_i + r_i)
-                let res = &mut self.residuals[i];
-                res.copy_from_slice(&ctx.g);
-                let scale = -ef_scale * q.norm / q.s as f32;
-                for (r, &l) in res.iter_mut().zip(q.levels.iter()) {
-                    *r += scale * l as f32;
-                }
                 dequantize_into(&q, ef_scale / m as f32, gsum);
             }
         } else {
@@ -109,6 +105,15 @@ impl<O: Oracle> Algorithm<O> for Qsgd {
     fn eval_params(&self, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.params);
+    }
+
+    /// With EF on, the residual memories are worker-resident: pull them
+    /// home before a snapshot reads `self.residuals`.
+    fn sync_state(&mut self, w: &mut World<O>) -> Result<()> {
+        if self.error_feedback {
+            w.round(Round::FetchState { slot: Slot::Residual, buffers: &mut self.residuals })?;
+        }
+        Ok(())
     }
 
     /// With error feedback on, each worker's residual memory `r_i` is part

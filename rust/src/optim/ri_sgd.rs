@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::config::Method;
-use crate::transport::Round;
+use crate::transport::{rank_order_mean, Round, RoundStatus, Slot};
 
 use super::{Algorithm, AlgoState, Oracle, World};
 
@@ -46,27 +46,43 @@ impl<O: Oracle> Algorithm<O> for RiSgd {
         let m = w.cfg.m;
         let b = w.batch_size();
         let alpha = w.cfg.alpha(t, b);
-        // every worker steps its own local model (the local update is
-        // per-worker state evolution — no cross-worker reduction until the
-        // averaging round); over a remote fabric the local goes down and
-        // the updated local comes back as dense-vector frames
-        w.round(Round::LocalStep { locals: &mut self.locals, t, alpha })?;
-        let mut loss_sum = 0.0f64;
-        for ctx in w.workers.iter() {
-            loss_sum += ctx.loss as f64;
-            // Table 1: redundancy inflates per-worker compute by μ·m + 1
-            // (the worker's pool — and hence the data it must process per
-            // epoch — is (1 + μ_r·m)× larger). We account that factor so
-            // the measured counters line up with the analytic row.
-            let factor = 1.0 + w.cfg.redundancy * m as f64;
-            w.compute.grad_evals += (b as f64 * factor).round() as u64;
-        }
-        // model averaging every τ local steps: one d-float all-reduce
-        if (t + 1) % w.cfg.tau as u64 == 0 {
+        let avg_now = (t + 1) % w.cfg.tau as u64 == 0;
+        // every worker steps its own *worker-resident* local model (the
+        // local update is per-worker state evolution — no cross-worker
+        // reduction until the averaging round). Between averaging points
+        // only one loss scalar comes back per rank, so the round is
+        // pipelineable; at an averaging iteration `fetch` pulls the
+        // updated locals home (a barrier round).
+        let status =
+            w.round(Round::LocalStep { locals: &mut self.locals, t, alpha, fetch: avg_now })?;
+        // Table 1: redundancy inflates per-worker compute by μ·m + 1 (the
+        // worker's pool — and hence the data it must process per epoch —
+        // is (1 + μ_r·m)× larger). We account that factor so the measured
+        // counters line up with the analytic row. Deterministic, so it is
+        // charged up front even when the round itself is still in flight.
+        let factor = 1.0 + w.cfg.redundancy * m as f64;
+        w.compute.grad_evals += m as u64 * (b as f64 * factor).round() as u64;
+        let loss = match status {
+            RoundStatus::Done => rank_order_mean(w.workers.iter().map(|ctx| ctx.loss)),
+            // placeholder; the session patches the completed loss in from
+            // World::take_completions (see Algorithm::step docs)
+            RoundStatus::Deferred => f64::NAN,
+        };
+        // model averaging every τ local steps: one d-float all-reduce,
+        // then re-seed the worker-resident locals with the averaged model
+        if avg_now {
             self.average_locals();
             w.comm.allreduce_floats(w.dim() as u64);
+            w.round(Round::PushLocals { locals: &self.locals, t })?;
         }
-        Ok(loss_sum / m as f64)
+        Ok(loss)
+    }
+
+    /// The locals are worker-resident between averaging points: pull them
+    /// home before anything reads `self.locals` (eval, snapshot).
+    fn sync_state(&mut self, w: &mut World<O>) -> Result<()> {
+        w.round(Round::FetchState { slot: Slot::Params, buffers: &mut self.locals })?;
+        Ok(())
     }
 
     fn eval_params(&self, out: &mut Vec<f32>) {

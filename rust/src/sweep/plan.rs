@@ -129,6 +129,7 @@ pub fn apply_knob(cfg: &mut TrainConfig, key: &str, v: &Json) -> Result<()> {
         }
         "momentum" => cfg.momentum = num(v)?,
         "threads" => cfg.threads = num(v)? as usize,
+        "staleness_window" => cfg.transport.staleness_window = num(v)? as usize,
         "fault_drop" => cfg.transport.fault.drop_prob = num(v)?,
         "fault_seed" => cfg.transport.fault.seed = num(v)? as u64,
         "fault_latency" => {

@@ -26,6 +26,18 @@
 //! — one copy shared by the `Loopback` jobs, the remote daemon and the TCP
 //! coordinator, which is what guarantees fabric-independence of the
 //! trajectory down to the bit.
+//!
+//! The round exchange is **pipelined**: optimizer state that only a worker
+//! reads between synchronization points is worker-resident (RI-SGD locals,
+//! QSGD error-feedback residuals — pulled back via [`Frame::FetchState`]
+//! only at averaging/snapshot points), daemons batch a full round's step
+//! orders onto their own pool and reply in FIFO rank order, and a
+//! `--staleness-window W > 0` lets the coordinator run up to W
+//! pipelineable rounds ahead of the slowest worker (see
+//! [`Transport::round`]'s staleness contract). W = 0 reproduces the fully
+//! synchronous canonical traces bit-for-bit. The full wire grammar,
+//! handshake rules and ordering guarantees are specified in
+//! `docs/DISTRIBUTED.md`.
 
 pub mod tcp;
 pub mod wire;
@@ -59,11 +71,29 @@ pub enum Round<'a> {
     /// ZO-SVRG epoch surrogate: `probes` pair-probes at `snapshot`,
     /// accumulated into `ctx.g` with `weight`
     SvrgSurrogate { snapshot: &'a [f32], t: u64, epoch: u64, probes: usize, weight: f32 },
-    /// RI-SGD: gradient at `locals[i]` + in-place local update → `ctx.loss`
-    LocalStep { locals: &'a mut [Vec<f32>], t: u64, alpha: f32 },
+    /// RI-SGD: gradient at the **worker-resident** local model + in-place
+    /// local update → `ctx.loss` and updated `locals[i]`. With
+    /// `fetch = false` only the loss scalar comes back (the round is
+    /// pipelineable — see [`Transport::round`]'s staleness contract); with
+    /// `fetch = true` the updated local is returned too (the averaging
+    /// round, a barrier).
+    LocalStep { locals: &'a mut [Vec<f32>], t: u64, alpha: f32, fetch: bool },
+    /// RI-SGD: re-seed the worker-resident locals after coordinator-side
+    /// model averaging (one model broadcast down per rank, no reply)
+    PushLocals { locals: &'a [Vec<f32>], t: u64 },
     /// QSGD: FO gradient quantized worker-side with the seeded rounding
     /// stream → `ctx.quant`, `ctx.loss`
     QsgdGrad { params: &'a [f32], t: u64, s: u32 },
+    /// QSGD with error feedback: like [`Round::QsgdGrad`] but the
+    /// **worker-resident** residual memory is injected before quantizing
+    /// and updated in place → `ctx.quant`, `ctx.loss`, updated
+    /// `residuals[i]`
+    QsgdEf { params: &'a [f32], t: u64, s: u32, residuals: &'a mut [Vec<f32>] },
+    /// Pull one worker-resident vector per rank back to the coordinator
+    /// (averaging/snapshot points). Control-plane traffic: unaccounted on
+    /// every fabric, like the handshake. On [`Loopback`] the coordinator's
+    /// buffers are already current, so this is a no-op.
+    FetchState { slot: Slot, buffers: &'a mut [Vec<f32>] },
 }
 
 impl Round<'_> {
@@ -76,19 +106,39 @@ impl Round<'_> {
             | Round::ZoPair { t, .. }
             | Round::SvrgSurrogate { t, .. }
             | Round::LocalStep { t, .. }
-            | Round::QsgdGrad { t, .. } => t,
+            | Round::PushLocals { t, .. }
+            | Round::QsgdGrad { t, .. }
+            | Round::QsgdEf { t, .. } => t,
+            Round::FetchState { .. } => 0,
         }
     }
 
-    /// Sub-round discriminator: ZO-SVRG runs two rounds at an epoch-start
-    /// iteration (surrogate then inner), which must draw distinct drop
-    /// decisions.
+    /// Sub-round discriminator: rounds sharing an iteration `t` (ZO-SVRG's
+    /// surrogate+inner pair, RI-SGD's local-step + locals push at an
+    /// averaging iteration) must draw distinct drop decisions.
     fn phase(&self) -> u64 {
         match self {
             Round::SvrgSurrogate { .. } => 0,
+            Round::PushLocals { .. } => 2,
             _ => 1,
         }
     }
+}
+
+/// Outcome of a [`Transport::round`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundStatus {
+    /// The round completed: results are in the [`WorkerCtx`] slots (and
+    /// any in-out buffers the [`Round`] carried), wire bytes are
+    /// accounted. The synchronous case — and the only status [`Loopback`]
+    /// ever returns.
+    Done,
+    /// The round was shipped but its replies have not been read yet (the
+    /// fabric is running ahead under a staleness window W > 0). The
+    /// caller gets the round's loss later via
+    /// [`Transport::take_completions`]; a [`Transport::barrier`] — or any
+    /// non-pipelineable round — forces completion first.
+    Deferred,
 }
 
 /// A coordinator↔worker message fabric. Implementations must (a) leave
@@ -96,11 +146,28 @@ impl Round<'_> {
 /// would, and (b) account every frame a real deployment would move in
 /// [`CommSim::wire_up`] / [`CommSim::wire_down`] — identically across
 /// fabrics, so canonical traces do not depend on where workers run.
+///
+/// ## Bounded-staleness contract
+///
+/// A fabric with a configured staleness window W > 0 may answer a
+/// *pipelineable* round ([`Round::LocalStep`] with `fetch = false` — the
+/// only round kind with no cross-worker data dependence on its reply) with
+/// [`RoundStatus::Deferred`], keeping up to W rounds in flight. All other
+/// round kinds, and [`Transport::barrier`], must first complete every
+/// in-flight round. Deferred losses are surfaced through
+/// [`Transport::take_completions`] in round order. The trajectory — every
+/// parameter, every loss, every byte counter — is identical at any W;
+/// only *when* in-flight rounds' bytes/latency are charged moves (they
+/// are accounted at completion time). W = 0 must reproduce the fully
+/// synchronous exchange exactly.
 pub trait Transport<O: Oracle> {
     /// `"loopback"` or `"tcp"` — surfaced by the CLI banner.
     fn label(&self) -> &'static str;
 
-    /// Execute one round across all `m` worker contexts.
+    /// Execute one round across all `m` worker contexts. Returns
+    /// [`RoundStatus::Deferred`] only for pipelineable rounds under a
+    /// staleness window (see the trait docs); callers that need the
+    /// results immediately follow up with [`Transport::barrier`].
     fn round(
         &mut self,
         workers: &mut [WorkerCtx<O>],
@@ -108,7 +175,33 @@ pub trait Transport<O: Oracle> {
         comm: &mut CommSim,
         cfg: &AlgoConfig,
         req: Round<'_>,
-    ) -> Result<()>;
+    ) -> Result<RoundStatus>;
+
+    /// Complete every in-flight round (accounting its wire bytes and
+    /// latency) before returning. A no-op on fully synchronous fabrics.
+    fn barrier(&mut self, _comm: &mut CommSim) -> Result<()> {
+        Ok(())
+    }
+
+    /// Drain the `(t, mean_loss)` results of rounds previously answered
+    /// [`RoundStatus::Deferred`] that have since completed, in round
+    /// order. Empty on fully synchronous fabrics.
+    fn take_completions(&mut self) -> Vec<(u64, f64)> {
+        Vec::new()
+    }
+}
+
+/// Mean of per-rank f32 losses accumulated in rank order — one copy shared
+/// by the RI-SGD reduction and the TCP deferred-completion path, so a
+/// pipelined round's recorded loss is bit-identical to the synchronous one.
+pub(crate) fn rank_order_mean(losses: impl IntoIterator<Item = f32>) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0u64;
+    for l in losses {
+        sum += l as f64;
+        n += 1;
+    }
+    sum / n as f64
 }
 
 // ---------------------------------------------------------------------------
@@ -227,6 +320,38 @@ pub(crate) fn perform_qsgd<O: Oracle>(
     Ok(loss)
 }
 
+/// QSGD with error feedback, worker side: inject the resident residual
+/// memory into the fresh gradient, quantize `g + r`, and update the
+/// residual in place (`r ← (g + r) − ef_scale·Q(g + r)` with the
+/// contraction factor `ef_scale = 1/(1 + √d/s)`); returns the loss with
+/// `ctx.quant` filled. One copy for the Loopback jobs and the TCP daemon,
+/// bit-identical to the pre-worker-resident coordinator-side loop.
+pub(crate) fn perform_qsgd_ef<O: Oracle>(
+    ctx: &mut WorkerCtx<O>,
+    params: &[f32],
+    residual: &mut [f32],
+    t: u64,
+    rank: u64,
+    s: u32,
+    base_seed: u64,
+) -> Result<f32> {
+    let loss = ctx.oracle.grad(params, t, rank, &mut ctx.g)?;
+    for (g, &r) in ctx.g.iter_mut().zip(residual.iter()) {
+        *g += r;
+    }
+    let q = seeded_quantize(base_seed, t, rank, &ctx.g, s);
+    let d = ctx.g.len();
+    let omega = (d as f32).sqrt() / s as f32;
+    let ef_scale = 1.0 / (1.0 + omega);
+    residual.copy_from_slice(&ctx.g);
+    let scale = -ef_scale * q.norm / q.s as f32;
+    for (r, &l) in residual.iter_mut().zip(q.levels.iter()) {
+        *r += scale * l as f32;
+    }
+    ctx.quant = Some(q);
+    Ok(loss)
+}
+
 // ---------------------------------------------------------------------------
 // Loopback: in-process execution, wire-accurate accounting, fault injection
 // ---------------------------------------------------------------------------
@@ -242,16 +367,43 @@ const MAX_ATTEMPTS: u64 = 64;
 /// put on a socket. Fault injection (deterministic drop-with-retry and
 /// per-worker straggler latency) lives here so CI can run failure
 /// scenarios without real networks; see [`FaultPlan`].
+///
+/// ## Staleness model
+///
+/// Compute is in-process and therefore always synchronous — `round` always
+/// returns [`RoundStatus::Done`] and the trajectory/byte counters never
+/// depend on the window. What a staleness window W > 0 pipelines here is
+/// the **modelled time**: pipelineable rounds' injected straggler latency
+/// is charged through a virtual clock where each rank is busy until its
+/// previous reply finished (`free_at`), up to W round completions may be
+/// outstanding, and the coordinator only waits (`add_latency`) when the
+/// window is full or a barrier round flushes. At W = 0 this reduces
+/// exactly to the old per-round `max_rank(latency·attempts)` charge.
 #[derive(Debug, Default)]
 pub struct Loopback {
     fault: FaultPlan,
+    /// bounded-staleness window W for pipelineable rounds
+    window: usize,
+    /// virtual time up to which the coordinator has waited
+    vclock: f64,
+    /// per-rank virtual time at which the rank finishes its last round
+    free_at: Vec<f64>,
+    /// completion times of in-flight pipelined rounds (FIFO, ≤ window)
+    pending: std::collections::VecDeque<f64>,
 }
 
 impl Loopback {
     /// A loopback fabric with the given fault plan (use
-    /// `FaultPlan::default()` for a clean network).
+    /// `FaultPlan::default()` for a clean network) and a fully synchronous
+    /// exchange (W = 0).
     pub fn new(fault: FaultPlan) -> Self {
-        Self { fault }
+        Self { fault, ..Self::default() }
+    }
+
+    /// A loopback fabric with a bounded-staleness run-ahead window for
+    /// pipelineable rounds (see the struct docs for the time model).
+    pub fn with_window(fault: FaultPlan, window: usize) -> Self {
+        Self { fault, window, ..Self::default() }
     }
 
     /// Deterministic attempt count for rank `r`'s round-trip at `(t,
@@ -289,10 +441,11 @@ impl Loopback {
         }
     }
 
-    /// Account one finished round: per rank, `down` frame sizes and an
-    /// `up_of(rank)` response size, multiplied by the rank's deterministic
-    /// attempt count; the slowest rank's total latency joins the modelled
-    /// critical path.
+    /// Account one round's wire traffic: per rank, `down` frame sizes and
+    /// an `up_of(rank)` response size (0 ⇒ no reply frame), multiplied by
+    /// the rank's deterministic attempt count. Returns each rank's total
+    /// injected latency for this round; the caller feeds those into the
+    /// virtual-time model ([`Loopback::advance`]).
     fn account(
         &self,
         comm: &mut CommSim,
@@ -301,8 +454,8 @@ impl Loopback {
         phase: u64,
         down: &[u64],
         up_of: impl Fn(usize) -> u64,
-    ) -> Result<()> {
-        let mut max_lat = 0.0f64;
+    ) -> Result<Vec<f64>> {
+        let mut lats = Vec::with_capacity(m);
         for r in 0..m {
             let attempts = self.attempts(t, phase, r as u64)?;
             let up = up_of(r);
@@ -310,20 +463,52 @@ impl Loopback {
                 for &b in down {
                     comm.wire_down(b);
                 }
-                comm.wire_up(up);
+                if up > 0 {
+                    comm.wire_up(up);
+                }
             }
             for _ in 1..attempts {
                 comm.wire_retry();
             }
-            let lat = self.latency(r) * attempts as f64;
-            if lat > max_lat {
-                max_lat = lat;
+            lats.push(self.latency(r) * attempts as f64);
+        }
+        Ok(lats)
+    }
+
+    /// Feed one round's per-rank latencies into the virtual-time pipeline:
+    /// rank r starts when both the coordinator issued the round (`vclock`)
+    /// and the rank finished its previous one (`free_at[r]`); the round
+    /// completes when its slowest rank does. Then wait (charging
+    /// `add_latency`) until at most `window` completions are outstanding.
+    /// `window = 0` — every non-pipelineable round — degenerates to the
+    /// synchronous max-latency charge.
+    fn advance(&mut self, comm: &mut CommSim, lats: &[f64], window: usize) {
+        if self.free_at.len() < lats.len() {
+            self.free_at.resize(lats.len(), 0.0);
+        }
+        let mut fin_max = self.vclock;
+        for (r, &lat) in lats.iter().enumerate() {
+            let fin = self.vclock.max(self.free_at[r]) + lat;
+            self.free_at[r] = fin;
+            if fin > fin_max {
+                fin_max = fin;
             }
         }
-        if max_lat > 0.0 {
-            comm.add_latency(max_lat);
+        self.pending.push_back(fin_max);
+        self.drain_to(comm, window);
+    }
+
+    /// Pop in-flight completions (oldest first) until at most `window`
+    /// remain, charging the wait beyond the current virtual clock.
+    fn drain_to(&mut self, comm: &mut CommSim, window: usize) {
+        while self.pending.len() > window {
+            let c = self.pending.pop_front().expect("pending non-empty");
+            let wait = c - self.vclock;
+            if wait > 0.0 {
+                comm.add_latency(wait);
+                self.vclock = c;
+            }
         }
-        Ok(())
     }
 }
 
@@ -339,7 +524,7 @@ impl<O: Oracle> Transport<O> for Loopback {
         comm: &mut CommSim,
         cfg: &AlgoConfig,
         req: Round<'_>,
-    ) -> Result<()> {
+    ) -> Result<RoundStatus> {
         let m = workers.len();
         let d = workers.first().map_or(0, |c| c.g.len());
         let phase = req.phase();
@@ -351,7 +536,8 @@ impl<O: Oracle> Transport<O> for Loopback {
                     Ok(())
                 })?;
                 let down = [wire::broadcast_len(d), wire::step_len(StepOp::Grad)];
-                self.account(comm, m, t, phase, &down, |_| wire::vector_len(d))?;
+                let lats = self.account(comm, m, t, phase, &down, |_| wire::vector_len(d))?;
+                self.advance(comm, &lats, 0);
             }
             Round::Zo { params, t } => {
                 scatter_workers(pool, workers, |i, ctx| {
@@ -361,7 +547,8 @@ impl<O: Oracle> Transport<O> for Loopback {
                     Ok(())
                 })?;
                 let down = [wire::broadcast_len(d), wire::step_len(StepOp::Zo)];
-                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2))?;
+                let lats = self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2))?;
+                self.advance(comm, &lats, 0);
             }
             Round::ZoPair { params, snapshot, t } => {
                 scatter_workers(pool, workers, |i, ctx| {
@@ -378,7 +565,8 @@ impl<O: Oracle> Transport<O> for Loopback {
                     wire::broadcast_len(d),
                     wire::step_len(StepOp::ZoPair),
                 ];
-                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(4))?;
+                let lats = self.account(comm, m, t, phase, &down, |_| wire::scalars_len(4))?;
+                self.advance(comm, &lats, 0);
             }
             Round::SvrgSurrogate { snapshot, t, epoch, probes, weight } => {
                 scatter_workers(pool, workers, |i, ctx| {
@@ -388,15 +576,31 @@ impl<O: Oracle> Transport<O> for Loopback {
                 })?;
                 let op = StepOp::Surrogate { epoch, probes: probes as u32 };
                 let down = [wire::broadcast_len(d), wire::step_len(op)];
-                self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2 * probes))?;
+                let lats =
+                    self.account(comm, m, t, phase, &down, |_| wire::scalars_len(2 * probes))?;
+                self.advance(comm, &lats, 0);
             }
-            Round::LocalStep { locals, t, alpha } => {
+            Round::LocalStep { locals, t, alpha, fetch } => {
                 crate::optim::scatter_workers_with(pool, workers, locals, |i, ctx, local| {
                     ctx.loss = perform_local_step(ctx, local, t, i, alpha)?;
                     Ok(())
                 })?;
-                let down = [wire::broadcast_len(d), wire::step_len(StepOp::LocalStep { alpha })];
-                self.account(comm, m, t, phase, &down, |_| wire::vector_len(d))?;
+                // the local model is worker-resident: only the step order
+                // goes down; one loss scalar (or, when fetching for the
+                // averaging round, the updated local) comes back
+                let down = [wire::step_len(StepOp::LocalStep { alpha, fetch })];
+                let up = if fetch { wire::vector_len(d) } else { wire::scalars_len(1) };
+                let lats = self.account(comm, m, t, phase, &down, |_| up)?;
+                let window = if fetch { 0 } else { self.window };
+                self.advance(comm, &lats, window);
+            }
+            Round::PushLocals { locals: _, t } => {
+                // loopback workers read the coordinator's `locals`
+                // directly; only the re-seeding broadcast of the averaged
+                // model is accounted (no reply frame)
+                let down = [wire::broadcast_len(d)];
+                let lats = self.account(comm, m, t, phase, &down, |_| 0)?;
+                self.advance(comm, &lats, 0);
             }
             Round::QsgdGrad { params, t, s } => {
                 let seed = cfg.seed;
@@ -406,12 +610,37 @@ impl<O: Oracle> Transport<O> for Loopback {
                 })?;
                 let down = [wire::broadcast_len(d), wire::step_len(StepOp::QsgdGrad { s })];
                 let done: &[WorkerCtx<O>] = workers;
-                self.account(comm, m, t, phase, &down, |r| {
+                let lats = self.account(comm, m, t, phase, &down, |r| {
                     let q = done[r].quant.as_ref().expect("qsgd round fills ctx.quant");
                     wire::quant_len(crate::comm::qsgd::levels_bytes(&q.levels))
                 })?;
+                self.advance(comm, &lats, 0);
+            }
+            Round::QsgdEf { params, t, s, residuals } => {
+                let seed = cfg.seed;
+                crate::optim::scatter_workers_with(pool, workers, residuals, |i, ctx, res| {
+                    ctx.loss = perform_qsgd_ef(ctx, params, res, t, i, s, seed)?;
+                    Ok(())
+                })?;
+                let down = [wire::broadcast_len(d), wire::step_len(StepOp::QsgdEf { s })];
+                let done: &[WorkerCtx<O>] = workers;
+                let lats = self.account(comm, m, t, phase, &down, |r| {
+                    let q = done[r].quant.as_ref().expect("qsgd round fills ctx.quant");
+                    wire::quant_len(crate::comm::qsgd::levels_bytes(&q.levels))
+                })?;
+                self.advance(comm, &lats, 0);
+            }
+            Round::FetchState { .. } => {
+                // worker-resident state already lives with the coordinator
+                // on this fabric: nothing moves, and (like the handshake)
+                // this control-plane pull is unaccounted on every fabric
             }
         }
+        Ok(RoundStatus::Done)
+    }
+
+    fn barrier(&mut self, comm: &mut CommSim) -> Result<()> {
+        self.drain_to(comm, 0);
         Ok(())
     }
 }

@@ -12,14 +12,32 @@
 //! The daemon is an **oracle server**: it receives the full run config
 //! once (`AssignShard`, as the coordinator's `TrainConfig` JSON), rebuilds
 //! the identical dataset/sharding/model from the pre-shared seed, and then
-//! answers per-iteration work orders. It holds no optimizer state — params
-//! arrive by broadcast every round — so coordinator restarts, resumes and
-//! mid-run re-connections need no worker-side recovery protocol.
+//! answers per-iteration work orders. Per-rank *worker-resident* optimizer
+//! state (RI-SGD local models, QSGD error-feedback residuals) lives in the
+//! daemon's broadcast slots between synchronization points; it is seeded
+//! by unaccounted control-plane broadcasts when a session (or a resumed
+//! coordinator) first needs it and pulled home with [`Frame::FetchState`]
+//! at averaging/snapshot points, so coordinator restarts still need no
+//! worker-side recovery protocol — a fresh connection re-seeds.
+//!
+//! The round exchange is **pipelined** in two independent ways:
+//!
+//! * the daemon batches a full round's step orders and fans them out on
+//!   its own [`WorkerPool`], replying in the order the orders arrived —
+//!   per-connection FIFO order and global rank order agree, so traces stay
+//!   bit-identical to the sequential daemon (`--no-pipeline`);
+//! * with `--staleness-window W > 0` the coordinator ships a pipelineable
+//!   round (RI-SGD's `LocalStep` without a fetch) and returns
+//!   [`RoundStatus::Deferred`] without reading the replies, keeping up to
+//!   `W` rounds in flight; replies are absorbed — and their uplink bytes
+//!   charged — when the window fills or a barrier flushes. See
+//!   `docs/DISTRIBUTED.md` for the full ordering contract.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -31,14 +49,14 @@ use crate::config::TrainConfig;
 use crate::optim::{
     scatter_workers, scatter_workers_with, AlgoConfig, Oracle, TrainOracle, WorkerCtx,
 };
-use crate::pool::WorkerPool;
+use crate::pool::{resolve_threads, Shards, WorkerPool};
 use crate::rng::SeedRegistry;
 use crate::util::json::Json;
 
 use super::wire::{read_frame, write_broadcast, write_frame, Frame, Slot, StepOp};
 use super::{
-    absorb_surrogate, perform_grad, perform_local_step, perform_qsgd, perform_surrogate,
-    perform_zo, perform_zo_pair, Round, Transport,
+    absorb_surrogate, perform_grad, perform_local_step, perform_qsgd, perform_qsgd_ef,
+    perform_surrogate, perform_zo, perform_zo_pair, rank_order_mean, Round, RoundStatus, Transport,
 };
 
 /// Coordinator-side per-socket inactivity timeout: a hung daemon turns
@@ -53,6 +71,25 @@ const IO_TIMEOUT: Duration = Duration::from_secs(120);
 // Coordinator side
 // ---------------------------------------------------------------------------
 
+/// Human-readable pipeline progress marker for disconnect diagnostics:
+/// which `(rank, t)` echo was absorbed last before the failure.
+fn last_reply_note(last: Option<(u32, u64)>) -> String {
+    match last {
+        Some((r, t)) => format!("last completed reply: rank {r}, iteration {t}"),
+        None => "no replies completed yet".to_string(),
+    }
+}
+
+/// The `(rank, t)` echo a worker→coordinator frame carries, if any.
+fn echo(frame: &Frame) -> Option<(u32, u64)> {
+    match frame {
+        Frame::Scalars { rank, t, .. }
+        | Frame::Vector { rank, t, .. }
+        | Frame::Quant { rank, t, .. } => Some((*rank, *t)),
+        _ => None,
+    }
+}
+
 struct Conn {
     w: BufWriter<TcpStream>,
     r: BufReader<TcpStream>,
@@ -60,29 +97,52 @@ struct Conn {
 }
 
 impl Conn {
-    fn read(&mut self) -> Result<(u64, Frame)> {
-        match read_frame(&mut self.r)
-            .with_context(|| format!("reading from worker {}", self.addr))?
-        {
+    /// Read one frame; a close or I/O failure surfaces the peer address
+    /// AND the last absorbed `(rank, t)` echo, so a mid-round disconnect
+    /// pinpoints where in the exchange the pipeline died.
+    fn read(&mut self, last: Option<(u32, u64)>) -> Result<(u64, Frame)> {
+        match read_frame(&mut self.r).with_context(|| {
+            format!("reading from worker {} ({})", self.addr, last_reply_note(last))
+        })? {
             Some(got) => Ok(got),
-            None => bail!("worker {} closed the connection mid-run", self.addr),
+            None => bail!(
+                "worker {} closed the connection mid-run ({})",
+                self.addr,
+                last_reply_note(last)
+            ),
         }
     }
 }
 
 /// The coordinator end of the fabric: `m` logical ranks multiplexed over
-/// the daemon connections given to [`TcpTransport::connect`].
+/// the daemon connections given to [`TcpTransport::connect`], plus the
+/// bounded-staleness pipeline state (see the module docs).
 pub struct TcpTransport {
     conns: Vec<Conn>,
     /// rank -> connection index (round-robin)
     assignment: Vec<usize>,
+    /// bounded-staleness window W: how many pipelineable rounds may stay
+    /// in flight before the coordinator must absorb the oldest
+    window: usize,
+    /// iterations of in-flight pipelined rounds, oldest first (≤ window)
+    inflight: VecDeque<u64>,
+    /// completed deferred rounds' `(t, mean loss)`, drained by the session
+    completions: Vec<(u64, f64)>,
+    /// last successfully absorbed `(rank, t)` reply echo — disconnect
+    /// diagnostics (see [`Conn::read`])
+    last_ok: Option<(u32, u64)>,
+    /// worker-resident RI-SGD locals seeded this session?
+    seeded_locals: bool,
+    /// worker-resident QSGD-EF residuals seeded this session?
+    seeded_residuals: bool,
 }
 
 impl TcpTransport {
     /// Connect to the worker daemons, run the `HOSGDW1` handshake and ship
     /// the run config. `cfg.workers` ranks are spread round-robin over
     /// `addrs`; every daemon verifies the protocol version and echoes its
-    /// model dimension, which must equal the coordinator's `dim`.
+    /// model dimension, which must equal the coordinator's `dim`. The
+    /// staleness window is taken from `cfg.transport.staleness_window`.
     pub fn connect(addrs: &[String], cfg: &TrainConfig, dim: usize) -> Result<Self> {
         if addrs.is_empty() {
             bail!("TcpTransport needs at least one worker address");
@@ -135,7 +195,7 @@ impl TcpTransport {
             };
             write_frame(&mut conn.w, &Frame::Hello)?;
             conn.w.flush()?;
-            match conn.read()?.1 {
+            match conn.read(None)?.1 {
                 Frame::HelloAck => {}
                 Frame::Error { message, .. } => {
                     bail!("worker {addr} rejected the handshake: {message}")
@@ -150,7 +210,7 @@ impl TcpTransport {
                 &Frame::AssignShard { m: m as u32, ranks, cfg_json: cfg_json.clone() },
             )?;
             conn.w.flush()?;
-            match conn.read()?.1 {
+            match conn.read(None)?.1 {
                 Frame::ShardReady { dim: got, .. } => {
                     if got as usize != dim {
                         bail!(
@@ -167,7 +227,16 @@ impl TcpTransport {
             eprintln!("# transport: worker {addr} ready ({n_ranks} rank(s))");
             conns.push(conn);
         }
-        Ok(Self { conns, assignment })
+        Ok(Self {
+            conns,
+            assignment,
+            window: cfg.transport.staleness_window,
+            inflight: VecDeque::new(),
+            completions: Vec::new(),
+            last_ok: None,
+            seeded_locals: false,
+            seeded_residuals: false,
+        })
     }
 
     /// Append rank `r`'s frames for this round (broadcast(s) + step order)
@@ -203,16 +272,116 @@ impl TcpTransport {
                 let f = Frame::Step { rank: rank as u32, t, op };
                 down(comm, write_frame(buf, &f)?);
             }
-            Round::LocalStep { locals, alpha, .. } => {
-                down(comm, write_broadcast(buf, rank as u32, Slot::Params, &locals[rank])?);
-                let f =
-                    Frame::Step { rank: rank as u32, t, op: StepOp::LocalStep { alpha: *alpha } };
+            Round::LocalStep { alpha, fetch, .. } => {
+                // the local model is worker-resident — only the step order
+                // goes down (the seeding broadcast, when one was needed,
+                // was prepended by the caller, unaccounted)
+                let op = StepOp::LocalStep { alpha: *alpha, fetch: *fetch };
+                let f = Frame::Step { rank: rank as u32, t, op };
                 down(comm, write_frame(buf, &f)?);
             }
             Round::QsgdGrad { params, s, .. } => {
                 down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
                 let f = Frame::Step { rank: rank as u32, t, op: StepOp::QsgdGrad { s: *s } };
                 down(comm, write_frame(buf, &f)?);
+            }
+            Round::QsgdEf { params, s, .. } => {
+                down(comm, write_broadcast(buf, rank as u32, Slot::Params, params)?);
+                let f = Frame::Step { rank: rank as u32, t, op: StepOp::QsgdEf { s: *s } };
+                down(comm, write_frame(buf, &f)?);
+            }
+            Round::PushLocals { .. } | Round::FetchState { .. } => {
+                unreachable!("handled before the per-rank encode loop")
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb the oldest in-flight pipelined round: read every rank's loss
+    /// scalar (global rank order — per-connection FIFO makes the orders
+    /// agree), charge the uplink bytes at absorb time, and queue the
+    /// round's `(t, mean loss)` for [`Transport::take_completions`].
+    fn absorb_oldest(&mut self, comm: &mut CommSim) -> Result<()> {
+        let Some(t) = self.inflight.pop_front() else { return Ok(()) };
+        let m = self.assignment.len();
+        let mut losses = Vec::with_capacity(m);
+        for rank in 0..m {
+            let last = self.last_ok;
+            let conn = &mut self.conns[self.assignment[rank]];
+            let (nbytes, frame) = conn.read(last)?;
+            comm.wire_up(nbytes);
+            match frame {
+                Frame::Scalars { rank: r, t: ft, values } => {
+                    if r as usize != rank || ft != t {
+                        bail!(
+                            "worker {} answered rank {r} iteration {ft}, expected rank {rank} \
+                             iteration {t} (pipeline desync)",
+                            conn.addr
+                        );
+                    }
+                    let [loss]: [f32; 1] = values.as_slice().try_into().map_err(|_| {
+                        anyhow::anyhow!(
+                            "pipelined local-step reply wants 1 scalar, got {}",
+                            values.len()
+                        )
+                    })?;
+                    losses.push(loss);
+                    self.last_ok = Some((r, ft));
+                }
+                Frame::Error { rank: r, message } => {
+                    bail!("worker {} rank {r} failed: {message}", conn.addr)
+                }
+                other => bail!("worker {} sent unexpected frame {other:?}", conn.addr),
+            }
+        }
+        self.completions.push((t, rank_order_mean(losses)));
+        Ok(())
+    }
+
+    /// Complete every in-flight pipelined round (the barrier).
+    fn drain_all(&mut self, comm: &mut CommSim) -> Result<()> {
+        while !self.inflight.is_empty() {
+            self.absorb_oldest(comm)?;
+        }
+        Ok(())
+    }
+
+    /// Pull one worker-resident vector per rank home
+    /// ([`Round::FetchState`]). Control-plane traffic like the handshake:
+    /// unaccounted on every fabric. Callers drain the pipeline first.
+    fn fetch_state(&mut self, slot: Slot, buffers: &mut [Vec<f32>]) -> Result<()> {
+        for rank in 0..buffers.len() {
+            let ci = self.assignment[rank];
+            write_frame(&mut self.conns[ci].w, &Frame::FetchState { rank: rank as u32, slot })?;
+        }
+        for c in &mut self.conns {
+            c.w.flush()?;
+        }
+        for (rank, buf) in buffers.iter_mut().enumerate() {
+            let last = self.last_ok;
+            let conn = &mut self.conns[self.assignment[rank]];
+            let (_, frame) = conn.read(last)?;
+            match frame {
+                Frame::Vector { rank: r, data, .. } => {
+                    if r as usize != rank {
+                        bail!(
+                            "worker {} answered the state fetch for rank {r}, expected {rank}",
+                            conn.addr
+                        );
+                    }
+                    if data.len() != buf.len() {
+                        bail!(
+                            "fetched state for rank {rank} has {} floats, expected {}",
+                            data.len(),
+                            buf.len()
+                        );
+                    }
+                    buf.copy_from_slice(&data);
+                }
+                Frame::Error { rank: r, message } => {
+                    bail!("worker {} rank {r} failed: {message}", conn.addr)
+                }
+                other => bail!("worker {} sent unexpected frame {other:?}", conn.addr),
             }
         }
         Ok(())
@@ -231,18 +400,97 @@ impl<O: Oracle> Transport<O> for TcpTransport {
         comm: &mut CommSim,
         cfg: &AlgoConfig,
         req: Round<'_>,
-    ) -> Result<()> {
+    ) -> Result<RoundStatus> {
         let m = workers.len();
         let d = workers.first().map_or(0, |c| c.g.len());
-        let t = req.t();
         let mu = cfg.mu;
 
+        // rounds with no step order are handled outside the exchange below
+        match req {
+            Round::FetchState { slot, buffers } => {
+                self.drain_all(comm)?;
+                self.fetch_state(slot, buffers)?;
+                return Ok(RoundStatus::Done);
+            }
+            Round::PushLocals { locals, t: _ } => {
+                // re-seed the worker-resident locals with the averaged
+                // model: one accounted broadcast down per rank, no reply
+                self.drain_all(comm)?;
+                for (rank, local) in locals.iter().enumerate() {
+                    let ci = self.assignment[rank];
+                    let n =
+                        write_broadcast(&mut self.conns[ci].w, rank as u32, Slot::Params, local)?;
+                    comm.wire_down(n);
+                }
+                for c in &mut self.conns {
+                    c.w.flush()?;
+                }
+                self.seeded_locals = true;
+                return Ok(RoundStatus::Done);
+            }
+            _ => {}
+        }
+
+        let pipelined = self.window > 0 && matches!(req, Round::LocalStep { fetch: false, .. });
+        if !pipelined {
+            // every non-pipelineable round is a barrier: in-flight rounds
+            // complete (and their bytes are charged) first
+            self.drain_all(comm)?;
+        }
+        let t = req.t();
+
         // 1. encode every rank's work order into its daemon's buffer
-        //    (accounting as we go)
+        //    (accounting as we go). Worker-resident state a daemon has not
+        //    seen yet this session is seeded first — control-plane
+        //    traffic, unaccounted on every fabric: a fresh or resumed
+        //    session pays it once, the steady-state exchange never does.
         let n_conns = self.conns.len();
         let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); n_conns];
+        match &req {
+            Round::LocalStep { locals, .. } if !self.seeded_locals => {
+                for (rank, local) in locals.iter().enumerate() {
+                    write_broadcast(
+                        &mut bufs[self.assignment[rank]],
+                        rank as u32,
+                        Slot::Params,
+                        local,
+                    )?;
+                }
+                self.seeded_locals = true;
+            }
+            Round::QsgdEf { residuals, .. } if !self.seeded_residuals => {
+                for (rank, res) in residuals.iter().enumerate() {
+                    write_broadcast(
+                        &mut bufs[self.assignment[rank]],
+                        rank as u32,
+                        Slot::Residual,
+                        res,
+                    )?;
+                }
+                self.seeded_residuals = true;
+            }
+            _ => {}
+        }
         for rank in 0..m {
             Self::encode_rank(&mut bufs[self.assignment[rank]], comm, rank, &req)?;
+        }
+
+        if pipelined {
+            // ship without reading: the replies (one loss scalar per rank)
+            // stay queued until the window fills or a barrier flushes.
+            // Writes cannot deadlock here — the daemon reads eagerly and
+            // its pending replies are a few bytes per in-flight round.
+            for (ci, buf) in bufs.iter().enumerate() {
+                let c = &mut self.conns[ci];
+                c.w.write_all(buf)
+                    .and_then(|()| c.w.flush())
+                    .with_context(|| format!("writing to worker {}", c.addr))?;
+            }
+            self.inflight.push_back(t);
+            while self.inflight.len() > self.window {
+                self.absorb_oldest(comm)?;
+            }
+            return Ok(RoundStatus::Deferred);
         }
 
         // 2. ship the buffers from scoped writer threads while this thread
@@ -259,6 +507,7 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             readers.push((&mut c.r, c.addr.as_str()));
         }
         let assignment = &self.assignment;
+        let mut last = self.last_ok;
         let frames: Vec<(u64, Frame)> = std::thread::scope(|scope| -> Result<_> {
             let joins: Vec<_> = writers
                 .into_iter()
@@ -273,9 +522,19 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             let mut frames = Vec::with_capacity(m);
             for &ci in assignment.iter() {
                 let (r, addr) = &mut readers[ci];
-                match read_frame(r).with_context(|| format!("reading from worker {addr}"))? {
-                    Some(got) => frames.push(got),
-                    None => bail!("worker {addr} closed the connection mid-run"),
+                match read_frame(r).with_context(|| {
+                    format!("reading from worker {addr} ({})", last_reply_note(last))
+                })? {
+                    Some(got) => {
+                        if let Some(e) = echo(&got.1) {
+                            last = Some(e);
+                        }
+                        frames.push(got);
+                    }
+                    None => bail!(
+                        "worker {addr} closed the connection mid-round ({})",
+                        last_reply_note(last)
+                    ),
                 }
             }
             for j in joins {
@@ -283,6 +542,7 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             }
             Ok(frames)
         })?;
+        self.last_ok = last;
 
         // 3. absorb responses into the worker slots
         let mut surrogate_pairs: Vec<Vec<(f32, f32)>> = Vec::new();
@@ -340,7 +600,10 @@ impl<O: Oracle> Transport<O> for TcpTransport {
                     }
                     surrogate_pairs.push(values.chunks_exact(2).map(|c| (c[0], c[1])).collect());
                 }
-                (Round::LocalStep { .. }, Frame::Vector { rank: r, t: ft, loss, data }) => {
+                (
+                    Round::LocalStep { fetch: true, .. },
+                    Frame::Vector { rank: r, t: ft, loss, data },
+                ) => {
                     check(r, ft)?;
                     if data.len() != d {
                         bail!("local-step response has {} elements, expected {d}", data.len());
@@ -351,7 +614,20 @@ impl<O: Oracle> Transport<O> for TcpTransport {
                     ctx.g.copy_from_slice(&data);
                 }
                 (
-                    Round::QsgdGrad { s, .. },
+                    Round::LocalStep { fetch: false, .. },
+                    Frame::Scalars { rank: r, t: ft, values },
+                ) => {
+                    // W = 0: the synchronous no-fetch local step — only
+                    // the loss scalar crosses the wire
+                    check(r, ft)?;
+                    let [loss]: [f32; 1] = values
+                        .as_slice()
+                        .try_into()
+                        .map_err(|_| anyhow::anyhow!("local-step round wants 1 scalar"))?;
+                    ctx.loss = loss;
+                }
+                (
+                    Round::QsgdGrad { s, .. } | Round::QsgdEf { s, .. },
                     Frame::Quant { rank: r, t: ft, loss, norm, s: got_s, n_levels, bits },
                 ) => {
                     check(r, ft)?;
@@ -387,14 +663,22 @@ impl<O: Oracle> Transport<O> for TcpTransport {
                     Ok(())
                 })?;
             }
-            Round::LocalStep { locals, .. } => {
+            Round::LocalStep { locals, fetch: true, .. } => {
                 for (rank, ctx) in workers.iter().enumerate() {
                     locals[rank].copy_from_slice(&ctx.g);
                 }
             }
             _ => {}
         }
-        Ok(())
+        Ok(RoundStatus::Done)
+    }
+
+    fn barrier(&mut self, comm: &mut CommSim) -> Result<()> {
+        self.drain_all(comm)
+    }
+
+    fn take_completions(&mut self) -> Vec<(u64, f64)> {
+        std::mem::take(&mut self.completions)
     }
 }
 
@@ -421,6 +705,10 @@ pub struct WorkerDaemonOpts {
     pub threads: usize,
     /// exit after the first coordinator session instead of re-accepting
     pub once: bool,
+    /// batch a full round's step orders and execute them on the daemon's
+    /// worker pool in parallel (`--no-pipeline` turns this off; replies
+    /// keep rank-FIFO order either way, so traces are identical)
+    pub pipeline: bool,
 }
 
 /// How one accepted connection ended (see [`serve`]).
@@ -469,12 +757,17 @@ pub fn serve(listener: TcpListener, opts: &WorkerDaemonOpts) -> Result<()> {
     }
 }
 
-/// One hosted rank's state: its oracle shard context and the broadcast
-/// target buffers.
+/// One hosted rank's state: its oracle shard context, the broadcast target
+/// buffers, and the worker-resident QSGD error-feedback residual.
 struct RankState<'a> {
     ctx: WorkerCtx<TrainOracle<'a>>,
+    /// current params — RI-SGD's worker-resident local model lives here
+    /// between averaging rounds
     params: Vec<f32>,
     snapshot: Vec<f32>,
+    /// QSGD-EF residual memory (worker-resident; seeded and fetched via
+    /// [`Slot::Residual`])
+    residual: Vec<f32>,
 }
 
 /// Serve one coordinator connection; see [`SessionEnd`] for the outcomes.
@@ -562,19 +855,36 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
     let acfg = AlgoConfig::from_train(&cfg, model.dim());
     let reg = SeedRegistry::new(cfg.seed);
     let d = model.dim();
+    // the daemon's execution pool: share the model's kernel pool when the
+    // backend has one, so hosted ranks and batch-chunked kernels draw on
+    // the same lanes
+    let pool: Arc<WorkerPool> = model
+        .pool()
+        .unwrap_or_else(|| Arc::new(WorkerPool::new(resolve_threads(opts.threads))));
     let mut states: Vec<RankState> = ranks
         .iter()
         .map(|_| RankState {
             ctx: WorkerCtx::new(oracle.shard(), reg),
             params: vec![0.0; d],
             snapshot: vec![0.0; d],
+            residual: vec![0.0; d],
         })
         .collect();
     let index: HashMap<u32, usize> = ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect();
     write_frame(&mut w, &Frame::ShardReady { dim: d as u64, batch: model.batch() as u64 })?;
     w.flush()?;
-    eprintln!("# worker: serving rank(s) {ranks:?} of m = {m} on {:?} (d = {d})", cfg.dataset);
+    // batching a single hosted rank would only add latency — fall back to
+    // execute-as-it-arrives there even with the pipeline enabled
+    let batch_mode = opts.pipeline && states.len() > 1;
+    eprintln!(
+        "# worker: serving rank(s) {ranks:?} of m = {m} on {:?} (d = {d}{})",
+        cfg.dataset,
+        if batch_mode { ", pipelined" } else { "" }
+    );
 
+    // step orders of the round currently being gathered (batch mode):
+    // (state index, rank, t, op) in arrival order
+    let mut batch: Vec<(usize, u32, u64, StepOp)> = Vec::new();
     loop {
         let frame = match read_frame(&mut r)? {
             Some((_, f)) => f,
@@ -582,6 +892,10 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
         };
         match frame {
             Frame::Broadcast { rank, slot, data } => {
+                // a rank's broadcasts always precede its own step order
+                // within a round, and any already-batched orders belong to
+                // OTHER ranks of the same round, so applying immediately
+                // cannot race the batch
                 let st = lookup(&index, &mut states, rank)?;
                 if data.len() != d {
                     bail!("broadcast for rank {rank} has {} floats, expected {d}", data.len());
@@ -589,16 +903,80 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
                 match slot {
                     Slot::Params => st.params.copy_from_slice(&data),
                     Slot::Snapshot => st.snapshot.copy_from_slice(&data),
+                    Slot::Residual => st.residual.copy_from_slice(&data),
                 }
             }
             Frame::Step { rank, t, op } => {
+                if !batch_mode {
+                    let st = lookup(&index, &mut states, rank)?;
+                    let reply = execute_step(st, rank, t, op, &acfg, cfg.seed);
+                    let frame = match reply {
+                        Ok(f) => f,
+                        Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                    };
+                    write_frame(&mut w, &frame)?;
+                    w.flush()?;
+                    continue;
+                }
+                let &i = index
+                    .get(&rank)
+                    .ok_or_else(|| anyhow::anyhow!("rank {rank} is not hosted by this daemon"))?;
+                if batch.iter().any(|&(j, ..)| j == i) {
+                    bail!(
+                        "rank {rank} received a second step order before the round completed \
+                         (pipeline desync)"
+                    );
+                }
+                batch.push((i, rank, t, op));
+                if batch.len() < states.len() {
+                    continue;
+                }
+                // a full round is buffered: every hosted rank has exactly
+                // one order and they must agree on the iteration
+                let t0 = batch[0].2;
+                if batch.iter().any(|&(_, _, bt, _)| bt != t0) {
+                    bail!("step orders within one round disagree on the iteration");
+                }
+                // fan the round out on the pool; replies go back in the
+                // order the orders arrived (rank-FIFO), one flush
+                let mut replies: Vec<Option<Result<Frame>>> =
+                    (0..batch.len()).map(|_| None).collect();
+                {
+                    let st_sh = Shards::new(&mut states[..]);
+                    let rep_sh = Shards::new(&mut replies[..]);
+                    let batch_ref = &batch;
+                    let acfg_ref = &acfg;
+                    let seed = cfg.seed;
+                    pool.scatter(batch_ref.len(), &|k| {
+                        let (i, rank, t, op) = batch_ref[k];
+                        // Safety: each batch entry owns a distinct state
+                        // index, and k is this job's scatter index
+                        let st = unsafe { st_sh.get(i) };
+                        let rep = unsafe { rep_sh.get(k) };
+                        *rep = Some(execute_step(st, rank, t, op, acfg_ref, seed));
+                    });
+                }
+                for (reply, &(_, rank, ..)) in replies.into_iter().zip(batch.iter()) {
+                    let frame = match reply.expect("scatter fills every reply") {
+                        Ok(f) => f,
+                        Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                    };
+                    write_frame(&mut w, &frame)?;
+                }
+                w.flush()?;
+                batch.clear();
+            }
+            Frame::FetchState { rank, slot } => {
+                if !batch.is_empty() {
+                    bail!("state fetch arrived mid-round (pipeline desync)");
+                }
                 let st = lookup(&index, &mut states, rank)?;
-                let reply = execute_step(st, rank, t, op, &acfg, cfg.seed);
-                let frame = match reply {
-                    Ok(f) => f,
-                    Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                let data = match slot {
+                    Slot::Params => st.params.clone(),
+                    Slot::Snapshot => st.snapshot.clone(),
+                    Slot::Residual => st.residual.clone(),
                 };
-                write_frame(&mut w, &frame)?;
+                write_frame(&mut w, &Frame::Vector { rank, t: 0, loss: 0.0, data })?;
                 w.flush()?;
             }
             Frame::Shutdown => return Ok(SessionEnd::Served),
@@ -657,13 +1035,40 @@ fn execute_step(
             let values = pairs.iter().flat_map(|&(lp, lb)| [lp, lb]).collect();
             Ok(Frame::Scalars { rank, t, values })
         }
-        StepOp::LocalStep { alpha } => {
+        StepOp::LocalStep { alpha, fetch } => {
+            // the local model is worker-resident (st.params); only the
+            // loss goes back unless the averaging round fetches the model
             let loss = perform_local_step(&mut st.ctx, &mut st.params, t, rank64, alpha)?;
-            Ok(Frame::Vector { rank, t, loss, data: st.params.clone() })
+            if fetch {
+                Ok(Frame::Vector { rank, t, loss, data: st.params.clone() })
+            } else {
+                Ok(Frame::Scalars { rank, t, values: vec![loss] })
+            }
         }
         StepOp::QsgdGrad { s } => {
             let loss = perform_qsgd(&mut st.ctx, &st.params, t, rank64, s, base_seed)?;
             let q = st.ctx.quant.take().expect("perform_qsgd fills ctx.quant");
+            Ok(Frame::Quant {
+                rank,
+                t,
+                loss,
+                norm: q.norm,
+                s: q.s,
+                n_levels: q.levels.len() as u64,
+                bits: encode_levels(&q.levels),
+            })
+        }
+        StepOp::QsgdEf { s } => {
+            let loss = perform_qsgd_ef(
+                &mut st.ctx,
+                &st.params,
+                &mut st.residual,
+                t,
+                rank64,
+                s,
+                base_seed,
+            )?;
+            let q = st.ctx.quant.take().expect("perform_qsgd_ef fills ctx.quant");
             Ok(Frame::Quant {
                 rank,
                 t,

@@ -14,12 +14,14 @@
 //! * control — [`Frame::Hello`] / [`Frame::HelloAck`] (protocol + version
 //!   check), [`Frame::AssignShard`] (run config + hosted ranks),
 //!   [`Frame::ShardReady`], [`Frame::Shutdown`], [`Frame::Error`];
-//! * coordinator→worker — [`Frame::Broadcast`] (model / SVRG-snapshot
-//!   vectors) and [`Frame::Step`] (one work order per rank per round);
+//! * coordinator→worker — [`Frame::Broadcast`] (model / SVRG-snapshot /
+//!   residual vectors), [`Frame::Step`] (one work order per rank per
+//!   round) and [`Frame::FetchState`] (pull one worker-resident vector
+//!   back to the coordinator at averaging/snapshot points);
 //! * worker→coordinator — [`Frame::Scalars`] (the ZO rounds: a handful of
 //!   f32s no matter how large `d` is), [`Frame::Vector`] (dense FO
-//!   gradients / RI-SGD local models) and [`Frame::Quant`] (QSGD's
-//!   Elias-γ-coded quantized gradient).
+//!   gradients / RI-SGD local models / fetched state) and [`Frame::Quant`]
+//!   (QSGD's Elias-γ-coded quantized gradient).
 //!
 //! Every variant has a closed-form encoded size (`*_len` below); the
 //! `Loopback` fabric accounts those sizes without materializing bytes, the
@@ -36,7 +38,11 @@ use anyhow::{bail, Context, Result};
 pub const PROTO: &[u8; 8] = b"HOSGDW1\0";
 
 /// Wire protocol version (bumped on any layout change).
-pub const VERSION: u32 = 1;
+///
+/// v2: `LocalStep` gained a `fetch` byte, `QsgdEf` (worker-resident
+/// error feedback) and `FetchState` were added, and `Slot::Residual`
+/// joined the broadcast slots.
+pub const VERSION: u32 = 2;
 
 /// Upper bound on a frame body — a decode guard against garbage length
 /// prefixes, far above any real payload (d ≈ 10⁵ ⇒ ~400 KB frames).
@@ -49,6 +55,8 @@ pub enum Slot {
     Params,
     /// the ZO-SVRG epoch anchor x̃
     Snapshot,
+    /// QSGD's worker-resident error-feedback residual
+    Residual,
 }
 
 impl Slot {
@@ -56,6 +64,7 @@ impl Slot {
         match self {
             Slot::Params => 0,
             Slot::Snapshot => 1,
+            Slot::Residual => 2,
         }
     }
 
@@ -63,6 +72,7 @@ impl Slot {
         match tag {
             0 => Ok(Slot::Params),
             1 => Ok(Slot::Snapshot),
+            2 => Ok(Slot::Residual),
             other => bail!("unknown broadcast slot {other}"),
         }
     }
@@ -80,10 +90,16 @@ pub enum StepOp {
     ZoPair,
     /// ZO-SVRG epoch surrogate: `probes` pair-probes at the snapshot
     Surrogate { epoch: u64, probes: u32 },
-    /// RI-SGD local step: gradient at the broadcast local + local update
-    LocalStep { alpha: f32 },
+    /// RI-SGD local step on the *worker-resident* local model; when
+    /// `fetch` is set the reply carries the updated local back as a
+    /// [`Frame::Vector`] (averaging round), otherwise only the loss
+    /// crosses the wire as a [`Frame::Scalars`] of one value
+    LocalStep { alpha: f32, fetch: bool },
     /// FO gradient, quantized worker-side with the seeded QSGD stream
     QsgdGrad { s: u32 },
+    /// like [`StepOp::QsgdGrad`] but with the error-feedback residual
+    /// folded in worker-side (the residual lives on the daemon)
+    QsgdEf { s: u32 },
 }
 
 impl StepOp {
@@ -95,6 +111,7 @@ impl StepOp {
             StepOp::Surrogate { .. } => 3,
             StepOp::LocalStep { .. } => 4,
             StepOp::QsgdGrad { .. } => 5,
+            StepOp::QsgdEf { .. } => 6,
         }
     }
 }
@@ -116,6 +133,10 @@ pub enum Frame {
     Quant { rank: u32, t: u64, loss: f32, norm: f32, s: u32, n_levels: u64, bits: Vec<u8> },
     Error { rank: u32, message: String },
     Shutdown,
+    /// coordinator→worker: send back the worker-resident vector in `slot`
+    /// for `rank` (replied to with a [`Frame::Vector`]); control-plane
+    /// traffic at averaging/snapshot points, not per-round
+    FetchState { rank: u32, slot: Slot },
 }
 
 // -- closed-form frame sizes (header included) ------------------------------
@@ -133,9 +154,15 @@ pub fn step_len(op: StepOp) -> u64 {
     let args = match op {
         StepOp::Grad | StepOp::Zo | StepOp::ZoPair => 0,
         StepOp::Surrogate { .. } => 12,
-        StepOp::LocalStep { .. } | StepOp::QsgdGrad { .. } => 4,
+        StepOp::LocalStep { .. } => 5,
+        StepOp::QsgdGrad { .. } | StepOp::QsgdEf { .. } => 4,
     };
     HEADER_LEN + 4 + 8 + 1 + args
+}
+
+/// Encoded size of a [`Frame::FetchState`].
+pub fn fetch_state_len() -> u64 {
+    HEADER_LEN + 4 + 1
 }
 
 /// Encoded size of a [`Frame::Scalars`] of `n` values.
@@ -188,6 +215,7 @@ impl Frame {
             Frame::Quant { .. } => 9,
             Frame::Error { .. } => 10,
             Frame::Shutdown => 11,
+            Frame::FetchState { .. } => 12,
         }
     }
 
@@ -229,8 +257,12 @@ impl Frame {
                         put_u64(&mut out, epoch);
                         put_u32(&mut out, probes);
                     }
-                    StepOp::LocalStep { alpha } => put_f32(&mut out, alpha),
+                    StepOp::LocalStep { alpha, fetch } => {
+                        put_f32(&mut out, alpha);
+                        out.push(fetch as u8);
+                    }
                     StepOp::QsgdGrad { s } => put_u32(&mut out, s),
+                    StepOp::QsgdEf { s } => put_u32(&mut out, s),
                 }
             }
             Frame::Scalars { rank, t, values } => {
@@ -262,6 +294,10 @@ impl Frame {
                 out.extend_from_slice(message.as_bytes());
             }
             Frame::Shutdown => {}
+            Frame::FetchState { rank, slot } => {
+                put_u32(&mut out, *rank);
+                out.push(slot.tag());
+            }
         }
         let len = (out.len() - 4) as u32;
         out[..4].copy_from_slice(&len.to_le_bytes());
@@ -320,8 +356,17 @@ impl Frame {
                     1 => StepOp::Zo,
                     2 => StepOp::ZoPair,
                     3 => StepOp::Surrogate { epoch: c.u64()?, probes: c.u32()? },
-                    4 => StepOp::LocalStep { alpha: c.f32()? },
+                    4 => {
+                        let alpha = c.f32()?;
+                        let fetch = match c.u8()? {
+                            0 => false,
+                            1 => true,
+                            other => bail!("bad local-step fetch flag {other}"),
+                        };
+                        StepOp::LocalStep { alpha, fetch }
+                    }
                     5 => StepOp::QsgdGrad { s: c.u32()? },
+                    6 => StepOp::QsgdEf { s: c.u32()? },
                     other => bail!("unknown step op {other}"),
                 };
                 Frame::Step { rank, t, op }
@@ -359,6 +404,7 @@ impl Frame {
             }
             10 => Frame::Error { rank: c.u32()?, message: c.string()? },
             11 => Frame::Shutdown,
+            12 => Frame::FetchState { rank: c.u32()?, slot: Slot::from_tag(c.u8()?)? },
             other => bail!("unknown frame kind {other}"),
         };
         if c.off != body.len() {
@@ -520,13 +566,26 @@ mod tests {
                 step_len(StepOp::Surrogate { epoch: 4, probes: 4 }),
             ),
             (
-                Frame::Step { rank: 1, t: 2, op: StepOp::LocalStep { alpha: 0.1 } },
-                step_len(StepOp::LocalStep { alpha: 0.1 }),
+                Frame::Step { rank: 1, t: 2, op: StepOp::LocalStep { alpha: 0.1, fetch: false } },
+                step_len(StepOp::LocalStep { alpha: 0.1, fetch: false }),
+            ),
+            (
+                Frame::Step { rank: 1, t: 2, op: StepOp::LocalStep { alpha: 0.1, fetch: true } },
+                step_len(StepOp::LocalStep { alpha: 0.1, fetch: true }),
             ),
             (
                 Frame::Step { rank: 1, t: 2, op: StepOp::QsgdGrad { s: 4 } },
                 step_len(StepOp::QsgdGrad { s: 4 }),
             ),
+            (
+                Frame::Step { rank: 1, t: 2, op: StepOp::QsgdEf { s: 4 } },
+                step_len(StepOp::QsgdEf { s: 4 }),
+            ),
+            (
+                Frame::Broadcast { rank: 1, slot: Slot::Residual, data: vec![0.5; 9] },
+                broadcast_len(9),
+            ),
+            (Frame::FetchState { rank: 2, slot: Slot::Residual }, fetch_state_len()),
             (Frame::Scalars { rank: 2, t: 7, values: vec![1.0, 2.0] }, scalars_len(2)),
             (Frame::Vector { rank: 2, t: 7, loss: 0.5, data: vec![0.0; 33] }, vector_len(33)),
             (

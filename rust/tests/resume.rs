@@ -53,7 +53,7 @@ fn run_full(method: Method, threads: usize) -> (String, Vec<f32>) {
     let data = make_data(&cfg).unwrap();
     let mut s = Session::new(model.as_ref(), &data, &cfg).unwrap();
     s.run_to_end().unwrap();
-    (s.trace().to_json_canonical().pretty(), s.params())
+    (s.trace().to_json_canonical().pretty(), s.params().unwrap())
 }
 
 /// Run to iteration `k` under `threads_a`, snapshot through the checkpoint
@@ -68,7 +68,7 @@ fn run_resumed(method: Method, k: u64, threads_a: usize, threads_b: usize) -> (S
         let mut s = Session::new(model.as_ref(), &data, &cfg).unwrap();
         s.run_until(k).unwrap();
         assert_eq!(s.iter(), k);
-        s.snapshot().to_bytes()
+        s.snapshot().unwrap().to_bytes()
     };
     // fresh process-like context: nothing survives but the bytes
     let be = NativeBackend::with_threads(threads_b);
@@ -79,7 +79,7 @@ fn run_resumed(method: Method, k: u64, threads_a: usize, threads_b: usize) -> (S
     let mut s = Session::restore(model.as_ref(), &data, &cfg, state).unwrap();
     assert_eq!(s.iter(), k);
     s.run_to_end().unwrap();
-    (s.trace().to_json_canonical().pretty(), s.params())
+    (s.trace().to_json_canonical().pretty(), s.params().unwrap())
 }
 
 fn assert_params_bits_eq(method: Method, a: &[f32], b: &[f32]) {
@@ -137,7 +137,7 @@ fn restore_rejects_mismatched_runs_loudly() {
     let data = make_data(&cfg0).unwrap();
     let mut s = Session::new(model.as_ref(), &data, &cfg0).unwrap();
     s.run_until(6).unwrap();
-    let state = s.snapshot();
+    let state = s.snapshot().unwrap();
 
     let err_for = |cfg: &TrainConfig| {
         Session::restore(model.as_ref(), &data, cfg, state.clone())
@@ -195,7 +195,7 @@ fn periodic_checkpoint_observer_matches_cli_semantics() {
     let mut resumed = Session::restore(model.as_ref(), &data, &cfg0, state).unwrap();
     resumed.run_to_end().unwrap();
     assert_eq!(resumed.trace().to_json_canonical().pretty(), full_trace);
-    assert_params_bits_eq(Method::HoSgd, &full_params, &resumed.params());
+    assert_params_bits_eq(Method::HoSgd, &full_params, &resumed.params().unwrap());
 
     // every = 0 is a no-op observer
     let noop = dir.join("never.ck2");

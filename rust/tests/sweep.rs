@@ -198,7 +198,8 @@ fn spawn_persistent_daemon() -> String {
     // not joined: `serve` re-accepts until process exit (the executor
     // checks a daemon out per in-flight run and returns it after)
     std::thread::spawn(move || {
-        let opts = WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: false };
+        let opts =
+            WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: false, pipeline: true };
         let _ = serve(listener, &opts);
     });
     addr

@@ -50,7 +50,7 @@ fn run_session(cfg: &TrainConfig) -> (String, Vec<f32>) {
     let data = make_data(cfg).unwrap();
     let mut s = Session::new(model.as_ref(), &data, cfg).unwrap();
     s.run_to_end().unwrap();
-    (s.trace().to_json_canonical().pretty(), s.params())
+    (s.trace().to_json_canonical().pretty(), s.params().unwrap())
 }
 
 // ---------------------------------------------------------------------------
@@ -133,7 +133,7 @@ fn loopback_matches_legacy_fan_out_bit_for_bit() {
     let mut s = Session::new(model.as_ref(), &data, &c2).unwrap();
     s.run_to_end().unwrap();
     let rows = s.rows().to_vec();
-    let session_params = s.params();
+    let session_params = s.params().unwrap();
 
     assert_eq!(rows.len(), legacy_losses.len());
     for (row, legacy) in rows.iter().zip(&legacy_losses) {
@@ -164,14 +164,18 @@ fn wire_roundtrip_fuzz() {
     for _ in 0..200 {
         let rank = rng.next_below(64) as u32;
         let t = rng.next_u64() % 10_000;
-        let frame = match rng.next_below(7) {
+        let frame = match rng.next_below(8) {
             0 => Frame::Broadcast {
                 rank,
-                slot: if rng.next_below(2) == 0 { Slot::Params } else { Slot::Snapshot },
+                slot: match rng.next_below(3) {
+                    0 => Slot::Params,
+                    1 => Slot::Snapshot,
+                    _ => Slot::Residual,
+                },
                 data: (0..rng.next_below(300)).map(|_| rng.next_f32() - 0.5).collect(),
             },
             1 => {
-                let op = match rng.next_below(6) {
+                let op = match rng.next_below(7) {
                     0 => StepOp::Grad,
                     1 => StepOp::Zo,
                     2 => StepOp::ZoPair,
@@ -179,11 +183,19 @@ fn wire_roundtrip_fuzz() {
                         epoch: rng.next_u64() % 100,
                         probes: 1 + rng.next_below(8) as u32,
                     },
-                    4 => StepOp::LocalStep { alpha: rng.next_f32() },
+                    4 => StepOp::LocalStep {
+                        alpha: rng.next_f32(),
+                        fetch: rng.next_below(2) == 0,
+                    },
+                    5 => StepOp::QsgdEf { s: 1 + rng.next_below(16) as u32 },
                     _ => StepOp::QsgdGrad { s: 1 + rng.next_below(16) as u32 },
                 };
                 Frame::Step { rank, t, op }
             }
+            7 => Frame::FetchState {
+                rank,
+                slot: if rng.next_below(2) == 0 { Slot::Params } else { Slot::Residual },
+            },
             2 => Frame::Scalars {
                 rank,
                 t,
@@ -227,14 +239,63 @@ fn wire_roundtrip_fuzz() {
 }
 
 // ---------------------------------------------------------------------------
+// Wire spec worked examples (docs/DISTRIBUTED.md)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_spec_worked_examples_match_the_codec() {
+    // docs/DISTRIBUTED.md §"Frame catalogue" carries worked byte-layout
+    // examples generated from these exact frames. If this test fails, the
+    // spec and the codec have drifted apart — fix whichever one changed
+    // deliberately (a layout change also requires a VERSION bump).
+    let spec = include_str!("../../docs/DISTRIBUTED.md");
+    let hex = |bytes: &[u8]| {
+        bytes.iter().map(|b| format!("{b:02x}")).collect::<Vec<_>>().join(" ")
+    };
+    let cases: Vec<(&str, Frame)> = vec![
+        ("Hello", Frame::Hello),
+        ("FetchState", Frame::FetchState { rank: 2, slot: Slot::Residual }),
+        (
+            "Step/LocalStep",
+            Frame::Step { rank: 1, t: 2, op: StepOp::LocalStep { alpha: 0.5, fetch: true } },
+        ),
+        ("Step/QsgdEf", Frame::Step { rank: 3, t: 7, op: StepOp::QsgdEf { s: 4 } }),
+        ("Scalars", Frame::Scalars { rank: 0, t: 5, values: vec![1.0] }),
+    ];
+    for (name, frame) in cases {
+        let encoded = frame.encode();
+        let h = hex(&encoded);
+        assert!(
+            spec.contains(&h),
+            "docs/DISTRIBUTED.md worked example for {name} drifted from the codec; \
+             the codec now produces `{h}`"
+        );
+        // and the documented bytes round-trip through the decoder
+        let decoded = Frame::decode(&encoded[4..]).unwrap();
+        assert_eq!(decoded, frame, "{name}");
+    }
+    // structural anchors the crate docs point readers at
+    for anchor in
+        ["## Frame catalogue", "## Handshake", "## Pipelined round exchange", "staleness"]
+    {
+        assert!(spec.contains(anchor), "docs/DISTRIBUTED.md lost its `{anchor}` section");
+    }
+}
+
+// ---------------------------------------------------------------------------
 // TCP ≡ Loopback
 // ---------------------------------------------------------------------------
 
 fn spawn_daemon() -> (String, std::thread::JoinHandle<()>) {
+    spawn_daemon_opts(true)
+}
+
+fn spawn_daemon_opts(pipeline: bool) -> (String, std::thread::JoinHandle<()>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || {
-        let opts = WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: true };
+        let opts =
+            WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: true, pipeline };
         serve(listener, &opts).unwrap();
     });
     (addr, handle)
@@ -290,6 +351,192 @@ fn tcp_single_daemon_hosts_all_ranks() {
 }
 
 // ---------------------------------------------------------------------------
+// Bounded-staleness run-ahead (--staleness-window W)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn staleness_window_on_loopback_pipelines_time_but_not_numerics() {
+    // RI-SGD's no-fetch local steps are the pipelineable rounds. Under a
+    // seeded straggler/drop plan, W > 0 may only overlap the *modelled*
+    // time: the trajectory, the wire bytes and the retry stream must stay
+    // byte-identical to the synchronous W = 0 run, and the virtual clock
+    // can only improve (run-ahead hides straggler latency, never adds it).
+    let mut sync_cfg = cfg(Method::RiSgd);
+    sync_cfg.eval_every = 0;
+    sync_cfg.transport.fault =
+        FaultPlan { latency_s: vec![5e-4, 8e-4, 1e-4, 6e-4], drop_prob: 0.2, seed: 7 };
+    let mut pipe_cfg = sync_cfg.clone();
+    pipe_cfg.transport.staleness_window = 3;
+
+    let run = |c: &TrainConfig| {
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&c.dataset).unwrap();
+        let data = make_data(c).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, c).unwrap();
+        s.run_to_end().unwrap();
+        let rows = s.rows().to_vec();
+        let params = s.params().unwrap();
+        let comm = s.snapshot().unwrap().comm;
+        (rows, params, comm)
+    };
+    let (rows_a, params_a, stats_a) = run(&sync_cfg);
+    let (rows_b, params_b, stats_b) = run(&pipe_cfg);
+
+    assert_eq!(rows_a.len(), rows_b.len());
+    for (ra, rb) in rows_a.iter().zip(&rows_b) {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "iter {}: W = 3 changed the loss trajectory",
+            ra.iter
+        );
+    }
+    for (j, (a, b)) in params_a.iter().zip(&params_b).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "W = 3 changed param {j}");
+    }
+    assert_eq!(stats_a.wire_up_bytes, stats_b.wire_up_bytes);
+    assert_eq!(stats_a.wire_down_bytes, stats_b.wire_down_bytes);
+    assert_eq!(stats_a.wire_retries, stats_b.wire_retries);
+    assert!(stats_a.wire_retries > 0, "the fault plan must actually fire retries");
+    assert!(
+        stats_b.sim_time_s <= stats_a.sim_time_s,
+        "run-ahead slowed the modelled clock: W=3 {} > W=0 {}",
+        stats_b.sim_time_s,
+        stats_a.sim_time_s
+    );
+}
+
+#[test]
+fn tcp_staleness_window_preserves_losses_and_keeps_counters_monotone() {
+    // over real daemons, W > 0 defers round completions — trace rows are
+    // emitted when replies are absorbed, with the then-current cumulative
+    // counters. The loss trajectory and final params must be bit-identical
+    // to the synchronous exchange; per-row counters may shift but must
+    // stay monotone, and the fully drained totals must agree.
+    let mut base = cfg(Method::RiSgd);
+    base.eval_every = 0;
+
+    let run_tcp = |window: usize| {
+        let (a1, h1) = spawn_daemon();
+        let (a2, h2) = spawn_daemon();
+        let mut c = base.clone();
+        c.transport.workers_at = vec![a1, a2];
+        c.transport.staleness_window = window;
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&c.dataset).unwrap();
+        let data = make_data(&c).unwrap();
+        let mut s = Session::new(model.as_ref(), &data, &c).unwrap();
+        s.run_to_end().unwrap();
+        let rows = s.rows().to_vec();
+        let params = s.params().unwrap();
+        drop(s);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        (rows, params)
+    };
+    let (rows_sync, params_sync) = run_tcp(0);
+    let (rows_pipe, params_pipe) = run_tcp(2);
+
+    assert_eq!(rows_sync.len(), rows_pipe.len());
+    for (a, b) in rows_sync.iter().zip(&rows_pipe) {
+        assert_eq!(a.iter, b.iter, "row order must stay by iteration");
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "iter {}: W = 2 changed the loss trajectory over TCP",
+            a.iter
+        );
+    }
+    for (j, (a, b)) in params_sync.iter().zip(&params_pipe).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "W = 2 changed param {j} over TCP");
+    }
+    let mut prev = (0u64, 0u64, 0u64);
+    for r in &rows_pipe {
+        assert!(
+            r.wire_up_bytes >= prev.0
+                && r.wire_down_bytes >= prev.1
+                && r.scalars_per_worker >= prev.2,
+            "iter {}: wire counters went backwards under W = 2",
+            r.iter
+        );
+        prev = (r.wire_up_bytes, r.wire_down_bytes, r.scalars_per_worker);
+    }
+    let (la, lb) = (rows_sync.last().unwrap(), rows_pipe.last().unwrap());
+    assert_eq!(la.wire_up_bytes, lb.wire_up_bytes, "drained uplink totals must agree");
+    assert_eq!(la.wire_down_bytes, lb.wire_down_bytes, "drained downlink totals must agree");
+}
+
+// ---------------------------------------------------------------------------
+// Mid-round disconnect diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_round_disconnect_names_the_peer_and_the_last_completed_reply() {
+    use std::io::{BufReader, BufWriter, Write};
+
+    // a fake daemon, built from the public wire helpers: it completes the
+    // handshake, reads one full round of work orders, answers rank 0,
+    // then closes the socket — a mid-round disconnect. The coordinator
+    // error must name the peer address AND how far the exchange got.
+    let c = cfg(Method::HoSgd);
+    let be = NativeBackend::with_threads(1);
+    let model = be.model(&c.dataset).unwrap();
+    let d = model.dim();
+    let data = make_data(&c).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers = c.workers;
+    let daemon = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream);
+        match wire::read_frame(&mut r).unwrap().unwrap().1 {
+            Frame::Hello => {}
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        wire::write_frame(&mut w, &Frame::HelloAck).unwrap();
+        w.flush().unwrap();
+        match wire::read_frame(&mut r).unwrap().unwrap().1 {
+            Frame::AssignShard { .. } => {}
+            other => panic!("expected AssignShard, got {other:?}"),
+        }
+        wire::write_frame(&mut w, &Frame::ShardReady { dim: d as u64, batch: 8 }).unwrap();
+        w.flush().unwrap();
+        // drain the whole round so the close is a clean FIN (no unread
+        // bytes → no RST racing the reply), then answer only rank 0
+        let mut steps_seen = 0usize;
+        let mut reply_t = 0u64;
+        while steps_seen < workers {
+            match wire::read_frame(&mut r).unwrap().unwrap().1 {
+                Frame::Step { t, .. } => {
+                    steps_seen += 1;
+                    reply_t = t;
+                }
+                Frame::Broadcast { .. } => {}
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        let reply = Frame::Vector { rank: 0, t: reply_t, loss: 0.5, data: vec![0.0; d] };
+        wire::write_frame(&mut w, &reply).unwrap();
+        w.flush().unwrap();
+        // dropping both halves closes the connection mid-round
+    });
+
+    let mut tcp_cfg = c.clone();
+    tcp_cfg.transport.workers_at = vec![addr.clone()];
+    let mut s = Session::new(model.as_ref(), &data, &tcp_cfg).unwrap();
+    let err = s.run_to_end().expect_err("a mid-round disconnect must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&addr), "error must name the peer address: {msg}");
+    assert!(
+        msg.contains("last completed reply: rank 0, iteration 0"),
+        "error must carry the last (rank, t) progress marker: {msg}"
+    );
+    daemon.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // Handshake failures: structured error frames + nonzero daemon exit
 // ---------------------------------------------------------------------------
 
@@ -301,7 +548,12 @@ fn handshake_probe(first_bytes: &[u8]) -> (anyhow::Result<()>, Option<Frame>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let daemon = std::thread::spawn(move || {
-        let opts = WorkerDaemonOpts { artifacts: "artifacts".into(), threads: 1, once: true };
+        let opts = WorkerDaemonOpts {
+            artifacts: "artifacts".into(),
+            threads: 1,
+            once: true,
+            pipeline: true,
+        };
         serve(listener, &opts)
     });
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
@@ -417,7 +669,7 @@ fn fault_injection_is_deterministic_and_numerics_preserving() {
         let data = make_data(&clean).unwrap();
         let mut s = Session::new(model.as_ref(), &data, &clean).unwrap();
         s.run_to_end().unwrap();
-        s.snapshot().comm
+        s.snapshot().unwrap().comm
     };
     assert_eq!(clean_stats.wire_retries, 0);
 
@@ -431,7 +683,7 @@ fn fault_injection_is_deterministic_and_numerics_preserving() {
         let data = make_data(c).unwrap();
         let mut s = Session::new(model.as_ref(), &data, c).unwrap();
         s.run_to_end().unwrap();
-        (s.snapshot().comm, s.params())
+        (s.snapshot().unwrap().comm, s.params().unwrap())
     };
     let (stats_a, params_a) = run_stats(&faulty);
     let (stats_b, params_b) = run_stats(&faulty);
@@ -465,17 +717,79 @@ fn faulty_runs_resume_bit_identically() {
     let mut full = Session::new(model.as_ref(), &data, &c).unwrap();
     full.run_to_end().unwrap();
     let full_trace = full.trace().to_json_canonical().pretty();
-    let full_stats = full.snapshot().comm;
+    let full_stats = full.snapshot().unwrap().comm;
 
     let mut first = Session::new(model.as_ref(), &data, &c).unwrap();
     first.run_until(7).unwrap();
-    let state_bytes = first.snapshot().to_bytes();
+    let state_bytes = first.snapshot().unwrap().to_bytes();
     drop(first);
     let state = hosgd::coordinator::checkpoint::RunState::from_bytes(&state_bytes).unwrap();
     let mut resumed = Session::restore(model.as_ref(), &data, &c, state).unwrap();
     resumed.run_to_end().unwrap();
     assert_eq!(full_trace, resumed.trace().to_json_canonical().pretty());
-    assert_eq!(full_stats, resumed.snapshot().comm);
+    assert_eq!(full_stats, resumed.snapshot().unwrap().comm);
+}
+
+// ---------------------------------------------------------------------------
+// Resume with worker-resident state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_resume_reseeds_worker_resident_state_on_fresh_daemons() {
+    // RI-SGD keeps its local models on the daemons; QSGD-EF keeps its
+    // error-feedback residuals there. A snapshot must pull that state
+    // home (Frame::FetchState), and a restore against BRAND NEW daemon
+    // processes must re-seed it and continue bit-identically — no
+    // worker-side recovery protocol, exactly as docs/DISTRIBUTED.md
+    // specifies for coordinator restarts.
+    for (method, ef) in [(Method::RiSgd, false), (Method::Qsgd, true)] {
+        let mut c = cfg(method);
+        c.eval_every = 0;
+        c.qsgd_error_feedback = ef;
+        let (reference_trace, reference_params) = run_session(&c);
+
+        let be = NativeBackend::with_threads(1);
+        let model = be.model(&c.dataset).unwrap();
+        let data = make_data(&c).unwrap();
+
+        // leg 1: run to t = 7 over TCP, snapshot, drop everything
+        let (a1, h1) = spawn_daemon();
+        let (a2, h2) = spawn_daemon();
+        let mut c1 = c.clone();
+        c1.transport.workers_at = vec![a1, a2];
+        let state_bytes = {
+            let mut s = Session::new(model.as_ref(), &data, &c1).unwrap();
+            s.run_until(7).unwrap();
+            s.snapshot().unwrap().to_bytes()
+        };
+        h1.join().unwrap();
+        h2.join().unwrap();
+
+        // leg 2: fresh daemons — the worker-resident state can only come
+        // from the checkpoint, re-seeded over the new connections
+        let (b1, g1) = spawn_daemon();
+        let (b2, g2) = spawn_daemon();
+        let mut c2 = c.clone();
+        c2.transport.workers_at = vec![b1, b2];
+        let state =
+            hosgd::coordinator::checkpoint::RunState::from_bytes(&state_bytes).unwrap();
+        let (resumed_trace, resumed_params) = {
+            let mut s = Session::restore(model.as_ref(), &data, &c2, state).unwrap();
+            s.run_to_end().unwrap();
+            (s.trace().to_json_canonical().pretty(), s.params().unwrap())
+        };
+        g1.join().unwrap();
+        g2.join().unwrap();
+
+        assert_eq!(
+            reference_trace, resumed_trace,
+            "{method}: resumed TCP trace diverges from the uninterrupted loopback run"
+        );
+        assert_eq!(reference_params.len(), resumed_params.len());
+        for (j, (a, b)) in reference_params.iter().zip(&resumed_params).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method}: param {j} {a} vs {b}");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
