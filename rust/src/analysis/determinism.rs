@@ -1,0 +1,205 @@
+//! Pass 1: determinism hazards.
+//!
+//! The repo's bit-identity contract says canonical traces are a pure
+//! function of `(TrainConfig, seed)` — independent of thread count,
+//! fabric, staleness window, and resume boundaries. This pass flags the
+//! source constructs that historically break that contract:
+//!
+//! - hash-ordered containers (`HashMap`/`HashSet`): iteration order
+//!   varies per process, so any reduction/serialization over them is
+//!   nondeterministic;
+//! - wall-clock reads (`Instant`/`SystemTime`): fine for timing columns
+//!   that canonical traces exclude, fatal anywhere else;
+//! - ambient randomness (`thread_rng`/`OsRng`/`from_entropy`): all
+//!   randomness must come from the seeded `rng` module;
+//! - accumulation (`+=`/`sum`) inside a loop that iterates a
+//!   hash-ordered local — float addition does not commute, so the
+//!   reduction value depends on hash order.
+//!
+//! Legitimate uses are exempted per `(file, token)` in `rust/detlint.toml`
+//! — every exemption carries a written reason.
+
+use super::lexer::{lex, strip_cfg_test, Tok, Token};
+use super::policy::Policy;
+use super::{Finding, SourceFile};
+
+const PASS: &str = "determinism";
+
+/// `(identifier, why it is a hazard)`. The identifiers are data, not
+/// code, so this file stays clean under its own pass.
+const HAZARDS: &[(&str, &str)] = &[
+    ("HashMap", "hash-ordered container; iteration order is nondeterministic"),
+    ("HashSet", "hash-ordered container; iteration order is nondeterministic"),
+    ("Instant", "wall-clock read; canonical traces must not depend on time"),
+    ("SystemTime", "wall-clock read; canonical traces must not depend on time"),
+    ("thread_rng", "ambient randomness; all randomness must flow from the seeded rng module"),
+    ("OsRng", "ambient randomness; all randomness must flow from the seeded rng module"),
+    ("from_entropy", "ambient randomness; all randomness must flow from the seeded rng module"),
+];
+
+const HASH_CONTAINERS: &[&str] = &["HashMap", "HashSet"];
+
+/// Token for allowlisting the accumulation heuristic (it has no single
+/// hazard identifier of its own).
+const ACCUMULATION_TOKEN: &str = "unordered-accumulation";
+
+pub fn lint(files: &[SourceFile], policy: &Policy) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let toks = strip_cfg_test(&lex(&f.text));
+        for t in &toks {
+            let name = match &t.tok {
+                Tok::Ident(i) => i.as_str(),
+                _ => continue,
+            };
+            if let Some((_, why)) = HAZARDS.iter().find(|(h, _)| *h == name) {
+                if !policy.is_allowed(&f.path, name) {
+                    out.push(Finding::new(
+                        PASS,
+                        &f.path,
+                        t.line,
+                        format!("`{name}`: {why} (fix it, or allowlist it in rust/detlint.toml)"),
+                    ));
+                }
+            }
+        }
+        if !policy.is_allowed(&f.path, ACCUMULATION_TOKEN) {
+            out.extend(accumulation_findings(&toks, &f.path));
+        }
+    }
+    out
+}
+
+/// Names of locals whose type or initializer mentions a hash container:
+/// for each `HashMap`/`HashSet` token, walk back to the nearest `:` or
+/// `=` (skipping `::` path separators) and take the identifier before it.
+fn hash_typed_locals(toks: &[Token]) -> Vec<String> {
+    let mut vars = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_container = HASH_CONTAINERS.iter().any(|c| toks[i].is_ident(c));
+        if !is_container {
+            i += 1;
+            continue;
+        }
+        let mut j = i;
+        let mut steps = 0usize;
+        while j > 0 && steps < 10 {
+            j -= 1;
+            steps += 1;
+            if toks[j].is_punct(':') {
+                if j > 0 && toks[j - 1].is_punct(':') {
+                    // `::` path separator — keep walking
+                    j -= 1;
+                    continue;
+                }
+                if j > 0 {
+                    if let Some(name) = toks[j - 1].ident() {
+                        vars.push(name.to_string());
+                    }
+                }
+                break;
+            }
+            if toks[j].is_punct('=') {
+                if j > 0 {
+                    if let Some(name) = toks[j - 1].ident() {
+                        vars.push(name.to_string());
+                    }
+                }
+                break;
+            }
+        }
+        i += 1;
+    }
+    vars.sort();
+    vars.dedup();
+    vars
+}
+
+/// Flag `for ... in <expr referencing a hash-typed local> { ... += ... }`.
+fn accumulation_findings(toks: &[Token], path: &str) -> Vec<Finding> {
+    let vars = hash_typed_locals(toks);
+    let mut out = Vec::new();
+    if vars.is_empty() {
+        return out;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !toks[i].is_ident("for") {
+            i += 1;
+            continue;
+        }
+        // locate `in` before the loop body opens
+        let mut j = i + 1;
+        let mut depth = 0i64;
+        let mut in_idx = None;
+        while j < toks.len() {
+            if toks[j].is_punct('(') || toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(')') || toks[j].is_punct(']') {
+                depth -= 1;
+            } else if depth == 0 && toks[j].is_ident("in") {
+                in_idx = Some(j);
+                break;
+            } else if depth == 0 && (toks[j].is_punct('{') || toks[j].is_punct(';')) {
+                break;
+            }
+            j += 1;
+        }
+        let Some(in_idx) = in_idx else {
+            i += 1;
+            continue;
+        };
+        // the iterator expression runs to the body `{` at depth 0
+        let mut k = in_idx + 1;
+        let mut depth = 0i64;
+        let mut body_open = None;
+        let mut iterated: Option<String> = None;
+        while k < toks.len() {
+            if toks[k].is_punct('(') || toks[k].is_punct('[') {
+                depth += 1;
+            } else if toks[k].is_punct(')') || toks[k].is_punct(']') {
+                depth -= 1;
+            } else if depth == 0 && toks[k].is_punct('{') {
+                body_open = Some(k);
+                break;
+            } else if iterated.is_none() {
+                if let Some(name) = toks[k].ident() {
+                    if vars.iter().any(|v| v == name) {
+                        iterated = Some(name.to_string());
+                    }
+                }
+            }
+            k += 1;
+        }
+        let (Some(open), Some(var)) = (body_open, iterated) else {
+            i += 1;
+            continue;
+        };
+        let close = super::lexer::skip_balanced(toks, open, '{', '}');
+        let body_end = close.saturating_sub(1).max(open + 1);
+        let body = &toks[open + 1..body_end];
+        let mut accumulates = body.iter().any(|t| t.is_ident("sum"));
+        let mut b = 0usize;
+        while !accumulates && b + 1 < body.len() {
+            if body[b].is_punct('+') && body[b + 1].is_punct('=') {
+                accumulates = true;
+            }
+            b += 1;
+        }
+        if accumulates {
+            out.push(Finding::new(
+                PASS,
+                path,
+                toks[i].line,
+                format!(
+                    "accumulation inside iteration over hash-ordered `{var}` — reduction \
+                     order is nondeterministic; iterate a sorted view or use BTreeMap \
+                     (allowlist token `{ACCUMULATION_TOKEN}` if provably order-free)"
+                ),
+            ));
+        }
+        i = close.max(i + 1);
+    }
+    out
+}

@@ -1,0 +1,171 @@
+//! Pass 2: architecture layering.
+//!
+//! Extracts the cross-module dependency graph — every `crate::<mod>` /
+//! `hosgd::<mod>` path whose target is a top-level module of the crate —
+//! and checks it, in both directions, against the machine-readable
+//! `<!-- detlint:allowed-edges ... -->` block in `docs/ARCHITECTURE.md`:
+//!
+//! - an edge in the code that the block does not list fails (layer
+//!   violation);
+//! - an edge the block lists that no longer exists in the code fails
+//!   too (stale spec — the doc must shrink with the code).
+//!
+//! Block grammar, one line per module: `from -> dep dep dep`, `*` as the
+//! whole right-hand side means unconstrained (binary crates), an empty
+//! right-hand side means "may depend on nothing", `#` starts a comment.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::lex;
+use super::{module_of, Finding, SourceFile};
+
+const PASS: &str = "layering";
+const ANCHOR_OPEN: &str = "<!-- detlint:allowed-edges";
+const ANCHOR_CLOSE: &str = "-->";
+
+#[derive(Debug, Clone)]
+enum Targets {
+    Any,
+    List(BTreeSet<String>),
+}
+
+#[derive(Debug, Clone, Default)]
+struct EdgeSpec {
+    map: BTreeMap<String, Targets>,
+}
+
+impl EdgeSpec {
+    fn allows(&self, from: &str, to: &str) -> bool {
+        match self.map.get(from) {
+            Some(Targets::Any) => true,
+            Some(Targets::List(set)) => set.contains(to),
+            None => false,
+        }
+    }
+}
+
+/// Parse the allowed-edges block out of ARCHITECTURE.md. Returns the spec
+/// plus the 1-based line of the opening anchor (for finding locations).
+fn parse_spec(md: &str) -> Option<(EdgeSpec, u32)> {
+    let mut spec = EdgeSpec::default();
+    let mut anchor_line = 0u32;
+    let mut inside = false;
+    for (idx, line) in md.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        if !inside {
+            if line.contains(ANCHOR_OPEN) {
+                inside = true;
+                anchor_line = lineno;
+            }
+            continue;
+        }
+        if line.contains(ANCHOR_CLOSE) {
+            return Some((spec, anchor_line));
+        }
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((from, rest)) = line.split_once("->") else {
+            continue;
+        };
+        let from = from.trim().to_string();
+        let rest = rest.trim();
+        let targets = if rest == "*" {
+            Targets::Any
+        } else {
+            Targets::List(rest.split_whitespace().map(str::to_string).collect())
+        };
+        spec.map.insert(from, targets);
+    }
+    None
+}
+
+pub fn lint(files: &[SourceFile], architecture: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some((spec, anchor_line)) = parse_spec(&architecture.text) else {
+        out.push(Finding::new(
+            PASS,
+            &architecture.path,
+            0,
+            format!(
+                "no `{ANCHOR_OPEN} ... {ANCHOR_CLOSE}` block found; the layering pass has \
+                 nothing to check against"
+            ),
+        ));
+        return out;
+    };
+
+    let modules: BTreeSet<String> = files.iter().map(|f| module_of(&f.path)).collect();
+    // (from, to) -> first occurrence (file, line)
+    let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for f in files {
+        let from = module_of(&f.path);
+        let toks = lex(&f.text);
+        let mut i = 0usize;
+        while i + 3 < toks.len() {
+            let is_root = toks[i].is_ident("crate") || toks[i].is_ident("hosgd");
+            if is_root && toks[i + 1].is_punct(':') && toks[i + 2].is_punct(':') {
+                if let Some(to) = toks[i + 3].ident() {
+                    if modules.contains(to) && to != from {
+                        edges
+                            .entry((from.clone(), to.to_string()))
+                            .or_insert_with(|| (f.path.clone(), toks[i].line));
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    for ((from, to), (file, line)) in &edges {
+        if !spec.allows(from, to) {
+            out.push(Finding::new(
+                PASS,
+                file,
+                *line,
+                format!(
+                    "`{from}` -> `{to}` is not an allowed edge; either remove the dependency \
+                     or (if the layering genuinely changed) add it to the allowed-edges block \
+                     in {}",
+                    architecture.path
+                ),
+            ));
+        }
+    }
+    for (from, targets) in &spec.map {
+        if !modules.contains(from) {
+            out.push(Finding::new(
+                PASS,
+                &architecture.path,
+                anchor_line,
+                format!("allowed-edges block names unknown module `{from}`"),
+            ));
+            continue;
+        }
+        let Targets::List(set) = targets else {
+            continue;
+        };
+        for to in set {
+            if !modules.contains(to) {
+                out.push(Finding::new(
+                    PASS,
+                    &architecture.path,
+                    anchor_line,
+                    format!("allowed-edges block names unknown module `{to}` (under `{from}`)"),
+                ));
+            } else if !edges.contains_key(&(from.clone(), to.clone())) {
+                out.push(Finding::new(
+                    PASS,
+                    &architecture.path,
+                    anchor_line,
+                    format!(
+                        "stale spec: allowed edge `{from}` -> `{to}` no longer exists in the \
+                         source; remove it from the allowed-edges block"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}

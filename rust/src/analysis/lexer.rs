@@ -1,0 +1,358 @@
+//! A minimal hand-rolled Rust lexer for the detlint passes.
+//!
+//! This is not a full grammar — it is exactly the token stream the
+//! analysis passes need: identifiers, numeric literals, string literals
+//! (with their contents, so spec tables like `JSON_KEYS` can be read) and
+//! single-character punctuation, each tagged with its source line.
+//! Comments (line, nested block, doc), lifetimes and char literals are
+//! consumed and dropped, so a hazard identifier inside a comment or a
+//! string can never produce a finding.
+//!
+//! The deliberate simplifications (no float-exponent forms, `<`/`>` are
+//! plain punctuation) are fine for linting: every consumer here matches
+//! local token shapes, never full expressions.
+
+/// One lexical token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(String),
+    Str(String),
+    Punct(char),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(i) if i == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.tok, Tok::Punct(p) if *p == c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Num(n) => Some(n),
+            _ => None,
+        }
+    }
+
+    pub fn str_lit(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs simply run to end
+/// of input (a lint pass over half-written code should degrade, not die).
+pub fn lex(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comments (incl. /// and //!)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // nested block comments
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (and byte-raw) strings: r"..", r#".."#, br#".."#
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let start_line = line;
+                j += 1;
+                let content_start = j;
+                'scan: while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            break 'scan;
+                        }
+                    }
+                    j += 1;
+                }
+                let content: String = b[content_start..j.min(n)].iter().collect();
+                toks.push(Token { tok: Tok::Str(content), line: start_line });
+                i = (j + 1 + hashes).min(n);
+                continue;
+            }
+            // not a raw string — fall through to ident lexing below
+        }
+        // byte-string / byte-char prefixes: drop the `b`, re-lex the rest
+        if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+            i += 1;
+            continue;
+        }
+        // plain strings, contents kept
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            let mut content = String::new();
+            while j < n && b[j] != '"' {
+                if b[j] == '\\' && j + 1 < n {
+                    content.push(b[j]);
+                    content.push(b[j + 1]);
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                content.push(b[j]);
+                j += 1;
+            }
+            toks.push(Token { tok: Tok::Str(content), line: start_line });
+            i = (j + 1).min(n);
+            continue;
+        }
+        // lifetimes ('a) are dropped; char literals ('x', '\n') too
+        if c == '\'' {
+            let char_like = i + 2 < n && b[i + 2] == '\'';
+            if i + 1 < n && is_ident_start(b[i + 1]) && !char_like {
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                continue;
+            }
+            i += 1;
+            if i < n && b[i] == '\\' {
+                i += 2;
+            }
+            while i < n && b[i] != '\'' {
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut s = String::new();
+            while i < n && is_ident_char(b[i]) {
+                s.push(b[i]);
+                i += 1;
+            }
+            toks.push(Token { tok: Tok::Ident(s), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut s = String::new();
+            while i < n && is_ident_char(b[i]) {
+                s.push(b[i]);
+                i += 1;
+            }
+            // fractional part (`1.5`), but not ranges (`0..n`)
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                s.push('.');
+                i += 1;
+                while i < n && is_ident_char(b[i]) {
+                    s.push(b[i]);
+                    i += 1;
+                }
+            }
+            toks.push(Token { tok: Tok::Num(s), line });
+            continue;
+        }
+        toks.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Index just past the group that opens at `open_idx` (whose token must be
+/// the `open` punct), balancing nested `open`/`close` pairs.
+pub fn skip_balanced(toks: &[Token], open_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0i64;
+    let mut i = open_idx;
+    while i < toks.len() {
+        if toks[i].is_punct(open) {
+            depth += 1;
+        } else if toks[i].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Does the attribute group starting at `idx` (just after `#[`) read
+/// `cfg(...)` with a `test` ident anywhere inside the parens?
+fn is_cfg_test_attr(toks: &[Token], idx: usize) -> bool {
+    if idx >= toks.len() || !toks[idx].is_ident("cfg") {
+        return false;
+    }
+    if idx + 1 >= toks.len() || !toks[idx + 1].is_punct('(') {
+        return false;
+    }
+    let end = skip_balanced(toks, idx + 1, '(', ')');
+    let inner_end = end.saturating_sub(1).max(idx + 2);
+    toks[idx + 2..inner_end].iter().any(|t| t.is_ident("test"))
+}
+
+/// Drop every `#[cfg(test)]`-gated item (attribute included) from the
+/// stream: the item's trailing attributes plus either its balanced
+/// `{ ... }` block or everything up to the terminating `;`. Test modules
+/// legitimately unwrap and build ad-hoc maps, so most passes lint the
+/// stream this function returns.
+pub fn strip_cfg_test(toks: &[Token]) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let attr_here = toks[i].is_punct('#')
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct('[')
+            && is_cfg_test_attr(toks, i + 2);
+        if !attr_here {
+            out.push(toks[i].clone());
+            i += 1;
+            continue;
+        }
+        // past this attribute's `]`
+        let mut j = skip_balanced(toks, i + 1, '[', ']');
+        // any further attributes on the same item
+        while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+            j = skip_balanced(toks, j + 1, '[', ']');
+        }
+        // the item itself: to the matching `}` or the first top-level `;`
+        while j < toks.len() {
+            if toks[j].is_punct('{') {
+                j = skip_balanced(toks, j, '{', '}');
+                break;
+            }
+            if toks[j].is_punct(';') {
+                j += 1;
+                break;
+            }
+            j += 1;
+        }
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_strings_and_lifetimes_do_not_produce_idents() {
+        let toks = lex(
+            "// HashMap in a comment\n\
+             /* Instant /* nested */ */\n\
+             let s = \"HashMap inside a string\";\n\
+             let r = r#\"SystemTime raw\"#;\n\
+             fn f<'a>(x: &'a str) -> char { 'h' }\n",
+        );
+        assert!(!toks.iter().any(|t| t.is_ident("HashMap")));
+        assert!(!toks.iter().any(|t| t.is_ident("Instant")));
+        assert!(!toks.iter().any(|t| t.is_ident("SystemTime")));
+        // the string *contents* are retained as Str tokens
+        assert!(toks.iter().any(|t| t.str_lit() == Some("HashMap inside a string")));
+        assert!(toks.iter().any(|t| t.str_lit() == Some("SystemTime raw")));
+        // the char literal 'h' is not an ident
+        assert!(!toks.iter().any(|t| t.is_ident("h")));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let toks = lex("let a = 1;\n/* two\nlines */\nlet b = 2;\n");
+        let b = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b.line, 4);
+    }
+
+    #[test]
+    fn cfg_test_items_are_stripped() {
+        let toks = lex(
+            "fn live() { x.unwrap(); }\n\
+             #[cfg(test)]\n\
+             mod tests {\n    fn t() { y.unwrap(); z.unwrap(); }\n}\n\
+             fn also_live() {}\n",
+        );
+        let kept = strip_cfg_test(&toks);
+        let unwraps = kept.iter().filter(|t| t.is_ident("unwrap")).count();
+        assert_eq!(unwraps, 1);
+        assert!(kept.iter().any(|t| t.is_ident("also_live")));
+    }
+
+    #[test]
+    fn numbers_keep_fractions_but_not_ranges() {
+        let toks = lex("let x = 1.5; for i in 0..3 {}");
+        assert!(toks.iter().any(|t| t.num() == Some("1.5")));
+        assert!(toks.iter().any(|t| t.num() == Some("0")));
+        assert!(toks.iter().any(|t| t.num() == Some("3")));
+    }
+}

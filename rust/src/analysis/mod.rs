@@ -1,0 +1,192 @@
+//! Static analysis for the repo's own invariants — the `detlint` passes.
+//!
+//! The bit-identity contract (canonical traces are a pure function of
+//! `(TrainConfig, seed)`) is enforced dynamically by the CI determinism
+//! and resume jobs, but a hazard that happens not to fire in the smoke
+//! configs ships silently. This module makes the contract — and the
+//! specs that document it — checkable at the source level, with zero
+//! registry dependencies (the lexer in [`lexer`] is hand-rolled):
+//!
+//! 1. [`determinism`] — hash-ordered containers, wall-clock reads,
+//!    ambient randomness, accumulation in unordered iteration;
+//! 2. [`layering`] — the `use crate::` module graph vs the allowed-edges
+//!    block in `docs/ARCHITECTURE.md`;
+//! 3. [`spec`] — frame kinds/tags and `VERSION` vs the frame catalogue
+//!    in `docs/DISTRIBUTED.md`, and `JSON_KEYS` ↔ `TrainConfig` fields ↔
+//!    the README knob table;
+//! 4. [`ratchet`] — per-file non-test `unwrap()/expect()` budgets.
+//!
+//! Policy (hazard allowlist + panic budgets) lives in `rust/detlint.toml`
+//! ([`policy`]). The `detlint` binary (`rust/src/bin/detlint.rs`) wires
+//! the passes to the filesystem; everything here works on in-memory
+//! [`SourceFile`]s so the self-tests can run on fixtures.
+//!
+//! This module depends on no other module of the crate: it must be able
+//! to lint a broken tree.
+
+pub mod determinism;
+pub mod layering;
+pub mod lexer;
+pub mod policy;
+pub mod ratchet;
+pub mod spec;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use self::policy::Policy;
+
+/// One scanned file: a repo-relative, forward-slash logical path (e.g.
+/// `rust/src/transport/wire.rs`) plus its full text. Passes match files
+/// and policy entries by this logical path, so findings are stable no
+/// matter where the tool is invoked from.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+impl SourceFile {
+    pub fn new(path: impl Into<String>, text: impl Into<String>) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+}
+
+/// One lint finding. `line` is 1-based; 0 means "whole file".
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(pass: &'static str, file: &str, line: u32, message: String) -> Finding {
+        Finding { pass, file: file.to_string(), line, message }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+    }
+}
+
+/// The crate module a logical path belongs to: the path segment after the
+/// last `src` component, with any `.rs` suffix dropped. `rust/src/lib.rs`
+/// → `lib`, `rust/src/transport/tcp.rs` → `transport`,
+/// `rust/src/bin/detlint.rs` → `bin`.
+pub fn module_of(path: &str) -> String {
+    let parts: Vec<&str> = path.split('/').collect();
+    let tail: &[&str] = match parts.iter().rposition(|p| *p == "src") {
+        Some(i) if i + 1 < parts.len() => &parts[i + 1..],
+        _ => &parts[..],
+    };
+    tail.first().copied().unwrap_or("").trim_end_matches(".rs").to_string()
+}
+
+/// Everything `run` needs, already loaded. The binary builds this from
+/// the filesystem; tests build it from fixtures.
+#[derive(Debug)]
+pub struct TreeInput {
+    pub rust_files: Vec<SourceFile>,
+    pub architecture: SourceFile,
+    pub distributed: SourceFile,
+    pub readme: SourceFile,
+    pub policy: Policy,
+}
+
+/// The outcome of a full run: fatal findings (sorted by file/line) plus
+/// non-fatal notes (currently: ratchet budgets with slack).
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub notes: Vec<String>,
+    pub scanned: usize,
+}
+
+/// Run all four passes over the tree.
+pub fn run(input: &TreeInput) -> Result<Report> {
+    let wire = input
+        .rust_files
+        .iter()
+        .find(|f| f.path.ends_with("transport/wire.rs"))
+        .context("no transport/wire.rs under the scanned roots (the wire-spec pass needs it)")?;
+    let config = input
+        .rust_files
+        .iter()
+        .find(|f| f.path.ends_with("config/mod.rs"))
+        .context("no config/mod.rs under the scanned roots (the knob pass needs it)")?;
+
+    let mut findings = Vec::new();
+    findings.extend(determinism::lint(&input.rust_files, &input.policy));
+    findings.extend(layering::lint(&input.rust_files, &input.architecture));
+    findings.extend(spec::lint_wire(wire, &input.distributed));
+    findings.extend(spec::lint_knobs(config, &input.readme));
+    findings.extend(ratchet::lint(&input.rust_files, &input.policy));
+    findings.sort_by(|a, b| (&a.file, a.line, &a.message).cmp(&(&b.file, b.line, &b.message)));
+
+    let notes = ratchet::slack(&input.rust_files, &input.policy)
+        .into_iter()
+        .map(|(file, count, max)| {
+            format!(
+                "{file}: {count} unwrap()/expect() calls, budget {max} — lower the \
+                 [[budget]] in rust/detlint.toml to {count}"
+            )
+        })
+        .collect();
+    Ok(Report { findings, notes, scanned: input.rust_files.len() })
+}
+
+/// Recursively load every `*.{ext}` file under `root` (sorted traversal,
+/// so findings come out in a stable order), giving each file the logical
+/// path `{logical_prefix}/{relative path}`.
+pub fn collect_files(root: &Path, logical_prefix: &str, ext: &str) -> Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    walk(root, logical_prefix.trim_end_matches('/'), ext, &mut out)?;
+    Ok(out)
+}
+
+fn walk(dir: &Path, logical: &str, ext: &str, out: &mut Vec<SourceFile>) -> Result<()> {
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        entries.push(entry.with_context(|| format!("reading {}", dir.display()))?);
+    }
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let path = entry.path();
+        let child_logical = format!("{logical}/{name}");
+        if path.is_dir() {
+            walk(&path, &child_logical, ext, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some(ext) {
+            let text =
+                fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+            out.push(SourceFile { path: child_logical, text });
+        }
+    }
+    Ok(())
+}
+
+/// Load a single document with an explicit logical path.
+pub fn read_doc(path: &Path, logical: &str) -> Result<SourceFile> {
+    let text = fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(SourceFile { path: logical.to_string(), text })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_of_maps_paths_to_crate_modules() {
+        assert_eq!(module_of("rust/src/lib.rs"), "lib");
+        assert_eq!(module_of("rust/src/main.rs"), "main");
+        assert_eq!(module_of("rust/src/transport/tcp.rs"), "transport");
+        assert_eq!(module_of("rust/src/bin/detlint.rs"), "bin");
+        assert_eq!(module_of("rust/src/analysis/lexer.rs"), "analysis");
+    }
+}

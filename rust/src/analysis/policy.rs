@@ -1,0 +1,189 @@
+//! Hand-parsed policy file (`rust/detlint.toml`).
+//!
+//! The repo is zero-registry-dep, so instead of a TOML crate this reads
+//! the tiny subset the policy actually uses: `[[allow]]` / `[[budget]]`
+//! array-of-table headers followed by `key = "string"` or `key = integer`
+//! lines, with `#` comments. Anything else is a hard error — a policy
+//! typo must fail the lint run, not silently allow a hazard.
+
+use anyhow::{bail, Context, Result};
+
+/// One determinism-hazard exemption: `token` may appear in `file`.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub file: String,
+    pub token: String,
+    pub reason: String,
+}
+
+/// Panic-hygiene ratchet entry: `file` may contain at most `max`
+/// non-test `.unwrap()`/`.expect()` calls.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub file: String,
+    pub max: u32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Policy {
+    pub allows: Vec<Allow>,
+    pub budgets: Vec<Budget>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Section {
+    None,
+    Allow,
+    Budget,
+}
+
+#[derive(Debug, Default)]
+struct Entry {
+    file: Option<String>,
+    token: Option<String>,
+    reason: Option<String>,
+    max: Option<u32>,
+}
+
+impl Policy {
+    pub fn parse(text: &str) -> Result<Policy> {
+        let mut policy = Policy::default();
+        let mut section = Section::None;
+        let mut entry = Entry::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[allow]]" || line == "[[budget]]" {
+                flush(&mut policy, section, &mut entry, lineno)?;
+                section = if line == "[[allow]]" { Section::Allow } else { Section::Budget };
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("detlint.toml:{lineno}: expected `key = value`"))?;
+            let key = key.trim();
+            let value = value.trim();
+            if section == Section::None {
+                bail!("detlint.toml:{lineno}: `{key}` outside [[allow]]/[[budget]]");
+            }
+            match key {
+                "file" => entry.file = Some(parse_string(value, lineno)?),
+                "token" => entry.token = Some(parse_string(value, lineno)?),
+                "reason" => entry.reason = Some(parse_string(value, lineno)?),
+                "max" => {
+                    let max = value
+                        .parse::<u32>()
+                        .with_context(|| format!("detlint.toml:{lineno}: bad integer `{value}`"))?;
+                    entry.max = Some(max);
+                }
+                other => bail!("detlint.toml:{lineno}: unknown key `{other}`"),
+            }
+        }
+        flush(&mut policy, section, &mut entry, text.lines().count() + 1)?;
+        Ok(policy)
+    }
+
+    /// Is `token` exempt from the determinism pass in `file`?
+    pub fn is_allowed(&self, file: &str, token: &str) -> bool {
+        self.allows.iter().any(|a| a.file == file && a.token == token)
+    }
+
+    pub fn budget_for(&self, file: &str) -> Option<u32> {
+        self.budgets.iter().find(|b| b.file == file).map(|b| b.max)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(value: &str, lineno: usize) -> Result<String> {
+    let inner = value
+        .strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .with_context(|| {
+            format!("detlint.toml:{lineno}: expected a quoted string, got `{value}`")
+        })?;
+    Ok(inner.to_string())
+}
+
+fn flush(policy: &mut Policy, section: Section, entry: &mut Entry, lineno: usize) -> Result<()> {
+    let e = std::mem::take(entry);
+    match section {
+        Section::None => {}
+        Section::Allow => {
+            let file = e
+                .file
+                .with_context(|| format!("detlint.toml:{lineno}: [[allow]] missing `file`"))?;
+            let token = e
+                .token
+                .with_context(|| format!("detlint.toml:{lineno}: [[allow]] missing `token`"))?;
+            let reason = e.reason.with_context(|| {
+                format!("detlint.toml:{lineno}: [[allow]] for `{file}` missing `reason`")
+            })?;
+            if reason.trim().is_empty() {
+                bail!("detlint.toml:{lineno}: [[allow]] for `{file}` has an empty reason");
+            }
+            policy.allows.push(Allow { file, token, reason });
+        }
+        Section::Budget => {
+            let file = e
+                .file
+                .with_context(|| format!("detlint.toml:{lineno}: [[budget]] missing `file`"))?;
+            let max = e
+                .max
+                .with_context(|| format!("detlint.toml:{lineno}: [[budget]] missing `max`"))?;
+            policy.budgets.push(Budget { file, max });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_allows_and_budgets() {
+        let p = Policy::parse(
+            "# comment\n\
+             [[allow]]\n\
+             file = \"rust/src/util/bench.rs\"  # trailing comment\n\
+             token = \"Instant\"\n\
+             reason = \"bench timing\"\n\
+             \n\
+             [[budget]]\n\
+             file = \"rust/src/main.rs\"\n\
+             max = 8\n",
+        )
+        .unwrap();
+        assert!(p.is_allowed("rust/src/util/bench.rs", "Instant"));
+        assert!(!p.is_allowed("rust/src/util/bench.rs", "HashMap"));
+        assert!(!p.is_allowed("rust/src/other.rs", "Instant"));
+        assert_eq!(p.budget_for("rust/src/main.rs"), Some(8));
+        assert_eq!(p.budget_for("rust/src/lib.rs"), None);
+    }
+
+    #[test]
+    fn rejects_allow_without_reason() {
+        let err = Policy::parse("[[allow]]\nfile = \"a.rs\"\ntoken = \"Instant\"\n");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_keys_outside_sections() {
+        assert!(Policy::parse("file = \"a.rs\"\n").is_err());
+    }
+}

@@ -1,0 +1,79 @@
+//! Pass 4: panic-hygiene ratchet.
+//!
+//! The daemon/transport/session paths must degrade into `Error` frames
+//! or `Result`s, not process aborts — a panicking daemon takes every
+//! multiplexed session down with it. Rather than ban `.unwrap()` /
+//! `.expect()` outright (some uses are proofs, e.g. fixed-width slice
+//! conversions), each audited file carries a committed budget in
+//! `rust/detlint.toml`. Counts above budget fail; counts below budget
+//! produce a non-fatal note asking for the budget to be lowered, so the
+//! ratchet only ever tightens. Test code (`#[cfg(test)]` items and
+//! `rust/tests/`) is exempt.
+
+use super::lexer::{lex, strip_cfg_test};
+use super::policy::Policy;
+use super::{Finding, SourceFile};
+
+const PASS: &str = "ratchet";
+
+/// Number of non-test `.unwrap(` / `.expect(` call sites in `file`.
+pub fn count_panics(file: &SourceFile) -> u32 {
+    let toks = strip_cfg_test(&lex(&file.text));
+    let mut count = 0u32;
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        let callee = toks[i].is_punct('.')
+            && (toks[i + 1].is_ident("unwrap") || toks[i + 1].is_ident("expect"))
+            && toks[i + 2].is_punct('(');
+        if callee {
+            count += 1;
+        }
+        i += 1;
+    }
+    count
+}
+
+/// Budget-exceeded findings (fatal) for every budgeted file.
+pub fn lint(files: &[SourceFile], policy: &Policy) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for budget in &policy.budgets {
+        let Some(file) = files.iter().find(|f| f.path == budget.file) else {
+            out.push(Finding::new(
+                PASS,
+                &budget.file,
+                0,
+                "budgeted file was not scanned — fix the path in rust/detlint.toml".to_string(),
+            ));
+            continue;
+        };
+        let count = count_panics(file);
+        if count > budget.max {
+            out.push(Finding::new(
+                PASS,
+                &file.path,
+                0,
+                format!(
+                    "{count} non-test unwrap()/expect() calls exceed the committed budget of \
+                     {} — convert the new ones to `?`/`Error` frames (budgets only go down)",
+                    budget.max
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `(file, count, budget)` for budgets with slack — reported as notes so
+/// the budget gets lowered in the same PR that removed a panic site.
+pub fn slack(files: &[SourceFile], policy: &Policy) -> Vec<(String, u32, u32)> {
+    let mut out = Vec::new();
+    for budget in &policy.budgets {
+        if let Some(file) = files.iter().find(|f| f.path == budget.file) {
+            let count = count_panics(file);
+            if count < budget.max {
+                out.push((file.path.clone(), count, budget.max));
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,530 @@
+//! Pass 3: wire-spec and knob-surface drift.
+//!
+//! Two spec surfaces are cross-checked against the code that implements
+//! them:
+//!
+//! - `docs/DISTRIBUTED.md`'s `<!-- detlint:frame-catalogue -->` block vs
+//!   `transport/wire.rs`: frame kind numbers/names (from `fn kind`) and
+//!   step-op tags (from `StepOp`'s `fn tag`) must be unique in the code
+//!   and agree exactly with the doc, and every `VERSION = n` the doc
+//!   states must match the code's `VERSION` constant;
+//! - the `TrainConfig` knob surface: every struct field must appear in
+//!   `JSON_KEYS` (except the nested `transport` struct, which is
+//!   flattened into its own keys), every key must correspond to a field
+//!   or a transport sub-knob, and the README's
+//!   `<!-- detlint:knob-table -->` block must list exactly the
+//!   `JSON_KEYS` set.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, skip_balanced, strip_cfg_test, Token};
+use super::{Finding, SourceFile};
+
+const PASS: &str = "spec";
+const FRAME_ANCHOR: &str = "frame-catalogue";
+const KNOB_ANCHOR: &str = "knob-table";
+
+/// `JSON_KEYS` entries that flatten the nested `transport` field instead
+/// of naming a `TrainConfig` field directly (see `config::TrainConfig`).
+const TRANSPORT_SUB_KNOBS: &[&str] = &["workers_at", "fault", "staleness_window"];
+
+/// Lines (1-based numbering) between `<!-- detlint:NAME -->` and
+/// `<!-- /detlint:NAME -->`, plus the opening anchor's line.
+fn doc_block<'a>(md: &'a str, anchor: &str) -> Option<(Vec<(u32, &'a str)>, u32)> {
+    let open = format!("<!-- detlint:{anchor} -->");
+    let close = format!("<!-- /detlint:{anchor} -->");
+    let mut lines = Vec::new();
+    let mut anchor_line = 0u32;
+    let mut inside = false;
+    for (idx, line) in md.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        if !inside {
+            if line.contains(&open) {
+                inside = true;
+                anchor_line = lineno;
+            }
+            continue;
+        }
+        if line.contains(&close) {
+            return Some((lines, anchor_line));
+        }
+        lines.push((lineno, line));
+    }
+    None
+}
+
+/// `Enum::Variant [{ .. }] => N` pairs inside every `fn <fn_name>` body.
+fn match_arm_tags(toks: &[Token], fn_name: &str) -> Vec<(String, String, u64, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_ident("fn") && toks[i + 1].is_ident(fn_name)) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') {
+            j += 1;
+        }
+        let end = skip_balanced(toks, j, '{', '}');
+        let body = &toks[j..end];
+        let mut k = 0usize;
+        while k + 4 < body.len() {
+            let pattern = body[k].ident().map(|e| (e, body[k + 3].ident()));
+            let Some((enum_name, Some(variant))) = pattern else {
+                k += 1;
+                continue;
+            };
+            if !(body[k + 1].is_punct(':') && body[k + 2].is_punct(':')) {
+                k += 1;
+                continue;
+            }
+            let mut m = k + 4;
+            if m < body.len() && body[m].is_punct('{') {
+                m = skip_balanced(body, m, '{', '}');
+            }
+            let arrow = m + 2 < body.len() && body[m].is_punct('=') && body[m + 1].is_punct('>');
+            if arrow {
+                if let Some(num) = body[m + 2].num() {
+                    if let Ok(v) = num.replace('_', "").parse::<u64>() {
+                        out.push((enum_name.to_string(), variant.to_string(), v, body[k].line));
+                    }
+                }
+            }
+            k += 1;
+        }
+        i = end;
+    }
+    out
+}
+
+/// The code's `VERSION: u32 = n` constant value.
+fn code_version(toks: &[Token]) -> Option<(u64, u32)> {
+    let mut i = 0usize;
+    while i + 4 < toks.len() {
+        if toks[i].is_ident("VERSION")
+            && toks[i + 1].is_punct(':')
+            && toks[i + 3].is_punct('=')
+        {
+            if let Some(num) = toks[i + 4].num() {
+                if let Ok(v) = num.replace('_', "").parse::<u64>() {
+                    return Some((v, toks[i].line));
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// `` `N` Name `` pairs in a doc line (used for the step-op tag list).
+fn backtick_tag_pairs(line: &str) -> Vec<(u64, String)> {
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if chars[i] != '`' {
+            i += 1;
+            continue;
+        }
+        let start = i + 1;
+        let mut j = start;
+        while j < n && chars[j] != '`' {
+            j += 1;
+        }
+        if j >= n {
+            break;
+        }
+        let content: String = chars[start..j].iter().collect();
+        i = j + 1;
+        if content.is_empty() || !content.chars().all(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        let Ok(v) = content.parse::<u64>() else {
+            continue;
+        };
+        let mut k = i;
+        while k < n && chars[k] == ' ' {
+            k += 1;
+        }
+        let name_start = k;
+        while k < n && (chars[k].is_alphanumeric() || chars[k] == '_') {
+            k += 1;
+        }
+        if k > name_start {
+            let name: String = chars[name_start..k].iter().collect();
+            out.push((v, name));
+        }
+    }
+    out
+}
+
+/// `VERSION = n` statements in doc prose (spaces/backticks around `=`).
+fn doc_versions(md: &str) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    for (idx, line) in md.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        for (pos, _) in line.match_indices("VERSION") {
+            let rest: &str = &line[pos + "VERSION".len()..];
+            let rest = rest.trim_start_matches([' ', '`']);
+            let Some(rest) = rest.strip_prefix('=') else {
+                continue;
+            };
+            let rest = rest.trim_start_matches([' ', '`']);
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(v) = digits.parse::<u64>() {
+                out.push((v, lineno));
+            }
+        }
+    }
+    out
+}
+
+fn check_unique(
+    what: &str,
+    pairs: &[(String, String, u64, u32)],
+    file: &str,
+    out: &mut Vec<Finding>,
+) {
+    let mut by_num: BTreeMap<u64, &str> = BTreeMap::new();
+    let mut by_name: BTreeMap<&str, u64> = BTreeMap::new();
+    for (_, variant, num, line) in pairs {
+        if let Some(prev) = by_num.get(num) {
+            out.push(Finding::new(
+                PASS,
+                file,
+                *line,
+                format!("{what} {num} assigned to both `{prev}` and `{variant}`"),
+            ));
+        } else {
+            by_num.insert(*num, variant);
+        }
+        if by_name.contains_key(variant.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                file,
+                *line,
+                format!("{what} for `{variant}` assigned twice"),
+            ));
+        } else {
+            by_name.insert(variant, *num);
+        }
+    }
+}
+
+fn compare_code_doc(
+    what: &str,
+    code: &[(String, String, u64, u32)],
+    doc: &[(u64, String, u32)],
+    code_file: &str,
+    doc_file: &str,
+    out: &mut Vec<Finding>,
+) {
+    let doc_by_name: BTreeMap<&str, (u64, u32)> =
+        doc.iter().map(|(num, name, line)| (name.as_str(), (*num, *line))).collect();
+    let code_by_name: BTreeMap<&str, u64> =
+        code.iter().map(|(_, name, num, _)| (name.as_str(), *num)).collect();
+    for (_, name, num, line) in code {
+        match doc_by_name.get(name.as_str()) {
+            None => out.push(Finding::new(
+                PASS,
+                code_file,
+                *line,
+                format!("{what} `{name}` ({num}) is not in {doc_file}'s frame-catalogue block"),
+            )),
+            Some((doc_num, doc_line)) if doc_num != num => out.push(Finding::new(
+                PASS,
+                doc_file,
+                *doc_line,
+                format!("{what} `{name}` documented as {doc_num} but the code says {num}"),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (num, name, line) in doc {
+        if !code_by_name.contains_key(name.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                doc_file,
+                *line,
+                format!("{what} `{name}` ({num}) is documented but not defined in {code_file}"),
+            ));
+        }
+    }
+}
+
+/// Wire half of the pass: frame kinds, step-op tags, slot tags, VERSION.
+pub fn lint_wire(wire: &SourceFile, distributed: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = strip_cfg_test(&lex(&wire.text));
+
+    let kind_pairs = match_arm_tags(&toks, "kind");
+    let frame_kinds: Vec<_> =
+        kind_pairs.iter().filter(|(e, ..)| e == "Frame").cloned().collect();
+    let tag_pairs = match_arm_tags(&toks, "tag");
+    let step_tags: Vec<_> = tag_pairs.iter().filter(|(e, ..)| e == "StepOp").cloned().collect();
+    let slot_tags: Vec<_> = tag_pairs.iter().filter(|(e, ..)| e == "Slot").cloned().collect();
+
+    if frame_kinds.is_empty() {
+        out.push(Finding::new(
+            PASS,
+            &wire.path,
+            0,
+            "could not extract any `Frame::X => n` arms from `fn kind` — \
+             the wire-spec pass cannot check anything"
+                .to_string(),
+        ));
+        return out;
+    }
+    check_unique("frame kind", &frame_kinds, &wire.path, &mut out);
+    check_unique("step-op tag", &step_tags, &wire.path, &mut out);
+    check_unique("slot tag", &slot_tags, &wire.path, &mut out);
+
+    let Some((block, _)) = doc_block(&distributed.text, FRAME_ANCHOR) else {
+        out.push(Finding::new(
+            PASS,
+            &distributed.path,
+            0,
+            format!("no `<!-- detlint:{FRAME_ANCHOR} -->` block found"),
+        ));
+        return out;
+    };
+    // table rows: `| kind | `Name` | ... |`
+    let mut doc_kinds: Vec<(u64, String, u32)> = Vec::new();
+    let mut doc_steps: Vec<(u64, String, u32)> = Vec::new();
+    for (lineno, line) in &block {
+        let trimmed = line.trim_start();
+        if trimmed.starts_with('|') {
+            let cells: Vec<&str> = trimmed.split('|').collect();
+            if cells.len() < 3 {
+                continue;
+            }
+            let Ok(kind) = cells[1].trim().parse::<u64>() else {
+                continue;
+            };
+            let name_cell = cells[2];
+            let mut parts = name_cell.split('`');
+            let name = parts.nth(1).unwrap_or("").trim();
+            if !name.is_empty() {
+                doc_kinds.push((kind, name.to_string(), *lineno));
+            }
+        } else {
+            for (v, name) in backtick_tag_pairs(line) {
+                doc_steps.push((v, name, *lineno));
+            }
+        }
+    }
+    compare_code_doc("frame", &frame_kinds, &doc_kinds, &wire.path, &distributed.path, &mut out);
+    compare_code_doc("step op", &step_tags, &doc_steps, &wire.path, &distributed.path, &mut out);
+
+    match code_version(&toks) {
+        None => out.push(Finding::new(
+            PASS,
+            &wire.path,
+            0,
+            "no `VERSION: u32 = n` constant found".to_string(),
+        )),
+        Some((code_v, _)) => {
+            let doc_vs = doc_versions(&distributed.text);
+            if doc_vs.is_empty() {
+                out.push(Finding::new(
+                    PASS,
+                    &distributed.path,
+                    0,
+                    "doc never states the wire `VERSION = n`".to_string(),
+                ));
+            }
+            for (doc_v, line) in doc_vs {
+                if doc_v != code_v {
+                    out.push(Finding::new(
+                        PASS,
+                        &distributed.path,
+                        line,
+                        format!("doc states VERSION = {doc_v} but wire.rs says {code_v}"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `JSON_KEYS` string entries plus the array's declared length.
+fn json_keys(toks: &[Token]) -> Option<(Vec<(String, u32)>, u64)> {
+    let start = (1..toks.len())
+        .find(|&i| toks[i - 1].is_ident("const") && toks[i].is_ident("JSON_KEYS"))?;
+    let mut eq = start;
+    while eq < toks.len() && !toks[eq].is_punct('=') {
+        eq += 1;
+    }
+    let declared = toks[start..eq].iter().rev().find_map(|t| t.num())?;
+    let declared = declared.replace('_', "").parse::<u64>().ok()?;
+    let mut open = eq;
+    while open < toks.len() && !toks[open].is_punct('[') {
+        open += 1;
+    }
+    let end = skip_balanced(toks, open, '[', ']');
+    let keys = toks[open..end]
+        .iter()
+        .filter_map(|t| t.str_lit().map(|s| (s.to_string(), t.line)))
+        .collect();
+    Some((keys, declared))
+}
+
+/// `pub <name>:` field names of `struct TrainConfig`.
+fn train_config_fields(toks: &[Token]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_ident("struct") && toks[i + 1].is_ident("TrainConfig")) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') {
+            j += 1;
+        }
+        let end = skip_balanced(toks, j, '{', '}');
+        let body_start = (j + 1).min(toks.len());
+        let body = &toks[body_start..end.saturating_sub(1).max(body_start)];
+        let mut k = 0usize;
+        while k + 2 < body.len() {
+            if body[k].is_ident("pub") && body[k + 2].is_punct(':') {
+                if let Some(name) = body[k + 1].ident() {
+                    out.push((name.to_string(), body[k].line));
+                }
+            }
+            k += 1;
+        }
+        return out;
+    }
+    out
+}
+
+/// First-column backticked keys of the README knob table.
+fn readme_keys(block: &[(u32, &str)]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (lineno, line) in block {
+        let trimmed = line.trim_start();
+        if !trimmed.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = trimmed.split('|').collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let mut parts = cells[1].split('`');
+        let key = parts.nth(1).unwrap_or("").trim();
+        if !key.is_empty() {
+            out.push((key.to_string(), *lineno));
+        }
+    }
+    out
+}
+
+/// Knob half of the pass: JSON_KEYS ↔ TrainConfig fields ↔ README table.
+pub fn lint_knobs(config: &SourceFile, readme: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = strip_cfg_test(&lex(&config.text));
+
+    let Some((keys, declared)) = json_keys(&toks) else {
+        out.push(Finding::new(
+            PASS,
+            &config.path,
+            0,
+            "could not extract the `JSON_KEYS` array".to_string(),
+        ));
+        return out;
+    };
+    let fields = train_config_fields(&toks);
+    if fields.is_empty() {
+        out.push(Finding::new(
+            PASS,
+            &config.path,
+            0,
+            "could not extract any `pub` fields from `struct TrainConfig`".to_string(),
+        ));
+        return out;
+    }
+    if keys.len() as u64 != declared {
+        out.push(Finding::new(
+            PASS,
+            &config.path,
+            keys.first().map(|(_, l)| *l).unwrap_or(0),
+            format!("JSON_KEYS declares length {declared} but lists {} keys", keys.len()),
+        ));
+    }
+    let mut seen: BTreeMap<&str, u32> = BTreeMap::new();
+    for (key, line) in &keys {
+        if seen.contains_key(key.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                &config.path,
+                *line,
+                format!("duplicate JSON_KEYS entry `{key}`"),
+            ));
+        } else {
+            seen.insert(key, *line);
+        }
+    }
+    for (field, line) in &fields {
+        if field == "transport" {
+            continue; // flattened into TRANSPORT_SUB_KNOBS
+        }
+        if !keys.iter().any(|(k, _)| k == field) {
+            out.push(Finding::new(
+                PASS,
+                &config.path,
+                *line,
+                format!("TrainConfig field `{field}` is missing from JSON_KEYS"),
+            ));
+        }
+    }
+    for (key, line) in &keys {
+        let known = fields.iter().any(|(f, _)| f == key)
+            || TRANSPORT_SUB_KNOBS.contains(&key.as_str());
+        if !known {
+            out.push(Finding::new(
+                PASS,
+                &config.path,
+                *line,
+                format!(
+                    "JSON_KEYS entry `{key}` matches no TrainConfig field or transport sub-knob"
+                ),
+            ));
+        }
+    }
+
+    let Some((block, anchor_line)) = doc_block(&readme.text, KNOB_ANCHOR) else {
+        out.push(Finding::new(
+            PASS,
+            &readme.path,
+            0,
+            format!("no `<!-- detlint:{KNOB_ANCHOR} -->` block found"),
+        ));
+        return out;
+    };
+    let table = readme_keys(&block);
+    for (key, _) in &keys {
+        if !table.iter().any(|(k, _)| k == key) {
+            out.push(Finding::new(
+                PASS,
+                &readme.path,
+                anchor_line,
+                format!("README knob table is missing JSON key `{key}`"),
+            ));
+        }
+    }
+    for (key, line) in &table {
+        if !keys.iter().any(|(k, _)| k == key) {
+            out.push(Finding::new(
+                PASS,
+                &readme.path,
+                *line,
+                format!("README knob table lists `{key}`, which is not in JSON_KEYS"),
+            ));
+        }
+    }
+    out
+}

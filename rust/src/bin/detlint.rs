@@ -1,0 +1,130 @@
+//! detlint — static analysis for the repo's determinism, layering, wire
+//! and panic-hygiene contracts (see `hosgd::analysis`).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --bin detlint -- [ROOT ...] [--allow PATH] [--readme PATH]
+//! ```
+//!
+//! Roots default to `rust/src docs` (run from the repo root; `ROOT` may
+//! be a directory, scanned recursively, or a single file). `--allow`
+//! overrides the policy file (default `rust/detlint.toml`); `--readme`
+//! overrides the README location. Exit status: 0 clean, 1 findings,
+//! 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use hosgd::analysis::{self, policy::Policy, SourceFile, TreeInput};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(err) => {
+            eprintln!("detlint: error: {err:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<bool> {
+    let mut roots: Vec<String> = Vec::new();
+    let mut allow: Option<PathBuf> = None;
+    let mut readme_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--allow" => {
+                let v = args.next().context("--allow needs a path")?;
+                allow = Some(PathBuf::from(v));
+            }
+            "--readme" => {
+                let v = args.next().context("--readme needs a path")?;
+                readme_path = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: detlint [ROOT ...] [--allow PATH] [--readme PATH]\n\
+                     defaults: ROOTs = rust/src docs, --allow = rust/detlint.toml"
+                );
+                return Ok(true);
+            }
+            flag if flag.starts_with("--") => bail!("unknown flag `{flag}` (try --help)"),
+            root => roots.push(root.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots = vec!["rust/src".to_string(), "docs".to_string()];
+    }
+
+    let mut rust_files: Vec<SourceFile> = Vec::new();
+    let mut docs: Vec<SourceFile> = Vec::new();
+    for root in &roots {
+        let logical = root.trim_end_matches('/');
+        let path = Path::new(logical);
+        if path.is_dir() {
+            rust_files.extend(analysis::collect_files(path, logical, "rs")?);
+            docs.extend(analysis::collect_files(path, logical, "md")?);
+        } else if path.is_file() {
+            match path.extension().and_then(|e| e.to_str()) {
+                Some("rs") => rust_files.push(analysis::read_doc(path, logical)?),
+                Some("md") => docs.push(analysis::read_doc(path, logical)?),
+                _ => bail!("root `{root}` is neither a directory nor a .rs/.md file"),
+            }
+        } else {
+            bail!("root `{root}` does not exist (run detlint from the repo root)");
+        }
+    }
+    if rust_files.is_empty() {
+        bail!("no .rs files found under {roots:?}");
+    }
+
+    let architecture = doc_or_default(&docs, "ARCHITECTURE.md", "docs/ARCHITECTURE.md")?;
+    let distributed = doc_or_default(&docs, "DISTRIBUTED.md", "docs/DISTRIBUTED.md")?;
+    let readme = match readme_path {
+        Some(p) => analysis::read_doc(&p, &p.to_string_lossy())?,
+        None => doc_or_default(&docs, "README.md", "README.md")?,
+    };
+
+    let allow_path = allow.unwrap_or_else(|| PathBuf::from("rust/detlint.toml"));
+    let policy_text = std::fs::read_to_string(&allow_path).with_context(|| {
+        format!(
+            "reading policy file {} (pass --allow PATH, or run from the repo root)",
+            allow_path.display()
+        )
+    })?;
+    let policy = Policy::parse(&policy_text)?;
+
+    let input = TreeInput { rust_files, architecture, distributed, readme, policy };
+    let report = analysis::run(&input)?;
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    if report.findings.is_empty() {
+        println!("detlint: clean ({} Rust files scanned)", report.scanned);
+        Ok(true)
+    } else {
+        println!("detlint: {} finding(s)", report.findings.len());
+        Ok(false)
+    }
+}
+
+/// The collected doc whose path ends with `suffix`, or the conventional
+/// location relative to the current directory.
+fn doc_or_default(docs: &[SourceFile], suffix: &str, default: &str) -> Result<SourceFile> {
+    if let Some(doc) = docs.iter().find(|d| d.path.ends_with(suffix)) {
+        return Ok(doc.clone());
+    }
+    let path = Path::new(default);
+    if path.is_file() {
+        return analysis::read_doc(path, default);
+    }
+    bail!("could not find {suffix} under the scanned roots or at {default}")
+}

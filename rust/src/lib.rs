@@ -86,6 +86,11 @@
 //! - [`metrics`] — counters, traces, CSV/JSON writers
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
 //! - [`config`] — typed experiment configuration (JSON + CLI overrides)
+//! - [`analysis`] — the `detlint` static-analysis passes (hand-rolled
+//!   lexer; determinism hazards, layering vs `docs/ARCHITECTURE.md`,
+//!   wire/knob spec drift vs `docs/DISTRIBUTED.md` + README, panic
+//!   budgets) behind the `detlint` binary — see README §Development
+//!   workflow
 //! - [`prelude`] — one-line import of the embedding surface
 //!
 //! ## Performance
@@ -101,6 +106,7 @@
 //! determinism rules for kernel changes, is documented in
 //! `docs/PERFORMANCE.md` and README §Performance & benchmarks.
 
+pub mod analysis;
 pub mod attack;
 pub mod backend;
 pub mod comm;

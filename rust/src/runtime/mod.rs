@@ -17,7 +17,7 @@
 //! `PjRtClient::cpu()` with a clear message. Point the `xla` dependency at
 //! the published crate (see `rust/Cargo.toml`) to execute for real.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -73,7 +73,10 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Exe>>,
+    // BTreeMap for determinism hygiene: the cache is only keyed get/insert
+    // today, but a hash-ordered map is one refactor away from nondeterministic
+    // iteration (see rust/detlint.toml)
+    cache: Mutex<BTreeMap<String, Exe>>,
 }
 
 impl Runtime {
@@ -89,7 +92,7 @@ impl Runtime {
             return Err(anyhow!("unsupported manifest version {}", manifest.version));
         }
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Self { client, dir, manifest, cache: Mutex::new(BTreeMap::new()) })
     }
 
     pub fn artifact_dir(&self) -> &Path {

@@ -33,7 +33,7 @@
 //!   charged — when the window fills or a barrier flushes. See
 //!   `docs/DISTRIBUTED.md` for the full ordering contract.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -870,7 +870,10 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
             residual: vec![0.0; d],
         })
         .collect();
-    let index: HashMap<u32, usize> = ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+    // BTreeMap keeps the daemon hash-free: only keyed lookups happen today,
+    // but nothing on the wire path should be one refactor away from
+    // iterating in hash order
+    let index: BTreeMap<u32, usize> = ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect();
     write_frame(&mut w, &Frame::ShardReady { dim: d as u64, batch: model.batch() as u64 })?;
     w.flush()?;
     // batching a single hosted rank would only add latency — fall back to
@@ -986,7 +989,7 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
 }
 
 fn lookup<'s, 'a>(
-    index: &HashMap<u32, usize>,
+    index: &BTreeMap<u32, usize>,
     states: &'s mut [RankState<'a>],
     rank: u32,
 ) -> Result<&'s mut RankState<'a>> {

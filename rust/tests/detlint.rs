@@ -1,0 +1,385 @@
+//! Self-tests for the `detlint` analysis passes: each of the four passes
+//! must catch a seeded violation in fixture sources, allowlists must
+//! clear what they claim to clear — and the real tree must come back
+//! clean (the same assertion the CI `detlint` job makes by running the
+//! binary).
+
+use std::path::Path;
+
+use hosgd::analysis::{self, determinism, layering, policy::Policy, ratchet, spec};
+use hosgd::analysis::{SourceFile, TreeInput};
+
+fn src(path: &str, text: &str) -> SourceFile {
+    SourceFile::new(path, text)
+}
+
+fn empty_policy() -> Policy {
+    Policy::parse("").unwrap()
+}
+
+// ---------------------------------------------------------------- pass 1
+
+const HAZARD_FIXTURE: &str = r#"
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn totals(map: &HashMap<u32, f64>) -> f64 {
+    let t0 = Instant::now();
+    let mut total = 0.0;
+    for v in map.values() {
+        total += v;
+    }
+    let _ = t0.elapsed();
+    total
+}
+"#;
+
+#[test]
+fn determinism_pass_catches_seeded_hazards() {
+    let files = [src("rust/src/metrics/fixture.rs", HAZARD_FIXTURE)];
+    let findings = determinism::lint(&files, &empty_policy());
+    // 2 HashMap mentions + 2 Instant mentions + 1 unordered accumulation
+    assert_eq!(findings.len(), 5, "{findings:#?}");
+    assert!(findings.iter().any(|f| f.message.contains("`HashMap`")));
+    assert!(findings.iter().any(|f| f.message.contains("`Instant`")));
+    assert!(findings
+        .iter()
+        .any(|f| f.message.contains("accumulation") && f.message.contains("`map`")));
+}
+
+#[test]
+fn determinism_allowlist_clears_exactly_what_it_names() {
+    let files = [src("rust/src/metrics/fixture.rs", HAZARD_FIXTURE)];
+    let policy = Policy::parse(
+        "[[allow]]\n\
+         file = \"rust/src/metrics/fixture.rs\"\n\
+         token = \"Instant\"\n\
+         reason = \"fixture\"\n\
+         [[allow]]\n\
+         file = \"rust/src/metrics/fixture.rs\"\n\
+         token = \"unordered-accumulation\"\n\
+         reason = \"fixture\"\n",
+    )
+    .unwrap();
+    let findings = determinism::lint(&files, &policy);
+    assert_eq!(findings.len(), 2, "{findings:#?}");
+    assert!(findings.iter().all(|f| f.message.contains("`HashMap`")));
+}
+
+#[test]
+fn determinism_ignores_comments_strings_and_test_code() {
+    let files = [src(
+        "rust/src/metrics/fixture.rs",
+        "// a HashMap comment\n\
+         pub fn live() -> &'static str { \"HashMap\" }\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             use std::collections::HashMap;\n\
+             fn t() { let _ = HashMap::<u32, u32>::new(); }\n\
+         }\n",
+    )];
+    let findings = determinism::lint(&files, &empty_policy());
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+// ---------------------------------------------------------------- pass 2
+
+fn arch(edges: &str) -> SourceFile {
+    src(
+        "docs/ARCHITECTURE.md",
+        &format!("# Architecture\n\n<!-- detlint:allowed-edges\n{edges}-->\n"),
+    )
+}
+
+#[test]
+fn layering_pass_catches_forbidden_edge() {
+    let files = [
+        src("rust/src/backend/mod.rs", "pub fn f() { crate::coordinator::boot(); }\n"),
+        src("rust/src/coordinator/mod.rs", "pub fn boot() {}\n"),
+    ];
+    let findings = layering::lint(&files, &arch("backend ->\ncoordinator ->\n"));
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("`backend` -> `coordinator`"));
+    assert!(findings[0].message.contains("not an allowed edge"));
+    assert_eq!(findings[0].file, "rust/src/backend/mod.rs");
+}
+
+#[test]
+fn layering_pass_accepts_listed_edges() {
+    let files = [
+        src("rust/src/backend/mod.rs", "pub fn f() { crate::coordinator::boot(); }\n"),
+        src("rust/src/coordinator/mod.rs", "pub fn boot() {}\n"),
+    ];
+    let findings = layering::lint(&files, &arch("backend -> coordinator\ncoordinator ->\n"));
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn layering_pass_flags_stale_spec_edges() {
+    let files = [
+        src("rust/src/backend/mod.rs", "pub fn f() {}\n"),
+        src("rust/src/coordinator/mod.rs", "pub fn boot() {}\n"),
+    ];
+    let findings = layering::lint(&files, &arch("backend -> coordinator\ncoordinator ->\n"));
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("stale spec"));
+}
+
+#[test]
+fn layering_pass_requires_the_block() {
+    let files = [src("rust/src/backend/mod.rs", "pub fn f() {}\n")];
+    let findings = layering::lint(&files, &src("docs/ARCHITECTURE.md", "# no block\n"));
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("no `<!-- detlint:allowed-edges"));
+}
+
+// ---------------------------------------------------------------- pass 3
+
+const WIRE_FIXTURE: &str = r#"
+pub const VERSION: u32 = 7;
+
+pub enum Frame {
+    A,
+    B { x: u32 },
+}
+
+impl Frame {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::A => 1,
+            Frame::B { .. } => 2,
+        }
+    }
+}
+
+pub enum StepOp {
+    G,
+    Z,
+}
+
+impl StepOp {
+    pub fn tag(self) -> u8 {
+        match self {
+            StepOp::G => 0,
+            StepOp::Z => 1,
+        }
+    }
+}
+"#;
+
+const DOC_FIXTURE_CLEAN: &str = "# Wire\n\n\
+    current `VERSION = 7`.\n\n\
+    <!-- detlint:frame-catalogue -->\n\
+    | kind | frame | direction |\n\
+    |-----:|-------|-----------|\n\
+    | 1 | `A` | C→W |\n\
+    | 2 | `B` | W→C |\n\n\
+    Step ops: `0` G, `1` Z.\n\
+    <!-- /detlint:frame-catalogue -->\n";
+
+#[test]
+fn spec_pass_is_clean_when_doc_and_code_agree() {
+    let wire = src("rust/src/transport/wire.rs", WIRE_FIXTURE);
+    let doc = src("docs/DISTRIBUTED.md", DOC_FIXTURE_CLEAN);
+    let findings = spec::lint_wire(&wire, &doc);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn spec_pass_catches_frame_name_drift() {
+    let wire = src("rust/src/transport/wire.rs", WIRE_FIXTURE);
+    let doc = src("docs/DISTRIBUTED.md", &DOC_FIXTURE_CLEAN.replace("| `B` |", "| `Bee` |"));
+    let findings = spec::lint_wire(&wire, &doc);
+    assert!(
+        findings.iter().any(|f| f.message.contains("`Bee`")),
+        "{findings:#?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("`B`") && f.message.contains("not in")),
+        "{findings:#?}"
+    );
+}
+
+#[test]
+fn spec_pass_catches_duplicate_frame_kind() {
+    let wire = src(
+        "rust/src/transport/wire.rs",
+        &WIRE_FIXTURE.replace("Frame::B { .. } => 2,", "Frame::B { .. } => 1,"),
+    );
+    let doc = src("docs/DISTRIBUTED.md", DOC_FIXTURE_CLEAN);
+    let findings = spec::lint_wire(&wire, &doc);
+    assert!(
+        findings.iter().any(|f| f.message.contains("assigned to both")),
+        "{findings:#?}"
+    );
+}
+
+#[test]
+fn spec_pass_catches_version_drift() {
+    let wire = src("rust/src/transport/wire.rs", WIRE_FIXTURE);
+    let doc = src("docs/DISTRIBUTED.md", &DOC_FIXTURE_CLEAN.replace("VERSION = 7", "VERSION = 8"));
+    let findings = spec::lint_wire(&wire, &doc);
+    assert!(
+        findings.iter().any(|f| f.message.contains("VERSION = 8")),
+        "{findings:#?}"
+    );
+}
+
+const CONFIG_FIXTURE: &str = r#"
+pub struct TransportConfig {
+    pub workers_at: Vec<String>,
+}
+
+pub struct TrainConfig {
+    pub method: String,
+    pub iters: u64,
+    pub transport: TransportConfig,
+}
+
+impl TrainConfig {
+    pub const JSON_KEYS: [&str; 3] = ["method", "iters", "staleness_window"];
+}
+"#;
+
+const README_FIXTURE_CLEAN: &str = "# readme\n\n\
+    <!-- detlint:knob-table -->\n\
+    | key | CLI |\n\
+    |-----|-----|\n\
+    | `method` | `--method` |\n\
+    | `iters` | `--iters` |\n\
+    | `staleness_window` | `--staleness-window` |\n\
+    <!-- /detlint:knob-table -->\n";
+
+#[test]
+fn knob_pass_is_clean_when_all_three_surfaces_agree() {
+    let config = src("rust/src/config/mod.rs", CONFIG_FIXTURE);
+    let readme = src("README.md", README_FIXTURE_CLEAN);
+    let findings = spec::lint_knobs(&config, &readme);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn knob_pass_catches_readme_table_drift() {
+    let config = src("rust/src/config/mod.rs", CONFIG_FIXTURE);
+    let readme = src(
+        "README.md",
+        &README_FIXTURE_CLEAN.replace("| `staleness_window` | `--staleness-window` |\n", ""),
+    );
+    let findings = spec::lint_knobs(&config, &readme);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("missing JSON key `staleness_window`"));
+}
+
+#[test]
+fn knob_pass_catches_field_missing_from_json_keys() {
+    let config = src(
+        "rust/src/config/mod.rs",
+        &CONFIG_FIXTURE.replace("pub iters: u64,", "pub iters: u64,\n    pub extra: u64,"),
+    );
+    let readme = src("README.md", README_FIXTURE_CLEAN);
+    let findings = spec::lint_knobs(&config, &readme);
+    assert!(
+        findings.iter().any(|f| f.message.contains("`extra` is missing from JSON_KEYS")),
+        "{findings:#?}"
+    );
+}
+
+// ---------------------------------------------------------------- pass 4
+
+const PANICKY_FIXTURE: &str = r#"
+pub fn go(x: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect("b");
+    let c = x.unwrap();
+    a + b + c
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        Some(1u32).unwrap();
+    }
+}
+"#;
+
+#[test]
+fn ratchet_counts_only_non_test_call_sites() {
+    let file = src("rust/src/transport/fixture.rs", PANICKY_FIXTURE);
+    assert_eq!(ratchet::count_panics(&file), 3);
+}
+
+#[test]
+fn ratchet_fails_over_budget_and_passes_at_budget() {
+    let files = [src("rust/src/transport/fixture.rs", PANICKY_FIXTURE)];
+    let over = Policy::parse(
+        "[[budget]]\nfile = \"rust/src/transport/fixture.rs\"\nmax = 2\n",
+    )
+    .unwrap();
+    let findings = ratchet::lint(&files, &over);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("exceed the committed budget"));
+
+    let at = Policy::parse(
+        "[[budget]]\nfile = \"rust/src/transport/fixture.rs\"\nmax = 3\n",
+    )
+    .unwrap();
+    assert!(ratchet::lint(&files, &at).is_empty());
+    assert!(ratchet::slack(&files, &at).is_empty());
+
+    let slack = Policy::parse(
+        "[[budget]]\nfile = \"rust/src/transport/fixture.rs\"\nmax = 5\n",
+    )
+    .unwrap();
+    assert!(ratchet::lint(&files, &slack).is_empty());
+    assert_eq!(ratchet::slack(&files, &slack), vec![(
+        "rust/src/transport/fixture.rs".to_string(),
+        3,
+        5
+    )]);
+}
+
+// ------------------------------------------------------------ clean tree
+
+/// The repo itself must pass all four passes — the in-process version of
+/// the CI `detlint` job.
+#[test]
+fn the_real_tree_is_detlint_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR")); // <repo>/rust
+    let repo = manifest.parent().expect("rust/ lives in the repo root");
+    let rust_files = analysis::collect_files(&manifest.join("src"), "rust/src", "rs")
+        .expect("scan rust/src");
+    assert!(rust_files.len() > 30, "only scanned {} files", rust_files.len());
+    let input = TreeInput {
+        rust_files,
+        architecture: analysis::read_doc(
+            &repo.join("docs/ARCHITECTURE.md"),
+            "docs/ARCHITECTURE.md",
+        )
+        .expect("read ARCHITECTURE.md"),
+        distributed: analysis::read_doc(&repo.join("docs/DISTRIBUTED.md"), "docs/DISTRIBUTED.md")
+            .expect("read DISTRIBUTED.md"),
+        readme: analysis::read_doc(&repo.join("README.md"), "README.md").expect("read README.md"),
+        policy: Policy::parse(
+            &std::fs::read_to_string(manifest.join("detlint.toml")).expect("read detlint.toml"),
+        )
+        .expect("parse detlint.toml"),
+    };
+    let report = analysis::run(&input).expect("run detlint");
+    assert!(
+        report.findings.is_empty(),
+        "detlint findings on the real tree:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // budgets must stay exact: slack means a budget was not ratcheted down
+    assert!(
+        report.notes.is_empty(),
+        "ratchet budgets have slack — lower them in rust/detlint.toml:\n{}",
+        report.notes.join("\n")
+    );
+}
