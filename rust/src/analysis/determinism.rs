@@ -17,7 +17,13 @@
 //!   reduction value depends on hash order.
 //!
 //! Legitimate uses are exempted per `(file, token)` in `rust/detlint.toml`
-//! — every exemption carries a written reason.
+//! — every exemption carries a written reason. **Exception:** wall-clock
+//! tokens are structural, not allowlistable. The crate has exactly one
+//! wall-clock read site — `telemetry::clock` — and every timing consumer
+//! (the metrics `Stopwatch`, the bench harness, telemetry spans) goes
+//! through it. A wall-clock token in any module other than `telemetry`
+//! is a finding no `[[allow]]` entry can clear; the fix is to route the
+//! read through `crate::telemetry::clock`.
 
 use super::lexer::{lex, strip_cfg_test, Tok, Token};
 use super::policy::Policy;
@@ -39,6 +45,14 @@ const HAZARDS: &[(&str, &str)] = &[
 
 const HASH_CONTAINERS: &[&str] = &["HashMap", "HashSet"];
 
+/// Wall-clock tokens get the structural rule: allowed only inside the
+/// [`CLOCK_MODULE`] module, and never clearable via the allowlist.
+const WALL_CLOCK: &[&str] = &["Instant", "SystemTime"];
+
+/// The one module permitted to read the wall clock (`telemetry::clock`
+/// plus the recorder built on it).
+const CLOCK_MODULE: &str = "telemetry";
+
 /// Token for allowlisting the accumulation heuristic (it has no single
 /// hazard identifier of its own).
 const ACCUMULATION_TOKEN: &str = "unordered-accumulation";
@@ -53,7 +67,21 @@ pub fn lint(files: &[SourceFile], policy: &Policy) -> Vec<Finding> {
                 _ => continue,
             };
             if let Some((_, why)) = HAZARDS.iter().find(|(h, _)| *h == name) {
-                if !policy.is_allowed(&f.path, name) {
+                if WALL_CLOCK.contains(&name) {
+                    // structural: the allowlist is deliberately ignored
+                    if super::module_of(&f.path) != CLOCK_MODULE {
+                        out.push(Finding::new(
+                            PASS,
+                            &f.path,
+                            t.line,
+                            format!(
+                                "`{name}`: {why} — wall-clock reads live only in \
+                                 `telemetry::clock`; route this through \
+                                 `crate::telemetry::clock` (not allowlistable)"
+                            ),
+                        ));
+                    }
+                } else if !policy.is_allowed(&f.path, name) {
                     out.push(Finding::new(
                         PASS,
                         &f.path,

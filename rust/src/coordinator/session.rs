@@ -48,6 +48,7 @@ use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Algorithm, Oracle, TrainOracle, World};
 use crate::pool::{resolve_threads, WorkerPool};
 use crate::rng::hash_u64s;
+use crate::telemetry::{Attr, Recorder};
 use crate::transport::{Loopback, TcpTransport, Transport};
 
 // ---------------------------------------------------------------------------
@@ -207,6 +208,9 @@ pub struct Session<'a, O: Oracle = TrainOracle<'a>> {
     /// fabric (FIFO; non-empty only at `staleness_window > 0`)
     pending: VecDeque<PendingStep>,
     watch: Stopwatch,
+    /// out-of-band observability handle (disabled unless
+    /// [`Session::set_telemetry`] attached one); never feeds the numeric path
+    telemetry: Recorder,
     eval_overhead: f64,
     /// compute seconds carried over from the run segment(s) before restore
     compute_base_s: f64,
@@ -322,6 +326,7 @@ impl<'a, O: Oracle> Session<'a, O> {
             t: 0,
             pending: VecDeque::new(),
             watch: Stopwatch::start(),
+            telemetry: Recorder::disabled(),
             eval_overhead: 0.0,
             compute_base_s: 0.0,
             eval_buf: Vec::with_capacity(dim),
@@ -331,6 +336,16 @@ impl<'a, O: Oracle> Session<'a, O> {
     /// Attach a streaming observer (events fire for every subsequent step).
     pub fn add_observer(&mut self, obs: impl Observer + 'a) {
         self.observers.push(Box::new(obs));
+    }
+
+    /// Attach a telemetry [`Recorder`] to the session and everything under
+    /// it (the transport fabric and the worker pool). Strictly out-of-band:
+    /// attaching, detaching or dropping the recorder leaves the canonical
+    /// trace byte-identical — spans and histograms observe the run, they
+    /// never steer it.
+    pub fn set_telemetry(&mut self, rec: Recorder) {
+        self.world.instrument(rec.clone());
+        self.telemetry = rec;
     }
 
     /// Next iteration to execute (= iterations completed so far).
@@ -382,7 +397,9 @@ impl<'a, O: Oracle> Session<'a, O> {
             bail!("session already ran all {} iterations", self.cfg.iters);
         }
         let before = self.world.comm.stats;
+        let step_t0 = self.telemetry.start();
         let train_loss = self.algo.step(t, &mut self.world)?;
+        self.telemetry.span("step", step_t0, vec![("t", Attr::U64(t))]);
         self.t = t + 1;
 
         let stats = self.world.comm.stats;
@@ -495,6 +512,14 @@ impl<'a, O: Oracle> Session<'a, O> {
             final_step: p.final_step,
         };
         if p.sync_round {
+            self.telemetry.event(
+                "sync_round",
+                vec![
+                    ("t", Attr::U64(p.t)),
+                    ("bytes", Attr::U64(p.sync_bytes)),
+                    ("scalars", Attr::U64(p.sync_scalars)),
+                ],
+            );
             let sev = SyncEvent { iter: p.t, bytes: p.sync_bytes, scalars: p.sync_scalars };
             for obs in &mut self.observers {
                 obs.on_sync_round(&sev);
@@ -520,6 +545,7 @@ impl<'a, O: Oracle> Session<'a, O> {
     /// trace's compute axis.
     fn eval_drained(&mut self) -> Result<f64> {
         self.algo.sync_state(&mut self.world)?;
+        let span_t0 = self.telemetry.start();
         let e0 = self.watch.elapsed_s();
         self.algo.eval_params(&mut self.eval_buf);
         let Some(evaluator) = self.evaluator.as_mut() else {
@@ -527,6 +553,7 @@ impl<'a, O: Oracle> Session<'a, O> {
         };
         let acc = evaluator(&self.eval_buf)?;
         self.eval_overhead += self.watch.elapsed_s() - e0;
+        self.telemetry.span("eval", span_t0, vec![("t", Attr::U64(self.t))]);
         Ok(acc)
     }
 
@@ -605,8 +632,10 @@ impl<'a, O: Oracle> Session<'a, O> {
 
     /// Build the [`RunState`] with the pipeline already drained.
     fn build_run_state(&mut self) -> Result<RunState> {
+        let span_t0 = self.telemetry.start();
         self.algo.sync_state(&mut self.world)?;
         self.algo.eval_params(&mut self.eval_buf);
+        self.telemetry.span("snapshot", span_t0, vec![("t", Attr::U64(self.t))]);
         let compute_s =
             self.compute_base_s + (self.watch.elapsed_s() - self.eval_overhead).max(0.0);
         Ok(RunState {

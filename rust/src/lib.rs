@@ -84,6 +84,13 @@
 //!   deltas; the figure/ablation drivers are presets on top of it
 //! - [`attack`] — Section 5.1 universal adversarial perturbation driver
 //! - [`metrics`] — counters, traces, CSV/JSON writers
+//! - [`telemetry`] — out-of-band structured observability: span/event
+//!   recorder ([`telemetry::Recorder`]), deterministic log2-bucket
+//!   histograms, schema-stable JSONL export (`--telemetry PATH`), the
+//!   live-daemon `Frame::Stats` introspection (`hosgd status`), and the
+//!   crate's single wall-clock read site ([`telemetry::clock`], enforced
+//!   by detlint). Telemetry on/off never changes a canonical trace —
+//!   the contract and schemas live in `docs/OBSERVABILITY.md`
 //! - [`theory`] — closed-form Table-1 rows printed next to measured counters
 //! - [`config`] — typed experiment configuration (JSON + CLI overrides)
 //! - [`analysis`] — the `detlint` static-analysis passes (hand-rolled
@@ -120,6 +127,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sweep;
+pub mod telemetry;
 pub mod theory;
 pub mod transport;
 pub mod util;
@@ -143,5 +151,6 @@ pub mod prelude {
     pub use crate::metrics::{ComputeCounters, Trace, TraceRow};
     pub use crate::sweep::{execute, ExecOpts, ExperimentPlan, ManifestRow};
     pub use crate::sweep::{ParetoReport, RunSpec, SweepOutcome};
+    pub use crate::telemetry::Recorder;
     pub use crate::transport::{Loopback, TcpTransport, Transport};
 }

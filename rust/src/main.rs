@@ -9,7 +9,7 @@
 //! a pluggable backend (`--backend native|pjrt`); the default pure-rust
 //! `native` backend needs no artifacts.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
@@ -28,7 +28,9 @@ use hosgd::metrics::Trace;
 use hosgd::optim::axpy_update;
 use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry};
 use hosgd::sweep::{self, build_report, execute, ExecOpts, ExperimentPlan, ParetoReport, RunSpec};
+use hosgd::telemetry::{Hist, Recorder};
 use hosgd::theory::{table1, Table1Params};
+use hosgd::transport::wire::StatsReport;
 use hosgd::util::bench::{
     bench, check_against_baseline, fmt_time, print_table, write_results_json, BenchResult,
 };
@@ -76,12 +78,20 @@ SUBCOMMANDS
                  --fault-drop P --fault-latency s1,s2 --fault-seed S
                  (deterministic loopback fault injection: drop-with-retry
                  probability, per-worker straggler seconds)
+                 --telemetry PATH (export structured spans + latency
+                 histograms as JSONL after the run; strictly out-of-band
+                 — the canonical trace stays byte-identical)
   worker         TCP worker daemon: serve oracle rounds to a coordinator
                  --listen ADDR (default 127.0.0.1:7070)
-                 --once (exit after the first coordinator session)
+                 --once (exit after the first coordinator session;
+                 `hosgd status` probes never consume it)
                  --no-pipeline (execute a round's hosted ranks one at a
                  time instead of scattering the batch across the pool;
                  replies stay rank-FIFO either way)
+  status         query live worker daemons for uptime, session/wire
+                 counters and per-phase latency histograms (Stats frame,
+                 docs/OBSERVABILITY.md)
+                 --at h1:p1,h2:p2 (default 127.0.0.1:7070)
   sweep          declarative experiment plan: expand axes, run in
                  parallel, resume, emit a Pareto tradeoff report
                  --plan FILE.json (see README \"Sweeps & Pareto reports\")
@@ -90,6 +100,9 @@ SUBCOMMANDS
                  --workers-at h1:p1,h2:p2 (multiplex runs over `hosgd
                  worker` daemons, one daemon per in-flight run)
                  --manifest PATH (default OUT/sweep_NAME.manifest.jsonl)
+                 --telemetry DIR (per-run telemetry JSONL plus round
+                 p50/p99 and wait-fraction columns in the manifest and
+                 Pareto report)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
                  --dump-images --clf-checkpoint PATH (frozen classifier
@@ -112,7 +125,8 @@ SUBCOMMANDS
 
 The figure/ablation sweeps (fig2, ablate-tau, sweep-workers, sweep-mu,
 ablate-ef, e2e) all run on the sweep subsystem: they accept --parallel,
---resume and --workers-at too, and record a resumable manifest under OUT.
+--resume, --workers-at and --telemetry too, and record a resumable
+manifest under OUT.
 ";
 
 fn open_backend(
@@ -163,6 +177,15 @@ fn main() -> Result<()> {
                 pipeline: !no_pipeline,
             };
             hosgd::transport::serve(listener, &opts)?;
+        }
+        "status" => {
+            let at = args.get_str("at", "127.0.0.1:7070");
+            args.finish()?;
+            for addr in at.split(',').filter(|s| !s.is_empty()) {
+                let report = hosgd::transport::query_stats(addr)
+                    .map_err(|e| e.context(format!("querying worker daemon {addr}")))?;
+                print_status(addr, &report);
+            }
         }
         "fig2" => {
             let iters = args.get::<u64>("iters", 400)?;
@@ -423,6 +446,7 @@ fn cmd_train(
     let stop_at = args.get_opt::<u64>("stop-at")?;
     let stream_csv = args.get_opt::<String>("stream-csv")?;
     let stream_jsonl = args.get_opt::<String>("stream-jsonl")?;
+    let telemetry_path = args.get_opt::<String>("telemetry")?;
     args.finish()?;
     let be = open_backend(cfg.backend, artifacts, cfg.threads, cfg.compute)?;
     let model = be.model(&cfg.dataset)?;
@@ -449,16 +473,26 @@ fn cmd_train(
     if let Some(path) = &stream_jsonl {
         session.add_observer(JsonlSink::create(path)?);
     }
+    // out-of-band observability: attaching (or not) the recorder leaves
+    // the canonical trace byte-identical
+    let recorder = telemetry_path.as_ref().map(|_| Recorder::enabled());
+    if let Some(rec) = &recorder {
+        session.set_telemetry(rec.clone());
+    }
 
     let end = stop_at.map_or(cfg.iters, |s| s.min(cfg.iters));
     while session.iter() < end {
         session.step()?;
     }
 
+    let run_label = format!("train_{}_{}", cfg.dataset, cfg.method.label());
     if !session.is_finished() {
         // paused mid-run: persist a resume point, skip the trace outputs
         // (a partial trace would shadow the complete one)
         session.snapshot()?.save(&ckpt_path)?;
+        if let (Some(rec), Some(path)) = (&recorder, &telemetry_path) {
+            export_telemetry(rec, path, &run_label)?;
+        }
         println!(
             "paused at iteration {}/{}; run state written to {ckpt_path}",
             session.iter(),
@@ -478,8 +512,61 @@ fn cmd_train(
         out.trace.write_json_canonical(&path)?;
         println!("wrote canonical trace {path}");
     }
+    if let (Some(rec), Some(path)) = (&recorder, &telemetry_path) {
+        export_telemetry(rec, path, &run_label)?;
+    }
     println!("wrote {base}.csv");
     Ok(())
+}
+
+/// Export a run's telemetry (events + histograms + summary) as JSONL and
+/// print the one-line digest (`hosgd train --telemetry PATH`).
+fn export_telemetry(rec: &Recorder, path: &str, label: &str) -> Result<()> {
+    rec.export_to_path(Path::new(path), label)?;
+    let s = rec.summary();
+    println!(
+        "telemetry: {} event(s) ({} dropped), round p50 {:.2e}s p99 {:.2e}s, \
+         wait {:.0}%; wrote {path}",
+        s.events,
+        s.dropped,
+        s.round_p50_s,
+        s.round_p99_s,
+        s.wait_frac * 100.0
+    );
+    Ok(())
+}
+
+/// Render one daemon's live `Frame::Stats` reply (`hosgd status`).
+fn print_status(addr: &str, r: &StatsReport) {
+    println!(
+        "worker {addr}: up {}, {} active / {} served session(s), {} round(s), {} step(s)",
+        fmt_time(r.uptime_ns as f64 / 1e9),
+        r.active_sessions,
+        r.sessions_served,
+        r.rounds,
+        r.steps,
+    );
+    println!(
+        "  wire {} B up / {} B down, {} retry(ies), {} error(s)",
+        r.wire_up_bytes, r.wire_down_bytes, r.retries, r.errors,
+    );
+    if r.hists.is_empty() {
+        println!("  (no phase histograms yet — serve a session first)");
+        return;
+    }
+    println!("  {:<16} {:>8} {:>10} {:>10} {:>10}", "PHASE", "COUNT", "P50", "P99", "MEAN");
+    for h in &r.hists {
+        let hist = Hist::from_parts(h.sum, &h.buckets);
+        let mean = if h.count > 0 { h.sum as f64 / h.count as f64 / 1e9 } else { 0.0 };
+        println!(
+            "  {:<16} {:>8} {:>10} {:>10} {:>10}",
+            h.name,
+            h.count,
+            fmt_time(hist.quantile(0.5) as f64 / 1e9),
+            fmt_time(hist.quantile(0.99) as f64 / 1e9),
+            fmt_time(mean),
+        );
+    }
 }
 
 fn print_trace_summary(t: &Trace) {
@@ -652,6 +739,59 @@ fn cmd_bench(
                 0.0,
             ));
         }
+
+        // the same pipelined exchange with a live telemetry recorder
+        // spanning every round — the committed trajectory pins this
+        // within noise of the bare case (the ≤2% overhead contract of
+        // docs/OBSERVABILITY.md)
+        {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let opts = hosgd::transport::WorkerDaemonOpts {
+                artifacts: artifacts.into(),
+                threads,
+                once: false,
+                pipeline: true,
+            };
+            std::thread::spawn(move || {
+                let _ = hosgd::transport::serve(listener, &opts);
+            });
+            let mut cfg = TrainConfig {
+                dataset: dataset.to_string(),
+                method: Method::ZoSgd,
+                iters: daemon_iters,
+                workers: 4,
+                eval_every: 0,
+                record_every: 1,
+                threads,
+                compute,
+                ..Default::default()
+            };
+            cfg.transport.workers_at = vec![addr];
+            let data = make_data(&cfg)?;
+            rows.push((
+                bench(
+                    &format!("telemetry_overhead pipelined ({dataset} m=4 N={daemon_iters})"),
+                    warm(1),
+                    reps(5),
+                    || {
+                        // the panic ratchet is full for this file; spell
+                        // the aborts out instead of unwrap()
+                        let mut s = match Session::new(model.as_ref(), &data, &cfg) {
+                            Ok(s) => s,
+                            Err(e) => panic!("bench session: {e}"),
+                        };
+                        s.set_telemetry(Recorder::enabled());
+                        if let Err(e) = s.run_to_end() {
+                            panic!("bench run: {e}");
+                        }
+                        std::hint::black_box(s.iter());
+                    },
+                ),
+                daemon_iters as f64,
+                0.0,
+            ));
+        }
     }
 
     let results: Vec<BenchResult> = rows.iter().map(|(r, ..)| r.clone()).collect();
@@ -718,6 +858,7 @@ fn preset_opts(
         threads,
         resume: args.has("resume"),
         quiet: false,
+        telemetry: args.get_opt::<String>("telemetry")?.map(PathBuf::from),
     })
 }
 

@@ -286,29 +286,13 @@ impl TraceRow {
     }
 }
 
-/// Simple monotonic stopwatch for the measured-compute axis. The
-/// wall-clock read is allowlisted in `rust/detlint.toml`: it feeds only
-/// the timing columns (`compute_s`/`comm_s`-style), which the canonical
-/// trace format excludes, so bit-identity never depends on it.
-pub struct Stopwatch {
-    start: std::time::Instant,
-}
-
-impl Stopwatch {
-    pub fn start() -> Self {
-        Self { start: std::time::Instant::now() }
-    }
-
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-}
-
-impl Default for Stopwatch {
-    fn default() -> Self {
-        Self::start()
-    }
-}
+/// Simple monotonic stopwatch for the measured-compute axis. Since PR 9
+/// the implementation lives in [`crate::telemetry::clock`] — the crate's
+/// single wall-clock read site, enforced structurally by detlint — and
+/// is re-exported here so callers keep the `metrics::Stopwatch` path. It
+/// feeds only the timing columns (`compute_s`/`comm_s`-style), which the
+/// canonical trace format excludes, so bit-identity never depends on it.
+pub use crate::telemetry::clock::Stopwatch;
 
 #[cfg(test)]
 mod tests {

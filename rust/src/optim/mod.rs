@@ -41,6 +41,7 @@ use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
 use crate::pool::{Shards, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
+use crate::telemetry::Recorder;
 use crate::transport::{Loopback, Round, RoundStatus, Transport};
 
 // ---------------------------------------------------------------------------
@@ -335,6 +336,14 @@ impl<O: Oracle> World<O> {
     /// The active fabric's label (`"loopback"` / `"tcp"`).
     pub fn transport_label(&self) -> &'static str {
         self.transport.label()
+    }
+
+    /// Attach a telemetry [`Recorder`] to the fabric and the worker pool.
+    /// Out-of-band observability only — see [`Transport::instrument`];
+    /// the numeric path never reads the recorder.
+    pub fn instrument(&mut self, rec: Recorder) {
+        self.transport.instrument(rec.clone());
+        self.pool.set_telemetry(rec);
     }
 
     /// d — decision-variable dimension.

@@ -40,6 +40,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use crate::telemetry::{clock, Recorder};
+
 /// Resolve a `--threads` / `threads` config value: `0` means "use the
 /// machine's available parallelism".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -87,6 +89,12 @@ pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Out-of-band observability handle, behind its own mutex so a shared
+    /// pool (`Arc`, or the `'static` sequential pool) can be instrumented
+    /// through `&self`. Disabled by default: the sequential fast path
+    /// never touches it, and the parallel path pays one uncontended lock
+    /// per scatter.
+    telemetry: Mutex<Recorder>,
 }
 
 impl WorkerPool {
@@ -108,7 +116,23 @@ impl WorkerPool {
                 .expect("spawning pool worker");
             handles.push(h);
         }
-        Self { shared, handles, threads }
+        Self { shared, handles, threads, telemetry: Mutex::new(Recorder::disabled()) }
+    }
+
+    /// Attach a telemetry [`Recorder`] (a clone of the session's handle).
+    /// Scatter timing and task-queue depth land in its histograms; the
+    /// jobs themselves — and therefore every computed bit — are untouched.
+    pub fn set_telemetry(&self, rec: Recorder) {
+        if let Ok(mut g) = self.telemetry.lock() {
+            *g = rec;
+        }
+    }
+
+    /// A clone of the attached recorder (disabled if never instrumented,
+    /// or if the telemetry mutex was poisoned — observability must not
+    /// turn a survived job panic into a pool panic).
+    fn recorder(&self) -> Recorder {
+        self.telemetry.lock().map(|g| g.clone()).unwrap_or_default()
     }
 
     /// The shared 1-lane pool: every legacy sequential entry point routes
@@ -140,18 +164,22 @@ impl WorkerPool {
             }
             return;
         }
+        let rec = self.recorder();
+        let t0 = rec.start();
         // Erase the borrow lifetime. Sound: this function removes the task
         // and returns only after all n invocations finished, so no thread
         // can observe `f` after the borrow ends.
         let f_erased: TaskFn = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), TaskFn>(f) };
-        let id = {
+        let (id, depth) = {
             let mut st = self.shared.state.lock().unwrap();
             let id = st.next_id;
             st.next_id += 1;
             st.tasks.push(Task { id, f: f_erased, n, next: 0, done: 0, panic: None });
-            id
+            (id, st.tasks.len())
         };
         self.shared.cv.notify_all();
+        // in-flight task-list depth at submit time (> 1 ⇒ nested scatter)
+        rec.observe("pool.queue_depth", depth as u64);
 
         // Participate: claim indices of our own task until exhausted, then
         // wait for jobs in flight on other threads.
@@ -175,6 +203,9 @@ impl WorkerPool {
             } else {
                 let task = st.tasks.remove(pos);
                 drop(st);
+                if let Some(t0) = t0 {
+                    rec.observe("pool.scatter_ns", clock::now_ns().saturating_sub(t0));
+                }
                 if let Some(p) = task.panic {
                     std::panic::resume_unwind(p);
                 }

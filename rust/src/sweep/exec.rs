@@ -31,6 +31,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::{make_data, run_fingerprint, Session};
 use crate::sweep::manifest::{Manifest, ManifestRow, ManifestWriter};
 use crate::sweep::plan::RunSpec;
+use crate::telemetry::Recorder;
 
 /// Executor knobs (everything outside the plan itself).
 #[derive(Debug, Clone)]
@@ -56,6 +57,12 @@ pub struct ExecOpts {
     pub resume: bool,
     /// suppress per-run progress lines on stderr
     pub quiet: bool,
+    /// attach a telemetry [`Recorder`] to every run and export one JSONL
+    /// file per run into this directory; the run's round-latency summary
+    /// (p50/p99, wait fraction) is folded into its manifest row. `None`
+    /// (the default) records nothing — trajectories are byte-identical
+    /// either way.
+    pub telemetry: Option<PathBuf>,
 }
 
 impl Default for ExecOpts {
@@ -69,6 +76,7 @@ impl Default for ExecOpts {
             threads: 0,
             resume: false,
             quiet: false,
+            telemetry: None,
         }
     }
 }
@@ -163,6 +171,12 @@ fn run_one(
     let mut session = Session::new(model.as_ref(), &data, &cfg)
         .with_context(|| format!("run {}: building session", spec.label))
         .map_err(fabric)?;
+    // out-of-band observability: the recorder watches the run without
+    // feeding it, so instrumented trajectories stay byte-identical
+    let recorder = opts.telemetry.as_ref().map(|_| Recorder::enabled());
+    if let Some(rec) = &recorder {
+        session.set_telemetry(rec.clone());
+    }
     session.run_to_end().with_context(|| format!("run {}", spec.label)).map_err(fabric)?;
     let trace = session.trace();
     if let Some(name) = &spec.trace_csv {
@@ -171,7 +185,26 @@ fn run_one(
             .with_context(|| format!("run {}: writing trace CSV", spec.label))
             .map_err(local)?;
     }
-    ManifestRow::from_trace(&spec.label, fingerprint, &trace).map_err(local)
+    let mut row = ManifestRow::from_trace(&spec.label, fingerprint, &trace).map_err(local)?;
+    if let (Some(rec), Some(dir)) = (&recorder, &opts.telemetry) {
+        let s = rec.summary();
+        row.round_p50_s = s.round_p50_s;
+        row.round_p99_s = s.round_p99_s;
+        row.wait_frac = s.wait_frac;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("run {}: creating telemetry dir", spec.label))
+            .map_err(local)?;
+        let file = dir.join(format!("{}.telemetry.jsonl", file_stem(&spec.label)));
+        rec.export_to_path(&file, &spec.label)
+            .with_context(|| format!("run {}: exporting telemetry", spec.label))
+            .map_err(local)?;
+    }
+    Ok(row)
+}
+
+/// A spec label (`method=ho_sgd,tau=4`) flattened into a filename stem.
+fn file_stem(label: &str) -> String {
+    label.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
 }
 
 /// Run every spec, in parallel, resumably. Returns the rows in spec

@@ -51,6 +51,13 @@ pub struct ManifestRow {
     /// measured compute seconds (machine-dependent; excluded from the
     /// checksum so re-runs on other hardware still verify)
     pub compute_s: f64,
+    /// telemetry: p50 of the round-exchange histogram, seconds (0 when
+    /// the sweep ran without `--telemetry`; wall-clock, checksum-excluded)
+    pub round_p50_s: f64,
+    /// telemetry: p99 of the round-exchange histogram, seconds
+    pub round_p99_s: f64,
+    /// telemetry: fraction of step time spent waiting on the fabric
+    pub wait_frac: f64,
 }
 
 impl ManifestRow {
@@ -82,6 +89,9 @@ impl ManifestRow {
             grad_evals: last.grad_evals,
             comm_s: last.comm_s,
             compute_s: last.compute_s,
+            round_p50_s: 0.0,
+            round_p99_s: 0.0,
+            wait_frac: 0.0,
         })
     }
 
@@ -146,6 +156,9 @@ impl ManifestRow {
             ("grad_evals", Json::num(self.grad_evals as f64)),
             ("comm_s", Json::num(self.comm_s)),
             ("compute_s", Json::num(self.compute_s)),
+            ("round_p50_s", Json::num(self.round_p50_s)),
+            ("round_p99_s", Json::num(self.round_p99_s)),
+            ("wait_frac", Json::num(self.wait_frac)),
             ("checksum", Json::str(format!("{:016x}", self.checksum()))),
         ])
     }
@@ -189,6 +202,11 @@ impl ManifestRow {
             grad_evals: num("grad_evals")? as u64,
             comm_s: num("comm_s")?,
             compute_s: num("compute_s")?,
+            // telemetry columns arrived later; absent in older manifests
+            // (wall-clock like compute_s: checksum-excluded)
+            round_p50_s: v.get("round_p50_s").and_then(Json::as_f64).unwrap_or(0.0),
+            round_p99_s: v.get("round_p99_s").and_then(Json::as_f64).unwrap_or(0.0),
+            wait_frac: v.get("wait_frac").and_then(Json::as_f64).unwrap_or(0.0),
         };
         let stored = hex("checksum")?;
         if stored != row.checksum() {

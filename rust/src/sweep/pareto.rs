@@ -167,7 +167,8 @@ impl ParetoReport {
          final_loss,best_loss,final_acc,wire_up_bytes,wire_down_bytes,wire_bytes,\
          scalars_per_worker,bytes_per_worker,fn_evals,grad_evals,norm_compute,on_frontier,\
          analytic_scalars_per_iter,measured_scalars_per_iter,comm_ratio,\
-         analytic_norm_compute,measured_norm_compute,compute_ratio";
+         analytic_norm_compute,measured_norm_compute,compute_ratio,\
+         round_p50_s,round_p99_s,wait_frac";
 
     /// CSV artifact: one row per run, objectives + frontier membership +
     /// theory deltas.
@@ -187,7 +188,7 @@ impl ParetoReport {
             let label = format!("\"{}\"", r.label.replace('"', "\"\""));
             out.push_str(&format!(
                 "{},{},{},{},{},{},{},{},{:.6},{:.6},{},{},{},{},{},{},{},{},{:.6e},{},\
-                 {:.6},{:.6},{:.4},{:.6e},{:.6e},{:.4}\n",
+                 {:.6},{:.6},{:.4},{:.6e},{:.6e},{:.4},{:.6},{:.6},{:.4}\n",
                 label,
                 r.method,
                 r.dataset,
@@ -214,6 +215,9 @@ impl ParetoReport {
                 e.delta.analytic_norm_compute,
                 e.delta.measured_norm_compute,
                 e.delta.compute_ratio(),
+                r.round_p50_s,
+                r.round_p99_s,
+                r.wait_frac,
             ));
         }
         std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))

@@ -1,0 +1,74 @@
+//! The crate's **single wall-clock read site**.
+//!
+//! Every wall-clock read in the tree — the metrics [`Stopwatch`], the
+//! bench harness timing loop, every telemetry span — funnels through
+//! [`now_ns`]. detlint's determinism pass enforces this structurally:
+//! `Instant` / `SystemTime` tokens are findings in every module except
+//! `telemetry`, and the finding is **not allowlistable** (see
+//! `rust/src/analysis/determinism.rs`). Wall-clock values feed only the
+//! timing columns and telemetry artifacts, which the canonical trace
+//! format excludes, so bit-identity never depends on this module.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process clock origin: pinned at the first read, shared by all
+/// threads. Keeping one origin makes every timestamp in a run directly
+/// comparable (spans from the session, the transport and the pool all sit
+/// on one axis).
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since the process's first clock read.
+pub fn now_ns() -> u64 {
+    origin().elapsed().as_nanos() as u64
+}
+
+/// Seconds between two [`now_ns`] readings (saturating).
+pub fn elapsed_s(t0_ns: u64, t1_ns: u64) -> f64 {
+    t1_ns.saturating_sub(t0_ns) as f64 / 1e9
+}
+
+/// Simple monotonic stopwatch for the measured-compute axis
+/// (re-exported as `crate::metrics::Stopwatch` for the session). Feeds
+/// only timing columns the canonical trace excludes.
+pub struct Stopwatch {
+    t0_ns: u64,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { t0_ns: now_ns() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        elapsed_s(self.t0_ns, now_ns())
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn stopwatch_elapsed_is_nonnegative() {
+        let w = Stopwatch::start();
+        assert!(w.elapsed_s() >= 0.0);
+        assert!(elapsed_s(10, 5) == 0.0); // saturates, never negative
+    }
+}

@@ -1,0 +1,640 @@
+//! Structured observability, strictly **out-of-band from the numeric
+//! path**: spans/events, deterministic log2-bucket histograms, and a
+//! schema-stable JSONL export.
+//!
+//! The contract (enforced by `rust/tests/telemetry.rs` and the CI
+//! determinism job): attaching or detaching a [`Recorder`] never changes
+//! a canonical trace by a single bit. Telemetry reads the clock and
+//! counts what happened; it never feeds a loss, a counter the canonical
+//! trace carries, or an RNG stream. Timing *contents* are machine-noise
+//! by nature — what is deterministic is the *shape*: bucket boundaries,
+//! field order, and encodings are all fixed (see
+//! `docs/OBSERVABILITY.md`).
+//!
+//! Design points:
+//!
+//! * [`Recorder`] is a cheaply cloneable handle; the disabled recorder
+//!   ([`Recorder::disabled`]) holds no allocation and every call on it is
+//!   a branch on a `None` — instrumentation points stay in the code
+//!   unconditionally.
+//! * Events land in a fixed-capacity ring (old events are dropped, and
+//!   the drop *count* is reported), so a long run cannot grow without
+//!   bound; histograms and counters are cumulative and tiny.
+//! * This module depends on no other module of the crate (the JSON
+//!   emitted here is hand-escaped) so anything — `util`, `metrics`, the
+//!   transports, the pool — may depend on it without a layering cycle.
+//!
+//! The one wall-clock read site of the whole crate lives in [`clock`].
+
+pub mod clock;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+pub use clock::Stopwatch;
+
+/// Version stamp of the JSONL export schema (the `meta` line carries it;
+/// bump on any field change so downstream parsers can dispatch).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default event-ring capacity of [`Recorder::enabled`].
+pub const RING_CAP: usize = 1 << 16;
+
+/// One attribute value attached to an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for Attr {
+    fn from(v: u64) -> Self {
+        Attr::U64(v)
+    }
+}
+
+impl From<usize> for Attr {
+    fn from(v: usize) -> Self {
+        Attr::U64(v as u64)
+    }
+}
+
+impl From<u32> for Attr {
+    fn from(v: u32) -> Self {
+        Attr::U64(v as u64)
+    }
+}
+
+impl From<f64> for Attr {
+    fn from(v: f64) -> Self {
+        Attr::F64(v)
+    }
+}
+
+impl From<&str> for Attr {
+    fn from(v: &str) -> Self {
+        Attr::Str(v.to_string())
+    }
+}
+
+impl From<String> for Attr {
+    fn from(v: String) -> Self {
+        Attr::Str(v)
+    }
+}
+
+/// One recorded event (a span when `dur_ns` is set, a point event
+/// otherwise). Timestamps are [`clock::now_ns`] values.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub t_ns: u64,
+    pub dur_ns: Option<u64>,
+    pub name: &'static str,
+    pub attrs: Vec<(&'static str, Attr)>,
+}
+
+// ---------------------------------------------------------------------------
+// Histograms
+// ---------------------------------------------------------------------------
+
+/// A fixed-bucket log2 histogram over `u64` samples (latency in
+/// nanoseconds, sizes in bytes, depths in counts — the unit is the
+/// caller's, named by convention in the histogram key).
+///
+/// Bucket `b` covers `[2^b, 2^(b+1))` for `b ≥ 1`; bucket 0 covers
+/// `{0, 1}`. The bucketing is a pure function of the sample — no
+/// configuration, no adaptivity — so two runs that observe the same
+/// values produce the identical encoding, and encodings from different
+/// subsystems/machines are directly comparable.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    counts: [u64; 64],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { counts: [0; 64], count: 0, sum: 0 }
+    }
+}
+
+/// The bucket index of a sample: `floor(log2(v))`, with 0 and 1 sharing
+/// bucket 0.
+pub fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros() as usize).saturating_sub(1)
+}
+
+/// The inclusive lower bound of bucket `b` (the value quantiles report).
+pub fn bucket_floor(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << b
+    }
+}
+
+impl Hist {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// The nonzero buckets as `(bucket, count)` in ascending bucket order
+    /// — the wire and JSON encoding of the histogram.
+    pub fn nonzero(&self) -> Vec<(u8, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(b, &c)| (b as u8, c))
+            .collect()
+    }
+
+    /// Rebuild from an encoded `(bucket, count)` list (the [`Hist`] side
+    /// of a `Frame::Stats` round-trip). Out-of-range buckets are an
+    /// encoding error the caller already rejected; they are ignored here.
+    pub fn from_parts(sum: u64, buckets: &[(u8, u64)]) -> Self {
+        let mut h = Hist { counts: [0; 64], count: 0, sum };
+        for &(b, c) in buckets {
+            if let Some(slot) = h.counts.get_mut(b as usize) {
+                *slot += c;
+                h.count += c;
+            }
+        }
+        h
+    }
+
+    /// The bucket-floor value at quantile `q ∈ [0, 1]`: the lower bound
+    /// of the first bucket whose cumulative count reaches `q · count`.
+    /// Deterministic given the recorded samples; 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_floor(b);
+            }
+        }
+        bucket_floor(63)
+    }
+
+    /// One stable JSON object: fixed key order, nonzero buckets only.
+    pub fn to_json_line(&self, name: &str) -> String {
+        let buckets: Vec<String> =
+            self.nonzero().iter().map(|(b, c)| format!("[{b},{c}]")).collect();
+        format!(
+            "{{\"type\":\"hist\",\"name\":\"{}\",\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+            escape(name),
+            self.count,
+            self.sum,
+            buckets.join(",")
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    /// index of the oldest event once the ring wrapped
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in chronological order.
+    fn ordered(&self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+struct Inner {
+    start_ns: u64,
+    ring: Mutex<Ring>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+/// A cloneable telemetry handle. All clones share one store; the
+/// disabled recorder is an empty handle and every operation on it is a
+/// no-op (in particular: **no clock read** — see [`Recorder::start`]).
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Recorder({})", if self.inner.is_some() { "enabled" } else { "disabled" })
+    }
+}
+
+impl Recorder {
+    /// The no-op recorder — what every instrumented component starts with.
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    /// A live recorder with the default ring capacity ([`RING_CAP`]).
+    pub fn enabled() -> Self {
+        Self::with_capacity(RING_CAP)
+    }
+
+    /// A live recorder keeping at most `cap` events (older ones are
+    /// dropped and counted).
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            inner: Some(Arc::new(Inner {
+                start_ns: clock::now_ns(),
+                ring: Mutex::new(Ring { buf: Vec::new(), cap, head: 0, dropped: 0 }),
+                hists: Mutex::new(BTreeMap::new()),
+                counters: Mutex::new(BTreeMap::new()),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Begin a span: the current timestamp if enabled, `None` otherwise.
+    /// Pass the result to [`Recorder::span`]; a disabled recorder costs
+    /// one branch and zero clock reads.
+    pub fn start(&self) -> Option<u64> {
+        self.inner.as_ref().map(|_| clock::now_ns())
+    }
+
+    /// Close a span opened with [`Recorder::start`]: records an event
+    /// with its duration AND feeds the duration (ns) into the histogram
+    /// named `name`.
+    pub fn span(&self, name: &'static str, t0: Option<u64>, attrs: Vec<(&'static str, Attr)>) {
+        let (Some(inner), Some(t0)) = (self.inner.as_deref(), t0) else { return };
+        let dur = clock::now_ns().saturating_sub(t0);
+        inner.hists.lock().unwrap().entry(name.to_string()).or_default().record(dur);
+        inner.ring.lock().unwrap().push(Event { t_ns: t0, dur_ns: Some(dur), name, attrs });
+    }
+
+    /// Record a point event (no duration, no histogram).
+    pub fn event(&self, name: &'static str, attrs: Vec<(&'static str, Attr)>) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        let t_ns = clock::now_ns();
+        inner.ring.lock().unwrap().push(Event { t_ns, dur_ns: None, name, attrs });
+    }
+
+    /// Feed one sample into histogram `name` without recording an event —
+    /// the hot-path form (per-scatter, per-reply).
+    pub fn observe(&self, name: &str, v: u64) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        inner.hists.lock().unwrap().entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Bump counter `name` by `delta`.
+    pub fn count(&self, name: &str, delta: u64) {
+        if delta == 0 {
+            return;
+        }
+        let Some(inner) = self.inner.as_deref() else { return };
+        *inner.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Snapshot one histogram by name (tests, the daemon Stats frame).
+    pub fn hist(&self, name: &str) -> Option<Hist> {
+        let inner = self.inner.as_deref()?;
+        inner.hists.lock().unwrap().get(name).cloned()
+    }
+
+    /// Snapshot every histogram in key order.
+    pub fn hists(&self) -> Vec<(String, Hist)> {
+        match self.inner.as_deref() {
+            None => Vec::new(),
+            Some(inner) => {
+                inner.hists.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+            }
+        }
+    }
+
+    /// Snapshot every counter in key order.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        match self.inner.as_deref() {
+            None => Vec::new(),
+            Some(inner) => {
+                inner.counters.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+            }
+        }
+    }
+
+    /// The per-run rollup (see [`Summary`]). Zeros on a disabled recorder.
+    pub fn summary(&self) -> Summary {
+        let Some(inner) = self.inner.as_deref() else { return Summary::default() };
+        let ring = inner.ring.lock().unwrap();
+        let events = ring.buf.len() as u64;
+        let dropped = ring.dropped;
+        drop(ring);
+        let hists = inner.hists.lock().unwrap();
+        let round = hists.get("round");
+        let step = hists.get("step");
+        let round_sum = round.map_or(0, Hist::sum);
+        let step_sum = step.map_or(0, Hist::sum);
+        Summary {
+            events,
+            dropped,
+            round_p50_s: round.map_or(0.0, |h| h.quantile(0.50) as f64 / 1e9),
+            round_p99_s: round.map_or(0.0, |h| h.quantile(0.99) as f64 / 1e9),
+            wait_frac: if step_sum == 0 {
+                0.0
+            } else {
+                (round_sum as f64 / step_sum as f64).min(1.0)
+            },
+        }
+    }
+
+    /// Write the full JSONL export: one `meta` line, the retained events
+    /// in chronological order, every histogram and counter, then the
+    /// `summary` line. Field order is fixed — see `docs/OBSERVABILITY.md`
+    /// for the schema. A no-op on a disabled recorder.
+    pub fn export_jsonl(&self, w: &mut impl Write, label: &str) -> std::io::Result<()> {
+        let Some(inner) = self.inner.as_deref() else { return Ok(()) };
+        writeln!(
+            w,
+            "{{\"type\":\"meta\",\"schema\":{SCHEMA_VERSION},\"label\":\"{}\",\"start_ns\":{}}}",
+            escape(label),
+            inner.start_ns
+        )?;
+        for ev in inner.ring.lock().unwrap().ordered() {
+            writeln!(w, "{}", event_line(&ev))?;
+        }
+        for (name, h) in self.hists() {
+            writeln!(w, "{}", h.to_json_line(&name))?;
+        }
+        for (name, v) in self.counters() {
+            writeln!(w, "{{\"type\":\"counter\",\"name\":\"{}\",\"value\":{v}}}", escape(&name))?;
+        }
+        let s = self.summary();
+        writeln!(w, "{}", s.to_json_line())?;
+        Ok(())
+    }
+
+    /// [`Recorder::export_jsonl`] to a file path (parents created).
+    pub fn export_to_path(&self, path: &std::path::Path, label: &str) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.export_jsonl(&mut f, label)?;
+        f.flush()
+    }
+}
+
+/// The per-run telemetry rollup folded into sweep manifest rows and
+/// Pareto reports: where a run's wall time went, in three numbers.
+/// `wait_frac` is the fraction of total step time spent inside transport
+/// rounds — on TCP that is (mostly) wire wait, on loopback it is the
+/// in-process oracle compute; either way it is the communication-side
+/// share of the paper's time decomposition.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Summary {
+    /// events currently retained in the ring
+    pub events: u64,
+    /// events dropped because the ring was full
+    pub dropped: u64,
+    /// p50 of the `round` histogram, seconds (bucket floor)
+    pub round_p50_s: f64,
+    /// p99 of the `round` histogram, seconds (bucket floor)
+    pub round_p99_s: f64,
+    /// `round` time / `step` time, clamped to [0, 1]
+    pub wait_frac: f64,
+}
+
+impl Summary {
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"type\":\"summary\",\"events\":{},\"dropped\":{},\"round_p50_s\":{},\
+             \"round_p99_s\":{},\"wait_frac\":{}}}",
+            self.events,
+            self.dropped,
+            fmt_f64(self.round_p50_s),
+            fmt_f64(self.round_p99_s),
+            fmt_f64(self.wait_frac)
+        )
+    }
+}
+
+fn event_line(ev: &Event) -> String {
+    let mut attrs = String::new();
+    for (i, (k, v)) in ev.attrs.iter().enumerate() {
+        if i > 0 {
+            attrs.push(',');
+        }
+        attrs.push_str(&format!("\"{}\":", escape(k)));
+        match v {
+            Attr::U64(n) => attrs.push_str(&n.to_string()),
+            Attr::F64(x) => attrs.push_str(&fmt_f64(*x)),
+            Attr::Str(s) => attrs.push_str(&format!("\"{}\"", escape(s))),
+        }
+    }
+    let dur = match ev.dur_ns {
+        Some(d) => d.to_string(),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"type\":\"event\",\"name\":\"{}\",\"t_ns\":{},\"dur_ns\":{dur},\"attrs\":{{{attrs}}}}}",
+        escape(ev.name),
+        ev.t_ns
+    )
+}
+
+/// JSON number formatting for f64: finite shortest-round-trip, with the
+/// non-finite values JSON lacks mapped to null.
+fn fmt_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escaping (all our names/labels are ASCII-ish; the
+/// control-character fallback keeps the output valid regardless).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_is_floor_log2_with_zero_folded_in() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(10), 1024);
+    }
+
+    #[test]
+    fn hist_quantiles_report_bucket_floors() {
+        let mut h = Hist::default();
+        for v in [1u64, 2, 3, 100, 100, 100, 100, 100, 100, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        // p50 of 10 samples → 5th: the 100s live in bucket 6 (floor 64)
+        assert_eq!(h.quantile(0.5), 64);
+        assert_eq!(h.quantile(1.0), 4096); // 5000 → bucket 12
+        assert_eq!(h.quantile(0.0), 0); // first sample (1) → bucket 0
+        assert_eq!(Hist::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn hist_encoding_is_stable_and_roundtrips() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 7, 7, 900] {
+            h.record(v);
+        }
+        let parts = h.nonzero();
+        assert_eq!(parts, vec![(0, 2), (2, 2), (9, 1)]);
+        let line = h.to_json_line("x");
+        assert_eq!(
+            line,
+            "{\"type\":\"hist\",\"name\":\"x\",\"count\":5,\"sum\":915,\
+             \"buckets\":[[0,2],[2,2],[9,1]]}"
+        );
+        let back = Hist::from_parts(h.sum(), &parts);
+        assert_eq!(back.nonzero(), parts);
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.sum(), h.sum());
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_noop() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        assert!(r.start().is_none());
+        r.span("step", r.start(), vec![]);
+        r.event("x", vec![("k", Attr::U64(1))]);
+        r.observe("h", 5);
+        r.count("c", 2);
+        assert_eq!(r.summary(), Summary::default());
+        assert!(r.hists().is_empty() && r.counters().is_empty());
+        let mut out = Vec::new();
+        r.export_jsonl(&mut out, "lbl").unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_drops() {
+        let r = Recorder::with_capacity(4);
+        for i in 0..10u64 {
+            r.event("e", vec![("i", Attr::U64(i))]);
+        }
+        let s = r.summary();
+        assert_eq!(s.events, 4);
+        assert_eq!(s.dropped, 6);
+        let mut out = Vec::new();
+        r.export_jsonl(&mut out, "ring").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        // the oldest retained event is i = 6, and order is chronological
+        let idx: Vec<usize> = (6..10).map(|i| text.find(&format!("\"i\":{i}")).unwrap()).collect();
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "{text}");
+        assert!(!text.contains("\"i\":5"));
+    }
+
+    #[test]
+    fn export_is_valid_jsonl_with_fixed_shape() {
+        let r = Recorder::enabled();
+        let t0 = r.start();
+        r.span("step", t0, vec![("t", Attr::U64(0))]);
+        let t1 = r.start();
+        r.span("round", t1, vec![]);
+        r.event("fault.retry", vec![("rank", Attr::U64(2)), ("peer", Attr::from("a:1"))]);
+        r.count("retries", 1);
+        let mut out = Vec::new();
+        r.export_jsonl(&mut out, "unit \"q\"").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert!(lines[0].starts_with("{\"type\":\"meta\",\"schema\":1,"));
+        assert!(lines[0].contains("unit \\\"q\\\""));
+        assert!(lines.last().unwrap().starts_with("{\"type\":\"summary\""));
+        assert!(text.contains("\"type\":\"hist\",\"name\":\"round\""));
+        assert!(text.contains("\"type\":\"counter\",\"name\":\"retries\",\"value\":1"));
+        // every line is a {...} object
+        assert!(lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')), "{text}");
+    }
+
+    #[test]
+    fn summary_wait_fraction_is_round_over_step() {
+        let r = Recorder::enabled();
+        // synthesize: 4 steps of ~known duration, rounds inside them
+        for _ in 0..4 {
+            let ts = r.start();
+            let tr = r.start();
+            std::hint::black_box(());
+            r.span("round", tr, vec![]);
+            r.span("step", ts, vec![]);
+        }
+        let s = r.summary();
+        assert!(s.wait_frac >= 0.0 && s.wait_frac <= 1.0, "{s:?}");
+        assert!(s.round_p99_s >= s.round_p50_s);
+    }
+
+    #[test]
+    fn clones_share_one_store() {
+        let r = Recorder::enabled();
+        let c = r.clone();
+        c.observe("h", 9);
+        assert_eq!(r.hist("h").unwrap().count(), 1);
+    }
+}

@@ -52,8 +52,9 @@ use crate::optim::{
 };
 use crate::pool::WorkerPool;
 use crate::rng::hash_u64s;
+use crate::telemetry::{Attr, Recorder};
 
-pub use tcp::{serve, TcpTransport, WorkerDaemonOpts};
+pub use tcp::{query_stats, serve, TcpTransport, WorkerDaemonOpts};
 pub use wire::{Frame, Slot, StepOp};
 
 /// One collective oracle round — what an optimizer iteration asks the
@@ -189,6 +190,13 @@ pub trait Transport<O: Oracle> {
     fn take_completions(&mut self) -> Vec<(u64, f64)> {
         Vec::new()
     }
+
+    /// Attach a telemetry [`Recorder`] (a clone of the session's handle).
+    /// Strictly out-of-band: fabrics record round spans, reply latencies
+    /// and retry/disconnect events into it, and attaching one must never
+    /// change a canonical trace by a single bit (`rust/tests/telemetry.rs`
+    /// pins this). The default fabric ignores it.
+    fn instrument(&mut self, _rec: Recorder) {}
 }
 
 /// Mean of per-rank f32 losses accumulated in rank order — one copy shared
@@ -390,6 +398,8 @@ pub struct Loopback {
     free_at: Vec<f64>,
     /// completion times of in-flight pipelined rounds (FIFO, ≤ window)
     pending: std::collections::VecDeque<f64>,
+    /// out-of-band observability handle (disabled unless instrumented)
+    telemetry: Recorder,
 }
 
 impl Loopback {
@@ -458,6 +468,19 @@ impl Loopback {
         let mut lats = Vec::with_capacity(m);
         for r in 0..m {
             let attempts = self.attempts(t, phase, r as u64)?;
+            if attempts > 1 {
+                // fault-injected drop-with-retry, attributed to the rank
+                // and iteration that re-sent (out-of-band: the retry is
+                // already charged to the canonical wire counters below)
+                self.telemetry.event(
+                    "fault.retry",
+                    vec![
+                        ("rank", Attr::U64(r as u64)),
+                        ("t", Attr::U64(t)),
+                        ("attempts", Attr::U64(attempts)),
+                    ],
+                );
+            }
             let up = up_of(r);
             for _ in 0..attempts {
                 for &b in down {
@@ -529,6 +552,12 @@ impl<O: Oracle> Transport<O> for Loopback {
         let d = workers.first().map_or(0, |c| c.g.len());
         let phase = req.phase();
         let mu = cfg.mu;
+        // "round" span over the data-plane rounds only (FetchState is
+        // unaccounted control plane, like the handshake); one branch and
+        // zero clock reads when telemetry is detached
+        let round_t = req.t();
+        let span_t0 =
+            if matches!(req, Round::FetchState { .. }) { None } else { self.telemetry.start() };
         match req {
             Round::Grad { params, t } => {
                 scatter_workers(pool, workers, |i, ctx| {
@@ -636,11 +665,20 @@ impl<O: Oracle> Transport<O> for Loopback {
                 // this control-plane pull is unaccounted on every fabric
             }
         }
+        if span_t0.is_some() {
+            self.telemetry.span("round", span_t0, vec![("t", Attr::U64(round_t))]);
+            // modelled-time staleness window occupancy after this round
+            self.telemetry.observe("staleness.occupancy", self.pending.len() as u64);
+        }
         Ok(RoundStatus::Done)
     }
 
     fn barrier(&mut self, comm: &mut CommSim) -> Result<()> {
         self.drain_to(comm, 0);
         Ok(())
+    }
+
+    fn instrument(&mut self, rec: Recorder) {
+        self.telemetry = rec;
     }
 }

@@ -37,6 +37,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -51,9 +52,12 @@ use crate::optim::{
 };
 use crate::pool::{resolve_threads, Shards, WorkerPool};
 use crate::rng::SeedRegistry;
+use crate::telemetry::{clock, Attr, Recorder};
 use crate::util::json::Json;
 
-use super::wire::{read_frame, write_broadcast, write_frame, Frame, Slot, StepOp};
+use super::wire::{
+    read_frame, write_broadcast, write_frame, Frame, HistSnapshot, Slot, StatsReport, StepOp,
+};
 use super::{
     absorb_surrogate, perform_grad, perform_local_step, perform_qsgd, perform_qsgd_ef,
     perform_surrogate, perform_zo, perform_zo_pair, rank_order_mean, Round, RoundStatus, Transport,
@@ -135,6 +139,10 @@ pub struct TcpTransport {
     seeded_locals: bool,
     /// worker-resident QSGD-EF residuals seeded this session?
     seeded_residuals: bool,
+    /// out-of-band observability (default disabled; see
+    /// [`Transport::instrument`]). Feeds only telemetry artifacts —
+    /// never the exchange itself
+    telemetry: Recorder,
 }
 
 impl TcpTransport {
@@ -236,6 +244,7 @@ impl TcpTransport {
             last_ok: None,
             seeded_locals: false,
             seeded_residuals: false,
+            telemetry: Recorder::disabled(),
         })
     }
 
@@ -308,7 +317,27 @@ impl TcpTransport {
         for rank in 0..m {
             let last = self.last_ok;
             let conn = &mut self.conns[self.assignment[rank]];
-            let (nbytes, frame) = conn.read(last)?;
+            let t_read = self.telemetry.start();
+            let (nbytes, frame) = match conn.read(last) {
+                Ok(got) => got,
+                Err(e) => {
+                    // mid-round disconnect while absorbing a deferred
+                    // round: attribute the peer and the (rank, t) whose
+                    // reply never arrived before surfacing the error
+                    self.telemetry.event(
+                        "transport.disconnect",
+                        vec![
+                            ("peer", Attr::Str(conn.addr.clone())),
+                            ("rank", Attr::U64(rank as u64)),
+                            ("t", Attr::U64(t)),
+                        ],
+                    );
+                    return Err(e);
+                }
+            };
+            if let Some(r0) = t_read {
+                self.telemetry.observe("tcp.reply_ns", clock::now_ns().saturating_sub(r0));
+            }
             comm.wire_up(nbytes);
             match frame {
                 Frame::Scalars { rank: r, t: ft, values } => {
@@ -438,6 +467,9 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             self.drain_all(comm)?;
         }
         let t = req.t();
+        // the round span covers issue→absorb of the data-plane exchange
+        // (for a deferred round: issue + any window-overflow absorb)
+        let span_t0 = self.telemetry.start();
 
         // 1. encode every rank's work order into its daemon's buffer
         //    (accounting as we go). Worker-resident state a daemon has not
@@ -490,6 +522,9 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             while self.inflight.len() > self.window {
                 self.absorb_oldest(comm)?;
             }
+            // staleness-window occupancy after this round shipped
+            self.telemetry.observe("tcp.inflight", self.inflight.len() as u64);
+            self.telemetry.span("round", span_t0, vec![("t", Attr::U64(t))]);
             return Ok(RoundStatus::Deferred);
         }
 
@@ -507,6 +542,7 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             readers.push((&mut c.r, c.addr.as_str()));
         }
         let assignment = &self.assignment;
+        let rec = self.telemetry.clone();
         let mut last = self.last_ok;
         let frames: Vec<(u64, Frame)> = std::thread::scope(|scope| -> Result<_> {
             let joins: Vec<_> = writers
@@ -520,21 +556,42 @@ impl<O: Oracle> Transport<O> for TcpTransport {
                 })
                 .collect();
             let mut frames = Vec::with_capacity(m);
-            for &ci in assignment.iter() {
+            for (rank, &ci) in assignment.iter().enumerate() {
                 let (r, addr) = &mut readers[ci];
+                let disconnect = |rec: &Recorder| {
+                    rec.event(
+                        "transport.disconnect",
+                        vec![
+                            ("peer", Attr::Str(addr.to_string())),
+                            ("rank", Attr::U64(rank as u64)),
+                            ("t", Attr::U64(t)),
+                        ],
+                    );
+                };
+                let t_read = rec.start();
                 match read_frame(r).with_context(|| {
                     format!("reading from worker {addr} ({})", last_reply_note(last))
-                })? {
-                    Some(got) => {
+                }) {
+                    Ok(Some(got)) => {
+                        if let Some(r0) = t_read {
+                            rec.observe("tcp.reply_ns", clock::now_ns().saturating_sub(r0));
+                        }
                         if let Some(e) = echo(&got.1) {
                             last = Some(e);
                         }
                         frames.push(got);
                     }
-                    None => bail!(
-                        "worker {addr} closed the connection mid-round ({})",
-                        last_reply_note(last)
-                    ),
+                    Ok(None) => {
+                        disconnect(&rec);
+                        bail!(
+                            "worker {addr} closed the connection mid-round ({})",
+                            last_reply_note(last)
+                        );
+                    }
+                    Err(e) => {
+                        disconnect(&rec);
+                        return Err(e);
+                    }
                 }
             }
             for j in joins {
@@ -670,6 +727,7 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             }
             _ => {}
         }
+        self.telemetry.span("round", span_t0, vec![("t", Attr::U64(t))]);
         Ok(RoundStatus::Done)
     }
 
@@ -680,6 +738,10 @@ impl<O: Oracle> Transport<O> for TcpTransport {
     fn take_completions(&mut self) -> Vec<(u64, f64)> {
         std::mem::take(&mut self.completions)
     }
+
+    fn instrument(&mut self, rec: Recorder) {
+        self.telemetry = rec;
+    }
 }
 
 impl Drop for TcpTransport {
@@ -688,6 +750,33 @@ impl Drop for TcpTransport {
             let _ = write_frame(&mut conn.w, &Frame::Shutdown);
             let _ = conn.w.flush();
         }
+    }
+}
+
+/// Query a live worker daemon for its [`StatsReport`] snapshot (the
+/// `hosgd status` subcommand). Speaks ordinary `HOSGDW1` framing: one
+/// [`Frame::StatsRequest`] — magic + version, so a version-skewed build
+/// is refused with a structured error instead of garbage — answered by
+/// one [`Frame::Stats`]. The probe is control plane through and through:
+/// it never counts as a session, never consumes `--once`, and never
+/// perturbs a run (the sequential daemon answers between sessions).
+pub fn query_stats(addr: &str) -> Result<StatsReport> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to worker daemon {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut r = BufReader::new(stream.try_clone()?);
+    let mut w = BufWriter::new(stream);
+    write_frame(&mut w, &Frame::StatsRequest)?;
+    w.flush()?;
+    match read_frame(&mut r).with_context(|| format!("reading stats from worker {addr}"))? {
+        Some((_, Frame::Stats(report))) => Ok(report),
+        Some((_, Frame::Error { message, .. })) => {
+            bail!("worker {addr} refused the status query: {message}")
+        }
+        Some((_, other)) => bail!("worker {addr}: expected Stats, got {other:?}"),
+        None => bail!("worker {addr} closed the connection without answering the status query"),
     }
 }
 
@@ -718,12 +807,95 @@ enum SessionEnd {
     /// the peer went away before saying `Hello` — a port probe/health
     /// check; never counts as the `--once` session
     Probe,
+    /// the peer asked for (and was sent) a [`Frame::Stats`] snapshot —
+    /// control plane, like a probe: never counts as the `--once` session
+    Status,
     /// the peer failed the `HOSGDW1` handshake (protocol-version mismatch
     /// or a malformed/unexpected hello). The peer has already been sent a
     /// structured [`Frame::Error`] naming the reason; the daemon must
     /// exit nonzero with it — a version-skewed fleet should fail loudly,
     /// not sit half-connected.
     BadHandshake(String),
+}
+
+/// Live daemon counters behind the [`Frame::Stats`] introspection frame:
+/// everything `hosgd status` renders. Cumulative since daemon start,
+/// updated on the serve path with relaxed atomics (one writer at a time —
+/// sessions are sequential — but the struct stays `Sync` so the scatter
+/// jobs of a batched round can time themselves). The internal always-on
+/// [`Recorder`] only feeds the per-phase histograms of the stats report;
+/// nothing on the numeric path ever reads it.
+struct DaemonStats {
+    start_ns: u64,
+    active_sessions: AtomicU32,
+    sessions_served: AtomicU64,
+    rounds: AtomicU64,
+    steps: AtomicU64,
+    wire_up: AtomicU64,
+    wire_down: AtomicU64,
+    retries: AtomicU64,
+    errors: AtomicU64,
+    /// per-phase histograms: `daemon.step`, `daemon.gather`,
+    /// `daemon.scatter`, `daemon.flush` (durations in ns)
+    rec: Recorder,
+}
+
+impl DaemonStats {
+    fn new() -> Self {
+        Self {
+            start_ns: clock::now_ns(),
+            active_sessions: AtomicU32::new(0),
+            sessions_served: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            wire_up: AtomicU64::new(0),
+            wire_down: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rec: Recorder::enabled(),
+        }
+    }
+
+    fn add(counter: &AtomicU64, delta: u64) {
+        counter.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Snapshot everything into the wire-encodable [`StatsReport`].
+    fn report(&self) -> StatsReport {
+        let hists = self
+            .rec
+            .hists()
+            .into_iter()
+            .map(|(name, h)| HistSnapshot {
+                name,
+                count: h.count(),
+                sum: h.sum(),
+                buckets: h.nonzero(),
+            })
+            .collect();
+        StatsReport {
+            uptime_ns: clock::now_ns().saturating_sub(self.start_ns),
+            active_sessions: self.active_sessions.load(Ordering::Relaxed),
+            sessions_served: self.sessions_served.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+            steps: self.steps.load(Ordering::Relaxed),
+            wire_up_bytes: self.wire_up.load(Ordering::Relaxed),
+            wire_down_bytes: self.wire_down.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            hists,
+        }
+    }
+}
+
+/// Decrements `active_sessions` on drop, so every exit path of a session
+/// — clean shutdown, EOF, or error — restores the gauge.
+struct ActiveGuard<'a>(&'a AtomicU32);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Run the worker daemon accept loop on an already-bound listener.
@@ -735,12 +907,20 @@ enum SessionEnd {
 /// hello — is answered with a structured error frame and aborts the
 /// daemon with a nonzero exit and a clear message.
 pub fn serve(listener: TcpListener, opts: &WorkerDaemonOpts) -> Result<()> {
+    let stats = DaemonStats::new();
     loop {
         let (stream, peer) = listener.accept().context("accepting coordinator connection")?;
-        match handle_session(stream, opts) {
-            Ok(SessionEnd::Served) => eprintln!("# worker: session from {peer} complete"),
+        match handle_session(stream, opts, &stats) {
+            Ok(SessionEnd::Served) => {
+                DaemonStats::add(&stats.sessions_served, 1);
+                eprintln!("# worker: session from {peer} complete");
+            }
             Ok(SessionEnd::Probe) => {
                 eprintln!("# worker: probe connection from {peer} (ignored)");
+                continue;
+            }
+            Ok(SessionEnd::Status) => {
+                eprintln!("# worker: status query from {peer} answered");
                 continue;
             }
             Ok(SessionEnd::BadHandshake(msg)) => {
@@ -749,7 +929,10 @@ pub fn serve(listener: TcpListener, opts: &WorkerDaemonOpts) -> Result<()> {
                      (coordinator and worker builds must speak the same protocol version)"
                 );
             }
-            Err(e) => eprintln!("# worker: session from {peer} failed: {e:#}"),
+            Err(e) => {
+                DaemonStats::add(&stats.errors, 1);
+                eprintln!("# worker: session from {peer} failed: {e:#}");
+            }
         }
         if opts.once {
             return Ok(());
@@ -771,7 +954,11 @@ struct RankState<'a> {
 }
 
 /// Serve one coordinator connection; see [`SessionEnd`] for the outcomes.
-fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionEnd> {
+fn handle_session(
+    stream: TcpStream,
+    opts: &WorkerDaemonOpts,
+    stats: &DaemonStats,
+) -> Result<SessionEnd> {
     stream.set_nodelay(true)?;
     // no read timeout — see IO_TIMEOUT: the coordinator may legitimately
     // idle between rounds, and its death surfaces as EOF anyway
@@ -807,12 +994,23 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
     };
     match Frame::decode(&body) {
         Ok(Frame::Hello) => {}
+        Ok(Frame::StatsRequest) => {
+            // live introspection: answer with a counters snapshot and go
+            // back to accepting. The request carries magic + version like
+            // a Hello, so a version-skewed `hosgd status` lands in the
+            // refuse path below instead of reading garbage.
+            write_frame(&mut w, &Frame::Stats(stats.report()))?;
+            w.flush()?;
+            return Ok(SessionEnd::Status);
+        }
         Ok(other) => return refuse(&mut w, format!("expected Hello, got {other:?}")),
         // wrong magic or mismatched VERSION — `Frame::decode` names it
         Err(e) => return refuse(&mut w, format!("{e:#}")),
     }
     write_frame(&mut w, &Frame::HelloAck)?;
     w.flush()?;
+    stats.active_sessions.fetch_add(1, Ordering::Relaxed);
+    let _active = ActiveGuard(&stats.active_sessions);
 
     let (m, ranks, cfg_json) = match read_frame(&mut r)? {
         Some((_, Frame::AssignShard { m, ranks, cfg_json })) => (m, ranks, cfg_json),
@@ -888,9 +1086,14 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
     // step orders of the round currently being gathered (batch mode):
     // (state index, rank, t, op) in arrival order
     let mut batch: Vec<(usize, u32, u64, StepOp)> = Vec::new();
+    // clock::now_ns at the first order of the round being gathered
+    let mut gather_t0 = 0u64;
     loop {
         let frame = match read_frame(&mut r)? {
-            Some((_, f)) => f,
+            Some((nbytes, f)) => {
+                DaemonStats::add(&stats.wire_down, nbytes);
+                f
+            }
             None => return Ok(SessionEnd::Served), // coordinator went away after its run
         };
         match frame {
@@ -912,13 +1115,22 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
             Frame::Step { rank, t, op } => {
                 if !batch_mode {
                     let st = lookup(&index, &mut states, rank)?;
+                    let step_t0 = clock::now_ns();
                     let reply = execute_step(st, rank, t, op, &acfg, cfg.seed);
+                    stats.rec.observe("daemon.step", clock::now_ns().saturating_sub(step_t0));
+                    DaemonStats::add(&stats.steps, 1);
+                    DaemonStats::add(&stats.rounds, 1);
                     let frame = match reply {
                         Ok(f) => f,
-                        Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                        Err(e) => {
+                            DaemonStats::add(&stats.errors, 1);
+                            Frame::Error { rank, message: format!("{e:#}") }
+                        }
                     };
-                    write_frame(&mut w, &frame)?;
+                    let flush_t0 = clock::now_ns();
+                    DaemonStats::add(&stats.wire_up, write_frame(&mut w, &frame)?);
                     w.flush()?;
+                    stats.rec.observe("daemon.flush", clock::now_ns().saturating_sub(flush_t0));
                     continue;
                 }
                 let &i = index
@@ -930,6 +1142,9 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
                          (pipeline desync)"
                     );
                 }
+                if batch.is_empty() {
+                    gather_t0 = clock::now_ns();
+                }
                 batch.push((i, rank, t, op));
                 if batch.len() < states.len() {
                     continue;
@@ -940,33 +1155,48 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
                 if batch.iter().any(|&(_, _, bt, _)| bt != t0) {
                     bail!("step orders within one round disagree on the iteration");
                 }
+                // round gathered: from the first order of the round to the
+                // last (the batch-read phase — coordinator-paced)
+                stats.rec.observe("daemon.gather", clock::now_ns().saturating_sub(gather_t0));
                 // fan the round out on the pool; replies go back in the
                 // order the orders arrived (rank-FIFO), one flush
                 let mut replies: Vec<Option<Result<Frame>>> =
                     (0..batch.len()).map(|_| None).collect();
+                let scatter_t0 = clock::now_ns();
                 {
                     let st_sh = Shards::new(&mut states[..]);
                     let rep_sh = Shards::new(&mut replies[..]);
                     let batch_ref = &batch;
                     let acfg_ref = &acfg;
                     let seed = cfg.seed;
+                    let rec = &stats.rec;
                     pool.scatter(batch_ref.len(), &|k| {
                         let (i, rank, t, op) = batch_ref[k];
                         // Safety: each batch entry owns a distinct state
                         // index, and k is this job's scatter index
                         let st = unsafe { st_sh.get(i) };
                         let rep = unsafe { rep_sh.get(k) };
+                        let step_t0 = clock::now_ns();
                         *rep = Some(execute_step(st, rank, t, op, acfg_ref, seed));
+                        rec.observe("daemon.step", clock::now_ns().saturating_sub(step_t0));
                     });
                 }
+                stats.rec.observe("daemon.scatter", clock::now_ns().saturating_sub(scatter_t0));
+                DaemonStats::add(&stats.steps, batch.len() as u64);
+                DaemonStats::add(&stats.rounds, 1);
+                let flush_t0 = clock::now_ns();
                 for (reply, &(_, rank, ..)) in replies.into_iter().zip(batch.iter()) {
                     let frame = match reply.expect("scatter fills every reply") {
                         Ok(f) => f,
-                        Err(e) => Frame::Error { rank, message: format!("{e:#}") },
+                        Err(e) => {
+                            DaemonStats::add(&stats.errors, 1);
+                            Frame::Error { rank, message: format!("{e:#}") }
+                        }
                     };
-                    write_frame(&mut w, &frame)?;
+                    DaemonStats::add(&stats.wire_up, write_frame(&mut w, &frame)?);
                 }
                 w.flush()?;
+                stats.rec.observe("daemon.flush", clock::now_ns().saturating_sub(flush_t0));
                 batch.clear();
             }
             Frame::FetchState { rank, slot } => {
@@ -979,7 +1209,8 @@ fn handle_session(stream: TcpStream, opts: &WorkerDaemonOpts) -> Result<SessionE
                     Slot::Snapshot => st.snapshot.clone(),
                     Slot::Residual => st.residual.clone(),
                 };
-                write_frame(&mut w, &Frame::Vector { rank, t: 0, loss: 0.0, data })?;
+                let n = write_frame(&mut w, &Frame::Vector { rank, t: 0, loss: 0.0, data })?;
+                DaemonStats::add(&stats.wire_up, n);
                 w.flush()?;
             }
             Frame::Shutdown => return Ok(SessionEnd::Served),

@@ -21,7 +21,10 @@
 //! * worker→coordinator — [`Frame::Scalars`] (the ZO rounds: a handful of
 //!   f32s no matter how large `d` is), [`Frame::Vector`] (dense FO
 //!   gradients / RI-SGD local models / fetched state) and [`Frame::Quant`]
-//!   (QSGD's Elias-γ-coded quantized gradient).
+//!   (QSGD's Elias-γ-coded quantized gradient);
+//! * introspection — [`Frame::StatsRequest`] / [`Frame::Stats`]: a
+//!   session-free ops query answered from the daemon's live counters
+//!   (`hosgd status`), never touching run state.
 //!
 //! Every variant has a closed-form encoded size (`*_len` below); the
 //! `Loopback` fabric accounts those sizes without materializing bytes, the
@@ -42,7 +45,11 @@ pub const PROTO: &[u8; 8] = b"HOSGDW1\0";
 /// v2: `LocalStep` gained a `fetch` byte, `QsgdEf` (worker-resident
 /// error feedback) and `FetchState` were added, and `Slot::Residual`
 /// joined the broadcast slots.
-pub const VERSION: u32 = 2;
+///
+/// v3: the introspection pair `StatsRequest` / `Stats` was added — an
+/// ops client can ask a live daemon for its counters and per-phase
+/// histograms without joining a session.
+pub const VERSION: u32 = 3;
 
 /// Upper bound on a frame body — a decode guard against garbage length
 /// prefixes, far above any real payload (d ≈ 10⁵ ⇒ ~400 KB frames).
@@ -137,6 +144,53 @@ pub enum Frame {
     /// for `rank` (replied to with a [`Frame::Vector`]); control-plane
     /// traffic at averaging/snapshot points, not per-round
     FetchState { rank: u32, slot: Slot },
+    /// ops→daemon: ask for the daemon's live counters and histograms.
+    /// Carries the protocol magic + version (like [`Frame::Hello`]) so a
+    /// version-skewed client is refused before any state is interpreted;
+    /// answered with [`Frame::Stats`] and the connection stays session-free
+    /// — a status probe never perturbs a run
+    StatsRequest,
+    /// daemon→ops: the introspection snapshot (see [`StatsReport`])
+    Stats(StatsReport),
+}
+
+/// The payload of [`Frame::Stats`]: a daemon's cumulative counters since
+/// process start plus its per-phase latency histograms (log2 buckets —
+/// the `telemetry::Hist` encoding: nonzero `(bucket, count)` pairs in
+/// ascending bucket order, with `sum` carried so means survive the trip).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsReport {
+    /// nanoseconds since the daemon process started serving
+    pub uptime_ns: u64,
+    /// sessions currently executing rounds
+    pub active_sessions: u32,
+    /// completed real sessions (probes and status queries excluded)
+    pub sessions_served: u64,
+    /// oracle rounds executed across all sessions
+    pub rounds: u64,
+    /// step work orders executed (= rounds × hosted ranks)
+    pub steps: u64,
+    /// bytes this daemon wrote to coordinators
+    pub wire_up_bytes: u64,
+    /// bytes this daemon read from coordinators
+    pub wire_down_bytes: u64,
+    /// connection attempts that did not become a clean session
+    /// (handshake noise + sessions that failed mid-run; probes excluded)
+    pub retries: u64,
+    /// session errors logged by the serve loop
+    pub errors: u64,
+    /// per-phase histograms, name-sorted (e.g. `daemon.batch_read`)
+    pub hists: Vec<HistSnapshot>,
+}
+
+/// One encoded histogram inside a [`StatsReport`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistSnapshot {
+    pub name: String,
+    pub count: u64,
+    pub sum: u64,
+    /// nonzero log2 buckets as `(bucket, count)`, ascending
+    pub buckets: Vec<(u8, u64)>,
 }
 
 // -- closed-form frame sizes (header included) ------------------------------
@@ -181,6 +235,21 @@ pub fn quant_len(bits_len: u64) -> u64 {
     HEADER_LEN + 4 + 8 + 4 + 4 + 4 + 8 + 8 + bits_len
 }
 
+/// Encoded size of a [`Frame::StatsRequest`] (magic + version, like Hello).
+pub fn stats_request_len() -> u64 {
+    HEADER_LEN + 8 + 4
+}
+
+/// Encoded size of a [`Frame::Stats`] carrying `report`.
+pub fn stats_len(report: &StatsReport) -> u64 {
+    // 8 u64 counters + active_sessions u32 + n_hists u32
+    let mut n = HEADER_LEN + 8 * 8 + 4 + 4;
+    for h in &report.hists {
+        n += 8 + h.name.len() as u64 + 8 + 8 + 4 + 9 * h.buckets.len() as u64;
+    }
+    n
+}
+
 // -- encoding ---------------------------------------------------------------
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -216,6 +285,8 @@ impl Frame {
             Frame::Error { .. } => 10,
             Frame::Shutdown => 11,
             Frame::FetchState { .. } => 12,
+            Frame::StatsRequest => 13,
+            Frame::Stats(_) => 14,
         }
     }
 
@@ -224,7 +295,7 @@ impl Frame {
         let mut out = vec![0u8; 4];
         out.push(self.kind());
         match self {
-            Frame::Hello | Frame::HelloAck => {
+            Frame::Hello | Frame::HelloAck | Frame::StatsRequest => {
                 out.extend_from_slice(PROTO);
                 put_u32(&mut out, VERSION);
             }
@@ -298,6 +369,29 @@ impl Frame {
                 put_u32(&mut out, *rank);
                 out.push(slot.tag());
             }
+            Frame::Stats(report) => {
+                put_u64(&mut out, report.uptime_ns);
+                put_u32(&mut out, report.active_sessions);
+                put_u64(&mut out, report.sessions_served);
+                put_u64(&mut out, report.rounds);
+                put_u64(&mut out, report.steps);
+                put_u64(&mut out, report.wire_up_bytes);
+                put_u64(&mut out, report.wire_down_bytes);
+                put_u64(&mut out, report.retries);
+                put_u64(&mut out, report.errors);
+                put_u32(&mut out, report.hists.len() as u32);
+                for h in &report.hists {
+                    put_u64(&mut out, h.name.len() as u64);
+                    out.extend_from_slice(h.name.as_bytes());
+                    put_u64(&mut out, h.count);
+                    put_u64(&mut out, h.sum);
+                    put_u32(&mut out, h.buckets.len() as u32);
+                    for &(b, c) in &h.buckets {
+                        out.push(b);
+                        put_u64(&mut out, c);
+                    }
+                }
+            }
         }
         let len = (out.len() - 4) as u32;
         out[..4].copy_from_slice(&len.to_le_bytes());
@@ -310,7 +404,7 @@ impl Frame {
         let mut c = Reader { bytes: body, off: 0 };
         let kind = c.u8()?;
         let frame = match kind {
-            1 | 2 => {
+            1 | 2 | 13 => {
                 let proto = c.take(8)?;
                 if proto != PROTO {
                     bail!(
@@ -322,10 +416,10 @@ impl Frame {
                 if version != VERSION {
                     bail!("wire protocol version mismatch: peer {version}, ours {VERSION}");
                 }
-                if kind == 1 {
-                    Frame::Hello
-                } else {
-                    Frame::HelloAck
+                match kind {
+                    1 => Frame::Hello,
+                    2 => Frame::HelloAck,
+                    _ => Frame::StatsRequest,
                 }
             }
             3 => {
@@ -405,6 +499,49 @@ impl Frame {
             10 => Frame::Error { rank: c.u32()?, message: c.string()? },
             11 => Frame::Shutdown,
             12 => Frame::FetchState { rank: c.u32()?, slot: Slot::from_tag(c.u8()?)? },
+            14 => {
+                let uptime_ns = c.u64()?;
+                let active_sessions = c.u32()?;
+                let sessions_served = c.u64()?;
+                let rounds = c.u64()?;
+                let steps = c.u64()?;
+                let wire_up_bytes = c.u64()?;
+                let wire_down_bytes = c.u64()?;
+                let retries = c.u64()?;
+                let errors = c.u64()?;
+                let n_hists = c.u32()? as usize;
+                if n_hists.saturating_mul(28) > body.len() {
+                    bail!("stats histogram count {n_hists} exceeds frame size");
+                }
+                let mut hists = Vec::with_capacity(n_hists);
+                for _ in 0..n_hists {
+                    let name = c.string()?;
+                    let count = c.u64()?;
+                    let sum = c.u64()?;
+                    let n_buckets = c.u32()? as usize;
+                    if n_buckets.saturating_mul(9) > body.len() {
+                        bail!("stats bucket count {n_buckets} exceeds frame size");
+                    }
+                    let mut buckets = Vec::with_capacity(n_buckets);
+                    for _ in 0..n_buckets {
+                        let b = c.u8()?;
+                        buckets.push((b, c.u64()?));
+                    }
+                    hists.push(HistSnapshot { name, count, sum, buckets });
+                }
+                Frame::Stats(StatsReport {
+                    uptime_ns,
+                    active_sessions,
+                    sessions_served,
+                    rounds,
+                    steps,
+                    wire_up_bytes,
+                    wire_down_bytes,
+                    retries,
+                    errors,
+                    hists,
+                })
+            }
             other => bail!("unknown frame kind {other}"),
         };
         if c.off != body.len() {
@@ -600,6 +737,32 @@ mod tests {
                 },
                 quant_len(6),
             ),
+            (Frame::StatsRequest, stats_request_len()),
+            (Frame::Stats(StatsReport::default()), stats_len(&StatsReport::default())),
+            {
+                let report = StatsReport {
+                    uptime_ns: 1,
+                    active_sessions: 2,
+                    sessions_served: 3,
+                    rounds: 4,
+                    steps: 5,
+                    wire_up_bytes: 6,
+                    wire_down_bytes: 7,
+                    retries: 8,
+                    errors: 9,
+                    hists: vec![
+                        HistSnapshot {
+                            name: "daemon.step".into(),
+                            count: 3,
+                            sum: 700,
+                            buckets: vec![(7, 2), (9, 1)],
+                        },
+                        HistSnapshot { name: "x".into(), count: 0, sum: 0, buckets: vec![] },
+                    ],
+                };
+                let expect = stats_len(&report);
+                (Frame::Stats(report), expect)
+            },
         ];
         for (frame, expect) in cases {
             assert_eq!(frame.encode().len() as u64, expect, "{frame:?}");
@@ -637,6 +800,24 @@ mod tests {
             Frame::AssignShard { m: 4, ranks: vec![0, 2], cfg_json: "{\"tau\":8}".into() },
             Frame::ShardReady { dim: 499, batch: 8 },
             Frame::Scalars { rank: 1, t: 3, values: vec![1.5, -2.5] },
+            Frame::StatsRequest,
+            Frame::Stats(StatsReport {
+                uptime_ns: 42,
+                active_sessions: 1,
+                sessions_served: 2,
+                rounds: 10,
+                steps: 40,
+                wire_up_bytes: 1000,
+                wire_down_bytes: 2000,
+                retries: 0,
+                errors: 1,
+                hists: vec![HistSnapshot {
+                    name: "daemon.scatter".into(),
+                    count: 10,
+                    sum: 12345,
+                    buckets: vec![(10, 9), (11, 1)],
+                }],
+            }),
             Frame::Shutdown,
         ];
         let mut buf = Vec::new();

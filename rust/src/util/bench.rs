@@ -6,8 +6,8 @@
 //! the `bench-smoke` job on a > 2× hot-path regression.
 
 use std::path::Path;
-use std::time::Instant;
 
+use crate::telemetry::clock;
 use crate::util::json::Json;
 
 /// Summary statistics of one benchmark case.
@@ -114,9 +114,9 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = clock::now_ns();
         f();
-        samples.push(t0.elapsed().as_secs_f64());
+        samples.push(clock::elapsed_s(t0, clock::now_ns()));
     }
     summarize(name, &mut samples)
 }

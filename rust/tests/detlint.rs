@@ -53,7 +53,7 @@ fn determinism_allowlist_clears_exactly_what_it_names() {
     let policy = Policy::parse(
         "[[allow]]\n\
          file = \"rust/src/metrics/fixture.rs\"\n\
-         token = \"Instant\"\n\
+         token = \"HashMap\"\n\
          reason = \"fixture\"\n\
          [[allow]]\n\
          file = \"rust/src/metrics/fixture.rs\"\n\
@@ -62,8 +62,42 @@ fn determinism_allowlist_clears_exactly_what_it_names() {
     )
     .unwrap();
     let findings = determinism::lint(&files, &policy);
+    // only the 2 wall-clock findings remain — and those are structural
     assert_eq!(findings.len(), 2, "{findings:#?}");
-    assert!(findings.iter().all(|f| f.message.contains("`HashMap`")));
+    assert!(findings.iter().all(|f| f.message.contains("`Instant`")));
+}
+
+/// The wall-clock rule is structural: an `[[allow]]` naming `Instant`
+/// outside the telemetry module is ignored, and the finding says so.
+#[test]
+fn wall_clock_findings_are_not_allowlistable() {
+    let files = [src("rust/src/metrics/fixture.rs", HAZARD_FIXTURE)];
+    let policy = Policy::parse(
+        "[[allow]]\n\
+         file = \"rust/src/metrics/fixture.rs\"\n\
+         token = \"Instant\"\n\
+         reason = \"fixture\"\n",
+    )
+    .unwrap();
+    let findings = determinism::lint(&files, &policy);
+    let clock: Vec<_> =
+        findings.iter().filter(|f| f.message.contains("`Instant`")).collect();
+    assert_eq!(clock.len(), 2, "{findings:#?}");
+    assert!(clock.iter().all(|f| f.message.contains("not allowlistable")), "{clock:#?}");
+    assert!(clock.iter().all(|f| f.message.contains("telemetry::clock")), "{clock:#?}");
+}
+
+/// Inside `rust/src/telemetry/`, wall-clock reads are the point — the
+/// same fixture raises no `Instant` findings there, while every other
+/// hazard class still fires.
+#[test]
+fn wall_clock_is_allowed_only_in_the_telemetry_module() {
+    let files = [src("rust/src/telemetry/fixture.rs", HAZARD_FIXTURE)];
+    let findings = determinism::lint(&files, &empty_policy());
+    // 2 HashMap + 1 unordered accumulation; the 2 Instants are exempt
+    assert_eq!(findings.len(), 3, "{findings:#?}");
+    assert!(findings.iter().all(|f| !f.message.contains("`Instant`")), "{findings:#?}");
+    assert!(findings.iter().any(|f| f.message.contains("`HashMap`")));
 }
 
 #[test]

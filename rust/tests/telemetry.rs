@@ -1,0 +1,241 @@
+//! The out-of-band telemetry contract (docs/OBSERVABILITY.md): attaching
+//! a live `telemetry::Recorder` to a session must never change a
+//! canonical trace or a final parameter by a single bit — for every
+//! method, on both fabrics (Loopback and TCP), synchronous and under
+//! bounded-staleness run-ahead. The recorder must also actually record
+//! (these tests would be vacuous against a no-op), and the JSONL export
+//! must keep its schema shape.
+
+use std::net::TcpListener;
+
+use hosgd::backend::{Backend, NativeBackend};
+use hosgd::config::{Method, StepSize, TrainConfig};
+use hosgd::coordinator::{make_data, Session};
+use hosgd::telemetry::Recorder;
+use hosgd::transport::{serve, WorkerDaemonOpts};
+
+const ALL_METHODS: [Method; 7] = [
+    Method::HoSgd,
+    Method::SyncSgd,
+    Method::RiSgd,
+    Method::ZoSgd,
+    Method::ZoSvrgAve,
+    Method::Qsgd,
+    Method::HoSgdM,
+];
+
+fn cfg(method: Method) -> TrainConfig {
+    TrainConfig {
+        method,
+        dataset: "quickstart".into(),
+        iters: 12,
+        workers: 4,
+        tau: 4,
+        step: StepSize::Constant { alpha: 0.02 },
+        seed: 11,
+        eval_every: 4,
+        record_every: 1,
+        svrg_epoch: 4,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+/// Run `cfg` to completion, optionally with a live recorder attached.
+/// Returns (canonical trace, final params, the recorder if one was used).
+fn run_session(cfg: &TrainConfig, telemetry: bool) -> (String, Vec<f32>, Option<Recorder>) {
+    let be = NativeBackend::with_threads(cfg.threads);
+    let model = be.model(&cfg.dataset).unwrap();
+    let data = make_data(cfg).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, cfg).unwrap();
+    let rec = telemetry.then(Recorder::enabled);
+    if let Some(r) = &rec {
+        s.set_telemetry(r.clone());
+    }
+    s.run_to_end().unwrap();
+    (s.trace().to_json_canonical().pretty(), s.params().unwrap(), rec)
+}
+
+fn assert_bit_identical(
+    method: Method,
+    label: &str,
+    off: &(String, Vec<f32>),
+    on: &(String, Vec<f32>),
+) {
+    assert_eq!(
+        off.0, on.0,
+        "{method} ({label}): attaching telemetry changed the canonical trace"
+    );
+    assert_eq!(off.1.len(), on.1.len());
+    for (j, (a, b)) in off.1.iter().zip(&on.1).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{method} ({label}): telemetry changed param {j}: {a} vs {b}"
+        );
+    }
+}
+
+fn spawn_daemon() -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let opts = WorkerDaemonOpts {
+            artifacts: "artifacts".into(),
+            threads: 1,
+            once: true,
+            pipeline: true,
+        };
+        serve(listener, &opts).unwrap();
+    });
+    (addr, handle)
+}
+
+// ---------------------------------------------------------------------------
+// Loopback: telemetry on/off, W = 0 and W = 2
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loopback_traces_are_bit_identical_with_telemetry_attached() {
+    for method in ALL_METHODS {
+        let c = cfg(method);
+        let (trace_off, params_off, _) = run_session(&c, false);
+        let (trace_on, params_on, rec) = run_session(&c, true);
+        assert_bit_identical(method, "loopback", &(trace_off, params_off), &(trace_on, params_on));
+
+        // the recorder must have actually seen the run: one `step` span
+        // per iteration, `round` spans from the fabric, `eval` spans from
+        // the eval_every = 4 cadence
+        let rec = rec.unwrap();
+        let step = rec.hist("step").expect("no `step` histogram recorded");
+        assert_eq!(step.count(), c.iters, "{method}: step span count");
+        let round = rec.hist("round").expect("no `round` histogram recorded");
+        assert!(round.count() >= c.iters, "{method}: round spans: {}", round.count());
+        assert!(rec.hist("eval").is_some(), "{method}: no eval spans at eval_every=4");
+        let s = rec.summary();
+        assert!(s.events > 0, "{method}: empty event ring");
+        assert!((0.0..=1.0).contains(&s.wait_frac), "{method}: wait_frac {}", s.wait_frac);
+        assert!(s.round_p99_s >= s.round_p50_s, "{method}: p99 < p50");
+    }
+}
+
+#[test]
+fn loopback_staleness_window_runs_are_bit_identical_with_telemetry_attached() {
+    for method in ALL_METHODS {
+        let mut c = cfg(method);
+        c.eval_every = 0; // let run-ahead actually run ahead
+        c.transport.staleness_window = 2;
+        let (trace_off, params_off, _) = run_session(&c, false);
+        let (trace_on, params_on, rec) = run_session(&c, true);
+        assert_bit_identical(method, "loopback W=2", &(trace_off, params_off), &(trace_on, params_on));
+        let rec = rec.unwrap();
+        assert!(
+            rec.hist("staleness.occupancy").is_some(),
+            "{method}: W=2 run recorded no staleness occupancy"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP: telemetry on/off, W = 0 and W = 2
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_traces_are_bit_identical_with_telemetry_attached() {
+    for method in ALL_METHODS {
+        let run_tcp = |telemetry: bool| {
+            let (a1, h1) = spawn_daemon();
+            let (a2, h2) = spawn_daemon();
+            let mut c = cfg(method);
+            c.transport.workers_at = vec![a1, a2];
+            let out = run_session(&c, telemetry);
+            h1.join().unwrap();
+            h2.join().unwrap();
+            out
+        };
+        let (trace_off, params_off, _) = run_tcp(false);
+        let (trace_on, params_on, rec) = run_tcp(true);
+        assert_bit_identical(method, "tcp", &(trace_off, params_off), &(trace_on, params_on));
+
+        // the TCP fabric contributes its own histograms
+        let rec = rec.unwrap();
+        assert!(rec.hist("round").is_some(), "{method}: no round spans over TCP");
+        assert!(
+            rec.hist("tcp.reply_ns").is_some(),
+            "{method}: no per-reply wire latency samples over TCP"
+        );
+    }
+}
+
+#[test]
+fn tcp_staleness_window_run_is_bit_identical_with_telemetry_attached() {
+    // RI-SGD is the method whose no-fetch local steps actually pipeline
+    // under --staleness-window; the others degrade to synchronous rounds
+    let run_tcp = |telemetry: bool| {
+        let (a1, h1) = spawn_daemon();
+        let (a2, h2) = spawn_daemon();
+        let mut c = cfg(Method::RiSgd);
+        c.eval_every = 0;
+        c.transport.workers_at = vec![a1, a2];
+        c.transport.staleness_window = 2;
+        let out = run_session(&c, telemetry);
+        h1.join().unwrap();
+        h2.join().unwrap();
+        out
+    };
+    let (trace_off, params_off, _) = run_tcp(false);
+    let (trace_on, params_on, rec) = run_tcp(true);
+    assert_bit_identical(
+        Method::RiSgd,
+        "tcp W=2",
+        &(trace_off, params_off),
+        &(trace_on, params_on),
+    );
+    let rec = rec.unwrap();
+    assert!(rec.hist("tcp.inflight").is_some(), "no in-flight depth samples under W=2");
+}
+
+// ---------------------------------------------------------------------------
+// JSONL export shape through a real run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_from_a_real_run_keeps_the_schema_shape() {
+    let c = cfg(Method::HoSgd);
+    let (_, _, rec) = run_session(&c, true);
+    let rec = rec.unwrap();
+
+    let mut out = Vec::new();
+    rec.export_jsonl(&mut out, "telemetry-test").unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.trim().lines().collect();
+    assert!(lines.len() > 2, "export too small: {} lines", lines.len());
+    assert!(
+        lines[0].starts_with("{\"type\":\"meta\",\"schema\":1,\"label\":\"telemetry-test\""),
+        "bad meta line: {}",
+        lines[0]
+    );
+    assert!(
+        lines.last().unwrap().starts_with("{\"type\":\"summary\""),
+        "export must end with the summary line"
+    );
+    // every line is one JSON object; the known section types appear in
+    // the documented order meta → events → hists → (counters) → summary
+    assert!(lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')));
+    let first_hist = lines.iter().position(|l| l.starts_with("{\"type\":\"hist\"")).unwrap();
+    let last_event = lines
+        .iter()
+        .rposition(|l| l.starts_with("{\"type\":\"event\""))
+        .expect("a real run must retain events");
+    assert!(last_event < first_hist, "events must precede histograms");
+    assert!(text.contains("\"type\":\"hist\",\"name\":\"round\""));
+    assert!(text.contains("\"type\":\"hist\",\"name\":\"step\""));
+
+    // and the path-based variant writes the identical bytes
+    let dir = std::env::temp_dir().join(format!("hosgd-telemetry-{}", std::process::id()));
+    let path = dir.join("run.telemetry.jsonl");
+    rec.export_to_path(&path, "telemetry-test").unwrap();
+    let from_disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(from_disk, text);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -13,7 +13,7 @@ use hosgd::config::{FaultPlan, Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, Session};
 use hosgd::optim::{axpy_acc, axpy_update, zo_scalar, AlgoConfig, TrainOracle, World};
 use hosgd::rng::Xoshiro256;
-use hosgd::transport::wire::{self, Frame, Slot, StepOp};
+use hosgd::transport::wire::{self, Frame, HistSnapshot, Slot, StatsReport, StepOp};
 use hosgd::transport::{serve, WorkerDaemonOpts};
 
 const ALL_METHODS: [Method; 7] = [
@@ -249,11 +249,15 @@ fn wire_spec_worked_examples_match_the_codec() {
     // spec and the codec have drifted apart — fix whichever one changed
     // deliberately (a layout change also requires a VERSION bump).
     let spec = include_str!("../../docs/DISTRIBUTED.md");
+    // the longer examples (`Stats`) wrap across doc lines — compare
+    // against the whitespace-collapsed spec so line breaks don't matter
+    let flat = spec.split_whitespace().collect::<Vec<_>>().join(" ");
     let hex = |bytes: &[u8]| {
         bytes.iter().map(|b| format!("{b:02x}")).collect::<Vec<_>>().join(" ")
     };
     let cases: Vec<(&str, Frame)> = vec![
         ("Hello", Frame::Hello),
+        ("StatsRequest", Frame::StatsRequest),
         ("FetchState", Frame::FetchState { rank: 2, slot: Slot::Residual }),
         (
             "Step/LocalStep",
@@ -261,12 +265,32 @@ fn wire_spec_worked_examples_match_the_codec() {
         ),
         ("Step/QsgdEf", Frame::Step { rank: 3, t: 7, op: StepOp::QsgdEf { s: 4 } }),
         ("Scalars", Frame::Scalars { rank: 0, t: 5, values: vec![1.0] }),
+        (
+            "Stats",
+            Frame::Stats(StatsReport {
+                uptime_ns: 1_000_000_000,
+                active_sessions: 0,
+                sessions_served: 1,
+                rounds: 8,
+                steps: 32,
+                wire_up_bytes: 4096,
+                wire_down_bytes: 16384,
+                retries: 0,
+                errors: 0,
+                hists: vec![HistSnapshot {
+                    name: "daemon.step".into(),
+                    count: 2,
+                    sum: 3072,
+                    buckets: vec![(10, 2)],
+                }],
+            }),
+        ),
     ];
     for (name, frame) in cases {
         let encoded = frame.encode();
         let h = hex(&encoded);
         assert!(
-            spec.contains(&h),
+            flat.contains(&h),
             "docs/DISTRIBUTED.md worked example for {name} drifted from the codec; \
              the codec now produces `{h}`"
         );
