@@ -14,7 +14,9 @@
 //! 3. [`spec`] — frame kinds/tags and `VERSION` vs the frame catalogue
 //!    in `docs/DISTRIBUTED.md`, and `JSON_KEYS` ↔ `TrainConfig` fields ↔
 //!    the README knob table;
-//! 4. [`ratchet`] — per-file non-test `unwrap()/expect()` budgets.
+//! 4. [`ratchet`] — per-file non-test `unwrap()/expect()` budgets;
+//! 5. [`telemetry`] — Recorder span/event/sample name literals vs the
+//!    registry block in `docs/OBSERVABILITY.md`.
 //!
 //! Policy (hazard allowlist + panic budgets) lives in `rust/detlint.toml`
 //! ([`policy`]). The `detlint` binary (`rust/src/bin/detlint.rs`) wires
@@ -30,6 +32,7 @@ pub mod lexer;
 pub mod policy;
 pub mod ratchet;
 pub mod spec;
+pub mod telemetry;
 
 use std::fs;
 use std::path::Path;
@@ -95,6 +98,7 @@ pub struct TreeInput {
     pub rust_files: Vec<SourceFile>,
     pub architecture: SourceFile,
     pub distributed: SourceFile,
+    pub observability: SourceFile,
     pub readme: SourceFile,
     pub policy: Policy,
 }
@@ -108,7 +112,7 @@ pub struct Report {
     pub scanned: usize,
 }
 
-/// Run all four passes over the tree.
+/// Run all five passes over the tree.
 pub fn run(input: &TreeInput) -> Result<Report> {
     let wire = input
         .rust_files
@@ -127,6 +131,7 @@ pub fn run(input: &TreeInput) -> Result<Report> {
     findings.extend(spec::lint_wire(wire, &input.distributed));
     findings.extend(spec::lint_knobs(config, &input.readme));
     findings.extend(ratchet::lint(&input.rust_files, &input.policy));
+    findings.extend(telemetry::lint(&input.rust_files, &input.observability));
     findings.sort_by(|a, b| (&a.file, a.line, &a.message).cmp(&(&b.file, b.line, &b.message)));
 
     let notes = ratchet::slack(&input.rust_files, &input.policy)

@@ -29,8 +29,9 @@ const KNOB_ANCHOR: &str = "knob-table";
 const TRANSPORT_SUB_KNOBS: &[&str] = &["workers_at", "fault", "staleness_window"];
 
 /// Lines (1-based numbering) between `<!-- detlint:NAME -->` and
-/// `<!-- /detlint:NAME -->`, plus the opening anchor's line.
-fn doc_block<'a>(md: &'a str, anchor: &str) -> Option<(Vec<(u32, &'a str)>, u32)> {
+/// `<!-- /detlint:NAME -->`, plus the opening anchor's line. Shared with
+/// the telemetry-registry pass.
+pub(crate) fn doc_block<'a>(md: &'a str, anchor: &str) -> Option<(Vec<(u32, &'a str)>, u32)> {
     let open = format!("<!-- detlint:{anchor} -->");
     let close = format!("<!-- /detlint:{anchor} -->");
     let mut lines = Vec::new();

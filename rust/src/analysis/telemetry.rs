@@ -1,0 +1,148 @@
+//! Pass 5: telemetry name-registry drift.
+//!
+//! Every span/event/sample name a `telemetry::Recorder` call site bakes
+//! into non-test code — the string literal in `.span("x", ..)`,
+//! `.event("x", ..)`, `.observe("x", ..)` or `.count("x", ..)` — is part
+//! of the observability contract: `hosgd trace` groups by these names,
+//! `Frame::Stats` ships them to ops clients, and dashboards key on them.
+//! docs/OBSERVABILITY.md carries the authoritative registry in an
+//! anchored `<!-- detlint:telemetry-registry -->` table; this pass
+//! cross-checks it against the code three ways:
+//!
+//! 1. code-not-doc — a call site names something the registry omits
+//!    (an instrument shipped without documentation);
+//! 2. doc-not-code — a registry row has no live call site left
+//!    (documentation for a ghost, or a silent rename);
+//! 3. duplicates — the same name registered twice.
+//!
+//! Names are matched as whole string literals: dynamic names defeat the
+//! registry and are the Recorder API's documented anti-pattern anyway.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{lex, strip_cfg_test, Token};
+use super::spec::doc_block;
+use super::{Finding, SourceFile};
+
+const PASS: &str = "telemetry";
+const ANCHOR: &str = "telemetry-registry";
+
+/// The `Recorder` methods whose first argument is a registered name.
+const RECORDER_METHODS: &[&str] = &["span", "event", "observe", "count"];
+
+/// `.method("name", ..)` call sites in a non-test token stream:
+/// (name, method, line).
+fn recorder_names(toks: &[Token]) -> Vec<(String, &'static str, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 3 < toks.len() {
+        if toks[i].is_punct('.') && toks[i + 2].is_punct('(') {
+            if let (Some(m), Some(name)) = (toks[i + 1].ident(), toks[i + 3].str_lit()) {
+                if let Some(method) = RECORDER_METHODS.iter().find(|&&r| r == m) {
+                    out.push((name.to_string(), method, toks[i + 3].line));
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Registry rows: the first backticked cell of each table line inside the
+/// anchored block, e.g. `` | `daemon.step` | span | ... | ``.
+fn registry_rows(block: &[(u32, &str)]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (lineno, line) in block {
+        let trimmed = line.trim_start();
+        if !trimmed.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = trimmed.split('|').collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let mut parts = cells[1].split('`');
+        let name = parts.nth(1).unwrap_or("").trim();
+        if !name.is_empty() {
+            out.push((name.to_string(), *lineno));
+        }
+    }
+    out
+}
+
+/// Cross-check every Recorder name literal in `rust_files` against the
+/// `<!-- detlint:telemetry-registry -->` block in `observability`.
+pub fn lint(rust_files: &[SourceFile], observability: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // first call site per name (stable: files arrive in sorted order)
+    let mut code: BTreeMap<String, (&'static str, String, u32)> = BTreeMap::new();
+    for file in rust_files {
+        let toks = strip_cfg_test(&lex(&file.text));
+        for (name, method, line) in recorder_names(&toks) {
+            code.entry(name).or_insert((method, file.path.clone(), line));
+        }
+    }
+
+    let Some((block, anchor_line)) = doc_block(&observability.text, ANCHOR) else {
+        out.push(Finding::new(
+            PASS,
+            &observability.path,
+            0,
+            format!("no `<!-- detlint:{ANCHOR} -->` block found"),
+        ));
+        return out;
+    };
+    let rows = registry_rows(&block);
+    if rows.is_empty() {
+        out.push(Finding::new(
+            PASS,
+            &observability.path,
+            anchor_line,
+            "the telemetry-registry block contains no rows".to_string(),
+        ));
+        return out;
+    }
+
+    let mut seen: BTreeMap<&str, u32> = BTreeMap::new();
+    for (name, line) in &rows {
+        if seen.contains_key(name.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                &observability.path,
+                *line,
+                format!("telemetry name `{name}` registered twice"),
+            ));
+        } else {
+            seen.insert(name, *line);
+        }
+    }
+    for (name, (method, file, line)) in &code {
+        if !seen.contains_key(name.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                file,
+                *line,
+                format!(
+                    "telemetry name `{name}` (`.{method}(..)`) is not in \
+                     {}'s telemetry-registry block",
+                    observability.path
+                ),
+            ));
+        }
+    }
+    for (name, line) in &rows {
+        if !code.contains_key(name.as_str()) {
+            out.push(Finding::new(
+                PASS,
+                &observability.path,
+                *line,
+                format!(
+                    "telemetry registry lists `{name}`, but no non-test Recorder \
+                     call site uses that name"
+                ),
+            ));
+        }
+    }
+    out
+}

@@ -1,5 +1,5 @@
-//! detlint — static analysis for the repo's determinism, layering, wire
-//! and panic-hygiene contracts (see `hosgd::analysis`).
+//! detlint — static analysis for the repo's determinism, layering, wire,
+//! panic-hygiene and telemetry-registry contracts (see `hosgd::analysis`).
 //!
 //! Usage:
 //!
@@ -85,6 +85,7 @@ fn run() -> Result<bool> {
 
     let architecture = doc_or_default(&docs, "ARCHITECTURE.md", "docs/ARCHITECTURE.md")?;
     let distributed = doc_or_default(&docs, "DISTRIBUTED.md", "docs/DISTRIBUTED.md")?;
+    let observability = doc_or_default(&docs, "OBSERVABILITY.md", "docs/OBSERVABILITY.md")?;
     let readme = match readme_path {
         Some(p) => analysis::read_doc(&p, &p.to_string_lossy())?,
         None => doc_or_default(&docs, "README.md", "README.md")?,
@@ -99,7 +100,7 @@ fn run() -> Result<bool> {
     })?;
     let policy = Policy::parse(&policy_text)?;
 
-    let input = TreeInput { rust_files, architecture, distributed, readme, policy };
+    let input = TreeInput { rust_files, architecture, distributed, observability, readme, policy };
     let report = analysis::run(&input)?;
     for finding in &report.findings {
         println!("{finding}");

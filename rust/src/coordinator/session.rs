@@ -48,6 +48,7 @@ use crate::metrics::{Stopwatch, Trace, TraceRow};
 use crate::optim::{build, AlgoConfig, Algorithm, Oracle, TrainOracle, World};
 use crate::pool::{resolve_threads, WorkerPool};
 use crate::rng::hash_u64s;
+use crate::telemetry::trace::DrainedRing;
 use crate::telemetry::{Attr, Recorder};
 use crate::transport::{Loopback, TcpTransport, Transport};
 
@@ -211,6 +212,10 @@ pub struct Session<'a, O: Oracle = TrainOracle<'a>> {
     /// out-of-band observability handle (disabled unless
     /// [`Session::set_telemetry`] attached one); never feeds the numeric path
     telemetry: Recorder,
+    /// worker-side span collection armed ([`Session::set_trace`])
+    trace_on: bool,
+    /// worker span rings drained so far, in drain order (barrier points)
+    trace_rings: Vec<DrainedRing>,
     eval_overhead: f64,
     /// compute seconds carried over from the run segment(s) before restore
     compute_base_s: f64,
@@ -327,6 +332,8 @@ impl<'a, O: Oracle> Session<'a, O> {
             pending: VecDeque::new(),
             watch: Stopwatch::start(),
             telemetry: Recorder::disabled(),
+            trace_on: false,
+            trace_rings: Vec::new(),
             eval_overhead: 0.0,
             compute_base_s: 0.0,
             eval_buf: Vec::with_capacity(dim),
@@ -346,6 +353,36 @@ impl<'a, O: Oracle> Session<'a, O> {
     pub fn set_telemetry(&mut self, rec: Recorder) {
         self.world.instrument(rec.clone());
         self.telemetry = rec;
+    }
+
+    /// Arm worker-side span collection: the fabric records (or, on TCP,
+    /// the remote daemons retain) per-`(rank, t)` spans, and the session
+    /// drains their rings at every barrier point it already crosses (the
+    /// eval cadence, snapshots, the end of the run). Out-of-band like
+    /// [`Session::set_telemetry`]: arming, draining or discarding the
+    /// collected spans leaves the canonical trace byte-identical.
+    pub fn set_trace(&mut self, on: bool) {
+        self.world.set_trace(on);
+        self.trace_on = on;
+    }
+
+    /// Pull everything the fabric's worker rings hold right now into the
+    /// session's accumulated trace. Only called with the pipeline drained.
+    fn collect_trace(&mut self) -> Result<()> {
+        if self.trace_on {
+            self.trace_rings.extend(self.world.drain_trace()?);
+        }
+        Ok(())
+    }
+
+    /// Take the worker-side spans drained so far (a final flush + drain
+    /// included), leaving the session's accumulator empty. Pair with the
+    /// coordinator-side recorder's ring to build the merged timeline
+    /// ([`crate::telemetry::trace::chrome_trace_json`]).
+    pub fn take_trace(&mut self) -> Result<Vec<DrainedRing>> {
+        // flush_pending ends with a collect_trace, so this is final
+        let _ = self.flush_pending()?;
+        Ok(std::mem::take(&mut self.trace_rings))
     }
 
     /// Next iteration to execute (= iterations completed so far).
@@ -424,6 +461,7 @@ impl<'a, O: Oracle> Session<'a, O> {
             // evaluation (and run finish) reads post-step state: complete
             // everything still in flight first
             self.world.barrier()?;
+            self.collect_trace()?;
         }
         let mut events = self.emit_ready()?;
 
@@ -477,6 +515,7 @@ impl<'a, O: Oracle> Session<'a, O> {
     /// Complete everything in flight and emit the whole pending queue.
     fn flush_pending(&mut self) -> Result<Vec<StepEvent>> {
         self.world.barrier()?;
+        self.collect_trace()?;
         self.emit_ready()
     }
 

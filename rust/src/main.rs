@@ -28,6 +28,7 @@ use hosgd::metrics::Trace;
 use hosgd::optim::axpy_update;
 use hosgd::rng::{unit_sphere_direction_scratch, SeedRegistry};
 use hosgd::sweep::{self, build_report, execute, ExecOpts, ExperimentPlan, ParetoReport, RunSpec};
+use hosgd::telemetry::trace::{analyze, chrome_trace_json, RoundBlame, RoundSpan, TraceSpan};
 use hosgd::telemetry::{Hist, Recorder};
 use hosgd::theory::{table1, Table1Params};
 use hosgd::transport::wire::StatsReport;
@@ -81,6 +82,11 @@ SUBCOMMANDS
                  --telemetry PATH (export structured spans + latency
                  histograms as JSONL after the run; strictly out-of-band
                  — the canonical trace stays byte-identical)
+                 --trace-out PATH (merged coordinator+worker timeline as
+                 Chrome trace-event JSON, loadable in Perfetto; worker
+                 rings are drained over the wire at eval/snapshot/end
+                 barriers and the export is equally out-of-band — see
+                 docs/OBSERVABILITY.md)
   worker         TCP worker daemon: serve oracle rounds to a coordinator
                  --listen ADDR (default 127.0.0.1:7070)
                  --once (exit after the first coordinator session;
@@ -91,7 +97,15 @@ SUBCOMMANDS
   status         query live worker daemons for uptime, session/wire
                  counters and per-phase latency histograms (Stats frame,
                  docs/OBSERVABILITY.md)
-                 --at h1:p1,h2:p2 (default 127.0.0.1:7070)
+                 --at h1:p1,h2:p2 (default 127.0.0.1:7070; probed
+                 concurrently, reported in flag order)
+                 --json (machine-readable array, one entry per daemon)
+  trace          critical-path report over a --trace-out export:
+                 per-round blame (compute / queue-wait / wire — the
+                 partition pinned in docs/OBSERVABILITY.md), per-rank
+                 step p50/p99, top-K slowest rounds with the blocking
+                 rank named, staleness-window occupancy
+                 hosgd trace PATH [--top K]
   sweep          declarative experiment plan: expand axes, run in
                  parallel, resume, emit a Pareto tradeoff report
                  --plan FILE.json (see README \"Sweeps & Pareto reports\")
@@ -103,6 +117,10 @@ SUBCOMMANDS
                  --telemetry DIR (per-run telemetry JSONL plus round
                  p50/p99 and wait-fraction columns in the manifest and
                  Pareto report)
+                 --trace-out DIR (per-run Chrome trace timelines named
+                 RUN.trace.json, plus per-round blame-fraction columns
+                 — compute/queue/wire — in the manifest and Pareto
+                 report)
   fig2           Fig. 2 series (5 methods) --dataset D | --all  --iters N
   fig1           Fig. 1 + Tables 2/3 (attack) --iters N --clf-iters N
                  --dump-images --clf-checkpoint PATH (frozen classifier
@@ -180,12 +198,47 @@ fn main() -> Result<()> {
         }
         "status" => {
             let at = args.get_str("at", "127.0.0.1:7070");
+            let as_json = args.has("json");
             args.finish()?;
-            for addr in at.split(',').filter(|s| !s.is_empty()) {
-                let report = hosgd::transport::query_stats(addr)
-                    .map_err(|e| e.context(format!("querying worker daemon {addr}")))?;
-                print_status(addr, &report);
+            let addrs: Vec<String> =
+                at.split(',').filter(|s| !s.is_empty()).map(String::from).collect();
+            // probe all daemons concurrently; report strictly in flag
+            // order so the output is deterministic regardless of which
+            // daemon answers first
+            let mut reports: Vec<Result<StatsReport>> = Vec::with_capacity(addrs.len());
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = addrs
+                    .iter()
+                    .map(|addr| scope.spawn(move || hosgd::transport::query_stats(addr)))
+                    .collect();
+                for h in handles {
+                    reports.push(match h.join() {
+                        Ok(r) => r,
+                        Err(_) => Err(anyhow::anyhow!("status probe thread panicked")),
+                    });
+                }
+            });
+            let mut entries = Vec::with_capacity(addrs.len());
+            for (addr, rep) in addrs.iter().zip(reports) {
+                let report =
+                    rep.map_err(|e| e.context(format!("querying worker daemon {addr}")))?;
+                if as_json {
+                    entries.push(status_json(addr, &report));
+                } else {
+                    print_status(addr, &report);
+                }
             }
+            if as_json {
+                println!("{}", Json::Arr(entries).pretty());
+            }
+        }
+        "trace" => {
+            let top = args.get::<usize>("top", 10)?;
+            args.finish()?;
+            let Some(path) = args.positional.get(1) else {
+                bail!("trace needs a timeline file: hosgd trace PATH (from train --trace-out)");
+            };
+            cmd_trace(path, top)?;
         }
         "fig2" => {
             let iters = args.get::<u64>("iters", 400)?;
@@ -447,6 +500,7 @@ fn cmd_train(
     let stream_csv = args.get_opt::<String>("stream-csv")?;
     let stream_jsonl = args.get_opt::<String>("stream-jsonl")?;
     let telemetry_path = args.get_opt::<String>("telemetry")?;
+    let trace_out = args.get_opt::<String>("trace-out")?;
     args.finish()?;
     let be = open_backend(cfg.backend, artifacts, cfg.threads, cfg.compute)?;
     let model = be.model(&cfg.dataset)?;
@@ -473,11 +527,16 @@ fn cmd_train(
     if let Some(path) = &stream_jsonl {
         session.add_observer(JsonlSink::create(path)?);
     }
-    // out-of-band observability: attaching (or not) the recorder leaves
-    // the canonical trace byte-identical
-    let recorder = telemetry_path.as_ref().map(|_| Recorder::enabled());
+    // out-of-band observability: attaching (or not) the recorder — and
+    // arming (or not) the worker-side trace drain — leaves the canonical
+    // trace byte-identical
+    let recorder =
+        (telemetry_path.is_some() || trace_out.is_some()).then(Recorder::enabled);
     if let Some(rec) = &recorder {
         session.set_telemetry(rec.clone());
+    }
+    if trace_out.is_some() {
+        session.set_trace(true);
     }
 
     let end = stop_at.map_or(cfg.iters, |s| s.min(cfg.iters));
@@ -493,6 +552,9 @@ fn cmd_train(
         if let (Some(rec), Some(path)) = (&recorder, &telemetry_path) {
             export_telemetry(rec, path, &run_label)?;
         }
+        if let (Some(rec), Some(path)) = (&recorder, &trace_out) {
+            export_trace(&mut session, rec, path, &run_label)?;
+        }
         println!(
             "paused at iteration {}/{}; run state written to {ckpt_path}",
             session.iter(),
@@ -504,6 +566,15 @@ fn cmd_train(
     if cfg.checkpoint_every > 0 || ckpt_flag.is_some() {
         session.snapshot()?.save(&ckpt_path)?;
     }
+    // telemetry JSONL reads the ring non-destructively; the trace export
+    // drains it — so JSONL first, then the timeline, then the outcome
+    // (which consumes the session)
+    if let (Some(rec), Some(path)) = (&recorder, &telemetry_path) {
+        export_telemetry(rec, path, &run_label)?;
+    }
+    if let (Some(rec), Some(path)) = (&recorder, &trace_out) {
+        export_trace(&mut session, rec, path, &run_label)?;
+    }
     let out = session.into_outcome()?;
     print_trace_summary(&out.trace);
     out.trace.write_csv(format!("{base}.csv"))?;
@@ -511,9 +582,6 @@ fn cmd_train(
     if let Some(path) = canonical {
         out.trace.write_json_canonical(&path)?;
         println!("wrote canonical trace {path}");
-    }
-    if let (Some(rec), Some(path)) = (&recorder, &telemetry_path) {
-        export_telemetry(rec, path, &run_label)?;
     }
     println!("wrote {base}.csv");
     Ok(())
@@ -534,6 +602,182 @@ fn export_telemetry(rec: &Recorder, path: &str, label: &str) -> Result<()> {
         s.wait_frac * 100.0
     );
     Ok(())
+}
+
+/// Export the merged coordinator+worker timeline as Chrome trace-event
+/// JSON (`hosgd train --trace-out PATH`). Destructive on both rings
+/// (the session's drained-span accumulator and the recorder's event
+/// ring), so it runs after the JSONL telemetry export.
+fn export_trace(
+    session: &mut Session<'_>,
+    rec: &Recorder,
+    path: &str,
+    label: &str,
+) -> Result<()> {
+    let rings = session.take_trace()?;
+    let (events, _dropped) = rec.drain_events();
+    std::fs::write(path, chrome_trace_json(&events, &rings, label))?;
+    let spans: usize = rings.iter().map(|r| r.spans.len()).sum();
+    println!(
+        "trace: {} coordinator event(s), {} worker span(s) from {} ring(s); wrote {path} \
+         (inspect with `hosgd trace {path}` or load in Perfetto)",
+        events.len(),
+        spans,
+        rings.len()
+    );
+    Ok(())
+}
+
+/// `hosgd trace PATH` — parse a `--trace-out` export back into round and
+/// step spans and print the critical-path report. The blame components
+/// partition each round exactly (see `telemetry::trace::RoundBlame` and
+/// docs/OBSERVABILITY.md), so the split always sums to 100%.
+fn cmd_trace(path: &str, top: usize) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+    let doc = Json::parse(&text)?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{path}: traceEvents is not an array"))?;
+    // the export writes ts/dur in microseconds; the analyzer works in ns
+    let ns = |ev: &Json, key: &str| -> Option<u64> {
+        ev.get(key).and_then(Json::as_f64).map(|us| (us * 1000.0).round().max(0.0) as u64)
+    };
+    let arg_u64 = |ev: &Json, key: &str| -> Option<u64> {
+        ev.get("args").and_then(|a| a.get(key)).and_then(Json::as_f64).map(|x| x as u64)
+    };
+    let mut rounds: Vec<RoundSpan> = Vec::new();
+    let mut steps: Vec<TraceSpan> = Vec::new();
+    for ev in events {
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let (Some(t_ns), Some(dur_ns)) = (ns(ev, "ts"), ns(ev, "dur")) else { continue };
+        match ev.get("name").and_then(Json::as_str).unwrap_or("") {
+            "round" => {
+                let Some(t) = arg_u64(ev, "t") else { continue };
+                let occupancy = arg_u64(ev, "occ").unwrap_or(0);
+                rounds.push(RoundSpan { t, t_ns, dur_ns, occupancy });
+            }
+            "daemon.step" => steps.push(TraceSpan {
+                name: "daemon.step".into(),
+                t_ns,
+                dur_ns: Some(dur_ns),
+                rank: arg_u64(ev, "rank").map(|r| r as u32),
+                t: arg_u64(ev, "t"),
+            }),
+            _ => {}
+        }
+    }
+    if rounds.is_empty() {
+        bail!("{path} holds no round spans — was it written by train --trace-out?");
+    }
+    let other = |key: &str| doc.get("otherData").and_then(|o| o.get(key));
+    let dropped = other("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let label = other("label").and_then(Json::as_str).unwrap_or("?").to_string();
+    let rep = analyze(&rounds, &steps, dropped);
+
+    let total: u64 = rep.rounds.iter().map(|b| b.round_ns).sum();
+    let comp: u64 = rep.rounds.iter().map(|b| b.compute_ns).sum();
+    let queue: u64 = rep.rounds.iter().map(|b| b.queue_ns).sum();
+    let wire: u64 = rep.rounds.iter().map(|b| b.wire_ns).sum();
+    let pct = |x: u64| if total > 0 { 100.0 * x as f64 / total as f64 } else { 0.0 };
+    println!(
+        "trace {label}: {} round(s), {} worker span(s), {} unanchored, {} dropped",
+        rep.rounds.len(),
+        steps.len(),
+        rep.unanchored,
+        rep.dropped
+    );
+    println!(
+        "blame: compute {:.1}% | queue-wait {:.1}% | wire {:.1}% of {} round time",
+        pct(comp),
+        pct(queue),
+        pct(wire),
+        fmt_time(total as f64 / 1e9)
+    );
+
+    if !rep.per_rank.is_empty() {
+        println!();
+        println!("{:<6} {:>8} {:>10} {:>10} {:>10}", "RANK", "STEPS", "P50", "P99", "TOTAL");
+        for (rank, h) in &rep.per_rank {
+            println!(
+                "{:<6} {:>8} {:>10} {:>10} {:>10}",
+                rank,
+                h.count(),
+                fmt_time(h.quantile(0.5) as f64 / 1e9),
+                fmt_time(h.quantile(0.99) as f64 / 1e9),
+                fmt_time(h.sum() as f64 / 1e9),
+            );
+        }
+    }
+
+    let mut slowest: Vec<&RoundBlame> = rep.rounds.iter().collect();
+    slowest.sort_by(|a, b| b.round_ns.cmp(&a.round_ns).then(a.t.cmp(&b.t)));
+    let k = top.min(slowest.len());
+    println!();
+    println!("top {k} slowest round(s):");
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>9} {:>4}",
+        "ROUND", "TOTAL", "COMPUTE", "QUEUE", "WIRE", "BLOCKING", "OCC"
+    );
+    for b in &slowest[..k] {
+        println!(
+            "{:<8} {:>10} {:>10} {:>10} {:>10} {:>9} {:>4}",
+            b.t,
+            fmt_time(b.round_ns as f64 / 1e9),
+            fmt_time(b.compute_ns as f64 / 1e9),
+            fmt_time(b.queue_ns as f64 / 1e9),
+            fmt_time(b.wire_ns as f64 / 1e9),
+            format!("rank {}", b.blocking_rank),
+            b.occupancy,
+        );
+    }
+
+    // staleness-window occupancy overlay: how deep the run-ahead pipe
+    // actually sat, round by round
+    let max_occ = rep.rounds.iter().map(|b| b.occupancy).max().unwrap_or(0);
+    println!();
+    println!("staleness-window occupancy (in-flight rounds at issue time):");
+    for occ in 0..=max_occ {
+        let n = rep.rounds.iter().filter(|b| b.occupancy == occ).count();
+        let bar = "#".repeat((40.0 * n as f64 / rep.rounds.len() as f64).round() as usize);
+        println!("  occ={occ:<3} {n:>6} round(s) {bar}");
+    }
+    Ok(())
+}
+
+/// One daemon's [`StatsReport`] as a machine-readable object
+/// (`hosgd status --json`).
+fn status_json(addr: &str, r: &StatsReport) -> Json {
+    let hists: Vec<Json> = r
+        .hists
+        .iter()
+        .map(|h| {
+            let hist = Hist::from_parts(h.sum, &h.buckets);
+            Json::obj(vec![
+                ("name", Json::str(h.name.as_str())),
+                ("count", Json::num(h.count as f64)),
+                ("sum_ns", Json::num(h.sum as f64)),
+                ("p50_ns", Json::num(hist.quantile(0.5) as f64)),
+                ("p99_ns", Json::num(hist.quantile(0.99) as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("addr", Json::str(addr)),
+        ("uptime_ns", Json::num(r.uptime_ns as f64)),
+        ("active_sessions", Json::num(r.active_sessions as f64)),
+        ("sessions_served", Json::num(r.sessions_served as f64)),
+        ("rounds", Json::num(r.rounds as f64)),
+        ("steps", Json::num(r.steps as f64)),
+        ("wire_up_bytes", Json::num(r.wire_up_bytes as f64)),
+        ("wire_down_bytes", Json::num(r.wire_down_bytes as f64)),
+        ("retries", Json::num(r.retries as f64)),
+        ("errors", Json::num(r.errors as f64)),
+        ("hists", Json::Arr(hists)),
+    ])
 }
 
 /// Render one daemon's live `Frame::Stats` reply (`hosgd status`).
@@ -792,6 +1036,64 @@ fn cmd_bench(
                 0.0,
             ));
         }
+
+        // …and once more with the worker-side trace drain armed: every
+        // round records a (rank, t) span daemon-side and the ring comes
+        // home over the wire at the end-of-run barrier. The committed
+        // trajectory gates this within 2% of the bare pipelined case
+        // (BENCH_PR10.json; the drain is a barrier-point control-plane
+        // exchange, never per-round)
+        {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let opts = hosgd::transport::WorkerDaemonOpts {
+                artifacts: artifacts.into(),
+                threads,
+                once: false,
+                pipeline: true,
+            };
+            std::thread::spawn(move || {
+                let _ = hosgd::transport::serve(listener, &opts);
+            });
+            let mut cfg = TrainConfig {
+                dataset: dataset.to_string(),
+                method: Method::ZoSgd,
+                iters: daemon_iters,
+                workers: 4,
+                eval_every: 0,
+                record_every: 1,
+                threads,
+                compute,
+                ..Default::default()
+            };
+            cfg.transport.workers_at = vec![addr];
+            let data = make_data(&cfg)?;
+            rows.push((
+                bench(
+                    &format!("trace_drain_overhead pipelined ({dataset} m=4 N={daemon_iters})"),
+                    warm(1),
+                    reps(5),
+                    || {
+                        let mut s = match Session::new(model.as_ref(), &data, &cfg) {
+                            Ok(s) => s,
+                            Err(e) => panic!("bench session: {e}"),
+                        };
+                        s.set_telemetry(Recorder::enabled());
+                        s.set_trace(true);
+                        if let Err(e) = s.run_to_end() {
+                            panic!("bench run: {e}");
+                        }
+                        let rings = match s.take_trace() {
+                            Ok(r) => r,
+                            Err(e) => panic!("bench drain: {e}"),
+                        };
+                        std::hint::black_box(rings.len());
+                    },
+                ),
+                daemon_iters as f64,
+                0.0,
+            ));
+        }
     }
 
     let results: Vec<BenchResult> = rows.iter().map(|(r, ..)| r.clone()).collect();
@@ -859,6 +1161,7 @@ fn preset_opts(
         resume: args.has("resume"),
         quiet: false,
         telemetry: args.get_opt::<String>("telemetry")?.map(PathBuf::from),
+        trace_out: args.get_opt::<String>("trace-out")?.map(PathBuf::from),
     })
 }
 

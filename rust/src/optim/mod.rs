@@ -41,6 +41,7 @@ use crate::config::{Method, StepSize, TrainConfig};
 use crate::metrics::ComputeCounters;
 use crate::pool::{Shards, WorkerPool};
 use crate::rng::{SeedRegistry, Xoshiro256};
+use crate::telemetry::trace::DrainedRing;
 use crate::telemetry::Recorder;
 use crate::transport::{Loopback, Round, RoundStatus, Transport};
 
@@ -344,6 +345,18 @@ impl<O: Oracle> World<O> {
     pub fn instrument(&mut self, rec: Recorder) {
         self.transport.instrument(rec.clone());
         self.pool.set_telemetry(rec);
+    }
+
+    /// Arm (or disarm) worker-side span collection on the fabric; see
+    /// [`Transport::set_trace`]. Out-of-band like [`World::instrument`].
+    pub fn set_trace(&mut self, on: bool) {
+        self.transport.set_trace(on);
+    }
+
+    /// Drain the fabric's worker-side span rings; see
+    /// [`Transport::drain_trace`]. Call only at a barrier point.
+    pub fn drain_trace(&mut self) -> Result<Vec<DrainedRing>> {
+        self.transport.drain_trace()
     }
 
     /// d — decision-variable dimension.

@@ -31,6 +31,7 @@ use crate::config::TrainConfig;
 use crate::coordinator::{make_data, run_fingerprint, Session};
 use crate::sweep::manifest::{Manifest, ManifestRow, ManifestWriter};
 use crate::sweep::plan::RunSpec;
+use crate::telemetry::trace;
 use crate::telemetry::Recorder;
 
 /// Executor knobs (everything outside the plan itself).
@@ -63,6 +64,12 @@ pub struct ExecOpts {
     /// (the default) records nothing — trajectories are byte-identical
     /// either way.
     pub telemetry: Option<PathBuf>,
+    /// arm the worker-side trace drain on every run and export one Chrome
+    /// trace-event timeline (`RUN.trace.json`) per run into this
+    /// directory; the run's blame split (compute/queue/wire fractions and
+    /// the per-rank blocking shares) is folded into its manifest row.
+    /// Out-of-band like `telemetry`.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ExecOpts {
@@ -77,6 +84,7 @@ impl Default for ExecOpts {
             resume: false,
             quiet: false,
             telemetry: None,
+            trace_out: None,
         }
     }
 }
@@ -173,9 +181,13 @@ fn run_one(
         .map_err(fabric)?;
     // out-of-band observability: the recorder watches the run without
     // feeding it, so instrumented trajectories stay byte-identical
-    let recorder = opts.telemetry.as_ref().map(|_| Recorder::enabled());
+    let recorder =
+        (opts.telemetry.is_some() || opts.trace_out.is_some()).then(Recorder::enabled);
     if let Some(rec) = &recorder {
         session.set_telemetry(rec.clone());
+    }
+    if opts.trace_out.is_some() {
+        session.set_trace(true);
     }
     session.run_to_end().with_context(|| format!("run {}", spec.label)).map_err(fabric)?;
     let trace = session.trace();
@@ -198,6 +210,43 @@ fn run_one(
         rec.export_to_path(&file, &spec.label)
             .with_context(|| format!("run {}: exporting telemetry", spec.label))
             .map_err(local)?;
+    }
+    if let (Some(rec), Some(dir)) = (&recorder, &opts.trace_out) {
+        // draining crosses the fabric, so a failure here blames the daemon
+        let rings = session
+            .take_trace()
+            .with_context(|| format!("run {}: draining trace rings", spec.label))
+            .map_err(fabric)?;
+        let (events, _dropped) = rec.drain_events();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("run {}: creating trace dir", spec.label))
+            .map_err(local)?;
+        let file = dir.join(format!("{}.trace.json", file_stem(&spec.label)));
+        std::fs::write(&file, trace::chrome_trace_json(&events, &rings, &spec.label))
+            .with_context(|| format!("run {}: writing trace timeline", spec.label))
+            .map_err(local)?;
+        // fold the blame split into the manifest row: the aggregate
+        // compute/queue/wire partition plus each rank's blocking share
+        let rounds = trace::extract_rounds(&events);
+        let spans: Vec<trace::TraceSpan> =
+            rings.iter().flat_map(|r| r.spans.iter().cloned()).collect();
+        let rep = trace::analyze(&rounds, &spans, 0);
+        let total: u64 = rep.rounds.iter().map(|b| b.round_ns).sum();
+        if total > 0 {
+            let frac = |f: fn(&trace::RoundBlame) -> u64| {
+                rep.rounds.iter().map(f).sum::<u64>() as f64 / total as f64
+            };
+            row.compute_frac = frac(|b| b.compute_ns);
+            row.queue_frac = frac(|b| b.queue_ns);
+            row.wire_frac = frac(|b| b.wire_ns);
+            let ranks = rep.per_rank.iter().map(|&(r, _)| r).max().map_or(0, |r| r as usize + 1);
+            let mut per = vec![0.0f64; ranks];
+            // only rounds with attributed compute name a blocking rank
+            for b in rep.rounds.iter().filter(|b| b.compute_ns > 0) {
+                per[b.blocking_rank as usize] += b.round_ns as f64 / total as f64;
+            }
+            row.rank_wait_frac = per;
+        }
     }
     Ok(row)
 }

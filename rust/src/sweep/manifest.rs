@@ -58,6 +58,18 @@ pub struct ManifestRow {
     pub round_p99_s: f64,
     /// telemetry: fraction of step time spent waiting on the fabric
     pub wait_frac: f64,
+    /// trace blame: fraction of summed round time attributed to worker
+    /// compute (0 when the sweep ran without `--trace-out`; wall-clock
+    /// derived, checksum-excluded like the other telemetry columns)
+    pub compute_frac: f64,
+    /// trace blame: queue-wait fraction (see `telemetry::trace::RoundBlame`)
+    pub queue_frac: f64,
+    /// trace blame: wire fraction (the partition remainder)
+    pub wire_frac: f64,
+    /// per-rank attribution: fraction of summed round time during which
+    /// this rank (by index) was the blocking rank — whose compute the
+    /// other ranks waited on. Empty without `--trace-out`.
+    pub rank_wait_frac: Vec<f64>,
 }
 
 impl ManifestRow {
@@ -92,6 +104,10 @@ impl ManifestRow {
             round_p50_s: 0.0,
             round_p99_s: 0.0,
             wait_frac: 0.0,
+            compute_frac: 0.0,
+            queue_frac: 0.0,
+            wire_frac: 0.0,
+            rank_wait_frac: Vec::new(),
         })
     }
 
@@ -159,6 +175,13 @@ impl ManifestRow {
             ("round_p50_s", Json::num(self.round_p50_s)),
             ("round_p99_s", Json::num(self.round_p99_s)),
             ("wait_frac", Json::num(self.wait_frac)),
+            ("compute_frac", Json::num(self.compute_frac)),
+            ("queue_frac", Json::num(self.queue_frac)),
+            ("wire_frac", Json::num(self.wire_frac)),
+            (
+                "rank_wait_frac",
+                Json::Arr(self.rank_wait_frac.iter().map(|&f| Json::num(f)).collect()),
+            ),
             ("checksum", Json::str(format!("{:016x}", self.checksum()))),
         ])
     }
@@ -207,6 +230,14 @@ impl ManifestRow {
             round_p50_s: v.get("round_p50_s").and_then(Json::as_f64).unwrap_or(0.0),
             round_p99_s: v.get("round_p99_s").and_then(Json::as_f64).unwrap_or(0.0),
             wait_frac: v.get("wait_frac").and_then(Json::as_f64).unwrap_or(0.0),
+            compute_frac: v.get("compute_frac").and_then(Json::as_f64).unwrap_or(0.0),
+            queue_frac: v.get("queue_frac").and_then(Json::as_f64).unwrap_or(0.0),
+            wire_frac: v.get("wire_frac").and_then(Json::as_f64).unwrap_or(0.0),
+            rank_wait_frac: v
+                .get("rank_wait_frac")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default(),
         };
         let stored = hex("checksum")?;
         if stored != row.checksum() {

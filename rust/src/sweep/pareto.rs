@@ -168,7 +168,7 @@ impl ParetoReport {
          scalars_per_worker,bytes_per_worker,fn_evals,grad_evals,norm_compute,on_frontier,\
          analytic_scalars_per_iter,measured_scalars_per_iter,comm_ratio,\
          analytic_norm_compute,measured_norm_compute,compute_ratio,\
-         round_p50_s,round_p99_s,wait_frac";
+         round_p50_s,round_p99_s,wait_frac,compute_frac,queue_frac,wire_frac,rank_wait_frac";
 
     /// CSV artifact: one row per run, objectives + frontier membership +
     /// theory deltas.
@@ -186,9 +186,16 @@ impl ParetoReport {
             let r = &e.row;
             // labels carry commas (`method=ho_sgd,tau=2`) — CSV-quote them
             let label = format!("\"{}\"", r.label.replace('"', "\"\""));
+            // per-rank blocking shares as a `;`-joined list (one CSV cell)
+            let rank_wait = r
+                .rank_wait_frac
+                .iter()
+                .map(|f| format!("{f:.4}"))
+                .collect::<Vec<_>>()
+                .join(";");
             out.push_str(&format!(
                 "{},{},{},{},{},{},{},{},{:.6},{:.6},{},{},{},{},{},{},{},{},{:.6e},{},\
-                 {:.6},{:.6},{:.4},{:.6e},{:.6e},{:.4},{:.6},{:.6},{:.4}\n",
+                 {:.6},{:.6},{:.4},{:.6e},{:.6e},{:.4},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{}\n",
                 label,
                 r.method,
                 r.dataset,
@@ -218,6 +225,10 @@ impl ParetoReport {
                 r.round_p50_s,
                 r.round_p99_s,
                 r.wait_frac,
+                r.compute_frac,
+                r.queue_frac,
+                r.wire_frac,
+                rank_wait,
             ));
         }
         std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))

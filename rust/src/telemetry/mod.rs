@@ -27,6 +27,7 @@
 //! The one wall-clock read site of the whole crate lives in [`clock`].
 
 pub mod clock;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -356,6 +357,25 @@ impl Recorder {
         }
     }
 
+    /// Take every retained ring event (chronological) out of the
+    /// recorder and reset the ring, returning the events together with
+    /// the number dropped since the previous drain. Histograms and
+    /// counters are untouched — they are cumulative by contract (the
+    /// daemon `Stats` frame and `summary()` keep reading them) while the
+    /// ring is the *drainable* half: the `TelemetryDrain` wire frame
+    /// ships exactly this snapshot to the coordinator. Empty on a
+    /// disabled recorder.
+    pub fn drain_events(&self) -> (Vec<Event>, u64) {
+        let Some(inner) = self.inner.as_deref() else { return (Vec::new(), 0) };
+        let mut ring = inner.ring.lock().unwrap();
+        let events = ring.ordered();
+        let dropped = ring.dropped;
+        ring.buf.clear();
+        ring.head = 0;
+        ring.dropped = 0;
+        (events, dropped)
+    }
+
     /// The per-run rollup (see [`Summary`]). Zeros on a disabled recorder.
     pub fn summary(&self) -> Summary {
         let Some(inner) = self.inner.as_deref() else { return Summary::default() };
@@ -480,7 +500,7 @@ fn event_line(ev: &Event) -> String {
 
 /// JSON number formatting for f64: finite shortest-round-trip, with the
 /// non-finite values JSON lacks mapped to null.
-fn fmt_f64(x: f64) -> String {
+pub(crate) fn fmt_f64(x: f64) -> String {
     if x.is_finite() {
         format!("{x}")
     } else {
@@ -490,7 +510,7 @@ fn fmt_f64(x: f64) -> String {
 
 /// Minimal JSON string escaping (all our names/labels are ASCII-ish; the
 /// control-character fallback keeps the output valid regardless).
-fn escape(s: &str) -> String {
+pub(crate) fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

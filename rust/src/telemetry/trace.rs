@@ -1,0 +1,451 @@
+//! Cross-process trace aggregation: one causally ordered timeline from
+//! many rings.
+//!
+//! PR 9 gave each process its own telemetry: the coordinator records
+//! `step`/`round`/`eval` spans into its ring, and every worker daemon
+//! records `daemon.step` spans into its own. This module merges them.
+//! The coordinator drains each daemon's ring over the wire (the
+//! `TelemetryDrain` frame, kind 15) at barrier points — eval, snapshot,
+//! end of run — and anchors every daemon span inside the coordinator's
+//! matching `round` span using the `(rank, t)` round id both sides
+//! already stamp on their spans. Anchoring is causal, not chronological:
+//! a daemon's clock never has to agree with the coordinator's, because
+//! each `(rank, t)` group of daemon spans is shifted so its earliest
+//! span starts where the coordinator's `round` span for that `t`
+//! starts, preserving the group's internal offsets. Loopback synthesizes
+//! the same spans from its virtual clock, so both fabrics produce
+//! structurally identical timelines.
+//!
+//! Two consumers sit on the merged timeline:
+//!
+//! * [`chrome_trace_json`] exports it in the Chrome trace-event format
+//!   (`train/sweep --trace-out PATH`), loadable in Perfetto or
+//!   `chrome://tracing`. Coordinator spans land on pid 0; worker spans
+//!   land on pid 1 with one thread row per rank.
+//! * [`analyze`] attributes each round's wall-clock to
+//!   compute / queue-wait / wire (`hosgd trace PATH`). The three
+//!   components are defined to partition the round span exactly — see
+//!   [`RoundBlame`] — so the blame split always sums to 100% of the
+//!   round, and docs/OBSERVABILITY.md pins the definitions.
+//!
+//! Like the rest of `telemetry`, this module depends on no other module
+//! in the crate and never touches the numeric path: draining is a
+//! control-plane exchange on an otherwise quiet connection, and the
+//! bit-identity matrix in `rust/tests/telemetry.rs` covers drain-on runs.
+
+use std::collections::BTreeMap;
+
+use super::{escape, fmt_f64, Attr, Event, Hist};
+
+/// One span (or instant event, when `dur_ns` is `None`) in an owned,
+/// wire-friendly form. Daemon rings are drained into these; the
+/// `TelemetryDrain` frame carries them verbatim. `rank` and `t` are the
+/// causal key: a span with both set can be anchored inside the
+/// coordinator's `round` span for that `t`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpan {
+    pub name: String,
+    /// Start time in the *originating* process's clock domain (ns).
+    pub t_ns: u64,
+    /// Duration in ns; `None` marks an instant event.
+    pub dur_ns: Option<u64>,
+    /// Worker rank this span belongs to, if any.
+    pub rank: Option<u32>,
+    /// Round id `t` this span belongs to, if any.
+    pub t: Option<u64>,
+}
+
+/// One drained ring: the spans a single source (a daemon connection, or
+/// the loopback fabric) handed back, plus how many events that ring
+/// dropped since the previous drain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainedRing {
+    pub source: String,
+    pub spans: Vec<TraceSpan>,
+    pub dropped: u64,
+}
+
+/// Convert a ring [`Event`] into an owned [`TraceSpan`], lifting the
+/// `rank`/`t` attributes into the causal key.
+pub fn span_of_event(ev: &Event) -> TraceSpan {
+    let mut rank = None;
+    let mut t = None;
+    for (k, v) in &ev.attrs {
+        match (*k, v) {
+            ("rank", Attr::U64(r)) => rank = Some(*r as u32),
+            ("t", Attr::U64(tt)) => t = Some(*tt),
+            _ => {}
+        }
+    }
+    TraceSpan { name: ev.name.to_string(), t_ns: ev.t_ns, dur_ns: ev.dur_ns, rank, t }
+}
+
+/// A coordinator-side `round` span in analyzer form: round id, start,
+/// duration, and the staleness-window occupancy stamped on the span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundSpan {
+    pub t: u64,
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    pub occupancy: u64,
+}
+
+/// Extract every `round` span (with its `t` and `occ` attrs) from a
+/// coordinator event ring, in ring order.
+pub fn extract_rounds(events: &[Event]) -> Vec<RoundSpan> {
+    let mut out = Vec::new();
+    for ev in events {
+        if ev.name != "round" {
+            continue;
+        }
+        let mut t = None;
+        let mut occ = 0u64;
+        for (k, v) in &ev.attrs {
+            match (*k, v) {
+                ("t", Attr::U64(tt)) => t = Some(*tt),
+                ("occ", Attr::U64(o)) => occ = *o,
+                _ => {}
+            }
+        }
+        if let (Some(t), Some(dur)) = (t, ev.dur_ns) {
+            out.push(RoundSpan { t, t_ns: ev.t_ns, dur_ns: dur, occupancy: occ });
+        }
+    }
+    out
+}
+
+/// Per-round critical-path attribution. The three components partition
+/// `round_ns` exactly (`compute + queue + wire == round`):
+///
+/// * `compute_ns` — the slowest rank's `daemon.step` time for this
+///   round (clamped to the round span). That rank is the *blocking
+///   rank*: the coordinator could not have finished the round sooner
+///   than its compute.
+/// * `queue_ns` — step time the other ranks spent that could not hide
+///   behind the blocking rank: `min(total step time − compute,
+///   round − compute)`. Under a fully parallel worker pool this is ~0;
+///   it grows when ranks serialize on shared threads (queue-wait).
+/// * `wire_ns` — the remainder `round − compute − queue`: framing,
+///   TCP transfer, and coordinator-side encode/absorb.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundBlame {
+    pub t: u64,
+    pub round_ns: u64,
+    pub compute_ns: u64,
+    pub queue_ns: u64,
+    pub wire_ns: u64,
+    /// The rank whose step time bounds the round from below.
+    pub blocking_rank: u32,
+    pub occupancy: u64,
+}
+
+/// The `hosgd trace` report: per-round blame, per-rank step histograms,
+/// and bookkeeping on what could not be attributed.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub rounds: Vec<RoundBlame>,
+    /// `daemon.step` durations per rank, as the repo's log2 histograms.
+    pub per_rank: Vec<(u32, Hist)>,
+    /// Daemon spans lacking a `(rank, t)` key or a matching round span.
+    pub unanchored: usize,
+    /// Ring events lost to overwrite before they could be drained.
+    pub dropped: u64,
+}
+
+/// Attribute each round's wall-clock. `rounds` are the coordinator's
+/// `round` spans; `steps` are the drained daemon spans. Rounds sharing a
+/// `t` (e.g. ZO-SVRG's surrogate + inner step) are folded into one
+/// blame row whose `round_ns` is their sum.
+pub fn analyze(rounds: &[RoundSpan], steps: &[TraceSpan], dropped: u64) -> TraceReport {
+    // round id -> (summed duration, max occupancy)
+    let mut by_t: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for r in rounds {
+        let e = by_t.entry(r.t).or_insert((0, 0));
+        e.0 += r.dur_ns;
+        e.1 = e.1.max(r.occupancy);
+    }
+
+    // (t -> rank -> summed step ns), per-rank histograms, unanchored count
+    let mut step_ns: BTreeMap<u64, BTreeMap<u32, u64>> = BTreeMap::new();
+    let mut per_rank: BTreeMap<u32, Hist> = BTreeMap::new();
+    let mut unanchored = 0usize;
+    for s in steps {
+        if s.name != "daemon.step" {
+            continue;
+        }
+        let (Some(rank), Some(t), Some(dur)) = (s.rank, s.t, s.dur_ns) else {
+            unanchored += 1;
+            continue;
+        };
+        if !by_t.contains_key(&t) {
+            unanchored += 1;
+            continue;
+        }
+        *step_ns.entry(t).or_default().entry(rank).or_insert(0) += dur;
+        per_rank.entry(rank).or_default().record(dur);
+    }
+
+    let mut out = Vec::with_capacity(by_t.len());
+    for (&t, &(round_ns, occupancy)) in &by_t {
+        let ranks = step_ns.get(&t);
+        let (mut compute_ns, mut blocking_rank, mut total) = (0u64, 0u32, 0u64);
+        if let Some(ranks) = ranks {
+            for (&rank, &ns) in ranks {
+                total += ns;
+                if ns > compute_ns {
+                    compute_ns = ns;
+                    blocking_rank = rank;
+                }
+            }
+        }
+        // clamp so the three components always partition the round span
+        let compute_ns = compute_ns.min(round_ns);
+        let queue_ns = total.saturating_sub(compute_ns).min(round_ns - compute_ns);
+        let wire_ns = round_ns - compute_ns - queue_ns;
+        out.push(RoundBlame { t, round_ns, compute_ns, queue_ns, wire_ns, blocking_rank, occupancy });
+    }
+    TraceReport {
+        rounds: out,
+        per_rank: per_rank.into_iter().collect(),
+        unanchored,
+        dropped,
+    }
+}
+
+fn push_args(out: &mut String, args: &[(&str, String)]) {
+    out.push_str(",\"args\":{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{}", escape(k), v));
+    }
+    out.push('}');
+}
+
+/// Render the merged timeline as Chrome trace-event JSON (docs:
+/// https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU —
+/// the subset Perfetto and `chrome://tracing` load). Timestamps are in
+/// microseconds, rebased so the earliest coordinator event sits at 0.
+/// Coordinator spans render on pid 0 / tid 0; anchored daemon spans on
+/// pid 1 with tid = rank. Daemon spans that cannot be anchored are
+/// dropped from the export (they are counted by [`analyze`]).
+pub fn chrome_trace_json(coord: &[Event], daemons: &[DrainedRing], label: &str) -> String {
+    let t0 = coord.iter().map(|e| e.t_ns).min().unwrap_or(0);
+    let us = |ns: u64| -> String { fmt_f64(ns.saturating_sub(t0) as f64 / 1000.0) };
+
+    // first `round` span start per round id: the anchor for daemon spans
+    let mut round_start: BTreeMap<u64, u64> = BTreeMap::new();
+    for r in extract_rounds(coord) {
+        round_start.entry(r.t).or_insert(r.t_ns);
+    }
+
+    let mut ev_json: Vec<String> = Vec::new();
+    ev_json.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+         \"args\":{\"name\":\"coordinator\"}}"
+            .to_string(),
+    );
+    ev_json.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"workers\"}}"
+            .to_string(),
+    );
+
+    for ev in coord {
+        let mut line = format!("{{\"name\":\"{}\"", escape(ev.name));
+        match ev.dur_ns {
+            Some(d) => line.push_str(&format!(
+                ",\"ph\":\"X\",\"ts\":{},\"dur\":{}",
+                us(ev.t_ns),
+                fmt_f64(d as f64 / 1000.0)
+            )),
+            None => line.push_str(&format!(",\"ph\":\"i\",\"s\":\"g\",\"ts\":{}", us(ev.t_ns))),
+        }
+        line.push_str(",\"pid\":0,\"tid\":0");
+        let args: Vec<(&str, String)> = ev
+            .attrs
+            .iter()
+            .map(|(k, v)| {
+                let rendered = match v {
+                    Attr::U64(x) => x.to_string(),
+                    Attr::F64(x) => fmt_f64(*x),
+                    Attr::Str(s) => format!("\"{}\"", escape(s)),
+                };
+                (*k, rendered)
+            })
+            .collect();
+        if !args.is_empty() {
+            push_args(&mut line, &args);
+        }
+        line.push('}');
+        ev_json.push(line);
+    }
+
+    // anchor each (rank, t) daemon group at its round span's start,
+    // preserving the group's internal offsets
+    let mut groups: BTreeMap<(u32, u64), Vec<&TraceSpan>> = BTreeMap::new();
+    for ring in daemons {
+        for s in &ring.spans {
+            if let (Some(rank), Some(t)) = (s.rank, s.t) {
+                if round_start.contains_key(&t) {
+                    groups.entry((rank, t)).or_default().push(s);
+                }
+            }
+        }
+    }
+    for ((rank, t), spans) in &groups {
+        let anchor = round_start[t];
+        let base = spans.iter().map(|s| s.t_ns).min().unwrap_or(0);
+        for s in spans {
+            let ts = anchor + (s.t_ns - base);
+            let mut line = format!("{{\"name\":\"{}\"", escape(&s.name));
+            match s.dur_ns {
+                Some(d) => line.push_str(&format!(
+                    ",\"ph\":\"X\",\"ts\":{},\"dur\":{}",
+                    us(ts),
+                    fmt_f64(d as f64 / 1000.0)
+                )),
+                None => line.push_str(&format!(",\"ph\":\"i\",\"s\":\"t\",\"ts\":{}", us(ts))),
+            }
+            line.push_str(&format!(",\"pid\":1,\"tid\":{rank}"));
+            push_args(&mut line, &[("rank", rank.to_string()), ("t", t.to_string())]);
+            line.push('}');
+            ev_json.push(line);
+        }
+    }
+
+    let dropped: u64 = daemons.iter().map(|r| r.dropped).sum();
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[\n");
+    for (i, line) in ev_json.iter().enumerate() {
+        out.push_str(line);
+        if i + 1 < ev_json.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"label\":\"{}\",\"dropped\":{}}}}}\n",
+        escape(label),
+        dropped
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_ev(t: u64, t_ns: u64, dur: u64, occ: u64) -> Event {
+        Event {
+            t_ns,
+            dur_ns: Some(dur),
+            name: "round",
+            attrs: vec![("t", Attr::U64(t)), ("occ", Attr::U64(occ))],
+        }
+    }
+
+    fn step(rank: u32, t: u64, t_ns: u64, dur: u64) -> TraceSpan {
+        TraceSpan {
+            name: "daemon.step".into(),
+            t_ns,
+            dur_ns: Some(dur),
+            rank: Some(rank),
+            t: Some(t),
+        }
+    }
+
+    #[test]
+    fn blame_partitions_the_round_exactly() {
+        let rounds = [RoundSpan { t: 0, t_ns: 100, dur_ns: 1000, occupancy: 2 }];
+        let steps = [step(0, 0, 5, 600), step(1, 0, 7, 300)];
+        let rep = analyze(&rounds, &steps, 0);
+        assert_eq!(rep.rounds.len(), 1);
+        let b = rep.rounds[0];
+        assert_eq!(b.compute_ns, 600);
+        assert_eq!(b.blocking_rank, 0);
+        assert_eq!(b.queue_ns, 300);
+        assert_eq!(b.wire_ns, 100);
+        assert_eq!(b.compute_ns + b.queue_ns + b.wire_ns, b.round_ns);
+        assert_eq!(b.occupancy, 2);
+        assert_eq!(rep.per_rank.len(), 2);
+    }
+
+    #[test]
+    fn blame_clamps_when_steps_exceed_the_round() {
+        // daemon clock says compute took longer than the whole round:
+        // clamp so the partition still holds
+        let rounds = [RoundSpan { t: 3, t_ns: 0, dur_ns: 500, occupancy: 0 }];
+        let steps = [step(0, 3, 0, 900), step(1, 3, 0, 400)];
+        let b = analyze(&rounds, &steps, 0).rounds[0];
+        assert_eq!(b.compute_ns + b.queue_ns + b.wire_ns, 500);
+        assert_eq!(b.compute_ns, 500);
+        assert_eq!(b.blocking_rank, 0);
+    }
+
+    #[test]
+    fn unanchored_spans_are_counted_not_attributed() {
+        let rounds = [RoundSpan { t: 0, t_ns: 0, dur_ns: 100, occupancy: 0 }];
+        let steps = [
+            step(0, 0, 0, 50),
+            step(0, 9, 0, 50), // no round with t = 9
+            TraceSpan { name: "daemon.step".into(), t_ns: 0, dur_ns: Some(1), rank: None, t: None },
+        ];
+        let rep = analyze(&rounds, &steps, 7);
+        assert_eq!(rep.unanchored, 2);
+        assert_eq!(rep.dropped, 7);
+        assert_eq!(rep.rounds[0].compute_ns, 50);
+    }
+
+    #[test]
+    fn rounds_sharing_a_t_fold_into_one_row() {
+        // ZO-SVRG issues two transport rounds at the same t
+        let rounds = [
+            RoundSpan { t: 4, t_ns: 0, dur_ns: 300, occupancy: 0 },
+            RoundSpan { t: 4, t_ns: 400, dur_ns: 200, occupancy: 1 },
+        ];
+        let steps = [step(0, 4, 0, 100), step(0, 4, 150, 100)];
+        let rep = analyze(&rounds, &steps, 0);
+        assert_eq!(rep.rounds.len(), 1);
+        let b = rep.rounds[0];
+        assert_eq!(b.round_ns, 500);
+        assert_eq!(b.compute_ns, 200); // both steps are rank 0: summed
+        assert_eq!(b.occupancy, 1);
+    }
+
+    #[test]
+    fn chrome_export_anchors_daemon_spans_inside_their_round() {
+        let coord = [round_ev(0, 1_000_000, 500_000, 1)];
+        let daemons = [DrainedRing {
+            source: "w0".into(),
+            spans: vec![step(0, 0, 77_000, 200_000), step(1, 0, 99_000, 100_000)],
+            dropped: 3,
+        }];
+        let json = chrome_trace_json(&coord, &daemons, "test");
+        // round rebases to ts 0; rank-0 group anchors at the round start
+        assert!(json.contains("\"name\":\"round\",\"ph\":\"X\",\"ts\":0,\"dur\":500"));
+        assert!(json.contains("\"name\":\"daemon.step\""));
+        assert!(json.contains("\"pid\":1,\"tid\":0,\"args\":{\"rank\":0,\"t\":0}"));
+        assert!(json.contains("\"pid\":1,\"tid\":1,\"args\":{\"rank\":1,\"t\":0}"));
+        assert!(json.contains("\"dropped\":3"));
+        // both single-span groups anchor exactly at the round start
+        assert_eq!(json.matches("\"ts\":0,\"dur\":200").count(), 1);
+        assert_eq!(json.matches("\"ts\":0,\"dur\":100").count(), 1);
+    }
+
+    #[test]
+    fn span_of_event_lifts_the_causal_key() {
+        let ev = Event {
+            t_ns: 10,
+            dur_ns: Some(5),
+            name: "daemon.step",
+            attrs: vec![("rank", Attr::U64(3)), ("t", Attr::U64(17))],
+        };
+        let s = span_of_event(&ev);
+        assert_eq!(s.rank, Some(3));
+        assert_eq!(s.t, Some(17));
+        assert_eq!(s.dur_ns, Some(5));
+        assert_eq!(s.name, "daemon.step");
+    }
+}

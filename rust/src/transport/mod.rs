@@ -52,6 +52,7 @@ use crate::optim::{
 };
 use crate::pool::WorkerPool;
 use crate::rng::hash_u64s;
+use crate::telemetry::trace::{DrainedRing, TraceSpan};
 use crate::telemetry::{Attr, Recorder};
 
 pub use tcp::{query_stats, serve, TcpTransport, WorkerDaemonOpts};
@@ -197,6 +198,25 @@ pub trait Transport<O: Oracle> {
     /// change a canonical trace by a single bit (`rust/tests/telemetry.rs`
     /// pins this). The default fabric ignores it.
     fn instrument(&mut self, _rec: Recorder) {}
+
+    /// Switch the cross-process trace plane on or off. While on, the
+    /// fabric retains (TCP: drained from each daemon's ring over
+    /// [`wire::telemetry_drain_len`]-sized `TelemetryDrain` frames) or
+    /// synthesizes (loopback: from the virtual clock) per-`(rank, t)`
+    /// worker spans for [`Transport::drain_trace`] to hand back. Off by
+    /// default, and out-of-band under the same contract as
+    /// [`Transport::instrument`]: toggling it must never change a
+    /// canonical trace by a single bit.
+    fn set_trace(&mut self, _on: bool) {}
+
+    /// Take the worker-side trace spans accumulated since the last
+    /// drain, one [`DrainedRing`] per source (per daemon connection on
+    /// TCP). The session calls this only at barrier points — no
+    /// data-plane replies may be in flight, so the drain exchange cannot
+    /// interleave with round traffic. Empty when the trace plane is off.
+    fn drain_trace(&mut self) -> Result<Vec<DrainedRing>> {
+        Ok(Vec::new())
+    }
 }
 
 /// Mean of per-rank f32 losses accumulated in rank order — one copy shared
@@ -400,6 +420,12 @@ pub struct Loopback {
     pending: std::collections::VecDeque<f64>,
     /// out-of-band observability handle (disabled unless instrumented)
     telemetry: Recorder,
+    /// cross-process trace plane: when on, synthesize per-`(rank, t)`
+    /// `daemon.step` spans from the virtual clock so loopback timelines
+    /// are structurally identical to TCP ones
+    trace_on: bool,
+    /// synthesized worker spans awaiting [`Transport::drain_trace`]
+    trace: Vec<TraceSpan>,
 }
 
 impl Loopback {
@@ -457,7 +483,7 @@ impl Loopback {
     /// injected latency for this round; the caller feeds those into the
     /// virtual-time model ([`Loopback::advance`]).
     fn account(
-        &self,
+        &mut self,
         comm: &mut CommSim,
         m: usize,
         t: u64,
@@ -493,7 +519,21 @@ impl Loopback {
             for _ in 1..attempts {
                 comm.wire_retry();
             }
-            lats.push(self.latency(r) * attempts as f64);
+            let lat = self.latency(r) * attempts as f64;
+            // trace plane: loopback "workers" execute in modelled time, so
+            // synthesize each rank's step span from the virtual clock —
+            // phase 2 is the broadcast-only locals push, the one accounted
+            // round on which no worker step runs
+            if self.trace_on && phase != 2 {
+                self.trace.push(TraceSpan {
+                    name: "daemon.step".into(),
+                    t_ns: (self.vclock.max(0.0) * 1e9) as u64,
+                    dur_ns: Some((lat.max(0.0) * 1e9) as u64),
+                    rank: Some(r as u32),
+                    t: Some(t),
+                });
+            }
+            lats.push(lat);
         }
         Ok(lats)
     }
@@ -666,9 +706,16 @@ impl<O: Oracle> Transport<O> for Loopback {
             }
         }
         if span_t0.is_some() {
-            self.telemetry.span("round", span_t0, vec![("t", Attr::U64(round_t))]);
-            // modelled-time staleness window occupancy after this round
-            self.telemetry.observe("staleness.occupancy", self.pending.len() as u64);
+            // modelled-time staleness window occupancy after this round,
+            // stamped on the span for the trace overlay and sampled into
+            // the depth histogram
+            let occ = self.pending.len() as u64;
+            self.telemetry.span(
+                "round",
+                span_t0,
+                vec![("t", Attr::U64(round_t)), ("occ", Attr::U64(occ))],
+            );
+            self.telemetry.observe("staleness.occupancy", occ);
         }
         Ok(RoundStatus::Done)
     }
@@ -680,5 +727,20 @@ impl<O: Oracle> Transport<O> for Loopback {
 
     fn instrument(&mut self, rec: Recorder) {
         self.telemetry = rec;
+    }
+
+    fn set_trace(&mut self, on: bool) {
+        self.trace_on = on;
+    }
+
+    fn drain_trace(&mut self) -> Result<Vec<DrainedRing>> {
+        if self.trace.is_empty() {
+            return Ok(Vec::new());
+        }
+        Ok(vec![DrainedRing {
+            source: "loopback".into(),
+            spans: std::mem::take(&mut self.trace),
+            dropped: 0,
+        }])
     }
 }

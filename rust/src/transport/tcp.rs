@@ -52,6 +52,7 @@ use crate::optim::{
 };
 use crate::pool::{resolve_threads, Shards, WorkerPool};
 use crate::rng::SeedRegistry;
+use crate::telemetry::trace::{span_of_event, DrainedRing};
 use crate::telemetry::{clock, Attr, Recorder};
 use crate::util::json::Json;
 
@@ -143,6 +144,10 @@ pub struct TcpTransport {
     /// [`Transport::instrument`]). Feeds only telemetry artifacts —
     /// never the exchange itself
     telemetry: Recorder,
+    /// trace plane on? When set, [`Transport::drain_trace`] asks every
+    /// daemon for its span ring over `TelemetryDrain` frames (barrier
+    /// points only — the exchange itself is untouched)
+    trace_on: bool,
 }
 
 impl TcpTransport {
@@ -245,6 +250,7 @@ impl TcpTransport {
             seeded_locals: false,
             seeded_residuals: false,
             telemetry: Recorder::disabled(),
+            trace_on: false,
         })
     }
 
@@ -522,9 +528,16 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             while self.inflight.len() > self.window {
                 self.absorb_oldest(comm)?;
             }
-            // staleness-window occupancy after this round shipped
-            self.telemetry.observe("tcp.inflight", self.inflight.len() as u64);
-            self.telemetry.span("round", span_t0, vec![("t", Attr::U64(t))]);
+            // staleness-window occupancy after this round shipped,
+            // stamped on the span for the trace overlay and sampled into
+            // the depth histogram
+            let occ = self.inflight.len() as u64;
+            self.telemetry.observe("tcp.inflight", occ);
+            self.telemetry.span(
+                "round",
+                span_t0,
+                vec![("t", Attr::U64(t)), ("occ", Attr::U64(occ))],
+            );
             return Ok(RoundStatus::Deferred);
         }
 
@@ -727,7 +740,11 @@ impl<O: Oracle> Transport<O> for TcpTransport {
             }
             _ => {}
         }
-        self.telemetry.span("round", span_t0, vec![("t", Attr::U64(t))]);
+        self.telemetry.span(
+            "round",
+            span_t0,
+            vec![("t", Attr::U64(t)), ("occ", Attr::U64(0))],
+        );
         Ok(RoundStatus::Done)
     }
 
@@ -741,6 +758,45 @@ impl<O: Oracle> Transport<O> for TcpTransport {
 
     fn instrument(&mut self, rec: Recorder) {
         self.telemetry = rec;
+    }
+
+    fn set_trace(&mut self, on: bool) {
+        self.trace_on = on;
+    }
+
+    fn drain_trace(&mut self) -> Result<Vec<DrainedRing>> {
+        if !self.trace_on {
+            return Ok(Vec::new());
+        }
+        if !self.inflight.is_empty() {
+            bail!(
+                "telemetry drain requested with {} data-plane round(s) in flight \
+                 (drain the pipeline first)",
+                self.inflight.len()
+            );
+        }
+        let last = self.last_ok;
+        let mut out = Vec::with_capacity(self.conns.len());
+        for c in &mut self.conns {
+            // the empty drain is the request; the daemon's ring comes back
+            // in the same frame kind. Unaccounted control plane, like the
+            // handshake and FetchState — tracing must not perturb the
+            // wire counters it helps explain.
+            write_frame(&mut c.w, &Frame::TelemetryDrain { spans: Vec::new(), dropped: 0 })?;
+            c.w.flush()?;
+            match c.read(last)?.1 {
+                Frame::TelemetryDrain { spans, dropped } => {
+                    out.push(DrainedRing { source: c.addr.clone(), spans, dropped });
+                }
+                Frame::Error { rank, message } => {
+                    bail!("worker {} rank {rank} failed: {message}", c.addr)
+                }
+                other => {
+                    bail!("worker {} answered the telemetry drain with {other:?}", c.addr)
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -1077,6 +1133,10 @@ fn handle_session(
     // batching a single hosted rank would only add latency — fall back to
     // execute-as-it-arrives there even with the pipeline enabled
     let batch_mode = opts.pipeline && states.len() > 1;
+    // the ring is per-*session* for the trace plane: round ids restart at
+    // 0 each session, so stale spans from an earlier session would anchor
+    // onto the wrong rounds. Histograms/counters stay cumulative.
+    let _ = stats.rec.drain_events();
     eprintln!(
         "# worker: serving rank(s) {ranks:?} of m = {m} on {:?} (d = {d}{})",
         cfg.dataset,
@@ -1115,9 +1175,16 @@ fn handle_session(
             Frame::Step { rank, t, op } => {
                 if !batch_mode {
                     let st = lookup(&index, &mut states, rank)?;
-                    let step_t0 = clock::now_ns();
+                    // a span, not a bare observe: the ring copy carries the
+                    // (rank, t) causal key the coordinator's trace drain
+                    // anchors on, while the histogram feed is unchanged
+                    let step_t0 = stats.rec.start();
                     let reply = execute_step(st, rank, t, op, &acfg, cfg.seed);
-                    stats.rec.observe("daemon.step", clock::now_ns().saturating_sub(step_t0));
+                    stats.rec.span(
+                        "daemon.step",
+                        step_t0,
+                        vec![("rank", Attr::U64(rank as u64)), ("t", Attr::U64(t))],
+                    );
                     DaemonStats::add(&stats.steps, 1);
                     DaemonStats::add(&stats.rounds, 1);
                     let frame = match reply {
@@ -1176,9 +1243,13 @@ fn handle_session(
                         // index, and k is this job's scatter index
                         let st = unsafe { st_sh.get(i) };
                         let rep = unsafe { rep_sh.get(k) };
-                        let step_t0 = clock::now_ns();
+                        let step_t0 = rec.start();
                         *rep = Some(execute_step(st, rank, t, op, acfg_ref, seed));
-                        rec.observe("daemon.step", clock::now_ns().saturating_sub(step_t0));
+                        rec.span(
+                            "daemon.step",
+                            step_t0,
+                            vec![("rank", Attr::U64(rank as u64)), ("t", Attr::U64(t))],
+                        );
                     });
                 }
                 stats.rec.observe("daemon.scatter", clock::now_ns().saturating_sub(scatter_t0));
@@ -1210,6 +1281,19 @@ fn handle_session(
                     Slot::Residual => st.residual.clone(),
                 };
                 let n = write_frame(&mut w, &Frame::Vector { rank, t: 0, loss: 0.0, data })?;
+                DaemonStats::add(&stats.wire_up, n);
+                w.flush()?;
+            }
+            Frame::TelemetryDrain { .. } => {
+                // trace plane: hand the span ring (converted to owned,
+                // (rank, t)-keyed spans) back to the coordinator and reset
+                // it. Arrives only at barrier points by contract.
+                if !batch.is_empty() {
+                    bail!("telemetry drain arrived mid-round (pipeline desync)");
+                }
+                let (events, dropped) = stats.rec.drain_events();
+                let spans = events.iter().map(span_of_event).collect();
+                let n = write_frame(&mut w, &Frame::TelemetryDrain { spans, dropped })?;
                 DaemonStats::add(&stats.wire_up, n);
                 w.flush()?;
             }

@@ -24,7 +24,12 @@
 //!   (QSGD's Elias-γ-coded quantized gradient);
 //! * introspection — [`Frame::StatsRequest`] / [`Frame::Stats`]: a
 //!   session-free ops query answered from the daemon's live counters
-//!   (`hosgd status`), never touching run state.
+//!   (`hosgd status`), never touching run state;
+//! * trace plane — [`Frame::TelemetryDrain`]: the coordinator drains a
+//!   daemon's telemetry span ring at barrier points (eval / snapshot /
+//!   end of run); the same frame kind is the request (empty) and the
+//!   reply (the drained spans). Pure control plane, excluded from
+//!   `CommStats` accounting like [`Frame::FetchState`].
 //!
 //! Every variant has a closed-form encoded size (`*_len` below); the
 //! `Loopback` fabric accounts those sizes without materializing bytes, the
@@ -36,6 +41,8 @@
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
+
+use crate::telemetry::trace::TraceSpan;
 
 /// Protocol magic exchanged in [`Frame::Hello`] / [`Frame::HelloAck`].
 pub const PROTO: &[u8; 8] = b"HOSGDW1\0";
@@ -49,7 +56,11 @@ pub const PROTO: &[u8; 8] = b"HOSGDW1\0";
 /// v3: the introspection pair `StatsRequest` / `Stats` was added — an
 /// ops client can ask a live daemon for its counters and per-phase
 /// histograms without joining a session.
-pub const VERSION: u32 = 3;
+///
+/// v4: `TelemetryDrain` was added — the coordinator drains a daemon's
+/// telemetry span ring mid-session at barrier points, feeding the merged
+/// cross-process timeline (`--trace-out`, `hosgd trace`).
+pub const VERSION: u32 = 4;
 
 /// Upper bound on a frame body — a decode guard against garbage length
 /// prefixes, far above any real payload (d ≈ 10⁵ ⇒ ~400 KB frames).
@@ -152,6 +163,14 @@ pub enum Frame {
     StatsRequest,
     /// daemon→ops: the introspection snapshot (see [`StatsReport`])
     Stats(StatsReport),
+    /// the trace plane, both directions on an established session
+    /// connection: coordinator→worker an *empty* drain (the request),
+    /// worker→coordinator the spans taken out of the daemon's telemetry
+    /// ring since the last drain plus the ring's overwrite count. Sent
+    /// only at barrier points (eval / snapshot / end of run) when no
+    /// data-plane replies are in flight, and never accounted in
+    /// `CommStats` — tracing must not perturb what it measures
+    TelemetryDrain { spans: Vec<TraceSpan>, dropped: u64 },
 }
 
 /// The payload of [`Frame::Stats`]: a daemon's cumulative counters since
@@ -250,6 +269,19 @@ pub fn stats_len(report: &StatsReport) -> u64 {
     n
 }
 
+/// Encoded size of a [`Frame::TelemetryDrain`] carrying `spans`. Each
+/// span is a fixed 36-byte prefix (`t_ns`, `dur_ns`, `rank`, `t`, name
+/// length) plus the name bytes; `u64::MAX` / `u32::MAX` are the
+/// on-the-wire sentinels for absent `dur_ns` / `rank` / `t`. The empty
+/// request direction is `HEADER_LEN + 12` bytes.
+pub fn telemetry_drain_len(spans: &[TraceSpan]) -> u64 {
+    let mut n = HEADER_LEN + 8 + 4; // dropped + span count
+    for s in spans {
+        n += 8 + 8 + 4 + 8 + 8 + s.name.len() as u64;
+    }
+    n
+}
+
 // -- encoding ---------------------------------------------------------------
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -287,6 +319,7 @@ impl Frame {
             Frame::FetchState { .. } => 12,
             Frame::StatsRequest => 13,
             Frame::Stats(_) => 14,
+            Frame::TelemetryDrain { .. } => 15,
         }
     }
 
@@ -390,6 +423,18 @@ impl Frame {
                         out.push(b);
                         put_u64(&mut out, c);
                     }
+                }
+            }
+            Frame::TelemetryDrain { spans, dropped } => {
+                put_u64(&mut out, *dropped);
+                put_u32(&mut out, spans.len() as u32);
+                for s in spans {
+                    put_u64(&mut out, s.t_ns);
+                    put_u64(&mut out, s.dur_ns.unwrap_or(u64::MAX));
+                    put_u32(&mut out, s.rank.unwrap_or(u32::MAX));
+                    put_u64(&mut out, s.t.unwrap_or(u64::MAX));
+                    put_u64(&mut out, s.name.len() as u64);
+                    out.extend_from_slice(s.name.as_bytes());
                 }
             }
         }
@@ -541,6 +586,32 @@ impl Frame {
                     errors,
                     hists,
                 })
+            }
+            15 => {
+                let dropped = c.u64()?;
+                let n = c.u32()? as usize;
+                if n.saturating_mul(36) > body.len() {
+                    bail!("telemetry-drain span count {n} exceeds frame size");
+                }
+                let mut spans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let t_ns = c.u64()?;
+                    let dur_ns = match c.u64()? {
+                        u64::MAX => None,
+                        d => Some(d),
+                    };
+                    let rank = match c.u32()? {
+                        u32::MAX => None,
+                        r => Some(r),
+                    };
+                    let t = match c.u64()? {
+                        u64::MAX => None,
+                        t => Some(t),
+                    };
+                    let name = c.string()?;
+                    spans.push(TraceSpan { name, t_ns, dur_ns, rank, t });
+                }
+                Frame::TelemetryDrain { spans, dropped }
             }
             other => bail!("unknown frame kind {other}"),
         };
@@ -763,6 +834,30 @@ mod tests {
                 let expect = stats_len(&report);
                 (Frame::Stats(report), expect)
             },
+            (
+                Frame::TelemetryDrain { spans: vec![], dropped: 0 },
+                telemetry_drain_len(&[]),
+            ),
+            {
+                let spans = vec![
+                    TraceSpan {
+                        name: "daemon.step".into(),
+                        t_ns: 1_000,
+                        dur_ns: Some(250),
+                        rank: Some(1),
+                        t: Some(3),
+                    },
+                    TraceSpan {
+                        name: "daemon.flush".into(),
+                        t_ns: 2_000,
+                        dur_ns: None,
+                        rank: None,
+                        t: None,
+                    },
+                ];
+                let expect = telemetry_drain_len(&spans);
+                (Frame::TelemetryDrain { spans, dropped: 4 }, expect)
+            },
         ];
         for (frame, expect) in cases {
             assert_eq!(frame.encode().len() as u64, expect, "{frame:?}");
@@ -818,6 +913,17 @@ mod tests {
                     buckets: vec![(10, 9), (11, 1)],
                 }],
             }),
+            Frame::TelemetryDrain { spans: vec![], dropped: 0 },
+            Frame::TelemetryDrain {
+                spans: vec![TraceSpan {
+                    name: "daemon.step".into(),
+                    t_ns: 123_456,
+                    dur_ns: Some(9_876),
+                    rank: Some(2),
+                    t: Some(11),
+                }],
+                dropped: 1,
+            },
             Frame::Shutdown,
         ];
         let mut buf = Vec::new();

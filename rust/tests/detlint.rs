@@ -1,4 +1,4 @@
-//! Self-tests for the `detlint` analysis passes: each of the four passes
+//! Self-tests for the `detlint` analysis passes: each of the five passes
 //! must catch a seeded violation in fixture sources, allowlists must
 //! clear what they claim to clear — and the real tree must come back
 //! clean (the same assertion the CI `detlint` job makes by running the
@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use hosgd::analysis::{self, determinism, layering, policy::Policy, ratchet, spec};
+use hosgd::analysis::{self, determinism, layering, policy::Policy, ratchet, spec, telemetry};
 use hosgd::analysis::{SourceFile, TreeInput};
 
 fn src(path: &str, text: &str) -> SourceFile {
@@ -373,6 +373,100 @@ fn ratchet_fails_over_budget_and_passes_at_budget() {
     )]);
 }
 
+// ---------------------------------------------------------------- pass 5
+
+/// A fixture with one call site per Recorder method kind, spans first so
+/// the multi-line rustfmt shape (name on its own line) is covered too.
+const TELEMETRY_FIXTURE: &str = r#"
+pub fn run(rec: &Recorder, t0: Option<u64>) {
+    rec.span(
+        "round",
+        t0,
+        vec![("t", Attr::U64(1))],
+    );
+    rec.event("fault.retry", vec![]);
+    rec.observe("tcp.reply_ns", 125);
+    rec.count("retries", 1);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        rec.span("test.only", None, vec![]);
+    }
+}
+"#;
+
+const REGISTRY_FIXTURE_CLEAN: &str = "# Observability\n\n\
+    <!-- detlint:telemetry-registry -->\n\
+    | name | kind | meaning |\n\
+    |------|------|---------|\n\
+    | `round` | span | one fabric round trip |\n\
+    | `fault.retry` | event | an injected drop fired |\n\
+    | `tcp.reply_ns` | sample | per-reply wire latency |\n\
+    | `retries` | counter | cumulative retry count |\n\
+    <!-- /detlint:telemetry-registry -->\n";
+
+#[test]
+fn telemetry_pass_is_clean_when_code_and_registry_agree() {
+    let files = [src("rust/src/transport/fixture.rs", TELEMETRY_FIXTURE)];
+    let doc = src("docs/OBSERVABILITY.md", REGISTRY_FIXTURE_CLEAN);
+    let findings = telemetry::lint(&files, &doc);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn telemetry_pass_catches_an_unregistered_name() {
+    let files = [src(
+        "rust/src/transport/fixture.rs",
+        &TELEMETRY_FIXTURE.replace("\"tcp.reply_ns\"", "\"tcp.reply_secret\""),
+    )];
+    let doc = src("docs/OBSERVABILITY.md", REGISTRY_FIXTURE_CLEAN);
+    let findings = telemetry::lint(&files, &doc);
+    // the renamed call site is unregistered AND its registry row went stale
+    assert_eq!(findings.len(), 2, "{findings:#?}");
+    assert!(
+        findings.iter().any(|f| f.file == "rust/src/transport/fixture.rs"
+            && f.message.contains("`tcp.reply_secret`")
+            && f.message.contains("not in")),
+        "{findings:#?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.file == "docs/OBSERVABILITY.md"
+            && f.message.contains("`tcp.reply_ns`")
+            && f.message.contains("no non-test Recorder call site")),
+        "{findings:#?}"
+    );
+}
+
+#[test]
+fn telemetry_pass_catches_a_duplicate_registry_row() {
+    let files = [src("rust/src/transport/fixture.rs", TELEMETRY_FIXTURE)];
+    let doc = src(
+        "docs/OBSERVABILITY.md",
+        &REGISTRY_FIXTURE_CLEAN.replace(
+            "| `retries` | counter | cumulative retry count |\n",
+            "| `retries` | counter | cumulative retry count |\n\
+             | `retries` | counter | registered twice |\n",
+        ),
+    );
+    let findings = telemetry::lint(&files, &doc);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("`retries` registered twice"), "{findings:#?}");
+}
+
+#[test]
+fn telemetry_pass_ignores_test_code_and_requires_the_block() {
+    // the #[cfg(test)] "test.only" name raised no finding above; a doc
+    // with no anchored block is itself a finding
+    let files = [src("rust/src/transport/fixture.rs", TELEMETRY_FIXTURE)];
+    let doc = src("docs/OBSERVABILITY.md", "# no registry here\n");
+    let findings = telemetry::lint(&files, &doc);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("no `<!-- detlint:telemetry-registry"));
+}
+
 // ------------------------------------------------------------ clean tree
 
 /// The repo itself must pass all four passes — the in-process version of
@@ -393,6 +487,11 @@ fn the_real_tree_is_detlint_clean() {
         .expect("read ARCHITECTURE.md"),
         distributed: analysis::read_doc(&repo.join("docs/DISTRIBUTED.md"), "docs/DISTRIBUTED.md")
             .expect("read DISTRIBUTED.md"),
+        observability: analysis::read_doc(
+            &repo.join("docs/OBSERVABILITY.md"),
+            "docs/OBSERVABILITY.md",
+        )
+        .expect("read OBSERVABILITY.md"),
         readme: analysis::read_doc(&repo.join("README.md"), "README.md").expect("read README.md"),
         policy: Policy::parse(
             &std::fs::read_to_string(manifest.join("detlint.toml")).expect("read detlint.toml"),

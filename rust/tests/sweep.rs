@@ -60,6 +60,8 @@ fn opts(dir: &Path, resume: bool) -> ExecOpts {
         threads: 0,
         resume,
         quiet: true,
+        telemetry: None,
+        trace_out: None,
     }
 }
 

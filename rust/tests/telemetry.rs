@@ -11,6 +11,7 @@ use std::net::TcpListener;
 use hosgd::backend::{Backend, NativeBackend};
 use hosgd::config::{Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, Session};
+use hosgd::telemetry::trace::{analyze, extract_rounds, DrainedRing, TraceSpan};
 use hosgd::telemetry::Recorder;
 use hosgd::transport::{serve, WorkerDaemonOpts};
 
@@ -54,6 +55,41 @@ fn run_session(cfg: &TrainConfig, telemetry: bool) -> (String, Vec<f32>, Option<
     }
     s.run_to_end().unwrap();
     (s.trace().to_json_canonical().pretty(), s.params().unwrap(), rec)
+}
+
+/// Run `cfg` to completion with the full `--trace-out` plumbing armed:
+/// a live recorder *and* the worker-side trace drain. Returns the
+/// canonical trace, final params, the recorder, and the drained rings.
+fn run_session_traced(cfg: &TrainConfig) -> (String, Vec<f32>, Recorder, Vec<DrainedRing>) {
+    let be = NativeBackend::with_threads(cfg.threads);
+    let model = be.model(&cfg.dataset).unwrap();
+    let data = make_data(cfg).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, cfg).unwrap();
+    let rec = Recorder::enabled();
+    s.set_telemetry(rec.clone());
+    s.set_trace(true);
+    s.run_to_end().unwrap();
+    let rings = s.take_trace().unwrap();
+    (s.trace().to_json_canonical().pretty(), s.params().unwrap(), rec, rings)
+}
+
+/// The drained rings must carry real worker-side spans: every span is a
+/// `daemon.step` keyed by its causal `(rank, t)` round id, and nothing
+/// was dropped on the ring.
+fn assert_rings_are_causal(method: Method, label: &str, rings: &[DrainedRing]) {
+    let spans: Vec<&TraceSpan> = rings.iter().flat_map(|r| &r.spans).collect();
+    assert!(!spans.is_empty(), "{method} ({label}): drain returned no worker spans");
+    for s in &spans {
+        assert_eq!(s.name, "daemon.step", "{method} ({label}): unexpected span {}", s.name);
+        assert!(
+            s.rank.is_some() && s.t.is_some(),
+            "{method} ({label}): span missing its (rank, t) causal key"
+        );
+    }
+    assert!(
+        rings.iter().all(|r| r.dropped == 0),
+        "{method} ({label}): ring overflowed during the run"
+    );
 }
 
 fn assert_bit_identical(
@@ -193,6 +229,139 @@ fn tcp_staleness_window_run_is_bit_identical_with_telemetry_attached() {
     );
     let rec = rec.unwrap();
     assert!(rec.hist("tcp.inflight").is_some(), "no in-flight depth samples under W=2");
+}
+
+// ---------------------------------------------------------------------------
+// Trace drain: the TelemetryDrain plane must be as invisible as the
+// recorder itself — arming `--trace-out` (recorder + worker-side drain)
+// leaves every canonical trace and final parameter bit-identical, on both
+// fabrics, synchronous and under bounded-staleness run-ahead.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loopback_traces_are_bit_identical_with_trace_drain_armed() {
+    for method in ALL_METHODS {
+        let c = cfg(method);
+        let (trace_off, params_off, _) = run_session(&c, false);
+        let (trace_on, params_on, rec, rings) = run_session_traced(&c);
+        assert_bit_identical(
+            method,
+            "loopback drain",
+            &(trace_off, params_off),
+            &(trace_on, params_on),
+        );
+        assert_rings_are_causal(method, "loopback drain", &rings);
+
+        // the blame partition is exact by construction: for every round,
+        // compute + queue + wire == the round's span
+        let (events, _) = rec.drain_events();
+        let rounds = extract_rounds(&events);
+        assert!(!rounds.is_empty(), "{method}: no coordinator round spans");
+        let spans: Vec<TraceSpan> = rings.iter().flat_map(|r| r.spans.iter().cloned()).collect();
+        let rep = analyze(&rounds, &spans, 0);
+        assert!(!rep.rounds.is_empty(), "{method}: analyzer produced no rounds");
+        for b in &rep.rounds {
+            assert_eq!(
+                b.compute_ns + b.queue_ns + b.wire_ns,
+                b.round_ns,
+                "{method}: blame split must partition round t={} exactly",
+                b.t
+            );
+        }
+    }
+}
+
+#[test]
+fn loopback_staleness_window_runs_are_bit_identical_with_trace_drain_armed() {
+    for method in ALL_METHODS {
+        let mut c = cfg(method);
+        c.eval_every = 0; // let run-ahead actually run ahead
+        c.transport.staleness_window = 2;
+        let (trace_off, params_off, _) = run_session(&c, false);
+        let (trace_on, params_on, _, rings) = run_session_traced(&c);
+        assert_bit_identical(
+            method,
+            "loopback drain W=2",
+            &(trace_off, params_off),
+            &(trace_on, params_on),
+        );
+        assert_rings_are_causal(method, "loopback drain W=2", &rings);
+    }
+}
+
+#[test]
+fn tcp_traces_are_bit_identical_with_trace_drain_armed() {
+    for method in ALL_METHODS {
+        let c = cfg(method);
+        let run_off = || {
+            let (a1, h1) = spawn_daemon();
+            let (a2, h2) = spawn_daemon();
+            let mut c = c.clone();
+            c.transport.workers_at = vec![a1, a2];
+            let out = run_session(&c, false);
+            h1.join().unwrap();
+            h2.join().unwrap();
+            out
+        };
+        let run_on = || {
+            let (a1, h1) = spawn_daemon();
+            let (a2, h2) = spawn_daemon();
+            let mut c = c.clone();
+            c.transport.workers_at = vec![a1, a2];
+            let out = run_session_traced(&c);
+            h1.join().unwrap();
+            h2.join().unwrap();
+            out
+        };
+        let (trace_off, params_off, _) = run_off();
+        let (trace_on, params_on, _, rings) = run_on();
+        assert_bit_identical(method, "tcp drain", &(trace_off, params_off), &(trace_on, params_on));
+        assert_rings_are_causal(method, "tcp drain", &rings);
+        // both daemons contributed a ring (one drain per eval barrier and
+        // one at the final flush, each draining every connection)
+        let sources: std::collections::BTreeSet<&str> =
+            rings.iter().map(|r| r.source.as_str()).collect();
+        assert!(sources.len() >= 2, "{method}: expected rings from both daemons: {sources:?}");
+    }
+}
+
+#[test]
+fn tcp_staleness_window_runs_are_bit_identical_with_trace_drain_armed() {
+    for method in ALL_METHODS {
+        let run_off = || {
+            let (a1, h1) = spawn_daemon();
+            let (a2, h2) = spawn_daemon();
+            let mut c = cfg(method);
+            c.eval_every = 0;
+            c.transport.workers_at = vec![a1, a2];
+            c.transport.staleness_window = 2;
+            let out = run_session(&c, false);
+            h1.join().unwrap();
+            h2.join().unwrap();
+            out
+        };
+        let run_on = || {
+            let (a1, h1) = spawn_daemon();
+            let (a2, h2) = spawn_daemon();
+            let mut c = cfg(method);
+            c.eval_every = 0;
+            c.transport.workers_at = vec![a1, a2];
+            c.transport.staleness_window = 2;
+            let out = run_session_traced(&c);
+            h1.join().unwrap();
+            h2.join().unwrap();
+            out
+        };
+        let (trace_off, params_off, _) = run_off();
+        let (trace_on, params_on, _, rings) = run_on();
+        assert_bit_identical(
+            method,
+            "tcp drain W=2",
+            &(trace_off, params_off),
+            &(trace_on, params_on),
+        );
+        assert_rings_are_causal(method, "tcp drain W=2", &rings);
+    }
 }
 
 // ---------------------------------------------------------------------------

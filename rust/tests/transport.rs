@@ -13,8 +13,9 @@ use hosgd::config::{FaultPlan, Method, StepSize, TrainConfig};
 use hosgd::coordinator::{make_data, Session};
 use hosgd::optim::{axpy_acc, axpy_update, zo_scalar, AlgoConfig, TrainOracle, World};
 use hosgd::rng::Xoshiro256;
+use hosgd::telemetry::trace::TraceSpan;
 use hosgd::transport::wire::{self, Frame, HistSnapshot, Slot, StatsReport, StepOp};
-use hosgd::transport::{serve, WorkerDaemonOpts};
+use hosgd::transport::{query_stats, serve, WorkerDaemonOpts};
 
 const ALL_METHODS: [Method; 7] = [
     Method::HoSgd,
@@ -284,6 +285,22 @@ fn wire_spec_worked_examples_match_the_codec() {
                     buckets: vec![(10, 2)],
                 }],
             }),
+        ),
+        // the trace plane: the same frame kind is the request (empty,
+        // coordinator → worker) and the reply (the drained span ring)
+        ("TelemetryDrain/request", Frame::TelemetryDrain { spans: Vec::new(), dropped: 0 }),
+        (
+            "TelemetryDrain/reply",
+            Frame::TelemetryDrain {
+                spans: vec![TraceSpan {
+                    name: "daemon.step".into(),
+                    t_ns: 500,
+                    dur_ns: Some(250),
+                    rank: Some(1),
+                    t: Some(2),
+                }],
+                dropped: 0,
+            },
         ),
     ];
     for (name, frame) in cases {
@@ -813,6 +830,161 @@ fn tcp_resume_reseeds_worker_resident_state_on_fresh_daemons() {
         for (j, (a, b)) in reference_params.iter().zip(&resumed_params).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "{method}: param {j} {a} vs {b}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live daemon introspection: Stats probes against a hot pipelined daemon
+// and the `hosgd status` CLI
+// ---------------------------------------------------------------------------
+
+/// Spawn a daemon that serves forever (`once: false`). The thread is
+/// intentionally detached — its accept loop only ends with the test
+/// process.
+fn spawn_persistent_daemon() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let opts = WorkerDaemonOpts {
+            artifacts: "artifacts".into(),
+            threads: 1,
+            once: false,
+            pipeline: true,
+        };
+        let _ = serve(listener, &opts);
+    });
+    addr
+}
+
+#[test]
+fn stats_probe_on_a_hot_pipelined_daemon_is_monotone() {
+    let addr = spawn_persistent_daemon();
+    let mut c = cfg(Method::RiSgd);
+    c.eval_every = 0;
+    c.transport.staleness_window = 2; // RI-SGD's no-fetch steps actually pipeline
+    c.transport.workers_at = vec![addr.clone()];
+
+    // leg 1: one full pipelined session, then the first probe
+    run_session(&c);
+    let r1 = query_stats(&addr).unwrap();
+    assert_eq!(r1.sessions_served, 1, "probe must see the completed session");
+    assert_eq!(r1.active_sessions, 0);
+    assert!(r1.rounds > 0, "no rounds counted");
+    assert!(r1.steps >= r1.rounds, "steps = rounds x hosted ranks");
+    assert!(r1.wire_up_bytes > 0 && r1.wire_down_bytes > 0);
+    assert!(
+        r1.hists.iter().any(|h| h.name == "daemon.step" && h.count > 0),
+        "pipelined daemon must carry a hot daemon.step histogram: {:?}",
+        r1.hists.iter().map(|h| &h.name).collect::<Vec<_>>()
+    );
+
+    // leg 2: probe while a session is live — the connect lands
+    // mid-session and the sequential daemon answers it at the session
+    // boundary, without perturbing the run
+    let be = NativeBackend::with_threads(1);
+    let model = be.model(&c.dataset).unwrap();
+    let data = make_data(&c).unwrap();
+    let mut s = Session::new(model.as_ref(), &data, &c).unwrap();
+    s.run_until(6).unwrap();
+    let probe = {
+        let addr = addr.clone();
+        std::thread::spawn(move || query_stats(&addr))
+    };
+    s.run_to_end().unwrap();
+    drop(s);
+    let r2 = probe.join().unwrap().unwrap();
+
+    // cumulative counters are monotone across probes, and the probes
+    // themselves never count as sessions, retries or errors
+    assert_eq!(r2.sessions_served, 2);
+    assert!(r2.rounds > r1.rounds, "rounds went backwards: {} -> {}", r1.rounds, r2.rounds);
+    assert!(r2.steps > r1.steps);
+    assert!(r2.wire_up_bytes > r1.wire_up_bytes);
+    assert!(r2.wire_down_bytes > r1.wire_down_bytes);
+    assert!(r2.uptime_ns >= r1.uptime_ns);
+    assert_eq!(r2.retries, r1.retries, "a status probe may not count as a retry");
+    assert_eq!(r2.errors, 0);
+
+    // the live reply round-trips the pinned hex convention exactly
+    // (log2 buckets, name-sorted hists — the same layout the worked
+    // example in docs/DISTRIBUTED.md pins byte for byte)
+    let encoded = Frame::Stats(r2.clone()).encode();
+    assert_eq!(Frame::decode(&encoded[4..]).unwrap(), Frame::Stats(r2));
+}
+
+#[test]
+fn stats_probe_does_not_consume_a_once_slot() {
+    // a --once daemon answers a status probe and must still serve the one
+    // real session afterwards
+    let (addr, h) = spawn_daemon();
+    let r = query_stats(&addr).unwrap();
+    assert_eq!(r.sessions_served, 0);
+    assert_eq!(r.rounds, 0);
+    let mut c = cfg(Method::HoSgd);
+    c.transport.workers_at = vec![addr];
+    run_session(&c);
+    h.join().unwrap(); // the once slot was spent by the session, not the probe
+}
+
+#[test]
+fn status_cli_probes_concurrently_and_prints_in_flag_order() {
+    use hosgd::util::json::Json;
+
+    let a = spawn_persistent_daemon();
+    let b = spawn_persistent_daemon();
+    let bin = env!("CARGO_BIN_EXE_hosgd");
+
+    let run = |at: &str, json: bool| {
+        let mut cmd = std::process::Command::new(bin);
+        cmd.arg("status").arg("--at").arg(at);
+        if json {
+            cmd.arg("--json");
+        }
+        let out = cmd.output().unwrap();
+        assert!(
+            out.status.success(),
+            "status --at {at} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8(out.stdout).unwrap()
+    };
+
+    // the text report lists the daemons strictly in flag order — flip the
+    // flags and the order flips with them, no matter which daemon answered
+    // its concurrent probe first
+    let fwd = run(&format!("{a},{b}"), false);
+    let pa = fwd.find(&format!("worker {a}")).expect("first daemon missing from report");
+    let pb = fwd.find(&format!("worker {b}")).expect("second daemon missing from report");
+    assert!(pa < pb, "flag order not preserved:\n{fwd}");
+    let rev = run(&format!("{b},{a}"), false);
+    let pb2 = rev.find(&format!("worker {b}")).unwrap();
+    let pa2 = rev.find(&format!("worker {a}")).unwrap();
+    assert!(pb2 < pa2, "flag order not preserved after flipping:\n{rev}");
+
+    // --json: one machine-readable array, same order, full counter set
+    let parsed = Json::parse(&run(&format!("{a},{b}"), true)).expect("status --json not JSON");
+    let arr = parsed.as_arr().expect("status --json must print an array");
+    assert_eq!(arr.len(), 2);
+    assert_eq!(arr[0].req("addr").unwrap().as_str(), Some(a.as_str()));
+    assert_eq!(arr[1].req("addr").unwrap().as_str(), Some(b.as_str()));
+    for entry in arr {
+        for key in [
+            "uptime_ns",
+            "active_sessions",
+            "sessions_served",
+            "rounds",
+            "steps",
+            "wire_up_bytes",
+            "wire_down_bytes",
+            "retries",
+            "errors",
+        ] {
+            assert!(
+                entry.req(key).unwrap().as_f64().is_some(),
+                "status --json entry lost its {key} counter"
+            );
+        }
+        assert!(entry.req("hists").unwrap().as_arr().is_some());
     }
 }
 
